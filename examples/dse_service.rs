@@ -1,0 +1,77 @@
+//! The coordinator as a *service*: start the engine thread + TCP front end,
+//! drive it over the wire with mixed concurrent requests, and print the
+//! service metrics (batch occupancy, latencies).
+//!
+//! ```bash
+//! cargo run --release --example dse_service            # self-driving demo
+//! cargo run --release --example dse_service -- --serve 127.0.0.1:7979
+//! ```
+//!
+//! Wire protocol: one JSON object per line, e.g.
+//! `{"type":"generate","m":128,"k":768,"n":2304,"target_cycles":1e6,"count":8}`.
+
+use diffaxe::coordinator::{server, Request, Response, Service, ServiceConfig};
+use diffaxe::models::DiffAxE;
+use diffaxe::workload::{Gemm, LlmModel, Stage};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    anyhow::ensure!(
+        DiffAxE::artifacts_present(Path::new("artifacts")),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let svc = Service::start(ServiceConfig::new("artifacts"))?;
+
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--serve") {
+        let addr = args.get(i + 1).map(|s| s.as_str()).unwrap_or("127.0.0.1:7979");
+        return server::serve(svc.handle(), addr);
+    }
+
+    // demo mode: ephemeral server + a burst of concurrent clients
+    let addr = server::serve_ephemeral(svc.handle())?;
+    println!("service listening on {addr}; sending a mixed burst over TCP\n");
+
+    let mut handles = Vec::new();
+    for i in 0..4u32 {
+        let addr = addr;
+        handles.push(std::thread::spawn(move || -> anyhow::Result<String> {
+            let mut client = server::Client::connect(&addr)?;
+            let g = Gemm::new(128, 768, 2304);
+            let resp = client.request(&Request::GenerateRuntime {
+                g,
+                target_cycles: 4e5 * (i + 1) as f64,
+                n: 8,
+            })?;
+            Ok(match resp {
+                Response::Designs(d) => {
+                    format!("client {i}: {} designs, best |err| cycles={:.0}", d.len(),
+                            d.iter().map(|x| x.cycles).fold(f64::MAX, f64::min))
+                }
+                other => format!("client {i}: {other:?}"),
+            })
+        }));
+    }
+    for h in handles {
+        println!("{}", h.join().unwrap()?);
+    }
+
+    // one EDP search and one LLM co-design over the same wire
+    let mut client = server::Client::connect(&addr)?;
+    if let Response::Designs(d) =
+        client.request(&Request::EdpSearch { g: Gemm::new(128, 4096, 8192), n_per_class: 8 })?
+    {
+        println!("EDP search best: {} edp={:.3e}", d[0].hw, d[0].edp);
+    }
+    if let Response::Designs(d) = client.request(&Request::LlmSearch {
+        model: LlmModel::Opt350m,
+        stage: Stage::Decode,
+        n_per_layer: 8,
+    })? {
+        println!("OPT-350M decode co-design: {} edp={:.3e}", d[0].hw, d[0].edp);
+    }
+    if let Response::MetricsText(m) = client.request(&Request::Metrics)? {
+        println!("\nservice metrics: {m}");
+    }
+    Ok(())
+}

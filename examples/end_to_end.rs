@@ -1,0 +1,143 @@
+//! END-TO-END DRIVER — proves all three layers compose on a real workload
+//! mix (recorded in EXPERIMENTS.md):
+//!
+//!   L3 rust coordinator (batching service, native simulator/energy models)
+//!     → PJRT executables AOT-compiled from
+//!   L2 JAX models (AE+PP + conditional DDPM)
+//!     → whose denoiser layers are
+//!   L1 Pallas kernels (interpret-mode, lowered into the same HLO).
+//!
+//! The driver starts the service, then plays a realistic co-design session:
+//! (1) runtime-conditioned generation across a batch of transformer-layer
+//! workloads at three target speeds each, (2) an EDP search per workload,
+//! and (3) full-LLM co-design for BERT/OPT/LLaMA prefill+decode — reporting
+//! the paper's headline metrics: generation error, ms/design, and EDP
+//! improvement over NVDLA and DOSA.
+
+use diffaxe::baselines::FixedArch;
+use diffaxe::coordinator::{Request, Response, Service, ServiceConfig};
+use diffaxe::dse::llm::{dosa_llm, fixed_llm, Platform};
+use diffaxe::models::DiffAxE;
+use diffaxe::util::stats::{geomean, Timer};
+use diffaxe::util::table::{fnum, Table};
+use diffaxe::workload::{llm::DEFAULT_SEQ, Gemm, LlmModel, Stage};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    anyhow::ensure!(
+        DiffAxE::artifacts_present(Path::new("artifacts")),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    println!("=== end-to-end driver: DiffAxE DSE service on a real workload mix ===\n");
+    let t_boot = Timer::start();
+    let svc = Service::start(ServiceConfig::new("artifacts"))?;
+    println!("service up in {:.1}s (artifact compile, one-time)\n", t_boot.elapsed_s());
+
+    // --- phase 1: runtime-conditioned generation over transformer layers --
+    let layers = [
+        ("BERT QKV", Gemm::new(128, 768, 2304)),
+        ("BERT FFN1", Gemm::new(128, 768, 3072)),
+        ("OPT-350M FFN2", Gemm::new(128, 4096, 1024)),
+        ("LLaMA-2 down-proj", Gemm::new(128, 4096, 4096)),
+    ];
+    // targets derived from request results themselves: ask for 3 speeds
+    let mut errs = Vec::new();
+    let mut designs_total = 0usize;
+    let t_gen = Timer::start();
+    let mut rxs = Vec::new();
+    for (_, g) in &layers {
+        for speed in [3e5, 1e6, 5e6] {
+            rxs.push((*g, speed, svc.handle().submit(Request::GenerateRuntime {
+                g: *g,
+                target_cycles: speed,
+                n: 16,
+            })));
+        }
+    }
+    for (g, target, rx) in rxs {
+        match rx.recv()? {
+            Response::Designs(ds) => {
+                designs_total += ds.len();
+                for d in &ds {
+                    errs.push(((d.cycles - target) / target).abs());
+                    assert!(d.hw.in_target_space(), "invalid design for {g}");
+                }
+            }
+            other => anyhow::bail!("unexpected {other:?}"),
+        }
+    }
+    let gen_s = t_gen.elapsed_s();
+    println!(
+        "phase 1 — generation: {designs_total} designs across {} (workload,target) pairs \
+         in {:.1}s => {:.2} ms/design; mean |error| {:.1}%",
+        layers.len() * 3,
+        gen_s,
+        gen_s * 1e3 / designs_total as f64,
+        100.0 * errs.iter().sum::<f64>() / errs.len() as f64
+    );
+
+    // --- phase 2: EDP search per layer ------------------------------------
+    let mut edp_rows = Vec::new();
+    for (name, g) in &layers {
+        let resp = svc.handle().request(Request::EdpSearch { g: *g, n_per_class: 16 });
+        if let Response::Designs(ds) = resp {
+            edp_rows.push((*name, ds[0].clone()));
+        }
+    }
+    let mut t = Table::new(&["layer", "best design (EDP search)", "cycles", "power", "EDP"]);
+    for (name, d) in &edp_rows {
+        t.row(&[
+            name.to_string(),
+            d.hw.to_string(),
+            fnum(d.cycles),
+            fnum(d.power_w),
+            fnum(d.edp),
+        ]);
+    }
+    println!("\nphase 2 — EDP search:\n{}", t.render());
+
+    // --- phase 3: whole-LLM co-design, the paper's headline ---------------
+    let mut nvdla_ratios = Vec::new();
+    let mut dosa_ratios = Vec::new();
+    let mut t3 = Table::new(&["model", "stage", "DiffAxE EDP", "NVDLA/DiffAxE", "DOSA/DiffAxE"]);
+    for model in LlmModel::ALL {
+        for stage in Stage::ALL {
+            let resp = svc.handle().request(Request::LlmSearch {
+                model,
+                stage,
+                n_per_layer: 16,
+            });
+            let ours = match resp {
+                Response::Designs(ds) => ds[0].clone(),
+                other => anyhow::bail!("unexpected {other:?}"),
+            };
+            let nvdla =
+                fixed_llm(FixedArch::Nvdla, model, stage, DEFAULT_SEQ, Platform::Asic32nm);
+            let (dosa, _) = dosa_llm(model, stage, DEFAULT_SEQ, Platform::Asic32nm, 17);
+            nvdla_ratios.push(nvdla.energy.edp / ours.edp);
+            dosa_ratios.push(dosa.energy.edp / ours.edp);
+            t3.row(&[
+                model.name().to_string(),
+                stage.name().to_string(),
+                fnum(ours.edp),
+                fnum(nvdla.energy.edp / ours.edp),
+                fnum(dosa.energy.edp / ours.edp),
+            ]);
+        }
+    }
+    println!("phase 3 — LLM co-design (32nm ASIC):\n{}", t3.render());
+
+    let snap = svc.handle().metrics().snapshot();
+    println!("service metrics: {snap}\n");
+    println!("=== headline metrics (record in EXPERIMENTS.md) ===");
+    println!(
+        "EDP improvement geo-mean: {:.2}x vs NVDLA (paper: up to 4.3x), {:.2}x vs DOSA \
+         (paper: 3.37x avg); generation {:.2} ms/design (paper: 1.83 ms on V100); \
+         mean generation |error| {:.1}% (paper: 5.45% at 46.7M-sample scale)",
+        geomean(&nvdla_ratios),
+        geomean(&dosa_ratios),
+        gen_s * 1e3 / designs_total as f64,
+        100.0 * errs.iter().sum::<f64>() / errs.len() as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,226 @@
+"""AOT compile path: train everything, export HLO text artifacts.
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile does).
+Python's final act — after this, the rust binary is self-contained.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Exported artifacts (B = fixed generation batch, from ScaleConfig):
+  sampler_runtime.hlo.txt   (seed u32, p f32[B,1], w f32[B,3]) -> hw f32[B,8]
+  sampler_edp.hlo.txt       (seed, class i32[B], w)            -> hw
+  sampler_perfopt.hlo.txt   (seed, class i32[B], w)            -> hw
+  encoder.hlo.txt           hw f32[Bp,8]                        -> v f32[Bp,128]
+  decoder.hlo.txt           v                                   -> hw
+  pp.hlo.txt                (v, w)                              -> pred f32[Bp,1]
+  pp_grad.hlo.txt           (v, w, target f32[Bp,1]) -> (loss f32[Bp], grad f32[Bp,128])
+  surrogate.hlo.txt         (hw, w)                             -> pred f32[Bp]
+  surrogate_grad.hlo.txt    (hw, w, target f32[Bp]) -> (loss, grad f32[Bp,8])
+  gandse.hlo.txt            (seed, p f32[B,1], w)               -> hw f32[B,8]
+  airchitect1.hlo.txt       w f32[Bp,3]                         -> logits f32[Bp,768]
+  airchitect2.hlo.txt       w f32[Bp,3]                         -> hw f32[Bp,8]
+  norm_stats.json           per-workload stats, class edges, shapes, param counts
+  train_log.json            loss curves (paper Figs 14/15a)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import nn
+from .data import TrainData
+from .models import ae, baselines, ddm
+from .train import ScaleConfig, train_airchitect, train_gandse, train_phase1, \
+    train_phase2, train_surrogate
+
+PP_BATCH = 256  # fixed batch of the encoder/decoder/pp/surrogate executables
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default HLO printer elides large constants to
+    # `constant({...})`, which xla_extension 0.5.1's text parser silently
+    # parses as ZEROS — wiping every trained weight. Print them in full.
+    mod = comp.get_hlo_module()
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    text = mod.to_string(opts)
+    assert "{...}" not in text, "elided constants leaked into AOT artifact"
+    return text
+
+
+def export(fn, example_args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  exported {os.path.basename(path)} ({len(text) / 1e6:.2f} MB)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--dataset", default=None, help="defaults to <out>/dataset")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    dataset_dir = args.dataset or os.path.join(out, "dataset")
+
+    sc = ScaleConfig.from_env()
+    use_pallas = os.environ.get("DIFFAXE_NO_PALLAS", "") == ""
+    print(f"aot: scale={sc.name} T={sc.t_steps} gen_batch={sc.gen_batch} "
+          f"pallas={'on' if use_pallas else 'off'}")
+    t0 = time.time()
+    data = TrainData.load(dataset_dir)
+    print(f"aot: dataset {data.table.shape[0]} rows, {data.n_workloads()} workloads")
+
+    log: dict = {}
+    params_count: dict = {}
+
+    # ---- Phase 1 (three supervision modes; §III-A, §III-D, §III-E) -------
+    ae_rt, l_ae_rt = train_phase1(data, "runtime", sc, seed=0)
+    ae_pp2, l_ae_pp2 = train_phase1(data, "runtime_power", sc, seed=1)
+    ae_edp, l_ae_edp = train_phase1(data, "edp", sc, seed=2)
+    log["phase1_runtime"] = l_ae_rt
+    log["phase1_runtime_power"] = l_ae_pp2
+    log["phase1_edp"] = l_ae_edp
+    params_count["ae_pp"] = nn.param_count(ae_rt)
+
+    # ---- Phase 2 DDMs ------------------------------------------------------
+    ddm_rt, cfg_rt, sched_rt, l_ddm_rt, vs_rt = train_phase2(data, ae_rt, "runtime", sc, seed=0)
+    ddm_edp, cfg_edp, sched_edp, l_ddm_edp, vs_edp = train_phase2(data, ae_pp2, "edp_class", sc, seed=1)
+    ddm_po, cfg_po, sched_po, l_ddm_po, vs_po = train_phase2(data, ae_edp, "perfopt_class", sc, seed=2)
+    log["phase2_runtime"] = l_ddm_rt
+    log["phase2_edp_class"] = l_ddm_edp
+    log["phase2_perfopt_class"] = l_ddm_po
+    params_count["ddm"] = nn.param_count(ddm_rt)
+
+    # ---- learned baselines -------------------------------------------------
+    surr, l_surr = train_surrogate(data, sc)
+    gandse_p, l_gandse = train_gandse(data, surr, sc)
+    air1, air2, grid = train_airchitect(data, sc)
+    log["surrogate"] = l_surr
+    log["gandse"] = l_gandse
+    params_count["gandse"] = nn.param_count(gandse_p)
+    params_count["airchitect_v1"] = nn.param_count(air1)
+    params_count["airchitect_v2"] = nn.param_count(air2)
+    params_count["surrogate"] = nn.param_count(surr)
+
+    print(f"aot: training done in {time.time() - t0:.0f}s; exporting HLO...")
+
+    # ---- exports -----------------------------------------------------------
+    B = sc.gen_batch
+
+    def sampler_runtime(seed, p, w):
+        key = jax.random.PRNGKey(seed)
+        return (ddm.generate_hw(ddm_rt, ae_rt, cfg_rt, sched_rt, key, p, w,
+                                v_stats=vs_rt, use_pallas=use_pallas),)
+
+    export(sampler_runtime, (u32(), f32(B, 1), f32(B, 3)),
+           os.path.join(out, "sampler_runtime.hlo.txt"))
+
+    def sampler_edp(seed, cls, w):
+        key = jax.random.PRNGKey(seed)
+        return (ddm.generate_hw(ddm_edp, ae_pp2, cfg_edp, sched_edp, key, cls, w,
+                                v_stats=vs_edp, use_pallas=use_pallas),)
+
+    export(sampler_edp, (u32(), i32(B), f32(B, 3)),
+           os.path.join(out, "sampler_edp.hlo.txt"))
+
+    def sampler_perfopt(seed, cls, w):
+        key = jax.random.PRNGKey(seed)
+        return (ddm.generate_hw(ddm_po, ae_edp, cfg_po, sched_po, key, cls, w,
+                                v_stats=vs_po, use_pallas=use_pallas),)
+
+    export(sampler_perfopt, (u32(), i32(B), f32(B, 3)),
+           os.path.join(out, "sampler_perfopt.hlo.txt"))
+
+    export(lambda hw: (ae.encode(ae_rt, hw),), (f32(PP_BATCH, 8),),
+           os.path.join(out, "encoder.hlo.txt"))
+    export(lambda v: (ae.decode(ae_rt, v),), (f32(PP_BATCH, ae.LATENT_DIM),),
+           os.path.join(out, "decoder.hlo.txt"))
+    export(lambda v, w: (ae.predict(ae_rt, v, w),),
+           (f32(PP_BATCH, ae.LATENT_DIM), f32(PP_BATCH, 3)),
+           os.path.join(out, "pp.hlo.txt"))
+
+    def pp_grad(v, w, target):
+        def one(vi, wi, ti):
+            return jnp.sum((ae.predict(ae_rt, vi[None], wi[None])[0] - ti) ** 2)
+        losses = jax.vmap(one)(v, w, target)
+        grads = jax.vmap(jax.grad(one))(v, w, target)
+        return losses, grads
+
+    export(pp_grad, (f32(PP_BATCH, ae.LATENT_DIM), f32(PP_BATCH, 3), f32(PP_BATCH, 1)),
+           os.path.join(out, "pp_grad.hlo.txt"))
+
+    export(lambda hw, w: (baselines.surrogate_apply(surr, hw, w),),
+           (f32(PP_BATCH, 8), f32(PP_BATCH, 3)),
+           os.path.join(out, "surrogate.hlo.txt"))
+
+    def surrogate_grad(hw, w, target):
+        return baselines.surrogate_grad_fn(surr, hw, w, target)
+
+    export(surrogate_grad, (f32(PP_BATCH, 8), f32(PP_BATCH, 3), f32(PP_BATCH)),
+           os.path.join(out, "surrogate_grad.hlo.txt"))
+
+    def gandse_gen(seed, p, w):
+        key = jax.random.PRNGKey(seed)
+        return (baselines.gandse_generate(gandse_p, key, p, w),)
+
+    export(gandse_gen, (u32(), f32(B, 1), f32(B, 3)),
+           os.path.join(out, "gandse.hlo.txt"))
+
+    export(lambda w: (baselines.airchitect_v1_apply(air1, w),), (f32(PP_BATCH, 3),),
+           os.path.join(out, "airchitect1.hlo.txt"))
+    export(lambda w: (baselines.airchitect_v2_apply(air2, w)[0],), (f32(PP_BATCH, 3),),
+           os.path.join(out, "airchitect2.hlo.txt"))
+
+    # ---- metadata ----------------------------------------------------------
+    stats = {
+        "scale": sc.name,
+        "t_steps": sc.t_steps,
+        "gen_batch": B,
+        "pp_batch": PP_BATCH,
+        "latent_dim": ae.LATENT_DIM,
+        "hw_dim": 8,
+        "n_power": 3,
+        "n_perf": 3,
+        "n_edp": 10,
+        "param_counts": params_count,
+        "airchitect_grid": [list(map(float, row)) for row in np.asarray(grid)],
+        "workloads": [s.to_json() for s in data.stats],
+    }
+    with open(os.path.join(out, "norm_stats.json"), "w") as f:
+        json.dump(stats, f, sort_keys=True)
+    with open(os.path.join(out, "train_log.json"), "w") as f:
+        json.dump(log, f, sort_keys=True)
+    print(f"aot: all artifacts written to {out} in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

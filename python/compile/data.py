@@ -1,0 +1,104 @@
+"""Loader for the rust-generated training dataset (see rust/src/dataset/).
+
+Row layout (f32 little-endian, width 14):
+``[hw_norm(8) | M K N | runtime_cycles power_w edp_uj_cycles]``
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .norm import WorkloadStats, normalize_workload
+
+ROW_WIDTH = 14
+HW_DIM = 8
+COL_M, COL_K, COL_N = 8, 9, 10
+COL_RUNTIME, COL_POWER, COL_EDP = 11, 12, 13
+
+
+class TrainData:
+    """The dataset plus derived normalization stats."""
+
+    def __init__(self, table: np.ndarray, workloads: list[dict]):
+        assert table.ndim == 2 and table.shape[1] == ROW_WIDTH
+        self.table = table
+        self.workloads = workloads
+        self.stats: list[WorkloadStats] = []
+        for w in workloads:
+            rows = self.workload_rows(len(self.stats))
+            self.stats.append(
+                WorkloadStats(
+                    w["m"], w["k"], w["n"],
+                    rows[:, COL_RUNTIME], rows[:, COL_POWER], rows[:, COL_EDP],
+                )
+            )
+
+    @classmethod
+    def load(cls, dataset_dir: str) -> "TrainData":
+        with open(os.path.join(dataset_dir, "train.json")) as f:
+            header = json.load(f)
+        assert header["row_width"] == ROW_WIDTH, header
+        table = np.fromfile(os.path.join(dataset_dir, "train.bin"), dtype="<f4")
+        table = table.reshape(-1, ROW_WIDTH)
+        assert table.shape[0] == header["n_rows"]
+        return cls(table, header["workloads"])
+
+    def workload_rows(self, w: int) -> np.ndarray:
+        meta = self.workloads[w]
+        off, cnt = meta["offset"], meta["count"]
+        return self.table[off:off + cnt]
+
+    def n_workloads(self) -> int:
+        return len(self.workloads)
+
+    # ---- training arrays ---------------------------------------------------
+
+    def phase1_arrays(self, supervision: str):
+        """(hw_norm, w_norm, targets) for Phase-1 AE+PP training.
+
+        supervision: 'runtime' -> (N,1) normalized log-runtime;
+        'runtime_power' -> (N,2); 'edp' -> (N,1) normalized log-EDP.
+        """
+        hw = self.table[:, :HW_DIM]
+        w_norm = normalize_workload(self.table[:, [COL_M, COL_K, COL_N]])
+        cols = []
+        rt, pw, edp = (np.concatenate([getattr(s, f)(self.workload_rows(i)[:, c])
+                                       for i, s in enumerate(self.stats)])
+                       for f, c in [("norm_runtime", COL_RUNTIME),
+                                    ("norm_power", COL_POWER),
+                                    ("norm_edp", COL_EDP)])
+        if supervision == "runtime":
+            cols = [rt]
+        elif supervision == "runtime_power":
+            cols = [rt, pw]
+        elif supervision == "edp":
+            cols = [edp]
+        else:
+            raise ValueError(supervision)
+        targets = np.stack(cols, axis=1).astype(np.float32)
+        return hw.astype(np.float32), w_norm, targets
+
+    def condition_arrays(self, mode: str):
+        """Conditioning signal per row for Phase-2 DDM training.
+
+        mode 'runtime' -> (N,1) float; 'edp_class' -> (N,) int (Eq. 8 3x3
+        power-perf grid); 'perfopt_class' -> (N,) int (10 EDP percentiles).
+        """
+        if mode == "runtime":
+            vals = [self.stats[i].norm_runtime(self.workload_rows(i)[:, COL_RUNTIME])
+                    for i in range(self.n_workloads())]
+            return np.concatenate(vals)[:, None].astype(np.float32)
+        if mode == "edp_class":
+            vals = [self.stats[i].power_perf_class(
+                        self.workload_rows(i)[:, COL_POWER],
+                        self.workload_rows(i)[:, COL_RUNTIME])
+                    for i in range(self.n_workloads())]
+            return np.concatenate(vals)
+        if mode == "perfopt_class":
+            vals = [self.stats[i].edp_class(self.workload_rows(i)[:, COL_EDP])
+                    for i in range(self.n_workloads())]
+            return np.concatenate(vals)
+        raise ValueError(mode)

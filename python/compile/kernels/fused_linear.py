@@ -1,0 +1,121 @@
+"""Fused tiled linear kernel (Pallas): ``act(x @ w + b (+ residual))``.
+
+This is the generation hot-spot: every layer of the DDM denoiser — evaluated
+T times per reverse-diffusion sample — is one call of this kernel, so the
+bias/activation/residual epilogue is fused into the matmul's final K-step to
+avoid extra HBM↔VMEM round trips.
+
+TPU mapping (DESIGN.md §6): the grid tiles (batch × out-features) onto
+MXU-shaped 128×128 blocks with the contraction dimension streamed through
+VMEM in ``block_k`` chunks and accumulated in the output block — the role
+threadblock tiling plays in the paper's CUDA/V100 framing. ``interpret=True``
+everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls, and
+interpret-mode lowers to plain HLO that ships inside the AOT artifacts.
+
+VMEM footprint per grid step = (bm·bk + bk·bn + 2·bm·bn) · 4 B; the default
+128³ tiling uses 256 kB — far under the ~16 MB VMEM budget, leaving room for
+double buffering (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str, has_residual: bool,
+            r_ref=None):
+    """One (i, j, k) grid step: accumulate x@w, epilogue on the last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...][None, :]
+        if has_residual:
+            acc = acc + r_ref[...]
+        if activation == "relu":
+            acc = jax.nn.relu(acc)
+        o_ref[...] = acc
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k"),
+)
+def fused_linear(x, w, b, residual=None, *, activation: str = "none",
+                 block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    """act(x @ w + b (+ residual)) via a tiled Pallas kernel.
+
+    x: (M, K), w: (K, N), b: (N,), residual: optional (M, N).
+    Shapes need not be multiples of the block sizes (inputs are zero-padded
+    and the result sliced back).
+    """
+    assert x.ndim == 2 and w.ndim == 2 and b.ndim == 1
+    assert x.shape[1] == w.shape[0] and w.shape[1] == b.shape[0]
+    if activation not in ("none", "relu"):
+        raise ValueError(activation)
+    m, k = x.shape
+    n = w.shape[1]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b, 0, bn)
+    grid = (xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+    ]
+    args = [xp, wp, bp]
+    has_residual = residual is not None
+    if has_residual:
+        assert residual.shape == (m, n)
+        rp = _pad_to(_pad_to(residual, 0, bm), 1, bn)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        args.append(rp)
+        kernel = lambda x_ref, w_ref, b_ref, r_ref, o_ref: _kernel(  # noqa: E731
+            x_ref, w_ref, b_ref, o_ref, nk=grid[2], activation=activation,
+            has_residual=True, r_ref=r_ref)
+    else:
+        kernel = lambda x_ref, w_ref, b_ref, o_ref: _kernel(  # noqa: E731
+            x_ref, w_ref, b_ref, o_ref, nk=grid[2], activation=activation,
+            has_residual=False)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=True,
+    )(*args)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int, residual: bool = False) -> int:
+    """Static VMEM footprint of one grid step (f32), for the §Perf analysis."""
+    tiles = block_m * block_k + block_k * block_n + block_n + block_m * block_n
+    if residual:
+        tiles += block_m * block_n
+    return 4 * tiles

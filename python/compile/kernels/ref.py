@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package is pytest-checked against these references
+(hypothesis sweeps shapes/dtypes in python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear_ref(x, w, b, residual=None, activation="none"):
+    """y = act(x @ w + b (+ residual))."""
+    y = x @ w + b
+    if residual is not None:
+        y = y + residual
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation != "none":
+        raise ValueError(activation)
+    return y
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    """Row-wise layer normalization over the last axis."""
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

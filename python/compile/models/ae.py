@@ -1,0 +1,85 @@
+"""Phase-1: performance-guided encoding (paper §III-A, Figs 5/6).
+
+An autoencoder (AE) maps the 7-parameter hardware configuration into a
+128-d latent space; a jointly-trained performance predictor (PP) organizes
+that space by performance so designs with similar performance cluster
+(Fig 7). Architecture follows the paper exactly:
+
+* loop order one-hot → learnable 8-d embedding (Emb₁), concat with 6
+  numeric features → 14-d input;
+* ENC: Linear(14,512) → Linear(512,256) → Linear(256,128);
+* DEC: symmetric, and Emb₂ recovers loop-order logits from the embedded
+  segment;
+* PP: workload MLP Linear(3,256)→(256,256)→(256,128)→(128,1) plus a linear
+  head on the latent; predicted performance = sum of both branches
+  (extended to n_p > 1 for the joint [runtime, power] supervision of
+  §III-D).
+
+The hardware interchange vector is the 8-wide encoding produced by rust
+(6 numeric + 2 loop one-hot); Emb₁/Emb₂ translate between that and the
+14-d internal representation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+
+HW_DIM = 8           # rust interchange: 6 numeric + 2 loop one-hot
+NUMERIC_DIM = 6
+LOOP_DIM = 2
+EMB_DIM = 8          # paper: loop order embedded to 8-d
+INPUT_DIM = NUMERIC_DIM + EMB_DIM  # 14
+LATENT_DIM = 128
+
+
+def init(key, *, n_p: int = 1, hidden: tuple[int, int] = (512, 256)) -> dict:
+    """AE+PP parameter pytree. `n_p` = number of supervised metrics."""
+    k = jax.random.split(key, 6)
+    h1, h2 = hidden
+    return {
+        "emb1": nn.linear_init(k[0], LOOP_DIM, EMB_DIM),
+        "enc": nn.mlp_init(k[1], [INPUT_DIM, h1, h2, LATENT_DIM]),
+        "dec": nn.mlp_init(k[2], [LATENT_DIM, h2, h1, INPUT_DIM]),
+        "emb2": nn.linear_init(k[3], EMB_DIM, LOOP_DIM),
+        "pp_w": nn.mlp_init(k[4], [3, 256, 256, 128, n_p]),
+        "pp_v": nn.linear_init(k[5], LATENT_DIM, n_p),
+    }
+
+
+def encode(params: dict, hw: jnp.ndarray) -> jnp.ndarray:
+    """hw (B, 8) → latent (B, 128)."""
+    numeric, loop = hw[:, :NUMERIC_DIM], hw[:, NUMERIC_DIM:]
+    emb = nn.linear(params["emb1"], loop)
+    x = jnp.concatenate([numeric, emb], axis=-1)
+    return nn.mlp(params["enc"], x)
+
+
+def decode(params: dict, v: jnp.ndarray) -> jnp.ndarray:
+    """latent (B, 128) → hw (B, 8): 6 numeric + 2 loop-order logits."""
+    x = nn.mlp(params["dec"], v)
+    numeric, emb = x[:, :NUMERIC_DIM], x[:, NUMERIC_DIM:]
+    loop_logits = nn.linear(params["emb2"], emb)
+    return jnp.concatenate([numeric, loop_logits], axis=-1)
+
+
+def predict(params: dict, v: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """PP: (latent (B,128), workload (B,3)) → predicted metrics (B, n_p)."""
+    return nn.mlp(params["pp_w"], w) + nn.linear(params["pp_v"], v)
+
+
+def loss(params: dict, hw: jnp.ndarray, w: jnp.ndarray, targets: jnp.ndarray):
+    """L_total = L_recon + L_pred (Eq. 6). Loop reconstruction uses
+    softmax-CE on the one-hot slots (the paper recovers the categorical
+    loop order through Emb₂)."""
+    v = encode(params, hw)
+    rec = decode(params, v)
+    num_loss = jnp.mean((rec[:, :NUMERIC_DIM] - hw[:, :NUMERIC_DIM]) ** 2)
+    logp = jax.nn.log_softmax(rec[:, NUMERIC_DIM:], axis=-1)
+    loop_loss = -jnp.mean(jnp.sum(hw[:, NUMERIC_DIM:] * logp, axis=-1))
+    pred = predict(params, v, w)
+    pred_loss = jnp.mean((pred - targets) ** 2)
+    total = num_loss + 0.1 * loop_loss + pred_loss
+    return total, {"recon": num_loss + 0.1 * loop_loss, "pred": pred_loss}

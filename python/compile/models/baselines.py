@@ -1,0 +1,133 @@
+"""Learned baselines the paper compares against (§IV-B / Fig 16-18).
+
+* **surrogate** — a differentiable performance model ŝ(hw, w) ≈ normalized
+  log-runtime. Vanilla GD (DOSA-style) descends its gradient in hardware
+  space; it is also GANDSE's training signal.
+* **GANDSE** [32] — one-shot generator G(z, p, w) → hw trained to minimize
+  |ŝ(G(·), w) − p| through the differentiable surrogate (the paper
+  attributes GANDSE's ~34% error to exactly this surrogate approximation,
+  which this reproduction preserves; the adversarial realism term is
+  dropped as it does not affect the error mechanism — see DESIGN.md §3).
+* **AIRCHITECT v1** [21] — classification over a fixed 768-point design
+  space: w → logits(768).
+* **AIRCHITECT v2** [20] — classification + regression hybrid: coarse class
+  over a 64-point grid plus a regression refinement of the numeric
+  parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn
+from .ae import HW_DIM
+
+# ---------------------------------------------------------------------------
+# differentiable surrogate (vanilla-GD / GANDSE substrate)
+# ---------------------------------------------------------------------------
+
+def surrogate_init(key, hidden: int = 256) -> dict:
+    return nn.mlp_init(key, [HW_DIM + 3, hidden, hidden, 1])
+
+
+def surrogate_apply(params, hw, w):
+    """(B,8),(B,3) → (B,) predicted normalized log-runtime."""
+    return nn.mlp(params, jnp.concatenate([hw, w], axis=-1))[:, 0]
+
+
+def surrogate_loss(params, hw, w, target):
+    return jnp.mean((surrogate_apply(params, hw, w) - target) ** 2)
+
+
+def surrogate_grad_fn(params, hw, w, target):
+    """Per-sample loss + gradient wrt hw — the exported vanilla-GD step.
+
+    Returns (loss (B,), dloss/dhw (B, 8)).
+    """
+    def one(h, wi, ti):
+        return (surrogate_apply(params, h[None], wi[None])[0] - ti) ** 2
+
+    losses = jax.vmap(one)(hw, w, target)
+    grads = jax.vmap(jax.grad(one))(hw, w, target)
+    return losses, grads
+
+
+# ---------------------------------------------------------------------------
+# GANDSE generator
+# ---------------------------------------------------------------------------
+
+GANDSE_Z = 32
+
+
+def gandse_init(key, hidden: int = 256) -> dict:
+    return nn.mlp_init(key, [GANDSE_Z + 1 + 3, hidden, hidden, HW_DIM])
+
+
+def gandse_apply(params, z, p, w):
+    """(B,32),(B,1),(B,3) → hw (B,8) in [0,1] (sigmoid keeps it on-range)."""
+    x = jnp.concatenate([z, p, w], axis=-1)
+    return jax.nn.sigmoid(nn.mlp(params, x))
+
+
+def gandse_loss(params, surr_params, z, p, w):
+    """Surrogate-matching objective + diversity regularizer."""
+    hw = gandse_apply(params, z, p, w)
+    pred = surrogate_apply(surr_params, hw, w)
+    match = jnp.mean((pred - p[:, 0]) ** 2)
+    # diversity: discourage mode collapse across the z batch
+    div = -jnp.mean(jnp.var(hw, axis=0))
+    return match + 0.05 * div
+
+
+def gandse_generate(params, key, p, w):
+    z = jax.random.normal(key, (p.shape[0], GANDSE_Z))
+    return gandse_apply(params, z, p, w)
+
+
+# ---------------------------------------------------------------------------
+# AIRCHITECT v1 / v2 recommenders
+# ---------------------------------------------------------------------------
+
+def airchitect_grid(n: int, rng: np.random.Generator) -> np.ndarray:
+    """A fixed n-point sub-grid of the training space in normalized hw
+    coordinates (AIRCHITECT's 768-config universe)."""
+    from itertools import product
+
+    dims = [0.0, 0.2258, 0.4516, 1.0]            # r/c slots (4,32,60,128 approx)
+    bufs = [0.0, 0.25, 1.0]                      # buffer slots
+    grid = []
+    for r, c, b, bw, lo in product(dims, dims, bufs, [0.0, 1.0], [0, 1]):
+        onehot = [1.0, 0.0] if lo == 0 else [0.0, 1.0]
+        grid.append([r, c, b, b, b, bw] + onehot)
+    arr = np.array(grid, np.float32)
+    if len(arr) > n:
+        idx = rng.choice(len(arr), size=n, replace=False)
+        arr = arr[idx]
+    return arr
+
+
+def airchitect_v1_init(key, n_configs: int, hidden: int = 512) -> dict:
+    # wide output layer: the scaling bottleneck the paper calls out
+    return nn.mlp_init(key, [3, hidden, hidden, n_configs])
+
+
+def airchitect_v1_apply(params, w):
+    return nn.mlp(params, w)  # logits over the fixed grid
+
+
+def airchitect_v2_init(key, n_classes: int = 64, hidden: int = 256) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "cls": nn.mlp_init(k1, [3, hidden, hidden, n_classes]),
+        "reg": nn.mlp_init(k2, [3 + n_classes, hidden, HW_DIM]),
+    }
+
+
+def airchitect_v2_apply(params, w):
+    """w (B,3) → hw (B,8): coarse class + regression refinement."""
+    logits = nn.mlp(params["cls"], w)
+    soft = jax.nn.softmax(logits, axis=-1)
+    hw = jax.nn.sigmoid(nn.mlp(params["reg"], jnp.concatenate([w, soft], axis=-1)))
+    return hw, logits

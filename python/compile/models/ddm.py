@@ -1,0 +1,198 @@
+"""Phase-2: conditional denoising diffusion model (paper §III-B, Fig 8).
+
+Signal processor + asymmetric MLP U-Net denoiser:
+
+* **time embedding** — sinusoidal (dim 128) → Linear(128, H);
+* **condition embedding** — performance p and workload w processed by two
+  independent 2-layer MLPs (hidden 64, ReLU, dropout), concatenated and
+  projected to H. In the class-conditioned DSE modes (§III-D/E) p is a
+  learnable class embedding instead of a scalar;
+* **input projection** — noisy latent v_t (128) → H;
+* **denoiser** — concat (3H) → down path 3H→H→H/2 with LayerNorm + ReLU +
+  dropout → mid H/2 → up path with skip connection back to H → Linear(H, 128)
+  predicting the injected noise ε_θ.
+
+Paper scale is H = 512 (3.4 M parameters total); `DIFFAXE_SCALE` shrinks H
+for CPU training (DESIGN.md §3). A DDPM linear-β schedule over T steps
+(paper: 1000) drives both training and the exported reverse-diffusion
+sampler. The exported sampler executes its hidden layers with the Pallas
+kernels (L1); training uses the numerically identical jnp path (kernels are
+pytest-equivalent) for build-time speed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..kernels.fused_linear import fused_linear
+from ..kernels.layernorm import layernorm as pallas_layernorm
+from . import ae
+
+
+@dataclass(frozen=True)
+class DdmConfig:
+    latent: int = ae.LATENT_DIM
+    time_dim: int = 128
+    hidden: int = 512          # H: projection width (paper 512)
+    cond_hidden: int = 64
+    t_steps: int = 1000        # T (paper 1000)
+    n_classes: int = 0         # 0 => continuous scalar conditioning
+    dropout: float = 0.1
+
+    @property
+    def concat_dim(self) -> int:
+        return 3 * self.hidden
+
+    @property
+    def down2(self) -> int:
+        return self.hidden // 2
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """DDPM linear-β schedule [37]."""
+
+    betas: jnp.ndarray
+    alphas: jnp.ndarray
+    alpha_bars: jnp.ndarray
+
+    @classmethod
+    def linear(cls, t_steps: int, beta_start: float = 1e-4, beta_end: float = 0.02):
+        betas = jnp.linspace(beta_start, beta_end, t_steps, dtype=jnp.float32)
+        alphas = 1.0 - betas
+        return cls(betas=betas, alphas=alphas, alpha_bars=jnp.cumprod(alphas))
+
+
+def init(key, cfg: DdmConfig) -> dict:
+    k = jax.random.split(key, 8)
+    h = cfg.hidden
+    cond_in = cfg.n_classes if cfg.n_classes > 0 else 1
+    return {
+        "time_proj": nn.linear_init(k[0], cfg.time_dim, h),
+        "cond_p": nn.mlp_init(k[1], [cond_in, cfg.cond_hidden, cfg.cond_hidden]),
+        "cond_w": nn.mlp_init(k[2], [3, cfg.cond_hidden, cfg.cond_hidden]),
+        "cond_proj": nn.linear_init(k[3], 2 * cfg.cond_hidden, h),
+        "in_proj": nn.linear_init(k[4], cfg.latent, h),
+        "down1": nn.linear_init(k[5], cfg.concat_dim, h),
+        "ln1": nn.layernorm_init(h),
+        "down2": nn.linear_init(k[6], h, cfg.down2),
+        "ln2": nn.layernorm_init(cfg.down2),
+        "mid": nn.linear_init(k[7], cfg.down2, cfg.down2),
+        # up path: skip-concat(mid, down2) -> H, then out to latent
+        "up1": nn.linear_init(jax.random.fold_in(key, 100), 2 * cfg.down2, h),
+        "out": nn.linear_init(jax.random.fold_in(key, 101), h, cfg.latent),
+    }
+
+
+def _cond_input(cfg: DdmConfig, p):
+    """p: (B,1) float for continuous mode, (B,) int class ids otherwise."""
+    if cfg.n_classes > 0:
+        return jax.nn.one_hot(p, cfg.n_classes, dtype=jnp.float32)
+    return p
+
+
+def apply(params: dict, cfg: DdmConfig, v_t, t, p, w, *, train: bool = False,
+          dropout_key=None, use_pallas: bool = False):
+    """Predict the noise ε_θ(v_t, t | p, w). All inputs batched (B, ...)."""
+    lin = (lambda prm, x, act: fused_linear(x, prm["w"], prm["b"], activation=act)) \
+        if use_pallas else \
+        (lambda prm, x, act: jax.nn.relu(nn.linear(prm, x)) if act == "relu" else nn.linear(prm, x))
+    ln = (lambda prm, x: pallas_layernorm(x, prm["gamma"], prm["beta"])) \
+        if use_pallas else (lambda prm, x: nn.layernorm(prm, x))
+
+    te = nn.time_embedding(jnp.asarray(t, jnp.float32), cfg.time_dim)
+    if te.ndim == 1:
+        te = jnp.broadcast_to(te[None, :], (v_t.shape[0], cfg.time_dim))
+    t_h = lin(params["time_proj"], te, "none")
+
+    pc = nn.mlp(params["cond_p"], _cond_input(cfg, p))
+    wc = nn.mlp(params["cond_w"], w)
+    if train and cfg.dropout > 0:
+        dk1, dk2 = jax.random.split(dropout_key)
+        pc = nn.dropout(dk1, pc, cfg.dropout, train)
+        wc = nn.dropout(dk2, wc, cfg.dropout, train)
+    c_h = lin(params["cond_proj"], jnp.concatenate([pc, wc], axis=-1), "none")
+
+    x_h = lin(params["in_proj"], v_t, "none")
+
+    hcat = jnp.concatenate([x_h, t_h, c_h], axis=-1)
+    d1 = ln(params["ln1"], lin(params["down1"], hcat, "relu"))
+    d2 = ln(params["ln2"], lin(params["down2"], d1, "relu"))
+    m = lin(params["mid"], d2, "relu")
+    u1 = lin(params["up1"], jnp.concatenate([m, d2], axis=-1), "relu")
+    return lin(params["out"], u1, "none")
+
+
+def loss(params: dict, cfg: DdmConfig, sched: Schedule, key, v0, p, w):
+    """DDPM simple loss (Eq. 2): sample t, noise v0, predict the noise."""
+    kt, ke, kd = jax.random.split(key, 3)
+    b = v0.shape[0]
+    t = jax.random.randint(kt, (b,), 0, cfg.t_steps)
+    eps = jax.random.normal(ke, v0.shape)
+    ab = sched.alpha_bars[t][:, None]
+    v_t = jnp.sqrt(ab) * v0 + jnp.sqrt(1.0 - ab) * eps
+    pred = apply(params, cfg, v_t, t.astype(jnp.float32), p, w,
+                 train=True, dropout_key=kd)
+    return jnp.mean((pred - eps) ** 2)
+
+
+def latent_stats(v0):
+    """Per-dimension standardization stats of the latent training data.
+
+    The DDPM's noise schedule assumes ~unit-variance data ("we always
+    normalize data before feeding into a neural network", §III-C); the AE
+    latents are not naturally standardized, so Phase-2 trains on
+    (v − μ)/σ and the sampler de-standardizes before decoding.
+    """
+    mean = v0.mean(axis=0)
+    std = v0.std(axis=0) + 1e-6
+    return {"mean": jnp.asarray(mean), "std": jnp.asarray(std)}
+
+
+def standardize(stats, v):
+    return (v - stats["mean"]) / stats["std"]
+
+
+def destandardize(stats, v):
+    return v * stats["std"] + stats["mean"]
+
+
+def sample(params: dict, cfg: DdmConfig, sched: Schedule, key, p, w, *,
+           use_pallas: bool = True):
+    """Reverse diffusion (Eqs. 4/5): noise → denoised latent v̂.
+
+    Runs the full T-step loop inside one lax.fori_loop so the exported HLO
+    is a single self-contained computation (no per-step host round trips).
+    """
+    b = p.shape[0]
+    k_init, k_loop = jax.random.split(key)
+    v = jax.random.normal(k_init, (b, cfg.latent))
+
+    def step(i, v):
+        t = cfg.t_steps - 1 - i  # T-1 .. 0
+        tf = jnp.full((b,), t, jnp.float32)
+        eps = apply(params, cfg, v, tf, p, w, use_pallas=use_pallas)
+        alpha = sched.alphas[t]
+        ab = sched.alpha_bars[t]
+        mean = (v - (1.0 - alpha) / jnp.sqrt(1.0 - ab) * eps) / jnp.sqrt(alpha)
+        sigma = jnp.sqrt(sched.betas[t])
+        z = jax.random.normal(jax.random.fold_in(k_loop, i), v.shape)
+        # Eq. 5: no noise on the final step (t == 0)
+        return mean + jnp.where(t > 0, sigma, 0.0) * z
+
+    return jax.lax.fori_loop(0, cfg.t_steps, step, v)
+
+
+def generate_hw(ddm_params, ae_params, cfg: DdmConfig, sched: Schedule, key, p, w,
+                *, v_stats=None, use_pallas: bool = True):
+    """Full generation path: sample (standardized) latent, de-standardize,
+    decode to the 8-wide hardware interchange vector (rust rounds it into
+    the target space)."""
+    v = sample(ddm_params, cfg, sched, key, p, w, use_pallas=use_pallas)
+    if v_stats is not None:
+        v = destandardize(v_stats, v)
+    return ae.decode(ae_params, v)

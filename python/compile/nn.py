@@ -1,0 +1,117 @@
+"""Minimal neural-network library in pure JAX.
+
+flax/optax are not available in this offline image, so the compile path
+carries its own: parameter pytrees (nested dicts), linear/MLP/layernorm
+initializers + applies, and an Adam(W) optimizer. Everything is a pure
+function over pytrees, so models lower cleanly through ``jax.jit`` to HLO.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def linear_init(key, in_dim: int, out_dim: int) -> dict:
+    """He/Kaiming-uniform linear layer parameters."""
+    bound = math.sqrt(1.0 / in_dim)
+    wk, bk = jax.random.split(key)
+    return {
+        "w": jax.random.uniform(wk, (in_dim, out_dim), jnp.float32, -bound, bound),
+        "b": jax.random.uniform(bk, (out_dim,), jnp.float32, -bound, bound),
+    }
+
+
+def mlp_init(key, dims: list[int]) -> dict:
+    """Stack of linear layers: dims = [in, h1, ..., out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": linear_init(keys[i], dims[i], dims[i + 1]) for i in range(len(dims) - 1)}
+
+
+def layernorm_init(dim: int) -> dict:
+    return {"gamma": jnp.ones((dim,), jnp.float32), "beta": jnp.zeros((dim,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# applies
+# ---------------------------------------------------------------------------
+
+def linear(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["w"] + params["b"]
+
+
+def mlp(params: dict, x: jnp.ndarray, act: Callable = jax.nn.relu, final_act=None) -> jnp.ndarray:
+    """Apply an ``mlp_init`` stack with `act` between layers."""
+    n = len(params)
+    for i in range(n):
+        x = linear(params[f"l{i}"], x)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * params["gamma"] + params["beta"]
+
+
+def dropout(key, x: jnp.ndarray, rate: float, train: bool) -> jnp.ndarray:
+    if not train or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# AdamW (decoupled weight decay, as the paper uses)
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    """One AdamW step; returns (new_params, new_state)."""
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * weight_decay * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# sinusoidal timestep embedding (DDPM-style, dim 128 per the paper)
+# ---------------------------------------------------------------------------
+
+def time_embedding(t: jnp.ndarray, dim: int = 128) -> jnp.ndarray:
+    """Sinusoidal positional embedding of diffusion timestep(s).
+
+    t: () or (B,) float/int array. Returns (..., dim).
+    """
+    t = jnp.asarray(t, jnp.float32)
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[..., None] * freqs
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)

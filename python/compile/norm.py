@@ -1,0 +1,106 @@
+"""Normalization conventions shared with the rust coordinator.
+
+The hardware encoding (8-wide, min-max over Table I target ranges + loop
+one-hot) is produced by rust (``design_space::encode_norm``) and arrives
+pre-normalized in the dataset. This module owns the *label* and *workload*
+transforms (paper §IV-A):
+
+* runtime: ``log`` then per-workload min-max to [0,1] (runtimes span 3
+  orders of magnitude within one workload, Fig 13);
+* power: global min-max;
+* EDP: ``log`` then per-workload min-max;
+* workload (M,K,N): global min-max over the §IV-A ranges.
+
+Per-workload stats and percentile class edges are serialized into
+``artifacts/norm_stats.json`` for the rust side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# paper §IV-A workload ranges (mirrors rust workload::gemm)
+M_MAX, K_MAX, N_MAX = 1024, 4096, 30_000
+
+# Eq. 8 class grid for the EDP-DSE mode (§IV-B.2: 3 x 3) and the number of
+# EDP percentile classes for the perf-opt mode (§IV-B.3: 10).
+N_POWER, N_PERF = 3, 3
+N_EDP = 10
+
+
+def normalize_workload(mkn: np.ndarray) -> np.ndarray:
+    """(..., 3) raw M,K,N -> [0,1]^3 (must match rust Gemm::norm_vec)."""
+    mkn = np.asarray(mkn, np.float64)
+    lo = np.array([1.0, 1.0, 1.0])
+    hi = np.array([M_MAX, K_MAX, N_MAX], np.float64)
+    return ((mkn - lo) / (hi - lo)).astype(np.float32)
+
+
+def percentile_edges(values: np.ndarray, n_bins: int) -> np.ndarray:
+    """Equal-mass bin edges; length n_bins+1 (mirrors rust stats)."""
+    qs = np.linspace(0.0, 100.0, n_bins + 1)
+    return np.percentile(values, qs)
+
+
+def bin_index(edges: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Vectorized twin of rust ``stats::bin_index`` (clamping)."""
+    n_bins = len(edges) - 1
+    idx = np.searchsorted(edges[1:-1], x, side="left")
+    return np.clip(idx, 0, n_bins - 1)
+
+
+class WorkloadStats:
+    """Per-workload label statistics + class edges."""
+
+    def __init__(self, m, k, n, runtime, power, edp):
+        self.m, self.k, self.n = int(m), int(k), int(n)
+        log_rt = np.log(runtime)
+        log_edp = np.log(edp)
+        self.log_rt_min = float(log_rt.min())
+        self.log_rt_max = float(log_rt.max())
+        self.power_min = float(power.min())
+        self.power_max = float(power.max())
+        self.log_edp_min = float(log_edp.min())
+        self.log_edp_max = float(log_edp.max())
+        self.power_edges = percentile_edges(power, N_POWER)
+        self.rt_edges = percentile_edges(runtime, N_PERF)
+        self.edp_edges = percentile_edges(edp, N_EDP)
+
+    def _span(self, lo, hi):
+        return max(hi - lo, 1e-9)
+
+    def norm_runtime(self, runtime):
+        return ((np.log(runtime) - self.log_rt_min)
+                / self._span(self.log_rt_min, self.log_rt_max)).astype(np.float32)
+
+    def denorm_runtime(self, p):
+        return np.exp(np.asarray(p, np.float64)
+                      * self._span(self.log_rt_min, self.log_rt_max) + self.log_rt_min)
+
+    def norm_power(self, power):
+        return ((power - self.power_min)
+                / self._span(self.power_min, self.power_max)).astype(np.float32)
+
+    def norm_edp(self, edp):
+        return ((np.log(edp) - self.log_edp_min)
+                / self._span(self.log_edp_min, self.log_edp_max)).astype(np.float32)
+
+    def power_perf_class(self, power, runtime):
+        """Eq. 8: class = class_power + N_power * class_perf."""
+        cp = bin_index(self.power_edges, power)
+        cr = bin_index(self.rt_edges, runtime)
+        return (cp + N_POWER * cr).astype(np.int32)
+
+    def edp_class(self, edp):
+        return bin_index(self.edp_edges, edp).astype(np.int32)
+
+    def to_json(self) -> dict:
+        return {
+            "m": self.m, "k": self.k, "n": self.n,
+            "log_rt_min": self.log_rt_min, "log_rt_max": self.log_rt_max,
+            "power_min": self.power_min, "power_max": self.power_max,
+            "log_edp_min": self.log_edp_min, "log_edp_max": self.log_edp_max,
+            "power_edges": list(map(float, self.power_edges)),
+            "rt_edges": list(map(float, self.rt_edges)),
+            "edp_edges": list(map(float, self.edp_edges)),
+        }

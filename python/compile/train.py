@@ -1,0 +1,281 @@
+"""Build-time training loops for every learned component.
+
+Runs once inside ``make artifacts`` (never on the request path). Scale knobs
+come from ``DIFFAXE_SCALE`` (paper / default / quick — see DESIGN.md §3):
+the paper trains H=512 models for 5+10 epochs on 46.7 M samples on a V100;
+the default here shrinks widths/epochs so a single CPU core finishes in
+minutes while exercising identical code paths.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nn
+from .data import TrainData
+from .models import ae, baselines, ddm
+
+
+@dataclass(frozen=True)
+class ScaleConfig:
+    name: str
+    ae_hidden: tuple[int, int]
+    ddm_hidden: int
+    t_steps: int
+    ae_epochs: int
+    ddm_epochs: int
+    batch_ae: int
+    batch_ddm: int
+    ddm_max_rows: int           # subsample cap for DDM training
+    gen_batch: int              # fixed batch of the exported sampler
+    baseline_epochs: int
+
+    @classmethod
+    def from_env(cls) -> "ScaleConfig":
+        scale = os.environ.get("DIFFAXE_SCALE", "default")
+        if scale == "paper":
+            return cls("paper", (512, 256), 512, 1000, 5, 10, 512, 128,
+                       10**9, 1000, 10)
+        if scale == "quick":
+            return cls("quick", (128, 64), 64, 16, 2, 2, 256, 256,
+                       4096, 16, 2)
+        return cls("default", (256, 128), 256, 100, 4, 12, 512, 256,
+                   190_000, 128, 6)
+
+
+@dataclass
+class TrainLog:
+    """Loss curves recorded for Figs 14/15(a)."""
+    curves: dict
+
+    def add(self, name: str, losses: list[float]):
+        self.curves[name] = [float(x) for x in losses]
+
+
+def _batches(rng: np.random.Generator, n: int, batch: int):
+    idx = rng.permutation(n)
+    for s in range(0, n - batch + 1, batch):
+        yield idx[s:s + batch]
+
+
+# ---------------------------------------------------------------------------
+# Phase-1: AE + PP
+# ---------------------------------------------------------------------------
+
+def train_phase1(data: TrainData, supervision: str, sc: ScaleConfig, seed: int = 0):
+    """Returns (params, epoch_losses)."""
+    hw, w, targets = data.phase1_arrays(supervision)
+    n_p = targets.shape[1]
+    params = ae.init(jax.random.PRNGKey(seed), n_p=n_p, hidden=sc.ae_hidden)
+    opt = nn.adamw_init(params)
+
+    @jax.jit
+    def update(params, opt, hwb, wb, tb):
+        (l, aux), grads = jax.value_and_grad(ae.loss, has_aux=True)(params, hwb, wb, tb)
+        params, opt = nn.adamw_update(params, grads, opt, 1e-3, weight_decay=1e-3)
+        return params, opt, l
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    t0 = time.time()
+    for epoch in range(sc.ae_epochs):
+        epoch_loss, nb = 0.0, 0
+        for idx in _batches(rng, len(hw), sc.batch_ae):
+            params, opt, l = update(params, opt, jnp.asarray(hw[idx]),
+                                    jnp.asarray(w[idx]), jnp.asarray(targets[idx]))
+            epoch_loss += float(l)
+            nb += 1
+        losses.append(epoch_loss / max(nb, 1))
+        print(f"  phase1[{supervision}] epoch {epoch}: loss {losses[-1]:.5f} "
+              f"({time.time() - t0:.0f}s)")
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Phase-2: DDM on the latent space
+# ---------------------------------------------------------------------------
+
+def train_phase2(data: TrainData, ae_params, cond_mode: str, sc: ScaleConfig,
+                 seed: int = 0):
+    """cond_mode: 'runtime' | 'edp_class' | 'perfopt_class'."""
+    from .norm import N_EDP, N_PERF, N_POWER, normalize_workload
+
+    hw = data.table[:, :8].astype(np.float32)
+    w = normalize_workload(data.table[:, [8, 9, 10]])
+    cond = data.condition_arrays(cond_mode)
+    n_classes = {"runtime": 0, "edp_class": N_POWER * N_PERF,
+                 "perfopt_class": N_EDP}[cond_mode]
+    cfg = ddm.DdmConfig(hidden=sc.ddm_hidden, t_steps=sc.t_steps, n_classes=n_classes)
+    sched = ddm.Schedule.linear(cfg.t_steps)
+
+    # encode all hardware rows to latents once (frozen AE), standardized for
+    # the DDPM's unit-variance noise schedule
+    v0 = np.asarray(jax.jit(ae.encode)(ae_params, jnp.asarray(hw)))
+    v_stats = ddm.latent_stats(v0)
+    v0 = np.asarray(ddm.standardize(v_stats, v0))
+
+    # subsample for CPU budget
+    rng = np.random.default_rng(seed + 1)
+    if len(v0) > sc.ddm_max_rows:
+        keep = rng.choice(len(v0), size=sc.ddm_max_rows, replace=False)
+        v0, w, cond = v0[keep], w[keep], cond[keep]
+
+    params = ddm.init(jax.random.PRNGKey(seed + 2), cfg)
+    opt = nn.adamw_init(params)
+
+    @jax.jit
+    def update(params, opt, lr, key, vb, pb, wb):
+        l, grads = jax.value_and_grad(ddm.loss)(params, cfg, sched, key, vb, pb, wb)
+        params, opt = nn.adamw_update(params, grads, opt, lr, weight_decay=1e-2)
+        return params, opt, l
+
+    losses = []
+    key = jax.random.PRNGKey(seed + 3)
+    t0 = time.time()
+    lr, patience = 1e-3, 0
+    for epoch in range(sc.ddm_epochs):
+        epoch_loss, nb = 0.0, 0
+        for idx in _batches(rng, len(v0), sc.batch_ddm):
+            key, sub = jax.random.split(key)
+            params, opt, l = update(params, opt, jnp.float32(lr), sub,
+                                    jnp.asarray(v0[idx]),
+                                    jnp.asarray(cond[idx]), jnp.asarray(w[idx]))
+            epoch_loss += float(l)
+            nb += 1
+        losses.append(epoch_loss / max(nb, 1))
+        # ReduceLROnPlateau (paper: patience 2)
+        if epoch >= 1 and losses[-1] > losses[-2] - 1e-4:
+            patience += 1
+            if patience >= 2:
+                lr *= 0.5
+                patience = 0
+        else:
+            patience = 0
+        print(f"  phase2[{cond_mode}] epoch {epoch}: loss {losses[-1]:.5f} "
+              f"lr {lr:.1e} ({time.time() - t0:.0f}s)")
+    return params, cfg, sched, losses, v_stats
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def train_surrogate(data: TrainData, sc: ScaleConfig, seed: int = 10):
+    from .norm import normalize_workload
+
+    hw = data.table[:, :8].astype(np.float32)
+    w = normalize_workload(data.table[:, [8, 9, 10]])
+    target = data.condition_arrays("runtime")[:, 0]
+    params = baselines.surrogate_init(jax.random.PRNGKey(seed))
+    opt = nn.adamw_init(params)
+
+    @jax.jit
+    def update(params, opt, hwb, wb, tb):
+        l, grads = jax.value_and_grad(baselines.surrogate_loss)(params, hwb, wb, tb)
+        params, opt = nn.adamw_update(params, grads, opt, 1e-3)
+        return params, opt, l
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    for _ in range(sc.baseline_epochs):
+        tot, nb = 0.0, 0
+        for idx in _batches(rng, len(hw), 512):
+            params, opt, l = update(params, opt, jnp.asarray(hw[idx]),
+                                    jnp.asarray(w[idx]), jnp.asarray(target[idx]))
+            tot += float(l)
+            nb += 1
+        losses.append(tot / max(nb, 1))
+    print(f"  surrogate: final loss {losses[-1]:.5f}")
+    return params, losses
+
+
+def train_gandse(data: TrainData, surr_params, sc: ScaleConfig, seed: int = 20):
+    from .norm import normalize_workload
+
+    w = normalize_workload(data.table[:, [8, 9, 10]])
+    p = data.condition_arrays("runtime")
+    params = baselines.gandse_init(jax.random.PRNGKey(seed))
+    opt = nn.adamw_init(params)
+
+    @jax.jit
+    def update(params, opt, key, pb, wb):
+        z = jax.random.normal(key, (pb.shape[0], baselines.GANDSE_Z))
+        l, grads = jax.value_and_grad(baselines.gandse_loss)(params, surr_params, z, pb, wb)
+        params, opt = nn.adamw_update(params, grads, opt, 1e-3)
+        return params, opt, l
+
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    losses = []
+    for _ in range(sc.baseline_epochs):
+        tot, nb = 0.0, 0
+        for idx in _batches(rng, len(w), 512):
+            key, sub = jax.random.split(key)
+            params, opt, l = update(params, opt, sub, jnp.asarray(p[idx]), jnp.asarray(w[idx]))
+            tot += float(l)
+            nb += 1
+        losses.append(tot / max(nb, 1))
+    print(f"  gandse: final loss {losses[-1]:.5f}")
+    return params, losses
+
+
+def train_airchitect(data: TrainData, sc: ScaleConfig, seed: int = 30):
+    """Train v1 (classification over a fixed grid) and v2 (cls+reg) to
+    recommend the lowest-EDP design per workload."""
+    from .norm import normalize_workload
+
+    rng = np.random.default_rng(seed)
+    grid = baselines.airchitect_grid(768, rng)
+
+    # supervision: per workload, the best (lowest-EDP) training row
+    ws, best_hw, best_cls = [], [], []
+    for i in range(data.n_workloads()):
+        rows = data.workload_rows(i)
+        best = rows[np.argmin(rows[:, 13])]
+        wv = normalize_workload(best[None, [8, 9, 10]])[0]
+        ws.append(wv)
+        best_hw.append(best[:8])
+        d = np.linalg.norm(grid - best[None, :8], axis=1)
+        best_cls.append(np.argmin(d))
+    ws = np.array(ws, np.float32)
+    best_hw = np.array(best_hw, np.float32)
+    best_cls = np.array(best_cls, np.int64)
+
+    v1 = baselines.airchitect_v1_init(jax.random.PRNGKey(seed), len(grid))
+    v2 = baselines.airchitect_v2_init(jax.random.PRNGKey(seed + 1))
+
+    def v1_loss(params):
+        logits = baselines.airchitect_v1_apply(params, jnp.asarray(ws))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(logp[jnp.arange(len(best_cls)), jnp.asarray(best_cls)])
+
+    def v2_loss(params):
+        hw, logits = baselines.airchitect_v2_apply(params, jnp.asarray(ws))
+        coarse = jnp.argmax(logits, axis=-1)  # unsupervised coarse head ok
+        del coarse
+        return jnp.mean((hw - jnp.asarray(best_hw)) ** 2)
+
+    def fit(params, lossfn, steps):
+        opt = nn.adamw_init(params)
+
+        @jax.jit
+        def update(params, opt):
+            l, g = jax.value_and_grad(lossfn)(params)
+            params, opt = nn.adamw_update(params, g, opt, 1e-3)
+            return params, opt, l
+
+        final = None
+        for _ in range(steps):
+            params, opt, final = update(params, opt)
+        return params, float(final)
+
+    v1, l1 = fit(v1, v1_loss, 200 * sc.baseline_epochs)
+    v2, l2 = fit(v2, v2_loss, 200 * sc.baseline_epochs)
+    print(f"  airchitect_v1: final loss {l1:.5f}; v2: {l2:.5f}")
+    return v1, v2, grid

@@ -1,0 +1,91 @@
+"""Dataset loader tests (rust binary format → numpy) and the AOT export
+contract. Skips gracefully when artifacts/dataset has not been generated."""
+
+import os
+
+import numpy as np
+import pytest
+
+DATASET_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "dataset")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(DATASET_DIR, "train.json")),
+    reason="artifacts/dataset missing — run `make artifacts` first",
+)
+
+
+@pytest.fixture(scope="module")
+def data():
+    from compile.data import TrainData
+
+    return TrainData.load(DATASET_DIR)
+
+
+def test_table_shape_and_ranges(data):
+    from compile.data import COL_EDP, COL_POWER, COL_RUNTIME, ROW_WIDTH
+
+    assert data.table.shape[1] == ROW_WIDTH
+    assert (data.table[:, :8] >= 0).all() and (data.table[:, :8] <= 1).all(), \
+        "hw encoding must be normalized"
+    assert (data.table[:, COL_RUNTIME] > 0).all()
+    assert (data.table[:, COL_POWER] > 0).all()
+    assert (data.table[:, COL_EDP] > 0).all()
+    # loop one-hot: exactly one of the two slots set
+    assert np.allclose(data.table[:, 6] + data.table[:, 7], 1.0)
+
+
+def test_workload_spans_partition_table(data):
+    total = sum(w["count"] for w in data.workloads)
+    assert total == len(data.table)
+    offsets = sorted(w["offset"] for w in data.workloads)
+    assert offsets[0] == 0
+
+
+def test_phase1_arrays(data):
+    for supervision, n_p in [("runtime", 1), ("runtime_power", 2), ("edp", 1)]:
+        hw, w, t = data.phase1_arrays(supervision)
+        assert hw.shape == (len(data.table), 8)
+        assert w.shape == (len(data.table), 3)
+        assert t.shape == (len(data.table), n_p)
+        assert t.min() >= -1e-5 and t.max() <= 1 + 1e-5, supervision
+
+
+def test_condition_arrays(data):
+    from compile.norm import N_EDP, N_PERF, N_POWER
+
+    p = data.condition_arrays("runtime")
+    assert p.shape == (len(data.table), 1)
+    c = data.condition_arrays("edp_class")
+    assert c.min() >= 0 and c.max() < N_POWER * N_PERF
+    e = data.condition_arrays("perfopt_class")
+    assert e.min() >= 0 and e.max() < N_EDP
+    # every class is populated for at least one workload
+    assert len(np.unique(e)) == N_EDP
+
+
+def test_runtime_spans_orders_of_magnitude(data):
+    """Paper Fig 13: runtimes span ~3 orders of magnitude per workload."""
+    from compile.data import COL_RUNTIME
+
+    spans = []
+    for i in range(data.n_workloads()):
+        rt = data.workload_rows(i)[:, COL_RUNTIME]
+        spans.append(rt.max() / rt.min())
+    assert np.median(spans) > 100, f"median span {np.median(spans)}"
+
+
+def test_hlo_export_has_no_elided_constants():
+    """The AOT interchange regression that zeroed all weights: large
+    constants must be printed in full (see aot.to_hlo_text)."""
+    import jax
+    import jax.numpy as jnp
+
+    from compile import nn
+    from compile.aot import to_hlo_text
+
+    m = nn.mlp_init(jax.random.PRNGKey(0), [64, 32, 8])
+    lowered = jax.jit(lambda x: (nn.mlp(m, x),)).lower(
+        jax.ShapeDtypeStruct((4, 64), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "{...}" not in text
+    assert "f32[64,32]" in text

@@ -1,0 +1,106 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes per the repo testing policy; tolerances
+account for f32 accumulation-order differences on large K.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.fused_linear import fused_linear, vmem_bytes
+from compile.kernels.layernorm import layernorm
+from compile.kernels.ref import fused_linear_ref, layernorm_ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+@hypothesis.given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 300),
+    n=st.integers(1, 200),
+    act=st.sampled_from(["none", "relu"]),
+    residual=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, act, residual, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kb, kr = jax.random.split(key, 4)
+    x, w, b = _rand(kx, m, k), _rand(kw, k, n), _rand(kb, n)
+    r = _rand(kr, m, n) if residual else None
+    got = fused_linear(x, w, b, residual=r, activation=act)
+    want = fused_linear_ref(x, w, b, residual=r, activation=act)
+    scale = float(jnp.abs(want).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=2e-5 * scale)
+
+
+@hypothesis.given(
+    m=st.integers(1, 300),
+    d=st.integers(2, 512),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(m, d, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kg, kb = jax.random.split(key, 3)
+    x = _rand(kx, m, d) * 3.0
+    gamma = _rand(kg, d)
+    beta = _rand(kb, d)
+    got = layernorm(x, gamma, beta)
+    want = layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("blocks", [(32, 32, 32), (64, 128, 32), (128, 128, 128)])
+def test_fused_linear_block_shape_invariance(blocks):
+    """Result must not depend on the tiling choice."""
+    bm, bn, bk = blocks
+    key = jax.random.PRNGKey(7)
+    x, w, b = _rand(key, 100, 200), _rand(key, 200, 90), _rand(key, 90)
+    got = fused_linear(x, w, b, activation="relu", block_m=bm, block_n=bn, block_k=bk)
+    want = fused_linear_ref(x, w, b, activation="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_rejects_bad_activation():
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError):
+        fused_linear(_rand(key, 4, 4), _rand(key, 4, 4), _rand(key, 4),
+                     activation="gelu")
+
+
+def test_vmem_budget_under_16mb():
+    """The §Perf contract: default tiling fits VMEM with double buffering."""
+    assert 2 * vmem_bytes(128, 128, 128, residual=True) < 16 * 2**20
+
+
+def test_fused_linear_lowers_to_hlo_text():
+    """The kernel must survive the AOT interchange path (interpret=True →
+    plain HLO, no Mosaic custom-calls)."""
+    from jax._src.lib import xla_client as xc
+
+    def fn(x, w, b):
+        return (fused_linear(x, w, b, activation="relu"),)
+
+    spec = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    wspec = jax.ShapeDtypeStruct((64, 16), jnp.float32)
+    bspec = jax.ShapeDtypeStruct((16,), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, wspec, bspec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text()
+    assert "custom-call" not in text, "Mosaic custom-call leaked into AOT HLO"
+    assert len(text) > 100

@@ -1,0 +1,194 @@
+"""L2 model correctness: AE/PP architecture contract, DDPM schedule and
+sampler invariants, baseline model shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import nn
+from compile.models import ae, baselines, ddm
+
+
+@pytest.fixture(scope="module")
+def ae_params():
+    return ae.init(jax.random.PRNGKey(0), n_p=1)
+
+
+def test_ae_shapes_follow_paper(ae_params):
+    # ENC: 14->512->256->128, DEC symmetric (paper §III-A)
+    assert ae_params["enc"]["l0"]["w"].shape == (14, 512)
+    assert ae_params["enc"]["l1"]["w"].shape == (512, 256)
+    assert ae_params["enc"]["l2"]["w"].shape == (256, 128)
+    assert ae_params["dec"]["l2"]["w"].shape == (512, 14)
+    # PP workload branch: 3->256->256->128->1
+    assert ae_params["pp_w"]["l0"]["w"].shape == (3, 256)
+    assert ae_params["pp_w"]["l3"]["w"].shape == (128, 1)
+    # loop-order embedding: 2 -> 8
+    assert ae_params["emb1"]["w"].shape == (2, 8)
+
+
+def test_encode_decode_shapes(ae_params):
+    hw = jax.random.uniform(jax.random.PRNGKey(1), (32, 8))
+    v = ae.encode(ae_params, hw)
+    assert v.shape == (32, 128)
+    rec = ae.decode(ae_params, v)
+    assert rec.shape == (32, 8)
+    pred = ae.predict(ae_params, v, jnp.zeros((32, 3)))
+    assert pred.shape == (32, 1)
+
+
+def test_ae_loss_decreases_under_training(ae_params):
+    key = jax.random.PRNGKey(2)
+    hw = jax.random.uniform(key, (256, 8))
+    # make loop slots a proper one-hot
+    hot = (hw[:, 6] > hw[:, 7]).astype(jnp.float32)
+    hw = hw.at[:, 6].set(hot).at[:, 7].set(1.0 - hot)
+    w = jax.random.uniform(key, (256, 3))
+    t = jnp.sum(hw[:, :2], axis=1, keepdims=True)
+    params = ae_params
+    opt = nn.adamw_init(params)
+
+    @jax.jit
+    def step(params, opt):
+        (l, _), g = jax.value_and_grad(ae.loss, has_aux=True)(params, hw, w, t)
+        params, opt = nn.adamw_update(params, g, opt, 1e-3)
+        return params, opt, l
+
+    losses = []
+    for _ in range(60):
+        params, opt, l = step(params, opt)
+        losses.append(float(l))
+    assert losses[-1] < 0.5 * losses[0], f"{losses[0]} -> {losses[-1]}"
+
+
+def test_schedule_invariants():
+    for t_steps in [16, 100, 1000]:
+        s = ddm.Schedule.linear(t_steps)
+        ab = np.asarray(s.alpha_bars)
+        assert len(ab) == t_steps
+        assert np.all(np.diff(ab) < 0), "alpha_bar must be strictly decreasing"
+        assert 0.0 < ab[-1] < ab[0] < 1.0
+        assert np.all(np.asarray(s.betas) > 0)
+        assert np.allclose(np.asarray(s.alphas), 1.0 - np.asarray(s.betas))
+
+
+def test_ddm_apply_shape_and_conditioning():
+    cfg = ddm.DdmConfig(hidden=64, t_steps=8)
+    params = ddm.init(jax.random.PRNGKey(3), cfg)
+    v = jax.random.normal(jax.random.PRNGKey(4), (8, 128))
+    p1 = jnp.zeros((8, 1))
+    p2 = jnp.ones((8, 1))
+    w = jnp.zeros((8, 3))
+    t = jnp.full((8,), 3.0)
+    e1 = ddm.apply(params, cfg, v, t, p1, w)
+    e2 = ddm.apply(params, cfg, v, t, p2, w)
+    assert e1.shape == (8, 128)
+    # conditioning must influence the prediction
+    assert float(jnp.abs(e1 - e2).max()) > 1e-4
+
+
+def test_ddm_class_conditioning_mode():
+    cfg = ddm.DdmConfig(hidden=64, t_steps=8, n_classes=9)
+    params = ddm.init(jax.random.PRNGKey(5), cfg)
+    v = jax.random.normal(jax.random.PRNGKey(6), (4, 128))
+    w = jnp.zeros((4, 3))
+    t = jnp.full((4,), 2.0)
+    ca = ddm.apply(params, cfg, v, t, jnp.array([0, 1, 2, 3]), w)
+    cb = ddm.apply(params, cfg, v, t, jnp.array([8, 8, 8, 8]), w)
+    assert ca.shape == (4, 128)
+    assert float(jnp.abs(ca - cb).max()) > 1e-4
+
+
+def test_sampler_noise_free_final_step():
+    """Eq. 5: z = 0 at t=1 — sampling twice with the same key is
+    deterministic, and the loop runs exactly T steps."""
+    cfg = ddm.DdmConfig(hidden=32, t_steps=6)
+    sched = ddm.Schedule.linear(cfg.t_steps)
+    params = ddm.init(jax.random.PRNGKey(7), cfg)
+    p = jnp.full((3, 1), 0.5)
+    w = jnp.full((3, 3), 0.5)
+    a = ddm.sample(params, cfg, sched, jax.random.PRNGKey(9), p, w, use_pallas=False)
+    b = ddm.sample(params, cfg, sched, jax.random.PRNGKey(9), p, w, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = ddm.sample(params, cfg, sched, jax.random.PRNGKey(10), p, w, use_pallas=False)
+    assert float(jnp.abs(a - c).max()) > 1e-3
+
+
+def test_pallas_and_plain_denoiser_agree():
+    cfg = ddm.DdmConfig(hidden=64, t_steps=4)
+    params = ddm.init(jax.random.PRNGKey(11), cfg)
+    v = jax.random.normal(jax.random.PRNGKey(12), (8, 128))
+    p = jnp.full((8, 1), 0.3)
+    w = jnp.full((8, 3), 0.7)
+    t = jnp.full((8,), 1.0)
+    a = ddm.apply(params, cfg, v, t, p, w, use_pallas=False)
+    b = ddm.apply(params, cfg, v, t, p, w, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_latent_standardization_roundtrip():
+    v = np.random.default_rng(0).normal(3.0, 0.2, (500, 128)).astype(np.float32)
+    stats = ddm.latent_stats(v)
+    s = ddm.standardize(stats, jnp.asarray(v))
+    assert abs(float(s.mean())) < 1e-2
+    assert abs(float(s.std()) - 1.0) < 1e-2
+    back = ddm.destandardize(stats, s)
+    np.testing.assert_allclose(np.asarray(back), v, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_diffusion_matches_eq1():
+    cfg = ddm.DdmConfig(hidden=32, t_steps=10)
+    sched = ddm.Schedule.linear(cfg.t_steps)
+    v0 = jnp.ones((2, 128))
+    eps = jnp.full((2, 128), 0.5)
+    t = 7
+    ab = sched.alpha_bars[t]
+    vt = jnp.sqrt(ab) * v0 + jnp.sqrt(1 - ab) * eps
+    # reconstruct v0 from (vt, eps): Eq. 1 inverted
+    rec = (vt - jnp.sqrt(1 - ab) * eps) / jnp.sqrt(ab)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(v0), rtol=1e-5)
+
+
+def test_gandse_outputs_in_unit_range():
+    params = baselines.gandse_init(jax.random.PRNGKey(13))
+    hw = baselines.gandse_generate(params, jax.random.PRNGKey(14),
+                                   jnp.full((16, 1), 0.5), jnp.zeros((16, 3)))
+    arr = np.asarray(hw)
+    assert arr.shape == (16, 8)
+    assert (arr >= 0).all() and (arr <= 1).all()
+
+
+def test_airchitect_models():
+    rng = np.random.default_rng(1)
+    grid = baselines.airchitect_grid(768, rng)
+    assert grid.shape[1] == 8
+    assert len(grid) <= 768
+    v1 = baselines.airchitect_v1_init(jax.random.PRNGKey(15), len(grid))
+    logits = baselines.airchitect_v1_apply(v1, jnp.zeros((4, 3)))
+    assert logits.shape == (4, len(grid))
+    v2 = baselines.airchitect_v2_init(jax.random.PRNGKey(16))
+    hw, cls_logits = baselines.airchitect_v2_apply(v2, jnp.zeros((4, 3)))
+    assert hw.shape == (4, 8)
+    assert cls_logits.shape == (4, 64)
+    # v2 must be smaller than v1 (Fig 18: 32% fewer parameters claim
+    # direction: the recommender with regression head scales better)
+    assert nn.param_count(v2) < nn.param_count(v1)
+
+
+def test_surrogate_grad_shapes():
+    params = baselines.surrogate_init(jax.random.PRNGKey(17))
+    hw = jax.random.uniform(jax.random.PRNGKey(18), (8, 8))
+    w = jnp.zeros((8, 3))
+    t = jnp.full((8,), 0.5)
+    losses, grads = baselines.surrogate_grad_fn(params, hw, w, t)
+    assert losses.shape == (8,)
+    assert grads.shape == (8, 8)
+    # gradient check against finite differences on one coordinate
+    eps = 1e-3
+    hw_p = hw.at[0, 0].add(eps)
+    hw_m = hw.at[0, 0].add(-eps)
+    lp, _ = baselines.surrogate_grad_fn(params, hw_p, w, t)
+    lm, _ = baselines.surrogate_grad_fn(params, hw_m, w, t)
+    fd = (lp[0] - lm[0]) / (2 * eps)
+    assert abs(float(fd - grads[0, 0])) < 1e-2, f"fd {fd} vs grad {grads[0, 0]}"

@@ -1,0 +1,80 @@
+"""Normalization contract tests: python/compile/norm.py must mirror the rust
+side (design_space::encode / models::norm) exactly."""
+
+import numpy as np
+import pytest
+
+from compile.norm import (N_EDP, N_PERF, N_POWER, WorkloadStats, bin_index,
+                          normalize_workload, percentile_edges)
+
+
+def test_workload_norm_matches_rust_formula():
+    # golden values pinned against rust Gemm::norm_vec
+    v = normalize_workload(np.array([[1, 1, 1], [1024, 4096, 30000]]))
+    np.testing.assert_allclose(v[0], [0, 0, 0])
+    np.testing.assert_allclose(v[1], [1, 1, 1])
+    v = normalize_workload(np.array([[512, 2048, 15000]]))
+    np.testing.assert_allclose(
+        v[0],
+        [(512 - 1) / 1023, (2048 - 1) / 4095, (15000 - 1) / 29999],
+        rtol=1e-6,
+    )
+
+
+def test_bin_index_matches_rust_clamping():
+    edges = np.array([0.0, 1.0, 2.0, 3.0])
+    assert bin_index(edges, np.array([-5.0]))[0] == 0
+    assert bin_index(edges, np.array([0.5]))[0] == 0
+    assert bin_index(edges, np.array([1.5]))[0] == 1
+    assert bin_index(edges, np.array([99.0]))[0] == 2
+
+
+def test_percentile_edges_balanced():
+    vals = np.arange(1000, dtype=np.float64)
+    edges = percentile_edges(vals, 4)
+    assert len(edges) == 5
+    counts = np.bincount(bin_index(edges, vals), minlength=4)
+    assert counts.min() > 200
+
+
+@pytest.fixture
+def stats():
+    rng = np.random.default_rng(0)
+    runtime = np.exp(rng.uniform(5, 15, 5000))
+    power = rng.uniform(0.2, 3.0, 5000)
+    edp = runtime * power
+    return WorkloadStats(64, 128, 256, runtime, power, edp), runtime, power, edp
+
+
+def test_runtime_norm_roundtrip(stats):
+    s, runtime, _, _ = stats
+    p = s.norm_runtime(runtime)
+    assert p.min() >= -1e-6 and p.max() <= 1 + 1e-6
+    back = s.denorm_runtime(p)
+    np.testing.assert_allclose(back, runtime, rtol=1e-4)
+
+
+def test_class_label_eq8(stats):
+    s, runtime, power, edp = stats
+    cls = s.power_perf_class(power, runtime)
+    assert cls.min() >= 0 and cls.max() < N_POWER * N_PERF
+    # Eq. 8 decomposition
+    cp = bin_index(s.power_edges, power)
+    cr = bin_index(s.rt_edges, runtime)
+    np.testing.assert_array_equal(cls, cp + N_POWER * cr)
+    ecls = s.edp_class(edp)
+    assert ecls.min() == 0 and ecls.max() == N_EDP - 1
+    # percentile classes are roughly balanced
+    counts = np.bincount(ecls, minlength=N_EDP)
+    assert counts.min() > len(edp) / N_EDP / 2
+
+
+def test_stats_json_schema(stats):
+    s, _, _, _ = stats
+    j = s.to_json()
+    for key in ["m", "k", "n", "log_rt_min", "log_rt_max", "power_min",
+                "power_max", "log_edp_min", "log_edp_max", "power_edges",
+                "rt_edges", "edp_edges"]:
+        assert key in j, key
+    assert len(j["edp_edges"]) == N_EDP + 1
+    assert len(j["power_edges"]) == N_POWER + 1

@@ -1,0 +1,82 @@
+//! Fig 7 / Fig 11: the Phase-1 latent space is organized by performance —
+//! PCA of encoded configurations shows runtime varying smoothly (Fig 7) and
+//! power–performance classes clustering (Fig 11), unlike the raw space
+//! (Fig 2(b)).
+
+use diffaxe::design_space::{encode_norm, params::TrainingSpace};
+use diffaxe::models::DiffAxE;
+use diffaxe::sim::simulate;
+use diffaxe::util::bench::{banner, BenchScale};
+use diffaxe::util::linalg::Mat;
+use diffaxe::util::pca::Pca;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig 7/11", "performance-organized latent space (PCA)");
+    let dir = Path::new("artifacts");
+    if !DiffAxE::artifacts_present(dir) {
+        println!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = DiffAxE::load(dir)?;
+    // GPT-2 MLP2 decode-style layer (paper's Fig 7 example): M=1, K=3072, N=768
+    let g = diffaxe::workload::Gemm::new(1, 3072, 768);
+    let st = engine.stats.stats_for(&g);
+    let scale = BenchScale::from_env();
+    let stride = scale.pick(97, 31, 7);
+
+    let mut hw_rows = Vec::new();
+    let mut rts = Vec::new();
+    for (i, hw) in TrainingSpace::enumerate().enumerate() {
+        if i % stride != 0 {
+            continue;
+        }
+        hw_rows.push(encode_norm(&hw).to_vec());
+        rts.push(st.norm_runtime(simulate(&hw, &g).cycles as f64) as f64);
+    }
+    let latents = engine.encode(&hw_rows)?;
+    let lat_rows: Vec<Vec<f64>> =
+        latents.iter().map(|l| l.iter().map(|&x| x as f64).collect()).collect();
+
+    // correlation between PCA coordinates and runtime: high in latent space
+    // (smooth gradient, Fig 7), low in the raw space (Fig 2(b))
+    let raw_corr = pca_runtime_corr(
+        &hw_rows.iter().map(|r| r.iter().map(|&x| x as f64).collect()).collect::<Vec<_>>(),
+        &rts,
+    );
+    let lat_corr = pca_runtime_corr(&lat_rows, &rts);
+    println!(
+        "|corr(PC1..2, runtime)|: raw space {:.3}, latent space {:.3} over {} points",
+        raw_corr,
+        lat_corr,
+        rts.len()
+    );
+    println!(
+        "paper-shape check: latent space organized by performance => latent corr >> raw corr: {}",
+        lat_corr > raw_corr
+    );
+    Ok(())
+}
+
+/// max |pearson| between the top-2 principal coordinates and runtime.
+fn pca_runtime_corr(rows: &[Vec<f64>], rts: &[f64]) -> f64 {
+    let x = Mat::from_rows(rows);
+    let pca = Pca::fit(&x, 2, 3);
+    let proj = pca.transform(&x);
+    let mut best: f64 = 0.0;
+    for c in 0..2 {
+        let coords: Vec<f64> = (0..proj.rows).map(|i| proj[(i, c)]).collect();
+        best = best.max(pearson(&coords, rts).abs());
+    }
+    best
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let cov: f64 = a.iter().zip(b).map(|(x, y)| (x - ma) * (y - mb)).sum();
+    let va: f64 = a.iter().map(|x| (x - ma) * (x - ma)).sum();
+    let vb: f64 = b.iter().map(|y| (y - mb) * (y - mb)).sum();
+    cov / (va.sqrt() * vb.sqrt()).max(1e-12)
+}

@@ -1,0 +1,75 @@
+//! Fig 10 + Fig 13 + Fig 1(b): performance–power landscape of the design
+//! space — power span, runtime span per workload, and the DRAM-vs-compute
+//! energy crossover.
+
+use diffaxe::design_space::params::TrainingSpace;
+use diffaxe::energy::{asic, cacti::DRAM_PJ_PER_BYTE};
+use diffaxe::sim::simulate;
+use diffaxe::util::bench::{banner, BenchScale};
+use diffaxe::util::stats::{percentile, summarize};
+use diffaxe::util::table::{fnum, Table};
+use diffaxe::workload::Gemm;
+
+fn main() {
+    banner("Fig 10/13/1(b)", "power-performance scatter + runtime distributions");
+    let scale = BenchScale::from_env();
+    let stride = scale.pick(31, 7, 1);
+
+    // Fig 10: (M,K,N) = (128, 4096, 8192) on the 32nm ASIC
+    let g = Gemm::new(128, 4096, 8192);
+    let mut powers = Vec::new();
+    let mut cycles = Vec::new();
+    let mut dram_fracs = Vec::new();
+    for (i, hw) in TrainingSpace::enumerate().enumerate() {
+        if i % stride != 0 {
+            continue;
+        }
+        let s = simulate(&hw, &g);
+        let e = asic::evaluate(&hw, &s);
+        powers.push(e.power_w);
+        cycles.push(s.cycles as f64);
+        let e_dram = s.dram.total() as f64 * DRAM_PJ_PER_BYTE * 1e-6;
+        dram_fracs.push((e_dram / e.e_dyn_uj, hw.macs() as f64));
+    }
+    let ps = summarize(&powers);
+    let cs = summarize(&cycles);
+    let mut t = Table::new(&["quantity", "min", "p50", "max"]);
+    t.row(&["power (W)".into(), fnum(ps.min), fnum(percentile(&powers, 50.0)), fnum(ps.max)]);
+    t.row(&["runtime (cycles)".into(), fnum(cs.min), fnum(percentile(&cycles, 50.0)), fnum(cs.max)]);
+    println!("{}", t.render());
+    println!("paper Fig 10: power 0.17-3.3 W over the same workload/space");
+
+    // Fig 1(b): DRAM dominates at low compute density
+    let small: Vec<f64> =
+        dram_fracs.iter().filter(|(_, m)| *m <= 64.0).map(|(f, _)| *f).collect();
+    let large: Vec<f64> =
+        dram_fracs.iter().filter(|(_, m)| *m >= 4096.0).map(|(f, _)| *f).collect();
+    println!(
+        "DRAM share of dynamic energy: small arrays {:.2}, large arrays {:.2} \
+         (paper Fig 1(b): DRAM dominates at low compute density): {}",
+        summarize(&small).mean,
+        summarize(&large).mean,
+        summarize(&small).mean > summarize(&large).mean
+    );
+
+    // Fig 13: runtime ranges for the paper's two example workloads
+    let mut t13 = Table::new(&["workload", "runtime min", "runtime max", "decades"]);
+    for g in [Gemm::new(32, 32, 32), Gemm::new(512, 3072, 16384)] {
+        let mut rts = Vec::new();
+        for (i, hw) in TrainingSpace::enumerate().enumerate() {
+            if i % scale.pick(63, 15, 3) != 0 {
+                continue;
+            }
+            rts.push(simulate(&hw, &g).cycles as f64);
+        }
+        let s = summarize(&rts);
+        t13.row(&[
+            format!("{g}"),
+            fnum(s.min),
+            fnum(s.max),
+            fnum((s.max / s.min).log10()),
+        ]);
+    }
+    println!("{}", t13.render());
+    println!("paper Fig 13: each workload spans ~3 decades of runtime");
+}

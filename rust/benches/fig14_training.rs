@@ -1,0 +1,36 @@
+//! Fig 14 / Fig 15(a): Phase-1 (AE + PP) and Phase-2 (DDM) training loss
+//! curves, replayed from artifacts/train_log.json (recorded at build time).
+
+use diffaxe::util::bench::banner;
+use diffaxe::util::json::Json;
+use diffaxe::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig 14 / 15(a)", "training loss curves (from artifacts/train_log.json)");
+    let path = std::path::Path::new("artifacts/train_log.json");
+    if !path.exists() {
+        println!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let log = Json::parse(&std::fs::read_to_string(path)?)?;
+    let obj = log.as_obj().expect("train_log must be an object");
+    let mut t = Table::new(&["curve", "epochs", "first", "last", "converged (last < 0.8*first)"]);
+    for (name, values) in obj {
+        if let Some(v) = values.as_f64_vec() {
+            if v.is_empty() {
+                continue;
+            }
+            let conv = v[v.len() - 1] < 0.8 * v[0];
+            t.row(&[
+                name.clone(),
+                v.len().to_string(),
+                fnum(v[0]),
+                fnum(v[v.len() - 1]),
+                conv.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("paper-shape check: every loss decreases monotonically-ish to convergence (Figs 14/15a)");
+    Ok(())
+}

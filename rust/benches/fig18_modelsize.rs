@@ -1,0 +1,38 @@
+//! Fig 15(b) / Fig 18 / Fig 21: model sizes — DiffAxE component breakdown
+//! and comparison against prior DL-based DSE models (AIRCHITECT v1/v2).
+//!
+//! Paper shape: DiffAxE ≈ 3.4 M parameters (at paper scale), ~32% smaller
+//! than AIRCHITECT v2; AIRCHITECT v1's output layer dominates its size.
+
+use diffaxe::models::NormStats;
+use diffaxe::util::bench::banner;
+use diffaxe::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig 15(b) / 18", "model size comparison");
+    let path = std::path::Path::new("artifacts/norm_stats.json");
+    if !path.exists() {
+        println!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let stats = NormStats::load(path)?;
+    let mut t = Table::new(&["model", "parameters"]);
+    let mut rows: Vec<(&String, &usize)> = stats.param_counts.iter().collect();
+    rows.sort_by_key(|(_, &v)| std::cmp::Reverse(v));
+    for (name, count) in rows {
+        t.row(&[name.clone(), count.to_string()]);
+    }
+    println!("{}", t.render());
+    let ddm = stats.param_counts.get("ddm").copied().unwrap_or(0);
+    let ae = stats.param_counts.get("ae_pp").copied().unwrap_or(0);
+    let v2 = stats.param_counts.get("airchitect_v2").copied().unwrap_or(0);
+    println!(
+        "DiffAxE total (DDM + AE/PP) = {} params at scale '{}' (paper: 3.4M at paper scale); \
+         vs AIRCHITECT v2 {} — DiffAxE DDM smaller: {}",
+        ddm + ae,
+        stats.scale,
+        v2,
+        ddm < v2
+    );
+    Ok(())
+}

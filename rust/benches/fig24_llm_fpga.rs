@@ -1,0 +1,61 @@
+//! Fig 24: EDP and runtime of BERT-base prefill/decode on the VU13P FPGA —
+//! fixed architectures vs DOSA vs DiffAxE.
+//!
+//! Paper shape: DiffAxE lowest EDP in both stages (7.5x / 8x better than
+//! DOSA on the paper's testbed).
+
+use diffaxe::baselines::FixedArch;
+use diffaxe::dse::llm::{diffaxe_llm, dosa_llm, fixed_llm, Platform};
+use diffaxe::models::DiffAxE;
+use diffaxe::util::bench::{banner, BenchScale};
+use diffaxe::util::table::{fnum, Table};
+use diffaxe::workload::{llm::DEFAULT_SEQ, LlmModel, Stage};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig 24", "BERT-base EDP/runtime on VU13P FPGA");
+    let dir = Path::new("artifacts");
+    if !DiffAxE::artifacts_present(dir) {
+        println!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = DiffAxE::load(dir)?;
+    let scale = BenchScale::from_env();
+    let n = scale.pick(8, 32, 128);
+    let platform = Platform::FpgaVu13p;
+
+    let mut t = Table::new(&["Stage", "Architecture", "Runtime (cycles)", "EDP (uJ-cyc)", "EDP / DiffAxE"]);
+    for stage in Stage::ALL {
+        let (ours, _) =
+            diffaxe_llm(&engine, LlmModel::BertBase, stage, DEFAULT_SEQ, n, platform, 42)?;
+        let base = ours.energy.edp;
+        for arch in FixedArch::ALL {
+            let e = fixed_llm(arch, LlmModel::BertBase, stage, DEFAULT_SEQ, platform);
+            t.row(&[
+                stage.name().to_string(),
+                arch.name().to_string(),
+                fnum(e.sim.cycles as f64),
+                fnum(e.energy.edp),
+                fnum(e.energy.edp / base),
+            ]);
+        }
+        let (dosa, _) = dosa_llm(LlmModel::BertBase, stage, DEFAULT_SEQ, platform, 17);
+        t.row(&[
+            stage.name().to_string(),
+            "DOSA".to_string(),
+            fnum(dosa.sim.cycles as f64),
+            fnum(dosa.energy.edp),
+            fnum(dosa.energy.edp / base),
+        ]);
+        t.row(&[
+            stage.name().to_string(),
+            "DiffAxE".to_string(),
+            fnum(ours.sim.cycles as f64),
+            fnum(base),
+            "1.00".to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("paper-shape check: DiffAxE lowest EDP in both stages (paper: 7.5x/8x vs DOSA)");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Micro-benchmark of the coordinator service: request latency and
+//! throughput with and without cross-request batching, plus sampler batch
+//! occupancy. The paper's headline — milliseconds per generated
+//! configuration — is measured here end to end (request → diffusion →
+//! decode → rounding → simulation → reply).
+
+use diffaxe::coordinator::{Request, Response, Service, ServiceConfig};
+use diffaxe::models::DiffAxE;
+use diffaxe::util::bench::{banner, BenchScale};
+use diffaxe::util::stats::Timer;
+use diffaxe::util::table::{fnum, Table};
+use diffaxe::workload::Gemm;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    banner("micro:coordinator", "end-to-end generation service latency/throughput");
+    if !DiffAxE::artifacts_present(Path::new("artifacts")) {
+        println!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let svc = Service::start(ServiceConfig::new("artifacts"))?;
+    let scale = BenchScale::from_env();
+    let g = Gemm::new(128, 768, 2304);
+
+    let mut t = Table::new(&["pattern", "requests", "designs", "wall (s)", "ms/design", "designs/s"]);
+
+    // (1) one large request — full batches
+    let n_large = scale.pick(64, 256, 1024);
+    let timer = Timer::start();
+    let resp = svc.handle().request(Request::GenerateRuntime { g, target_cycles: 1e6, n: n_large });
+    let dt = timer.elapsed_s();
+    let designs = match resp {
+        Response::Designs(d) => d.len(),
+        other => panic!("{other:?}"),
+    };
+    t.row(&[
+        "single bulk request".into(),
+        "1".into(),
+        designs.to_string(),
+        fnum(dt),
+        fnum(dt * 1e3 / designs as f64),
+        fnum(designs as f64 / dt),
+    ]);
+
+    // (2) many small concurrent requests — exercises continuous batching
+    let n_req = scale.pick(8, 24, 64);
+    let per_req = 8;
+    let timer = Timer::start();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| {
+            svc.handle().submit(Request::GenerateRuntime {
+                g,
+                target_cycles: 5e5 + 1e5 * i as f64,
+                n: per_req,
+            })
+        })
+        .collect();
+    let mut total = 0;
+    for rx in rxs {
+        if let Response::Designs(d) = rx.recv().unwrap() {
+            total += d.len();
+        }
+    }
+    let dt = timer.elapsed_s();
+    t.row(&[
+        format!("{n_req} concurrent x{per_req}"),
+        n_req.to_string(),
+        total.to_string(),
+        fnum(dt),
+        fnum(dt * 1e3 / total as f64),
+        fnum(total as f64 / dt),
+    ]);
+    println!("{}", t.render());
+
+    let snap = svc.handle().metrics().snapshot();
+    println!("service metrics: {snap}");
+    println!(
+        "paper-shape check: ms/design in the low single digits (paper: 1.83 ms/config on V100)"
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Micro-benchmarks of the L3 hot path pieces: simulator throughput,
+//! energy evaluation, encoding/rounding, and the trace oracle for
+//! comparison. These drive the §Perf iteration in EXPERIMENTS.md.
+
+use diffaxe::design_space::{decode_rounded, encode_norm, TargetSpace};
+use diffaxe::energy::{asic, fpga};
+use diffaxe::sim::{simulate, trace};
+use diffaxe::util::bench::{banner, time_mean, BenchScale};
+use diffaxe::util::rng::Pcg32;
+use diffaxe::util::table::{fnum, Table};
+use diffaxe::workload::Gemm;
+use std::hint::black_box;
+
+fn main() {
+    banner("micro:sim", "simulator + evaluation-pipeline throughput");
+    let scale = BenchScale::from_env();
+    let n = scale.pick(20_000, 200_000, 1_000_000);
+    let mut rng = Pcg32::seeded(1);
+    let configs: Vec<_> = (0..4096).map(|_| TargetSpace::sample(&mut rng)).collect();
+    let gemms = [
+        Gemm::new(128, 768, 2304),
+        Gemm::new(1, 4096, 12288),
+        Gemm::new(512, 3072, 16384),
+    ];
+
+    let mut t = Table::new(&["operation", "ns/op", "ops/s"]);
+    let mut bench = |name: &str, mut f: Box<dyn FnMut(usize)>| {
+        let per = time_mean(1, || {
+            for i in 0..n {
+                f(i);
+            }
+        }) / n as f64;
+        t.row(&[name.to_string(), fnum(per * 1e9), fnum(1.0 / per)]);
+    };
+
+    let cfg2 = configs.clone();
+    bench(
+        "analytical simulate",
+        Box::new(move |i| {
+            black_box(simulate(&cfg2[i % 4096], &gemms[i % 3]));
+        }),
+    );
+    let cfg3 = configs.clone();
+    bench(
+        "simulate + asic energy",
+        Box::new(move |i| {
+            let hw = &cfg3[i % 4096];
+            let s = simulate(hw, &gemms[i % 3]);
+            black_box(asic::evaluate(hw, &s));
+        }),
+    );
+    let cfg4 = configs.clone();
+    bench(
+        "simulate + fpga energy",
+        Box::new(move |i| {
+            let hw = &cfg4[i % 4096];
+            let s = simulate(hw, &gemms[i % 3]);
+            black_box(fpga::evaluate(hw, &s));
+        }),
+    );
+    let cfg5 = configs.clone();
+    bench(
+        "encode + decode_rounded",
+        Box::new(move |i| {
+            let v = encode_norm(&cfg5[i % 4096]);
+            black_box(decode_rounded(&v));
+        }),
+    );
+    println!("{}", t.render());
+
+    // trace oracle cost for context (not on the hot path)
+    let small = Gemm::new(64, 256, 64);
+    let per = time_mean(scale.pick(200, 2_000, 20_000), || {
+        black_box(trace::simulate(&configs[0], &small));
+    });
+    println!("trace-oracle simulate (64x256x64): {:.1} us/op (test-only path)", per * 1e6);
+}

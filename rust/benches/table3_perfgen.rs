@@ -1,0 +1,91 @@
+//! Table III / Fig 16: runtime-conditioned hardware generation —
+//! `error_gen` and search time for DiffAxE vs vanilla GD (DOSA), vanilla
+//! BO, latent GD (Polaris), latent BO (VAESA) and GANDSE.
+//!
+//! Paper shape to reproduce: DiffAxE achieves the lowest error_gen at
+//! millisecond-scale per-configuration time; latent methods beat vanilla;
+//! GANDSE is fast but inaccurate (surrogate error).
+
+use diffaxe::baselines::{BoOptions, GdOptions};
+use diffaxe::dse::perfgen;
+use diffaxe::models::DiffAxE;
+use diffaxe::util::bench::{banner, BenchScale};
+use diffaxe::util::table::{fnum, Table};
+use diffaxe::workload::Gemm;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    banner("Table III / Fig 16", "runtime-specific hardware generation");
+    let dir = Path::new("artifacts");
+    if !DiffAxE::artifacts_present(dir) {
+        println!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = DiffAxE::load(dir)?;
+    let scale = BenchScale::from_env();
+    let n_workloads = scale.pick(2, 8, engine.stats.workloads.len());
+    let n_targets = scale.pick(2, 5, 20); // paper: 20
+    let n_designs = scale.pick(16, 64, 1000); // paper: 1000
+    let workloads: Vec<Gemm> =
+        engine.stats.workloads.iter().take(n_workloads).map(|w| w.gemm).collect();
+    let queries = perfgen::make_queries(&engine, &workloads, n_targets);
+    println!(
+        "{} workloads x {} targets = {} queries; {} designs/query (diffusion)",
+        n_workloads,
+        n_targets,
+        queries.len(),
+        n_designs
+    );
+
+    let bo_opts = BoOptions {
+        n_init: scale.pick(6, 10, 16),
+        budget: scale.pick(15, 40, 120),
+        pool: scale.pick(64, 200, 512),
+        ..Default::default()
+    };
+    let gd_opts = GdOptions {
+        steps: scale.pick(20, 50, 100),
+        restarts: scale.pick(2, 3, 6),
+        ..Default::default()
+    };
+
+    let mut results = Vec::new();
+    results.push(perfgen::run_vanilla_gd(&engine, &queries, &gd_opts, 1)?);
+    results.push(perfgen::run_vanilla_bo(&queries, &bo_opts, 2));
+    results.push(perfgen::run_latent_gd(&engine, &queries, &gd_opts, 3)?);
+    results.push(perfgen::run_latent_bo(&engine, &queries, &bo_opts, 4)?);
+    results.push(perfgen::run_gandse(&engine, &queries, n_designs, 5)?);
+    results.push(perfgen::run_diffaxe(&engine, &queries, n_designs, 6)?);
+
+    let mut t = Table::new(&["Method", "Time/query (s)", "Time/design (ms)", "error_gen (%)"]);
+    for r in &results {
+        // optimization baselines return ONE design per query; the generative
+        // methods amortize a batch of n_designs (the paper reports 1.83 ms
+        // per configuration for DiffAxE on this basis)
+        let per_design = if r.name == "DiffAxE" || r.name == "GANDSE" {
+            r.search_time_s / n_designs as f64
+        } else {
+            r.search_time_s
+        };
+        t.row(&[
+            r.name.to_string(),
+            fnum(r.search_time_s),
+            fnum(per_design * 1e3),
+            fnum(r.error_gen * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let diff = results.last().unwrap();
+    let latent_bo = &results[3];
+    println!(
+        "paper-shape checks: DiffAxE err {:.1}% vs latent-BO {:.1}% (paper: 5.45 vs 6.31 at \
+         46.7M-sample training scale); per-design speedup over latent-BO: {:.0}x \
+         (paper: ~17000x). NOTE: DiffAxE error averages over ALL generated designs \
+         (paper protocol); the baselines report their single best-found design.",
+        diff.error_gen * 100.0,
+        latent_bo.error_gen * 100.0,
+        latent_bo.search_time_s / (diff.search_time_s / n_designs as f64)
+    );
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Table VIII / Fig 23: FPGA resource utilization and power on the Xilinx
+//! Virtex UltraScale+ VU13P for the five architectures of §VI.
+//!
+//! The resource model is calibrated to reproduce the paper's utilization
+//! rows *exactly* (see energy::fpga); this bench prints both the paper's
+//! fixed rows and the rows for the designs our DOSA/DiffAxE searches found.
+
+use diffaxe::baselines::FixedArch;
+use diffaxe::design_space::{HwConfig, LoopOrder};
+use diffaxe::dse::llm::{diffaxe_llm, dosa_llm, Platform};
+use diffaxe::energy::fpga;
+use diffaxe::models::DiffAxE;
+use diffaxe::util::bench::{banner, BenchScale};
+use diffaxe::util::table::{fnum, Table};
+use diffaxe::workload::{llm::DEFAULT_SEQ, LlmModel, Stage};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    banner("Table VIII / Fig 23", "VU13P resource utilization + power (BERT-base prefill)");
+
+    // paper Table VII row designs for DOSA and DiffAxE (exact reproduction
+    // of the published utilization numbers)
+    let paper_rows: Vec<(&str, HwConfig)> = vec![
+        ("Eyeriss", FixedArch::Eyeriss.config()),
+        ("ShiDianNao", FixedArch::ShiDianNao.config()),
+        ("NVDLA", FixedArch::Nvdla.config()),
+        ("DOSA (paper VII)", HwConfig::new_kb(128, 128, 128.0, 128.0, 64.0, 32, LoopOrder::Mnk)),
+        ("DiffAxE (paper VII)", HwConfig::new_kb(128, 63, 1024.0, 4.0, 8.5, 32, LoopOrder::Nmk)),
+    ];
+
+    let mut t = Table::new(&["Architecture", "#DSP", "#LUT", "#FF", "#BRAM", "#URAM", "Power (W)"]);
+    let g = diffaxe::workload::Gemm::new(128, 768, 2304); // BERT-base prefill QKV proxy
+    for (name, hw) in &paper_rows {
+        let r = fpga::resources(hw);
+        let sim = diffaxe::sim::simulate(hw, &g);
+        let e = fpga::evaluate(hw, &sim);
+        t.row(&[
+            name.to_string(),
+            r.dsp.to_string(),
+            r.lut.to_string(),
+            r.ff.to_string(),
+            r.bram.to_string(),
+            r.uram.to_string(),
+            fnum(e.power_w),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "paper rows (Table VIII): Eyeriss 84/45696/71544/10/6, ShiDianNao 128/.../26/0, \
+         NVDLA 512/.../31/15, DOSA 8192/360448/540672/23/8, DiffAxE 4032/232408/352112/11/29"
+    );
+
+    // rows for the designs found by OUR searches (freshly optimized)
+    let dir = Path::new("artifacts");
+    if DiffAxE::artifacts_present(dir) {
+        let engine = DiffAxE::load(dir)?;
+        let scale = BenchScale::from_env();
+        let n = scale.pick(8, 32, 128);
+        let (ours, _) = diffaxe_llm(&engine, LlmModel::BertBase, Stage::Prefill, DEFAULT_SEQ,
+                                    n, Platform::FpgaVu13p, 42)?;
+        let (dosa, _) = dosa_llm(LlmModel::BertBase, Stage::Prefill, DEFAULT_SEQ,
+                                 Platform::FpgaVu13p, 17);
+        let mut t2 = Table::new(&["Found design", "#DSP", "#BRAM", "#URAM", "Power (W)"]);
+        for (name, hw) in [("DOSA (ours)", dosa.cfg.base), ("DiffAxE (ours)", ours.cfg.base)] {
+            let r = fpga::resources(&hw);
+            let e = fixed_power(&hw);
+            t2.row(&[name.to_string(), r.dsp.to_string(), r.bram.to_string(),
+                     r.uram.to_string(), fnum(e)]);
+        }
+        println!("{}", t2.render());
+    } else {
+        println!("(artifacts missing: skipping freshly-searched designs)");
+    }
+    Ok(())
+}
+
+fn fixed_power(hw: &HwConfig) -> f64 {
+    let g = diffaxe::workload::Gemm::new(128, 768, 2304);
+    let sim = diffaxe::sim::simulate(hw, &g);
+    fpga::evaluate(hw, &sim).power_w
+}

@@ -1,0 +1,52 @@
+//! Fixed accelerator architectures (paper Table VI) used as LLM-inference
+//! baselines in §VI.
+
+use crate::design_space::{HwConfig, LoopOrder};
+
+/// Named fixed architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FixedArch {
+    Eyeriss,
+    ShiDianNao,
+    Nvdla,
+}
+
+impl FixedArch {
+    pub const ALL: [FixedArch; 3] = [FixedArch::Eyeriss, FixedArch::ShiDianNao, FixedArch::Nvdla];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FixedArch::Eyeriss => "Eyeriss",
+            FixedArch::ShiDianNao => "ShiDianNao",
+            FixedArch::Nvdla => "NVDLA",
+        }
+    }
+
+    /// Table VI parameters. Loop order is chosen per layer at evaluation
+    /// time (these chips have fixed dataflows, but granting them the better
+    /// of the two OS orders is strictly charitable to the baselines).
+    pub fn config(&self) -> HwConfig {
+        match self {
+            FixedArch::Eyeriss => HwConfig::new_kb(12, 14, 108.0, 108.0, 8.0, 16, LoopOrder::Mnk),
+            FixedArch::ShiDianNao => HwConfig::new_kb(16, 16, 32.0, 32.0, 8.0, 8, LoopOrder::Mnk),
+            FixedArch::Nvdla => HwConfig::new_kb(32, 32, 64.0, 512.0, 32.0, 16, LoopOrder::Mnk),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_parameters() {
+        let e = FixedArch::Eyeriss.config();
+        assert_eq!((e.r, e.c, e.bw), (12, 14, 16));
+        assert_eq!(e.wt_kb(), 108.0);
+        let n = FixedArch::Nvdla.config();
+        assert_eq!(n.macs(), 1024);
+        assert_eq!(n.wt_kb(), 512.0);
+        let s = FixedArch::ShiDianNao.config();
+        assert_eq!((s.r, s.c, s.bw), (16, 16, 8));
+    }
+}

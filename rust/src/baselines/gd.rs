@@ -1,0 +1,183 @@
+//! Gradient-descent baselines.
+//!
+//! * [`descend`] — generic GD with momentum over a boxed [0,1]^d encoding,
+//!   driven by a gradient closure. Vanilla GD (DOSA-style [8]) plugs in the
+//!   exported surrogate gradient in hardware space; latent GD
+//!   (Polaris-style [19]) plugs in the exported PP gradient in latent space.
+//! * [`fd_gd`] — finite-difference GD directly on a black-box objective,
+//!   used by the LLM experiment's DOSA stand-in where the objective is the
+//!   real simulator's EDP on a coarse grid.
+
+use crate::util::rng::Pcg32;
+
+/// Options for [`descend`].
+#[derive(Debug, Clone)]
+pub struct GdOptions {
+    pub steps: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    /// clamp iterates into [0,1]^d (all our encodings are normalized)
+    pub clamp: bool,
+    pub restarts: usize,
+}
+
+impl Default for GdOptions {
+    fn default() -> Self {
+        GdOptions { steps: 80, lr: 0.08, momentum: 0.7, clamp: true, restarts: 4 }
+    }
+}
+
+/// Result of a GD run.
+#[derive(Debug, Clone)]
+pub struct GdResult {
+    pub best_x: Vec<f64>,
+    pub best_loss: f64,
+    pub grad_evals: usize,
+}
+
+/// Minimize via momentum GD from random restarts.
+///
+/// `grad(x) -> (loss, gradient)`; `init(rng) -> x0`.
+pub fn descend<G, I>(mut grad: G, mut init: I, opts: &GdOptions, rng: &mut Pcg32) -> GdResult
+where
+    G: FnMut(&[f64]) -> (f64, Vec<f64>),
+    I: FnMut(&mut Pcg32) -> Vec<f64>,
+{
+    let mut best_x = Vec::new();
+    let mut best_loss = f64::INFINITY;
+    let mut grad_evals = 0;
+    for _ in 0..opts.restarts.max(1) {
+        let mut x = init(rng);
+        let mut vel = vec![0.0; x.len()];
+        for _ in 0..opts.steps {
+            let (loss, g) = grad(&x);
+            grad_evals += 1;
+            if loss < best_loss {
+                best_loss = loss;
+                best_x = x.clone();
+            }
+            for i in 0..x.len() {
+                vel[i] = opts.momentum * vel[i] - opts.lr * g[i];
+                x[i] += vel[i];
+                if opts.clamp {
+                    x[i] = x[i].clamp(0.0, 1.0);
+                }
+            }
+        }
+        let (loss, _) = grad(&x);
+        grad_evals += 1;
+        if loss < best_loss {
+            best_loss = loss;
+            best_x = x;
+        }
+    }
+    GdResult { best_x, best_loss, grad_evals }
+}
+
+/// Finite-difference GD on a black-box objective (central differences).
+pub fn fd_gd<F, I>(
+    mut f: F,
+    mut init: I,
+    h: f64,
+    opts: &GdOptions,
+    rng: &mut Pcg32,
+) -> GdResult
+where
+    F: FnMut(&[f64]) -> f64,
+    I: FnMut(&mut Pcg32) -> Vec<f64>,
+{
+    let mut evals = 0usize;
+    let mut grad = |x: &[f64]| -> (f64, Vec<f64>) {
+        let base = f(x);
+        let mut g = vec![0.0; x.len()];
+        let mut xp = x.to_vec();
+        for i in 0..x.len() {
+            let orig = xp[i];
+            xp[i] = (orig + h).min(1.0);
+            let up = f(&xp);
+            xp[i] = (orig - h).max(0.0);
+            let dn = f(&xp);
+            xp[i] = orig;
+            g[i] = (up - dn) / (2.0 * h);
+        }
+        evals += 1 + 2 * x.len();
+        (base, g)
+    };
+    let mut res = descend(&mut grad, &mut init, opts, rng);
+    res.grad_evals = evals;
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let target = [0.3, 0.8, 0.5];
+        let grad = |x: &[f64]| {
+            let loss: f64 = x.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum();
+            let g: Vec<f64> = x.iter().zip(&target).map(|(a, b)| 2.0 * (a - b)).collect();
+            (loss, g)
+        };
+        let mut rng = Pcg32::seeded(2);
+        let res = descend(
+            grad,
+            |r: &mut Pcg32| (0..3).map(|_| r.f64()).collect(),
+            &GdOptions::default(),
+            &mut rng,
+        );
+        assert!(res.best_loss < 1e-3, "loss {}", res.best_loss);
+        for (a, b) in res.best_x.iter().zip(&target) {
+            assert!((a - b).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn clamps_to_unit_box() {
+        // gradient pushes out of the box; iterates must stay in [0,1]
+        let grad = |x: &[f64]| (x[0], vec![-10.0]);
+        let mut rng = Pcg32::seeded(3);
+        let res = descend(
+            grad,
+            |_: &mut Pcg32| vec![0.5],
+            &GdOptions { steps: 20, restarts: 1, ..Default::default() },
+            &mut rng,
+        );
+        assert!((0.0..=1.0).contains(&res.best_x[0]));
+    }
+
+    #[test]
+    fn fd_matches_analytic_on_smooth_fn() {
+        let f = |x: &[f64]| (x[0] - 0.6).powi(2) + (x[1] - 0.2).powi(2);
+        let mut rng = Pcg32::seeded(4);
+        let res = fd_gd(
+            f,
+            |r: &mut Pcg32| vec![r.f64(), r.f64()],
+            1e-4,
+            &GdOptions::default(),
+            &mut rng,
+        );
+        assert!(res.best_loss < 1e-3);
+        assert!(res.grad_evals > 0);
+    }
+
+    #[test]
+    fn restarts_help_on_multimodal() {
+        // two basins; global min at 0.85
+        let f = |x: &[f64]| {
+            let a = (x[0] - 0.15).powi(2) + 0.3;
+            let b = (x[0] - 0.85).powi(2);
+            a.min(b)
+        };
+        let mut rng = Pcg32::seeded(5);
+        let res = fd_gd(
+            f,
+            |r: &mut Pcg32| vec![r.f64()],
+            1e-4,
+            &GdOptions { restarts: 8, ..Default::default() },
+            &mut rng,
+        );
+        assert!((res.best_x[0] - 0.85).abs() < 0.05, "stuck at {:?}", res.best_x);
+    }
+}

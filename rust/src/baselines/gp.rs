@@ -1,0 +1,151 @@
+//! Gaussian-process regression substrate for the Bayesian-optimization
+//! baselines (vanilla BO and VAESA-style latent BO).
+//!
+//! RBF kernel, exact Cholesky inference, expected-improvement acquisition.
+//! Problem sizes are a few hundred points, so O(n³) fits are fine.
+
+use crate::util::linalg::{cholesky, solve_lower, solve_upper_t, Mat};
+
+/// Exact GP with an RBF kernel `σ²·exp(-‖a−b‖²/2ℓ²)` + noise.
+#[derive(Debug, Clone)]
+pub struct Gp {
+    x: Vec<Vec<f64>>,
+    chol: Mat,
+    alpha: Vec<f64>,
+    pub lengthscale: f64,
+    pub signal: f64,
+    pub noise: f64,
+}
+
+fn rbf(a: &[f64], b: &[f64], ls: f64, signal: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    signal * (-d2 / (2.0 * ls * ls)).exp()
+}
+
+impl Gp {
+    /// Fit to observations. Targets should be roughly standardized by the
+    /// caller. Returns `None` only if the kernel matrix is numerically
+    /// singular even after jitter (shouldn't happen with noise > 0).
+    pub fn fit(x: Vec<Vec<f64>>, y: &[f64], lengthscale: f64, signal: f64, noise: f64) -> Option<Gp> {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let n = x.len();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rbf(&x[i], &x[j], lengthscale, signal);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+            k[(i, i)] += noise;
+        }
+        let chol = cholesky(&k).or_else(|| {
+            for i in 0..n {
+                k[(i, i)] += 1e-6 * signal;
+            }
+            cholesky(&k)
+        })?;
+        let alpha = solve_upper_t(&chol, &solve_lower(&chol, y));
+        Some(Gp { x, chol, alpha, lengthscale, signal, noise })
+    }
+
+    /// Posterior mean and variance at a query point.
+    pub fn predict(&self, q: &[f64]) -> (f64, f64) {
+        let kq: Vec<f64> =
+            self.x.iter().map(|xi| rbf(xi, q, self.lengthscale, self.signal)).collect();
+        let mean: f64 = kq.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        let v = solve_lower(&self.chol, &kq);
+        let var = (self.signal - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (mean, var)
+    }
+
+    /// Expected improvement for *minimization* below `best`.
+    pub fn expected_improvement(&self, q: &[f64], best: f64) -> f64 {
+        let (mu, var) = self.predict(q);
+        let sigma = var.sqrt();
+        if sigma < 1e-12 {
+            return (best - mu).max(0.0);
+        }
+        let z = (best - mu) / sigma;
+        (best - mu) * normal_cdf(z) + sigma * normal_pdf(z)
+    }
+}
+
+fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Φ(z) via the Abramowitz–Stegun erf approximation (|err| < 1.5e-7).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn interpolates_training_points() {
+        let x: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64 / 8.0]).collect();
+        let y: Vec<f64> = x.iter().map(|v| (v[0] * 6.0).sin()).collect();
+        let gp = Gp::fit(x.clone(), &y, 0.3, 1.0, 1e-6).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            let (mu, var) = gp.predict(xi);
+            assert!((mu - yi).abs() < 1e-2, "{mu} vs {yi}");
+            assert!(var < 0.05);
+        }
+    }
+
+    #[test]
+    fn uncertainty_grows_away_from_data() {
+        let x = vec![vec![0.0], vec![0.1]];
+        let y = vec![0.0, 0.1];
+        let gp = Gp::fit(x, &y, 0.2, 1.0, 1e-4).unwrap();
+        let (_, var_near) = gp.predict(&[0.05]);
+        let (_, var_far) = gp.predict(&[3.0]);
+        assert!(var_far > 10.0 * var_near, "{var_far} vs {var_near}");
+    }
+
+    #[test]
+    fn ei_prefers_promising_regions() {
+        // objective = x²; data away from minimum
+        let x: Vec<Vec<f64>> = vec![vec![-1.0], vec![-0.5], vec![0.5], vec![1.0]];
+        let y: Vec<f64> = x.iter().map(|v| v[0] * v[0]).collect();
+        let gp = Gp::fit(x, &y, 0.5, 1.0, 1e-6).unwrap();
+        let best = 0.25;
+        let ei_center = gp.expected_improvement(&[0.0], best);
+        let ei_edge = gp.expected_improvement(&[1.5], best);
+        assert!(ei_center > ei_edge, "{ei_center} vs {ei_edge}");
+    }
+
+    #[test]
+    fn erf_matches_known_values() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fit_handles_duplicate_points() {
+        let mut rng = Pcg32::seeded(3);
+        let mut x: Vec<Vec<f64>> = (0..20).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        x.push(x[0].clone()); // exact duplicate
+        let y: Vec<f64> = x.iter().map(|v| v[0] + v[1]).collect();
+        assert!(Gp::fit(x, &y, 0.5, 1.0, 1e-4).is_some());
+    }
+}

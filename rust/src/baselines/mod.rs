@@ -1,0 +1,18 @@
+//! Every optimization baseline the paper compares against (Tables III/IV,
+//! Figs 16/17/22): random search, GP-based Bayesian optimization (vanilla +
+//! VAESA-style latent), gradient descent (vanilla/DOSA-style + Polaris-style
+//! latent, plus finite-difference GD on the real simulator), and the fixed
+//! accelerator architectures of Table VI. The learned baselines (GANDSE,
+//! AIRCHITECT v1/v2, the differentiable surrogate) live in the AOT
+//! artifacts and are driven through [`crate::models::DiffAxE`].
+
+pub mod bo;
+pub mod fixed;
+pub mod gd;
+pub mod gp;
+pub mod random;
+
+pub use bo::{BoOptions, BoResult};
+pub use fixed::FixedArch;
+pub use gd::{GdOptions, GdResult};
+pub use gp::Gp;

@@ -1,0 +1,52 @@
+//! Random search over the full target design space — the SP-normalization
+//! baseline of Table IV.
+
+use crate::design_space::{HwConfig, TargetSpace};
+use crate::util::rng::Pcg32;
+
+/// Draw `n` uniform samples and keep the best under `objective` (lower is
+/// better). Returns (best config, best value).
+pub fn search<F>(n: usize, mut objective: F, rng: &mut Pcg32) -> (HwConfig, f64)
+where
+    F: FnMut(&HwConfig) -> f64,
+{
+    assert!(n > 0);
+    let mut best = TargetSpace::sample(rng);
+    let mut best_y = objective(&best);
+    for _ in 1..n {
+        let c = TargetSpace::sample(rng);
+        let y = objective(&c);
+        if y < best_y {
+            best_y = y;
+            best = c;
+        }
+    }
+    (best, best_y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::asic;
+    use crate::sim::simulate;
+    use crate::workload::Gemm;
+
+    #[test]
+    fn more_samples_never_worse() {
+        let g = Gemm::new(128, 512, 512);
+        let obj = |hw: &HwConfig| asic::evaluate(hw, &simulate(hw, &g)).edp;
+        let mut r1 = Pcg32::seeded(11);
+        let (_, few) = search(10, obj, &mut r1);
+        let mut r2 = Pcg32::seeded(11);
+        let (_, many) = search(200, obj, &mut r2);
+        assert!(many <= few, "{many} vs {few}");
+    }
+
+    #[test]
+    fn returns_valid_config() {
+        let mut rng = Pcg32::seeded(12);
+        let (hw, y) = search(50, |hw| hw.macs() as f64, &mut rng);
+        assert!(hw.in_target_space());
+        assert!(y >= 16.0); // min 4x4
+    }
+}

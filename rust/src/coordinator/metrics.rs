@@ -1,0 +1,137 @@
+//! Service metrics: request counters, batch-occupancy and latency
+//! histograms. Shared across threads behind a mutex (contention is
+//! negligible at DSE request rates).
+
+use crate::util::stats::LatencyHist;
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    designs_generated: u64,
+    designs_evaluated: u64,
+    sampler_calls: u64,
+    batch_slots_used: u64,
+    batch_slots_total: u64,
+    errors: u64,
+    request_latency: LatencyHist,
+    sampler_latency: LatencyHist,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub designs_generated: u64,
+    pub designs_evaluated: u64,
+    pub sampler_calls: u64,
+    pub errors: u64,
+    /// mean fraction of sampler batch slots carrying real requests
+    pub batch_occupancy: f64,
+    pub request_p50_us: f64,
+    pub request_p99_us: f64,
+    pub sampler_mean_us: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, latency_us: f64, designs: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.designs_generated += designs as u64;
+        m.request_latency.record_us(latency_us);
+    }
+
+    pub fn record_sampler_call(&self, latency_us: f64, slots_used: usize, slots_total: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.sampler_calls += 1;
+        m.batch_slots_used += slots_used as u64;
+        m.batch_slots_total += slots_total as u64;
+        m.sampler_latency.record_us(latency_us);
+    }
+
+    pub fn record_evaluations(&self, n: usize) {
+        self.inner.lock().unwrap().designs_evaluated += n as u64;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        Snapshot {
+            requests: m.requests,
+            designs_generated: m.designs_generated,
+            designs_evaluated: m.designs_evaluated,
+            sampler_calls: m.sampler_calls,
+            errors: m.errors,
+            batch_occupancy: if m.batch_slots_total == 0 {
+                0.0
+            } else {
+                m.batch_slots_used as f64 / m.batch_slots_total as f64
+            },
+            request_p50_us: m.request_latency.percentile_us(50.0),
+            request_p99_us: m.request_latency.percentile_us(99.0),
+            sampler_mean_us: m.sampler_latency.mean_us(),
+        }
+    }
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} designs={} evals={} sampler_calls={} occupancy={:.2} \
+             p50={:.0}us p99={:.0}us sampler_mean={:.0}us errors={}",
+            self.requests,
+            self.designs_generated,
+            self.designs_evaluated,
+            self.sampler_calls,
+            self.batch_occupancy,
+            self.request_p50_us,
+            self.request_p99_us,
+            self.sampler_mean_us,
+            self.errors
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_records() {
+        let m = Metrics::new();
+        m.record_request(1000.0, 10);
+        m.record_request(2000.0, 20);
+        m.record_sampler_call(5000.0, 30, 128);
+        m.record_evaluations(30);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.designs_generated, 30);
+        assert_eq!(s.designs_evaluated, 30);
+        assert_eq!(s.sampler_calls, 1);
+        assert_eq!(s.errors, 1);
+        assert!((s.batch_occupancy - 30.0 / 128.0).abs() < 1e-9);
+        assert!(s.request_p50_us > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.batch_occupancy, 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordinator — the DiffAxE generation *service*: a dedicated engine
+//! thread owning the compiled PJRT executables, continuous batching of
+//! generation requests into the fixed-batch diffusion sampler, a
+//! newline-JSON TCP front end, and service metrics.
+
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use protocol::{DesignReport, Request, Response};
+pub use service::{Handle, Service, ServiceConfig};

@@ -1,0 +1,249 @@
+//! Request/response types and their JSON wire encoding (newline-delimited
+//! JSON over TCP — see [`super::server`]).
+
+use crate::design_space::HwConfig;
+use crate::util::json::Json;
+use crate::workload::{Gemm, LlmModel, Stage};
+use anyhow::{bail, Context, Result};
+
+/// A DSE request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// §III-C: generate `n` designs hitting `target_cycles` on workload `g`.
+    GenerateRuntime { g: Gemm, target_cycles: f64, n: usize },
+    /// §III-D: power–performance class DSE, `n_per_class` designs per class.
+    EdpSearch { g: Gemm, n_per_class: usize },
+    /// §III-E: lowest-EDP-class generation for performance.
+    PerfSearch { g: Gemm, n: usize },
+    /// §VI: whole-LLM co-design.
+    LlmSearch { model: LlmModel, stage: Stage, n_per_layer: usize },
+    /// service introspection
+    Metrics,
+}
+
+/// One evaluated design.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignReport {
+    pub hw: HwConfig,
+    pub cycles: f64,
+    pub power_w: f64,
+    pub edp: f64,
+}
+
+/// A DSE response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Designs(Vec<DesignReport>),
+    MetricsText(String),
+    Error(String),
+}
+
+impl Request {
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let ty = j.get("type").as_str().context("request missing 'type'")?;
+        let gemm = || -> Result<Gemm> {
+            Ok(Gemm::new(
+                j.get("m").as_usize().context("m")? as u32,
+                j.get("k").as_usize().context("k")? as u32,
+                j.get("n").as_usize().context("n")? as u32,
+            ))
+        };
+        Ok(match ty {
+            "generate" => Request::GenerateRuntime {
+                g: gemm()?,
+                target_cycles: j.get("target_cycles").as_f64().context("target_cycles")?,
+                n: j.get("count").as_usize().unwrap_or(16),
+            },
+            "edp_search" => Request::EdpSearch {
+                g: gemm()?,
+                n_per_class: j.get("per_class").as_usize().unwrap_or(32),
+            },
+            "perf_search" => Request::PerfSearch {
+                g: gemm()?,
+                n: j.get("count").as_usize().unwrap_or(64),
+            },
+            "llm_search" => {
+                let model = match j.get("model").as_str().unwrap_or("") {
+                    "bert-base" => LlmModel::BertBase,
+                    "opt-350m" => LlmModel::Opt350m,
+                    "llama-2-7b" => LlmModel::Llama2_7b,
+                    other => bail!("unknown model {other:?}"),
+                };
+                let stage = match j.get("stage").as_str().unwrap_or("prefill") {
+                    "prefill" => Stage::Prefill,
+                    "decode" => Stage::Decode,
+                    other => bail!("unknown stage {other:?}"),
+                };
+                Request::LlmSearch {
+                    model,
+                    stage,
+                    n_per_layer: j.get("per_layer").as_usize().unwrap_or(32),
+                }
+            }
+            "metrics" => Request::Metrics,
+            other => bail!("unknown request type {other:?}"),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::GenerateRuntime { g, target_cycles, n } => Json::obj(vec![
+                ("type", Json::Str("generate".into())),
+                ("m", Json::Num(g.m as f64)),
+                ("k", Json::Num(g.k as f64)),
+                ("n", Json::Num(g.n as f64)),
+                ("target_cycles", Json::Num(*target_cycles)),
+                ("count", Json::Num(*n as f64)),
+            ]),
+            Request::EdpSearch { g, n_per_class } => Json::obj(vec![
+                ("type", Json::Str("edp_search".into())),
+                ("m", Json::Num(g.m as f64)),
+                ("k", Json::Num(g.k as f64)),
+                ("n", Json::Num(g.n as f64)),
+                ("per_class", Json::Num(*n_per_class as f64)),
+            ]),
+            Request::PerfSearch { g, n } => Json::obj(vec![
+                ("type", Json::Str("perf_search".into())),
+                ("m", Json::Num(g.m as f64)),
+                ("k", Json::Num(g.k as f64)),
+                ("n", Json::Num(g.n as f64)),
+                ("count", Json::Num(*n as f64)),
+            ]),
+            Request::LlmSearch { model, stage, n_per_layer } => Json::obj(vec![
+                ("type", Json::Str("llm_search".into())),
+                (
+                    "model",
+                    Json::Str(
+                        match model {
+                            LlmModel::BertBase => "bert-base",
+                            LlmModel::Opt350m => "opt-350m",
+                            LlmModel::Llama2_7b => "llama-2-7b",
+                        }
+                        .into(),
+                    ),
+                ),
+                ("stage", Json::Str(stage.name().into())),
+                ("per_layer", Json::Num(*n_per_layer as f64)),
+            ]),
+            Request::Metrics => Json::obj(vec![("type", Json::Str("metrics".into()))]),
+        }
+    }
+}
+
+impl DesignReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("r", Json::Num(self.hw.r as f64)),
+            ("c", Json::Num(self.hw.c as f64)),
+            ("ip_kb", Json::Num(self.hw.ip_kb())),
+            ("wt_kb", Json::Num(self.hw.wt_kb())),
+            ("op_kb", Json::Num(self.hw.op_kb())),
+            ("bw", Json::Num(self.hw.bw as f64)),
+            ("loop_order", Json::Str(self.hw.loop_order.name().into())),
+            ("cycles", Json::Num(self.cycles)),
+            ("power_w", Json::Num(self.power_w)),
+            ("edp", Json::Num(self.edp)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DesignReport> {
+        use crate::design_space::{LoopOrder, params};
+        let num = |k: &str| j.get(k).as_f64().with_context(|| format!("design.{k}"));
+        let hw = HwConfig {
+            r: num("r")? as u32,
+            c: num("c")? as u32,
+            ip_b: (num("ip_kb")? * 1024.0).round() as u64,
+            wt_b: (num("wt_kb")? * 1024.0).round() as u64,
+            op_b: (num("op_kb")? * 1024.0).round() as u64,
+            bw: num("bw")? as u32,
+            loop_order: LoopOrder::from_name(j.get("loop_order").as_str().unwrap_or("mnk"))
+                .context("loop_order")?,
+        };
+        let _ = params::DIM_MIN; // keep params in scope for doc-link stability
+        Ok(DesignReport { hw, cycles: num("cycles")?, power_w: num("power_w")?, edp: num("edp")? })
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Designs(ds) => Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("designs", Json::Arr(ds.iter().map(|d| d.to_json()).collect())),
+            ]),
+            Response::MetricsText(s) => Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("metrics", Json::Str(s.clone())),
+            ]),
+            Response::Error(e) => Json::obj(vec![
+                ("status", Json::Str("error".into())),
+                ("message", Json::Str(e.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response> {
+        match j.get("status").as_str() {
+            Some("ok") => {
+                if let Some(m) = j.get("metrics").as_str() {
+                    Ok(Response::MetricsText(m.to_string()))
+                } else {
+                    let ds = j
+                        .get("designs")
+                        .as_arr()
+                        .context("designs")?
+                        .iter()
+                        .map(DesignReport::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok(Response::Designs(ds))
+                }
+            }
+            Some("error") => {
+                Ok(Response::Error(j.get("message").as_str().unwrap_or("").to_string()))
+            }
+            _ => bail!("bad response"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = vec![
+            Request::GenerateRuntime { g: Gemm::new(128, 768, 768), target_cycles: 1e6, n: 32 },
+            Request::EdpSearch { g: Gemm::new(1, 2, 3), n_per_class: 5 },
+            Request::PerfSearch { g: Gemm::new(9, 9, 9), n: 7 },
+            Request::LlmSearch { model: LlmModel::BertBase, stage: Stage::Decode, n_per_layer: 4 },
+            Request::Metrics,
+        ];
+        for r in reqs {
+            let j = Json::parse(&r.to_json().to_string()).unwrap();
+            assert_eq!(Request::from_json(&j).unwrap(), r, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        use crate::design_space::LoopOrder;
+        let d = DesignReport {
+            hw: HwConfig::new_kb(16, 32, 64.0, 128.0, 8.5, 12, LoopOrder::Nmk),
+            cycles: 12345.0,
+            power_w: 1.25,
+            edp: 3.4e8,
+        };
+        let resp = Response::Designs(vec![d]);
+        let j = Json::parse(&resp.to_json().to_string()).unwrap();
+        assert_eq!(Response::from_json(&j).unwrap(), resp);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let j = Json::parse(r#"{"type": "nope"}"#).unwrap();
+        assert!(Request::from_json(&j).is_err());
+        let j = Json::parse(r#"{"type": "generate", "m": 1}"#).unwrap();
+        assert!(Request::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! Newline-delimited-JSON TCP front end over the service.
+//!
+//! One line in = one [`Request`], one line out = one [`Response`]. A thread
+//! per connection (DSE request rates are low; the engine thread is the
+//! shared resource and does the batching).
+
+use super::protocol::{Request, Response};
+use super::service::Handle;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7979").
+pub fn serve(handle: Handle, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("diffaxe: serving on {addr}");
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept error: {e}");
+                continue;
+            }
+        };
+        let h = handle.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(h, stream) {
+                eprintln!("connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Bind an ephemeral port and return (listener thread spawner, addr) — used
+/// by tests and the quickstart example.
+pub fn serve_ephemeral(handle: Handle) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(h, stream);
+            });
+        }
+    });
+    Ok(addr)
+}
+
+fn handle_conn(handle: Handle, stream: TcpStream) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Json::parse(&line) {
+            Ok(j) => match Request::from_json(&j) {
+                Ok(req) => handle.request(req),
+                Err(e) => Response::Error(format!("bad request: {e:#}")),
+            },
+            Err(e) => Response::Error(format!("bad json: {e}")),
+        };
+        writeln!(writer, "{}", response.to_json())?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client (examples + integration tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        writeln!(self.writer, "{}", req.to_json())?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let j = Json::parse(&line).context("parsing response")?;
+        Response::from_json(&j)
+    }
+}

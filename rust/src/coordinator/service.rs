@@ -1,0 +1,346 @@
+//! The DSE service: a dedicated engine thread owning the PJRT executables
+//! (they hold raw C pointers and are deliberately never shared), fed by a
+//! cloneable handle over an mpsc channel.
+//!
+//! Runtime-generation requests are **dynamically batched**: the engine
+//! thread drains the queue up to the sampler's fixed batch width (slots can
+//! mix workloads — the sampler conditions per batch element) before issuing
+//! one diffusion call, then splits, evaluates, and replies per request.
+//! This is the vLLM-router-style continuous batching adapted to design
+//! generation: the expensive fixed-batch executable always runs as full as
+//! the queue allows.
+
+use super::metrics::Metrics;
+use super::protocol::{DesignReport, Request, Response};
+use crate::dse;
+use crate::models::DiffAxE;
+use crate::workload::Gemm;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// how long the batcher waits to fill a sampler batch
+    pub batch_window: Duration,
+    pub seed: u32,
+}
+
+impl ServiceConfig {
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Self {
+        ServiceConfig {
+            artifacts_dir: artifacts_dir.into(),
+            batch_window: Duration::from_millis(4),
+            seed: 1,
+        }
+    }
+}
+
+struct Job {
+    request: Request,
+    reply: Sender<Response>,
+    submitted: Instant,
+}
+
+/// Cloneable handle to the service.
+#[derive(Clone)]
+pub struct Handle {
+    tx: Sender<Job>,
+    metrics: Arc<Metrics>,
+}
+
+impl Handle {
+    /// Submit a request and block for the response.
+    pub fn request(&self, request: Request) -> Response {
+        let (reply_tx, reply_rx) = channel();
+        let job = Job { request, reply: reply_tx, submitted: Instant::now() };
+        if self.tx.send(job).is_err() {
+            return Response::Error("service stopped".into());
+        }
+        reply_rx
+            .recv()
+            .unwrap_or_else(|_| Response::Error("service dropped request".into()))
+    }
+
+    /// Submit without waiting; the receiver yields the response.
+    pub fn submit(&self, request: Request) -> Receiver<Response> {
+        let (reply_tx, reply_rx) = channel();
+        let job = Job { request, reply: reply_tx, submitted: Instant::now() };
+        let _ = self.tx.send(job);
+        reply_rx
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+}
+
+/// Running service (engine thread + handle).
+pub struct Service {
+    pub handle: Handle,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the engine thread. Blocks until the artifacts are compiled (or
+    /// fail to), so a returned `Service` is ready to serve.
+    pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        let (tx, rx) = channel::<Job>();
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let thread = {
+            let metrics = metrics.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("diffaxe-engine".into())
+                .spawn(move || {
+                    // the engine must be constructed on this thread: PJRT
+                    // handles are !Send
+                    let engine = match DiffAxE::load(&cfg.artifacts_dir) {
+                        Ok(e) => {
+                            let _ = ready_tx.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    engine_loop(engine, cfg, rx, metrics, stop);
+                })?
+        };
+        ready_rx.recv()??;
+        Ok(Service { handle: Handle { tx, metrics }, stop, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> Handle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the engine thread's recv by dropping our sender clone…
+        let (tx, _) = channel();
+        let old = std::mem::replace(&mut self.handle.tx, tx);
+        drop(old);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// A runtime-generation request waiting in the batcher. `acc` collects
+/// designs across sampler calls when the request spans batches.
+struct PendingGen {
+    g: Gemm,
+    p_norm: f32,
+    n: usize,
+    acc: Vec<DesignReport>,
+    reply: Sender<Response>,
+    submitted: Instant,
+}
+
+fn engine_loop(
+    engine: DiffAxE,
+    cfg: ServiceConfig,
+    rx: Receiver<Job>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut seed = cfg.seed;
+    let mut pending: Vec<PendingGen> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // wait for work (or flush deadline if a batch is forming)
+        let job = if pending.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(j) => Some(j),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        } else {
+            match rx.recv_timeout(cfg.batch_window) {
+                Ok(j) => Some(j),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    flush_gen_batch(&engine, &mut pending, &mut seed, &metrics);
+                    return;
+                }
+            }
+        };
+
+        if let Some(job) = job {
+            match job.request {
+                Request::GenerateRuntime { g, target_cycles, n } => {
+                    let st = engine.stats.stats_for(&g);
+                    pending.push(PendingGen {
+                        g,
+                        p_norm: st.norm_runtime(target_cycles),
+                        n: n.max(1),
+                        acc: Vec::new(),
+                        reply: job.reply,
+                        submitted: job.submitted,
+                    });
+                }
+                other => {
+                    // non-batchable requests flush the batch first (ordering)
+                    flush_gen_batch(&engine, &mut pending, &mut seed, &metrics);
+                    let resp = handle_direct(&engine, &other, &mut seed, &metrics);
+                    metrics.record_request(
+                        job.submitted.elapsed().as_secs_f64() * 1e6,
+                        match &resp {
+                            Response::Designs(d) => d.len(),
+                            _ => 0,
+                        },
+                    );
+                    let _ = job.reply.send(resp);
+                }
+            }
+        }
+
+        // flush when full or when the window expired with waiters
+        let slots: usize = pending.iter().map(|p| p.n).sum();
+        let window_expired = pending
+            .iter()
+            .map(|p| p.submitted.elapsed())
+            .max()
+            .map(|d| d >= cfg.batch_window)
+            .unwrap_or(false);
+        if slots >= engine.stats.gen_batch || (window_expired && !pending.is_empty()) {
+            flush_gen_batch(&engine, &mut pending, &mut seed, &metrics);
+        }
+    }
+}
+
+/// Pack pending generation requests into sampler batches and reply.
+fn flush_gen_batch(
+    engine: &DiffAxE,
+    pending: &mut Vec<PendingGen>,
+    seed: &mut u32,
+    metrics: &Arc<Metrics>,
+) {
+    while !pending.is_empty() {
+        let b = engine.stats.gen_batch;
+        // take whole requests while they fit; split oversized ones
+        let mut slots: Vec<(f32, [f32; 3])> = Vec::with_capacity(b);
+        let mut owners: Vec<usize> = Vec::with_capacity(b); // slot -> pending idx
+        for (i, p) in pending.iter().enumerate() {
+            let take = p.n.saturating_sub(p.acc.len()).min(b - slots.len());
+            for _ in 0..take {
+                slots.push((p.p_norm, p.g.norm_vec()));
+                owners.push(i);
+            }
+            if slots.len() == b {
+                break;
+            }
+        }
+        *seed = seed.wrapping_add(1);
+        let t = Instant::now();
+        let result = engine.sample_runtime(*seed, &slots);
+        metrics.record_sampler_call(t.elapsed().as_secs_f64() * 1e6, slots.len(), b);
+        match result {
+            Ok(configs) => {
+                let mut evaluated = 0;
+                for (slot, hw) in configs.into_iter().enumerate() {
+                    let idx = owners[slot];
+                    let g = pending[idx].g;
+                    let (s, e) = dse::evaluate(&hw, &g);
+                    evaluated += 1;
+                    pending[idx].acc.push(DesignReport {
+                        hw,
+                        cycles: s.cycles as f64,
+                        power_w: e.power_w,
+                        edp: e.edp,
+                    });
+                }
+                metrics.record_evaluations(evaluated);
+                // retire fully-served requests (from the end, keep indices valid)
+                for idx in (0..pending.len()).rev() {
+                    if pending[idx].acc.len() >= pending[idx].n {
+                        let p = pending.remove(idx);
+                        metrics.record_request(
+                            p.submitted.elapsed().as_secs_f64() * 1e6,
+                            p.acc.len(),
+                        );
+                        let _ = p.reply.send(Response::Designs(p.acc));
+                    }
+                }
+            }
+            Err(e) => {
+                metrics.record_error();
+                for p in pending.drain(..) {
+                    let _ = p.reply.send(Response::Error(format!("sampler failed: {e:#}")));
+                }
+            }
+        }
+    }
+}
+
+fn handle_direct(
+    engine: &DiffAxE,
+    req: &Request,
+    seed: &mut u32,
+    metrics: &Arc<Metrics>,
+) -> Response {
+    *seed = seed.wrapping_add(1);
+    let run = || -> Result<Response> {
+        match req {
+            Request::EdpSearch { g, n_per_class } => {
+                let out = dse::edp::diffaxe_edp(engine, g, *n_per_class, *seed)?;
+                let (s, e) = dse::evaluate(&out.best_hw, g);
+                Ok(Response::Designs(vec![DesignReport {
+                    hw: out.best_hw,
+                    cycles: s.cycles as f64,
+                    power_w: e.power_w,
+                    edp: e.edp,
+                }]))
+            }
+            Request::PerfSearch { g, n } => {
+                let out = dse::perfopt::diffaxe_perfopt(engine, g, *n, *seed)?;
+                let (s, e) = dse::evaluate(&out.best_hw, g);
+                Ok(Response::Designs(vec![DesignReport {
+                    hw: out.best_hw,
+                    cycles: s.cycles as f64,
+                    power_w: e.power_w,
+                    edp: e.edp,
+                }]))
+            }
+            Request::LlmSearch { model, stage, n_per_layer } => {
+                let (best, _t) = dse::llm::diffaxe_llm(
+                    engine,
+                    *model,
+                    *stage,
+                    crate::workload::llm::DEFAULT_SEQ,
+                    *n_per_layer,
+                    dse::llm::Platform::Asic32nm,
+                    *seed,
+                )?;
+                Ok(Response::Designs(vec![DesignReport {
+                    hw: best.cfg.base,
+                    cycles: best.sim.cycles as f64,
+                    power_w: best.energy.power_w,
+                    edp: best.energy.edp,
+                }]))
+            }
+            Request::Metrics => Ok(Response::MetricsText(metrics.snapshot().to_string())),
+            Request::GenerateRuntime { .. } => unreachable!("batched upstream"),
+        }
+    };
+    match run() {
+        Ok(r) => r,
+        Err(e) => {
+            metrics.record_error();
+            Response::Error(format!("{e:#}"))
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! Training-dataset generation and loading (paper §IV-A).
+//!
+//! The rust simulator is the single source of truth for performance labels:
+//! `diffaxe gen-dataset` enumerates the coarse training design space per
+//! workload, simulates runtime/power/EDP on the 32 nm ASIC model, and writes
+//! a flat little-endian f32 table + JSON header that both numpy
+//! (`python/compile/data.py`) and [`Dataset::load`] read.
+//!
+//! Row layout (`ROW_WIDTH` = 14 f32s):
+//! `[hw_norm(8) | M K N | runtime_cycles power_w edp_uj_cycles]`
+
+use crate::design_space::{encode_norm, HwConfig, TrainingSpace, NORM_DIM};
+use crate::energy::asic;
+use crate::sim::simulate;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::workload::{Gemm, WorkloadSuite};
+use anyhow::{bail, Context, Result};
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+/// f32s per dataset row.
+pub const ROW_WIDTH: usize = NORM_DIM + 3 + 3;
+
+/// Offsets into a row.
+pub const COL_M: usize = NORM_DIM;
+pub const COL_K: usize = NORM_DIM + 1;
+pub const COL_N: usize = NORM_DIM + 2;
+pub const COL_RUNTIME: usize = NORM_DIM + 3;
+pub const COL_POWER: usize = NORM_DIM + 4;
+pub const COL_EDP: usize = NORM_DIM + 5;
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    /// number of workloads in the suite (paper: 600)
+    pub n_workloads: usize,
+    /// configurations sampled per workload from the 77,760-point training
+    /// space (paper: all of them)
+    pub n_configs_per_workload: usize,
+    pub seed: u64,
+}
+
+impl GenConfig {
+    /// Scaled-down default sized for single-core CPU training (see
+    /// DESIGN.md §3 substitutions). `DIFFAXE_SCALE=paper` restores §IV-A.
+    pub fn default_scaled() -> Self {
+        GenConfig { n_workloads: 24, n_configs_per_workload: 7776, seed: 1 }
+    }
+
+    pub fn paper() -> Self {
+        GenConfig {
+            n_workloads: WorkloadSuite::PAPER_SIZE,
+            n_configs_per_workload: TrainingSpace::len(),
+            seed: 1,
+        }
+    }
+
+    /// Resolve from the `DIFFAXE_SCALE` environment variable
+    /// (`paper`/`quick`/default).
+    pub fn from_env() -> Self {
+        match std::env::var("DIFFAXE_SCALE").as_deref() {
+            Ok("paper") => Self::paper(),
+            Ok("quick") => GenConfig { n_workloads: 6, n_configs_per_workload: 1024, seed: 1 },
+            _ => Self::default_scaled(),
+        }
+    }
+}
+
+/// In-memory dataset (also the loader for benches/tests).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub rows: Vec<f32>,
+    pub workloads: Vec<Gemm>,
+    /// per-workload (row offset, row count)
+    pub spans: Vec<(usize, usize)>,
+}
+
+impl Dataset {
+    pub fn n_rows(&self) -> usize {
+        self.rows.len() / ROW_WIDTH
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.rows[i * ROW_WIDTH..(i + 1) * ROW_WIDTH]
+    }
+
+    /// Rows belonging to workload `w`.
+    pub fn workload_rows(&self, w: usize) -> impl Iterator<Item = &[f32]> {
+        let (off, cnt) = self.spans[w];
+        (off..off + cnt).map(move |i| self.row(i))
+    }
+
+    /// Generate the dataset in memory.
+    pub fn generate(cfg: &GenConfig) -> Dataset {
+        let suite = WorkloadSuite::generate(cfg.n_workloads, cfg.seed);
+        let full = TrainingSpace::len();
+        let n_cfg = cfg.n_configs_per_workload.min(full);
+        let mut rows = Vec::with_capacity(cfg.n_workloads * n_cfg * ROW_WIDTH);
+        let mut spans = Vec::with_capacity(cfg.n_workloads);
+        let mut rng = Pcg32::new(cfg.seed, 4242);
+        for g in &suite.workloads {
+            let offset = rows.len() / ROW_WIDTH;
+            let indices: Vec<usize> = if n_cfg == full {
+                (0..full).collect()
+            } else {
+                rng.sample_indices(full, n_cfg)
+            };
+            for idx in indices {
+                let hw = TrainingSpace::nth(idx);
+                push_row(&mut rows, &hw, g);
+            }
+            spans.push((offset, n_cfg));
+        }
+        Dataset { rows, workloads: suite.workloads, spans }
+    }
+
+    /// Write `<dir>/train.bin` + `<dir>/train.json`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let bin_path = dir.join("train.bin");
+        let mut w = BufWriter::new(std::fs::File::create(&bin_path)?);
+        for v in &self.rows {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.flush()?;
+
+        let wl_json: Vec<Json> = self
+            .workloads
+            .iter()
+            .zip(&self.spans)
+            .map(|(g, &(off, cnt))| {
+                Json::obj(vec![
+                    ("m", Json::Num(g.m as f64)),
+                    ("k", Json::Num(g.k as f64)),
+                    ("n", Json::Num(g.n as f64)),
+                    ("offset", Json::Num(off as f64)),
+                    ("count", Json::Num(cnt as f64)),
+                ])
+            })
+            .collect();
+        let header = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("row_width", Json::Num(ROW_WIDTH as f64)),
+            ("n_rows", Json::Num(self.n_rows() as f64)),
+            ("dtype", Json::Str("f32le".into())),
+            ("workloads", Json::Arr(wl_json)),
+            (
+                "fields",
+                Json::Arr(
+                    ["hw0", "hw1", "hw2", "hw3", "hw4", "hw5", "loop_mnk", "loop_nmk", "m",
+                     "k", "n", "runtime_cycles", "power_w", "edp_uj_cycles"]
+                        .iter()
+                        .map(|s| Json::Str(s.to_string()))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(dir.join("train.json"), header.to_string())?;
+        Ok(())
+    }
+
+    /// Load a dataset written by [`Dataset::save`].
+    pub fn load(dir: &Path) -> Result<Dataset> {
+        let header_text = std::fs::read_to_string(dir.join("train.json"))
+            .with_context(|| format!("reading {}/train.json", dir.display()))?;
+        let header = Json::parse(&header_text).context("parsing train.json")?;
+        let row_width = header.get("row_width").as_usize().context("row_width")?;
+        if row_width != ROW_WIDTH {
+            bail!("dataset row_width {row_width} != expected {ROW_WIDTH}");
+        }
+        let n_rows = header.get("n_rows").as_usize().context("n_rows")?;
+        let mut workloads = Vec::new();
+        let mut spans = Vec::new();
+        for w in header.get("workloads").as_arr().context("workloads")? {
+            workloads.push(Gemm::new(
+                w.get("m").as_usize().context("m")? as u32,
+                w.get("k").as_usize().context("k")? as u32,
+                w.get("n").as_usize().context("n")? as u32,
+            ));
+            spans.push((
+                w.get("offset").as_usize().context("offset")?,
+                w.get("count").as_usize().context("count")?,
+            ));
+        }
+        let mut bytes = Vec::new();
+        std::fs::File::open(dir.join("train.bin"))?.read_to_end(&mut bytes)?;
+        if bytes.len() != n_rows * ROW_WIDTH * 4 {
+            bail!("train.bin size {} != header promise {}", bytes.len(), n_rows * ROW_WIDTH * 4);
+        }
+        let rows: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Dataset { rows, workloads, spans })
+    }
+}
+
+fn push_row(rows: &mut Vec<f32>, hw: &HwConfig, g: &Gemm) {
+    let sim = simulate(hw, g);
+    let e = asic::evaluate(hw, &sim);
+    rows.extend_from_slice(&encode_norm(hw));
+    rows.push(g.m as f32);
+    rows.push(g.k as f32);
+    rows.push(g.n as f32);
+    rows.push(sim.cycles as f32);
+    rows.push(e.power_w as f32);
+    rows.push(e.edp as f32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::decode_rounded;
+
+    fn tiny() -> GenConfig {
+        GenConfig { n_workloads: 3, n_configs_per_workload: 128, seed: 9 }
+    }
+
+    #[test]
+    fn generate_shapes() {
+        let ds = Dataset::generate(&tiny());
+        assert_eq!(ds.workloads.len(), 3);
+        assert_eq!(ds.n_rows(), 3 * 128);
+        assert_eq!(ds.spans, vec![(0, 128), (128, 128), (256, 128)]);
+        for i in 0..ds.n_rows() {
+            let r = ds.row(i);
+            assert!(r[COL_RUNTIME] > 0.0);
+            assert!(r[COL_POWER] > 0.0);
+            assert!(r[COL_EDP] > 0.0);
+        }
+    }
+
+    #[test]
+    fn rows_decode_to_training_space_configs() {
+        let ds = Dataset::generate(&tiny());
+        for i in 0..ds.n_rows() {
+            let hw = decode_rounded(&ds.row(i)[..NORM_DIM]);
+            assert!(hw.in_target_space());
+            // training-space configs use the coarse grid values
+            assert!(TrainingSpace::DIMS.contains(&hw.r), "{hw}");
+            assert!(TrainingSpace::BWS.contains(&hw.bw), "{hw}");
+        }
+    }
+
+    #[test]
+    fn labels_match_fresh_simulation() {
+        let ds = Dataset::generate(&tiny());
+        for w in 0..ds.workloads.len() {
+            let g = ds.workloads[w];
+            for r in ds.workload_rows(w).take(10) {
+                let hw = decode_rounded(&r[..NORM_DIM]);
+                let sim = simulate(&hw, &g);
+                let e = asic::evaluate(&hw, &sim);
+                assert_eq!(r[COL_RUNTIME], sim.cycles as f32);
+                assert!((r[COL_EDP] - e.edp as f32).abs() <= 1e-4 * e.edp as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ds = Dataset::generate(&tiny());
+        let dir = std::env::temp_dir().join(format!("diffaxe_ds_test_{}", std::process::id()));
+        ds.save(&dir).unwrap();
+        let back = Dataset::load(&dir).unwrap();
+        assert_eq!(back.rows, ds.rows);
+        assert_eq!(back.workloads, ds.workloads);
+        assert_eq!(back.spans, ds.spans);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_corrupt_sizes() {
+        let ds = Dataset::generate(&tiny());
+        let dir = std::env::temp_dir().join(format!("diffaxe_ds_corrupt_{}", std::process::id()));
+        ds.save(&dir).unwrap();
+        // truncate the binary
+        let bin = dir.join("train.bin");
+        let bytes = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(Dataset::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn full_enumeration_when_count_equals_space() {
+        let cfg = GenConfig { n_workloads: 1, n_configs_per_workload: TrainingSpace::len(), seed: 1 };
+        let ds = Dataset::generate(&cfg);
+        assert_eq!(ds.n_rows(), TrainingSpace::len());
+        // first row must be the first enumerated config
+        let hw0 = decode_rounded(&ds.row(0)[..NORM_DIM]);
+        assert_eq!(hw0, TrainingSpace::nth(0));
+    }
+}

@@ -1,0 +1,117 @@
+//! Canonical numeric encoding of a [`HwConfig`] shared with the python
+//! compile path (python/compile/norm.py mirrors these formulas; the pytest
+//! suite pins golden vectors emitted from here via the dataset header).
+//!
+//! Layout (NORM_DIM = 8):
+//! `[r, c, ip, wt, op, bw, loop_mnk, loop_nmk]`
+//! where the first six entries are min–max normalized to [0, 1] over the
+//! *target-space* ranges of Table I, and the last two are a one-hot (or, on
+//! the decode side, logits to argmax) over the OS loop orders.
+
+use super::params::{
+    HwConfig, LoopOrder, BUF_MAX_B, BUF_MIN_B, BW_MAX, BW_MIN, DIM_MAX, DIM_MIN,
+};
+use super::round::round_to_target;
+
+/// Width of the interchange vector.
+pub const NORM_DIM: usize = 8;
+
+fn norm(v: f64, lo: f64, hi: f64) -> f32 {
+    ((v - lo) / (hi - lo)) as f32
+}
+
+fn denorm(v: f32, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * v as f64
+}
+
+/// Encode a configuration to the normalized interchange vector.
+pub fn encode_norm(hw: &HwConfig) -> [f32; NORM_DIM] {
+    let mut out = [0f32; NORM_DIM];
+    out[0] = norm(hw.r as f64, DIM_MIN as f64, DIM_MAX as f64);
+    out[1] = norm(hw.c as f64, DIM_MIN as f64, DIM_MAX as f64);
+    out[2] = norm(hw.ip_b as f64, BUF_MIN_B as f64, BUF_MAX_B as f64);
+    out[3] = norm(hw.wt_b as f64, BUF_MIN_B as f64, BUF_MAX_B as f64);
+    out[4] = norm(hw.op_b as f64, BUF_MIN_B as f64, BUF_MAX_B as f64);
+    out[5] = norm(hw.bw as f64, BW_MIN as f64, BW_MAX as f64);
+    out[6 + hw.loop_order.os_index()] = 1.0;
+    out
+}
+
+/// Decode a (possibly out-of-range, continuous) interchange vector produced
+/// by the diffusion sampler back into a valid target-space configuration:
+/// inverse min–max transform, then snap to the target grid (paper §III-C
+/// "rounded off to their nearest allowed state").
+pub fn decode_rounded(v: &[f32]) -> HwConfig {
+    assert_eq!(v.len(), NORM_DIM, "interchange vector must be {NORM_DIM}-wide");
+    let loop_order = if v[6] >= v[7] { LoopOrder::Mnk } else { LoopOrder::Nmk };
+    let raw = RawConfig {
+        r: denorm(v[0], DIM_MIN as f64, DIM_MAX as f64),
+        c: denorm(v[1], DIM_MIN as f64, DIM_MAX as f64),
+        ip_b: denorm(v[2], BUF_MIN_B as f64, BUF_MAX_B as f64),
+        wt_b: denorm(v[3], BUF_MIN_B as f64, BUF_MAX_B as f64),
+        op_b: denorm(v[4], BUF_MIN_B as f64, BUF_MAX_B as f64),
+        bw: denorm(v[5], BW_MIN as f64, BW_MAX as f64),
+        loop_order,
+    };
+    round_to_target(&raw)
+}
+
+/// Continuous (pre-rounding) configuration in physical units.
+#[derive(Debug, Clone, Copy)]
+pub struct RawConfig {
+    pub r: f64,
+    pub c: f64,
+    pub ip_b: f64,
+    pub wt_b: f64,
+    pub op_b: f64,
+    pub bw: f64,
+    pub loop_order: LoopOrder,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::params::TargetSpace;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn encode_decode_roundtrip_on_grid() {
+        let mut rng = Pcg32::seeded(31);
+        for _ in 0..1000 {
+            let hw = TargetSpace::sample(&mut rng);
+            let v = encode_norm(&hw);
+            let back = decode_rounded(&v);
+            assert_eq!(back, hw, "roundtrip failed for {hw}");
+        }
+    }
+
+    #[test]
+    fn encoded_values_in_unit_interval() {
+        let mut rng = Pcg32::seeded(32);
+        for _ in 0..200 {
+            let hw = TargetSpace::sample(&mut rng);
+            for (i, x) in encode_norm(&hw).iter().enumerate() {
+                assert!((0.0..=1.0).contains(x), "feature {i} = {x} for {hw}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_clamps_out_of_range() {
+        // all features far out of range must still land in the target space
+        let hw = decode_rounded(&[-3.0, 7.0, -1.0, 2.0, 0.5, 9.0, 0.2, 0.9]);
+        assert!(hw.in_target_space(), "{hw}");
+        assert_eq!(hw.r, DIM_MIN);
+        assert_eq!(hw.c, DIM_MAX);
+        assert_eq!(hw.ip_b, BUF_MIN_B);
+        assert_eq!(hw.wt_b, BUF_MAX_B);
+        assert_eq!(hw.bw, BW_MAX);
+        assert_eq!(hw.loop_order, LoopOrder::Nmk);
+    }
+
+    #[test]
+    fn loop_tie_breaks_to_mnk() {
+        let hw = decode_rounded(&[0.5; NORM_DIM]);
+        assert_eq!(hw.loop_order, LoopOrder::Mnk);
+    }
+}

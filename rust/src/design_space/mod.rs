@@ -1,0 +1,21 @@
+//! The accelerator design space of paper Table I/II.
+//!
+//! A hardware configuration is the 7-tuple (R, C, IPSz, WTSz, OPSz, BW,
+//! LoopOrder). Two grids matter:
+//!
+//! * the **training design space** — the coarse 77,760-point grid the
+//!   diffusion model is trained on (Table II left column), and
+//! * the **target design space** — the full 5.26·10^17-point deployable grid
+//!   (Table II right column) that generated designs are rounded into.
+//!
+//! This module owns the canonical numeric encoding shared with the python
+//! compile path: all features min–max normalized to [0, 1] over the target
+//! ranges, loop order one-hot appended (see [`encode`]).
+
+pub mod encode;
+pub mod params;
+pub mod round;
+
+pub use encode::{decode_rounded, encode_norm, NORM_DIM};
+pub use params::{HwConfig, LoopOrder, TargetSpace, TrainingSpace};
+pub use round::round_to_target;

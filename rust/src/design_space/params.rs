@@ -1,0 +1,329 @@
+//! Hardware configuration type and the two design-space grids of Table II.
+
+/// Tile-loop ordering of the GEMM loop nest (paper Table I). The training and
+/// target spaces of Table II use only the two output-stationary-friendly
+/// orders {mnk, nmk}; the other four exist for the full Table I space and the
+/// simulator handles all six.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopOrder {
+    Mnk,
+    Nmk,
+    Knm,
+    Nkm,
+    Mkn,
+    Kmn,
+}
+
+impl LoopOrder {
+    pub const ALL: [LoopOrder; 6] = [
+        LoopOrder::Mnk,
+        LoopOrder::Nmk,
+        LoopOrder::Knm,
+        LoopOrder::Nkm,
+        LoopOrder::Mkn,
+        LoopOrder::Kmn,
+    ];
+
+    /// The orders admitted by the Table II training/target spaces.
+    pub const OS_ORDERS: [LoopOrder; 2] = [LoopOrder::Mnk, LoopOrder::Nmk];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoopOrder::Mnk => "mnk",
+            LoopOrder::Nmk => "nmk",
+            LoopOrder::Knm => "knm",
+            LoopOrder::Nkm => "nkm",
+            LoopOrder::Mkn => "mkn",
+            LoopOrder::Kmn => "kmn",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<LoopOrder> {
+        Self::ALL.iter().copied().find(|o| o.name() == s)
+    }
+
+    /// Loop nest outer→inner as dimension characters.
+    pub fn nest(&self) -> [char; 3] {
+        let s = self.name().as_bytes();
+        [s[0] as char, s[1] as char, s[2] as char]
+    }
+
+    /// Index within [`LoopOrder::OS_ORDERS`] (the one-hot slot used by the
+    /// canonical encoding). Panics for non-OS orders.
+    pub fn os_index(&self) -> usize {
+        Self::OS_ORDERS
+            .iter()
+            .position(|o| o == self)
+            .unwrap_or_else(|| panic!("{} is not in the OS training space", self.name()))
+    }
+}
+
+/// Buffer-size grid constants (bytes). Table I: 4–1024 kB, step 128 B.
+pub const BUF_MIN_B: u64 = 4 * 1024;
+pub const BUF_MAX_B: u64 = 1024 * 1024;
+pub const BUF_STEP_B: u64 = 128;
+
+/// Array-dimension bounds. Table I: 4–128, integers.
+pub const DIM_MIN: u32 = 4;
+pub const DIM_MAX: u32 = 128;
+
+/// DRAM bandwidth bounds (bytes/cycle). Table I: 2–32, step 1.
+pub const BW_MIN: u32 = 2;
+pub const BW_MAX: u32 = 32;
+
+/// One accelerator configuration (the 7 design parameters of Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HwConfig {
+    /// systolic array rows (maps to the GEMM M dimension under OS dataflow)
+    pub r: u32,
+    /// systolic array columns (maps to N)
+    pub c: u32,
+    /// input (activation) SRAM size in bytes
+    pub ip_b: u64,
+    /// weight SRAM size in bytes
+    pub wt_b: u64,
+    /// output SRAM size in bytes
+    pub op_b: u64,
+    /// DRAM link bandwidth, bytes per cycle
+    pub bw: u32,
+    pub loop_order: LoopOrder,
+}
+
+impl HwConfig {
+    pub fn new_kb(
+        r: u32,
+        c: u32,
+        ip_kb: f64,
+        wt_kb: f64,
+        op_kb: f64,
+        bw: u32,
+        loop_order: LoopOrder,
+    ) -> Self {
+        let to_b = |kb: f64| (kb * 1024.0).round() as u64;
+        HwConfig { r, c, ip_b: to_b(ip_kb), wt_b: to_b(wt_kb), op_b: to_b(op_kb), bw, loop_order }
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.r as u64 * self.c as u64
+    }
+
+    pub fn total_buf_b(&self) -> u64 {
+        self.ip_b + self.wt_b + self.op_b
+    }
+
+    pub fn ip_kb(&self) -> f64 {
+        self.ip_b as f64 / 1024.0
+    }
+    pub fn wt_kb(&self) -> f64 {
+        self.wt_b as f64 / 1024.0
+    }
+    pub fn op_kb(&self) -> f64 {
+        self.op_b as f64 / 1024.0
+    }
+
+    /// True iff every parameter lies on the target-space grid.
+    pub fn in_target_space(&self) -> bool {
+        let dim_ok = |d: u32| (DIM_MIN..=DIM_MAX).contains(&d);
+        let buf_ok = |b: u64| {
+            (BUF_MIN_B..=BUF_MAX_B).contains(&b) && (b - BUF_MIN_B) % BUF_STEP_B == 0
+        };
+        dim_ok(self.r)
+            && dim_ok(self.c)
+            && buf_ok(self.ip_b)
+            && buf_ok(self.wt_b)
+            && buf_ok(self.op_b)
+            && (BW_MIN..=BW_MAX).contains(&self.bw)
+            && LoopOrder::OS_ORDERS.contains(&self.loop_order)
+    }
+}
+
+impl std::fmt::Display for HwConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}x{} ip={:.1}kB wt={:.1}kB op={:.1}kB bw={}B/cy {}",
+            self.r,
+            self.c,
+            self.ip_kb(),
+            self.wt_kb(),
+            self.op_kb(),
+            self.bw,
+            self.loop_order.name()
+        )
+    }
+}
+
+/// The coarse training grid of Table II (exactly 77,760 points).
+#[derive(Debug, Clone)]
+pub struct TrainingSpace;
+
+impl TrainingSpace {
+    pub const DIMS: [u32; 6] = [4, 8, 16, 32, 64, 128];
+    pub const BUF_KB: [u32; 6] = [4, 64, 128, 256, 512, 1024];
+    pub const BWS: [u32; 5] = [2, 4, 8, 16, 32];
+
+    pub fn len() -> usize {
+        6 * 6 * 6 * 6 * 6 * 5 * 2
+    }
+
+    /// Enumerate every configuration in a fixed, reproducible order.
+    pub fn enumerate() -> impl Iterator<Item = HwConfig> {
+        Self::DIMS.iter().flat_map(move |&r| {
+            Self::DIMS.iter().flat_map(move |&c| {
+                Self::BUF_KB.iter().flat_map(move |&ip| {
+                    Self::BUF_KB.iter().flat_map(move |&wt| {
+                        Self::BUF_KB.iter().flat_map(move |&op| {
+                            Self::BWS.iter().flat_map(move |&bw| {
+                                LoopOrder::OS_ORDERS.iter().map(move |&lo| {
+                                    HwConfig::new_kb(
+                                        r, c, ip as f64, wt as f64, op as f64, bw, lo,
+                                    )
+                                })
+                            })
+                        })
+                    })
+                })
+            })
+        })
+    }
+
+    /// The i-th configuration of [`TrainingSpace::enumerate`] without
+    /// materializing the iterator (mixed-radix decode).
+    pub fn nth(mut i: usize) -> HwConfig {
+        assert!(i < Self::len());
+        let lo = LoopOrder::OS_ORDERS[i % 2];
+        i /= 2;
+        let bw = Self::BWS[i % 5];
+        i /= 5;
+        let op = Self::BUF_KB[i % 6];
+        i /= 6;
+        let wt = Self::BUF_KB[i % 6];
+        i /= 6;
+        let ip = Self::BUF_KB[i % 6];
+        i /= 6;
+        let c = Self::DIMS[i % 6];
+        i /= 6;
+        let r = Self::DIMS[i % 6];
+        HwConfig::new_kb(r, c, ip as f64, wt as f64, op as f64, bw, lo)
+    }
+}
+
+/// The fine-grained deployable grid of Table II (≈5.26·10^17 points).
+#[derive(Debug, Clone)]
+pub struct TargetSpace;
+
+impl TargetSpace {
+    pub fn n_dims() -> u64 {
+        (DIM_MAX - DIM_MIN + 1) as u64
+    }
+
+    pub fn n_buf() -> u64 {
+        (BUF_MAX_B - BUF_MIN_B) / BUF_STEP_B + 1
+    }
+
+    pub fn n_bw() -> u64 {
+        (BW_MAX - BW_MIN + 1) as u64
+    }
+
+    /// Total cardinality |D| (as f64; exceeds u64 range meaningfully close to
+    /// the paper's 5.26e17).
+    pub fn cardinality() -> f64 {
+        (Self::n_dims() as f64).powi(2)
+            * (Self::n_buf() as f64).powi(3)
+            * Self::n_bw() as f64
+            * LoopOrder::OS_ORDERS.len() as f64
+    }
+
+    /// Uniformly sample a configuration from the target grid.
+    pub fn sample(rng: &mut crate::util::rng::Pcg32) -> HwConfig {
+        let dim = |rng: &mut crate::util::rng::Pcg32| {
+            rng.int_range(DIM_MIN as i64, DIM_MAX as i64) as u32
+        };
+        let buf = |rng: &mut crate::util::rng::Pcg32| {
+            let steps = (BUF_MAX_B - BUF_MIN_B) / BUF_STEP_B;
+            BUF_MIN_B + BUF_STEP_B * rng.int_range(0, steps as i64) as u64
+        };
+        HwConfig {
+            r: dim(rng),
+            c: dim(rng),
+            ip_b: buf(rng),
+            wt_b: buf(rng),
+            op_b: buf(rng),
+            bw: rng.int_range(BW_MIN as i64, BW_MAX as i64) as u32,
+            loop_order: *rng.choose(&LoopOrder::OS_ORDERS),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn training_space_has_paper_cardinality() {
+        assert_eq!(TrainingSpace::len(), 77_760); // 6^5 * 5 * 2, paper §IV-A
+        assert_eq!(TrainingSpace::enumerate().count(), 77_760);
+    }
+
+    #[test]
+    fn target_space_matches_paper_order() {
+        // paper Table II: 5.26e17
+        let card = TargetSpace::cardinality();
+        assert!((card / 5.26e17 - 1.0).abs() < 0.01, "cardinality {card:e}");
+    }
+
+    #[test]
+    fn nth_agrees_with_enumerate() {
+        let all: Vec<HwConfig> = TrainingSpace::enumerate().collect();
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..200 {
+            let i = rng.index(all.len());
+            assert_eq!(TrainingSpace::nth(i), all[i], "index {i}");
+        }
+        assert_eq!(TrainingSpace::nth(0), all[0]);
+        assert_eq!(TrainingSpace::nth(all.len() - 1), all[all.len() - 1]);
+    }
+
+    #[test]
+    fn enumerate_yields_unique_valid_configs() {
+        let mut seen = std::collections::HashSet::new();
+        for hw in TrainingSpace::enumerate() {
+            assert!(hw.in_target_space(), "{hw}");
+            assert!(seen.insert(hw), "duplicate {hw}");
+        }
+    }
+
+    #[test]
+    fn target_samples_on_grid() {
+        let mut rng = Pcg32::seeded(2);
+        for _ in 0..500 {
+            let hw = TargetSpace::sample(&mut rng);
+            assert!(hw.in_target_space(), "{hw}");
+        }
+    }
+
+    #[test]
+    fn loop_order_names_roundtrip() {
+        for o in LoopOrder::ALL {
+            assert_eq!(LoopOrder::from_name(o.name()), Some(o));
+        }
+        assert_eq!(LoopOrder::from_name("zzz"), None);
+        assert_eq!(LoopOrder::Mnk.os_index(), 0);
+        assert_eq!(LoopOrder::Nmk.os_index(), 1);
+    }
+
+    #[test]
+    fn in_target_space_rejects_off_grid() {
+        let mut hw = HwConfig::new_kb(8, 8, 64.0, 64.0, 64.0, 8, LoopOrder::Mnk);
+        assert!(hw.in_target_space());
+        hw.ip_b += 1; // off the 128 B grid
+        assert!(!hw.in_target_space());
+        hw.ip_b -= 1;
+        hw.r = 129;
+        assert!(!hw.in_target_space());
+        hw.r = 8;
+        hw.loop_order = LoopOrder::Kmn;
+        assert!(!hw.in_target_space());
+    }
+}

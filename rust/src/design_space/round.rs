@@ -1,0 +1,97 @@
+//! Snap continuous configurations onto the target-space grid (paper §III-C:
+//! generated parameters are "rounded off to their nearest allowed state
+//! depending on the target design space granularity").
+
+use super::encode::RawConfig;
+use super::params::{
+    HwConfig, BUF_MAX_B, BUF_MIN_B, BUF_STEP_B, BW_MAX, BW_MIN, DIM_MAX, DIM_MIN,
+};
+
+fn round_clamp_int(v: f64, lo: u32, hi: u32) -> u32 {
+    (v.round().max(lo as f64).min(hi as f64)) as u32
+}
+
+fn round_buf(v: f64) -> u64 {
+    let clamped = v.max(BUF_MIN_B as f64).min(BUF_MAX_B as f64);
+    let steps = ((clamped - BUF_MIN_B as f64) / BUF_STEP_B as f64).round() as u64;
+    BUF_MIN_B + steps * BUF_STEP_B
+}
+
+/// Nearest valid target-space configuration to `raw`.
+pub fn round_to_target(raw: &RawConfig) -> HwConfig {
+    HwConfig {
+        r: round_clamp_int(raw.r, DIM_MIN, DIM_MAX),
+        c: round_clamp_int(raw.c, DIM_MIN, DIM_MAX),
+        ip_b: round_buf(raw.ip_b),
+        wt_b: round_buf(raw.wt_b),
+        op_b: round_buf(raw.op_b),
+        bw: round_clamp_int(raw.bw, BW_MIN, BW_MAX),
+        loop_order: raw.loop_order,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::params::LoopOrder;
+    use crate::util::rng::Pcg32;
+
+    fn random_raw(rng: &mut Pcg32) -> RawConfig {
+        RawConfig {
+            r: rng.range_f64(-50.0, 300.0),
+            c: rng.range_f64(-50.0, 300.0),
+            ip_b: rng.range_f64(-1e6, 3e6),
+            wt_b: rng.range_f64(-1e6, 3e6),
+            op_b: rng.range_f64(-1e6, 3e6),
+            bw: rng.range_f64(-10.0, 100.0),
+            loop_order: *rng.choose(&LoopOrder::OS_ORDERS),
+        }
+    }
+
+    #[test]
+    fn always_lands_in_target_space() {
+        let mut rng = Pcg32::seeded(41);
+        for _ in 0..2000 {
+            let hw = round_to_target(&random_raw(&mut rng));
+            assert!(hw.in_target_space(), "{hw}");
+        }
+    }
+
+    #[test]
+    fn rounding_is_idempotent() {
+        let mut rng = Pcg32::seeded(42);
+        for _ in 0..500 {
+            let hw = round_to_target(&random_raw(&mut rng));
+            let again = round_to_target(&RawConfig {
+                r: hw.r as f64,
+                c: hw.c as f64,
+                ip_b: hw.ip_b as f64,
+                wt_b: hw.wt_b as f64,
+                op_b: hw.op_b as f64,
+                bw: hw.bw as f64,
+                loop_order: hw.loop_order,
+            });
+            assert_eq!(hw, again);
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_grid_point() {
+        // 4 kB + 63 B rounds down; + 65 B rounds up
+        let base = RawConfig {
+            r: 10.4,
+            c: 10.6,
+            ip_b: (BUF_MIN_B + 63) as f64,
+            wt_b: (BUF_MIN_B + 65) as f64,
+            op_b: BUF_MIN_B as f64,
+            bw: 7.5,
+            loop_order: LoopOrder::Mnk,
+        };
+        let hw = round_to_target(&base);
+        assert_eq!(hw.r, 10);
+        assert_eq!(hw.c, 11);
+        assert_eq!(hw.ip_b, BUF_MIN_B);
+        assert_eq!(hw.wt_b, BUF_MIN_B + BUF_STEP_B);
+        assert_eq!(hw.bw, 8);
+    }
+}

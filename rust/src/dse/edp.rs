@@ -1,0 +1,210 @@
+//! Experiment 2 (§III-D, §IV-B.2, Table IV): EDP-oriented DSE through
+//! power–performance class conditioning, and the SP metric
+//! `SP = EDP_random / EDP_method` (higher is better).
+
+use super::{coarsen, edp_of};
+use crate::baselines::{bo, gd, random, BoOptions, GdOptions};
+use crate::design_space::{decode_rounded, encode_norm, HwConfig, TargetSpace};
+use crate::models::{ClassMode, DiffAxE};
+use crate::util::rng::Pcg32;
+use crate::util::stats::Timer;
+use crate::workload::Gemm;
+use anyhow::Result;
+
+/// One method's EDP-DSE outcome on one workload.
+#[derive(Debug, Clone)]
+pub struct EdpOutcome {
+    pub best_edp: f64,
+    pub best_hw: HwConfig,
+    pub search_time_s: f64,
+    pub evals: usize,
+}
+
+/// DiffAxE: generate `n_per_class` designs for each of the N_power × N_perf
+/// classes, evaluate all, keep the minimum EDP (paper: 1000 × 9 designs).
+pub fn diffaxe_edp(engine: &DiffAxE, g: &Gemm, n_per_class: usize, seed: u32) -> Result<EdpOutcome> {
+    let timer = Timer::start();
+    let n_classes = engine.stats.n_power * engine.stats.n_perf;
+    let b = engine.stats.gen_batch;
+    let mut best: Option<(f64, HwConfig)> = None;
+    let mut evals = 0;
+    for class in 0..n_classes {
+        let mut remaining = n_per_class;
+        let mut chunk_idx = 0u32;
+        while remaining > 0 {
+            let n = remaining.min(b);
+            let conds: Vec<(i32, [f32; 3])> =
+                (0..n).map(|_| (class as i32, g.norm_vec())).collect();
+            let s = seed
+                .wrapping_add(class as u32)
+                .wrapping_mul(2654435761)
+                .wrapping_add(chunk_idx);
+            let configs = engine.sample_class(ClassMode::Edp, s, &conds)?;
+            for hw in configs {
+                let e = edp_of(&hw, g);
+                evals += 1;
+                if best.as_ref().map(|(b, _)| e < *b).unwrap_or(true) {
+                    best = Some((e, hw));
+                }
+            }
+            remaining -= n;
+            chunk_idx += 1;
+        }
+    }
+    let (best_edp, best_hw) = best.unwrap();
+    Ok(EdpOutcome { best_edp, best_hw, search_time_s: timer.elapsed_s(), evals })
+}
+
+/// Random search with the same total evaluation budget.
+pub fn random_edp(g: &Gemm, budget: usize, seed: u64) -> EdpOutcome {
+    let timer = Timer::start();
+    let mut rng = Pcg32::new(seed, 55);
+    let (hw, e) = random::search(budget, |hw| edp_of(hw, g), &mut rng);
+    EdpOutcome { best_edp: e, best_hw: hw, search_time_s: timer.elapsed_s(), evals: budget }
+}
+
+/// Vanilla BO on EDP over the full target space.
+pub fn vanilla_bo_edp(g: &Gemm, opts: &BoOptions, seed: u64) -> EdpOutcome {
+    let timer = Timer::start();
+    let mut rng = Pcg32::new(seed, 56);
+    let res = bo::minimize(
+        |r: &mut Pcg32| encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect(),
+        |x| {
+            let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            edp_of(&decode_rounded(&v), g)
+        },
+        opts,
+        &mut rng,
+    );
+    let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+    EdpOutcome {
+        best_edp: res.best_y,
+        best_hw: decode_rounded(&v),
+        search_time_s: timer.elapsed_s(),
+        evals: res.evals,
+    }
+}
+
+/// VAESA-style latent BO on EDP.
+pub fn latent_bo_edp(engine: &DiffAxE, g: &Gemm, opts: &BoOptions, seed: u64) -> Result<EdpOutcome> {
+    let timer = Timer::start();
+    let mut rng = Pcg32::new(seed, 57);
+    let pool: Vec<Vec<f32>> = (0..opts.budget * 2)
+        .map(|_| encode_norm(&TargetSpace::sample(&mut rng)).to_vec())
+        .collect();
+    let latents = engine.encode(&pool)?;
+    let mut pool_iter = 0usize;
+    let mut best: Option<(f64, HwConfig)> = None;
+    let res = bo::minimize(
+        |_r: &mut Pcg32| {
+            let l = &latents[pool_iter % latents.len()];
+            pool_iter += 1;
+            l.iter().map(|&x| x as f64).collect()
+        },
+        |x| {
+            let lat: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            match engine.decode_rounded(&[lat]) {
+                Ok(cfgs) => {
+                    let e = edp_of(&cfgs[0], g);
+                    if best.as_ref().map(|(b, _)| e < *b).unwrap_or(true) {
+                        best = Some((e, cfgs[0]));
+                    }
+                    e
+                }
+                Err(_) => f64::INFINITY,
+            }
+        },
+        opts,
+        &mut rng,
+    );
+    let (best_edp, best_hw) =
+        best.unwrap_or_else(|| (res.best_y, TargetSpace::sample(&mut rng)));
+    Ok(EdpOutcome { best_edp, best_hw, search_time_s: timer.elapsed_s(), evals: res.evals })
+}
+
+/// DOSA stand-in: finite-difference GD on EDP over the *coarse* grid
+/// (Table IV: DOSA searches ~O(10^7) granularity).
+pub fn dosa_edp(g: &Gemm, opts: &GdOptions, seed: u64) -> EdpOutcome {
+    let timer = Timer::start();
+    let mut rng = Pcg32::new(seed, 58);
+    // log-EDP objective keeps gradients scaled
+    let res = gd::fd_gd(
+        |x: &[f64]| {
+            let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            edp_of(&coarsen(&decode_rounded(&v)), g).ln()
+        },
+        |r: &mut Pcg32| encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect(),
+        0.05,
+        opts,
+        &mut rng,
+    );
+    let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+    let hw = coarsen(&decode_rounded(&v));
+    EdpOutcome {
+        best_edp: edp_of(&hw, g),
+        best_hw: hw,
+        search_time_s: timer.elapsed_s(),
+        evals: res.grad_evals,
+    }
+}
+
+/// Polaris stand-in: finite-difference GD in the latent space, decoded
+/// through the AE and coarsened.
+pub fn polaris_edp(engine: &DiffAxE, g: &Gemm, opts: &GdOptions, seed: u64) -> Result<EdpOutcome> {
+    let timer = Timer::start();
+    let mut rng = Pcg32::new(seed, 59);
+    // FD over 128-d latents is expensive; descend a random 8-d subspace
+    // around an encoded anchor (multi-fidelity flavour of Polaris).
+    let anchor = {
+        let hw = encode_norm(&TargetSpace::sample(&mut rng)).to_vec();
+        engine.encode(&[hw])?[0].clone()
+    };
+    let d = anchor.len();
+    let dirs: Vec<Vec<f32>> = (0..8)
+        .map(|_| {
+            let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+            v.iter().map(|x| x / n).collect()
+        })
+        .collect();
+    let to_latent = |x: &[f64]| -> Vec<f32> {
+        let mut l = anchor.clone();
+        for (coef, dir) in x.iter().zip(&dirs) {
+            for (li, di) in l.iter_mut().zip(dir) {
+                *li += (*coef as f32 - 0.5) * 8.0 * di;
+            }
+        }
+        l
+    };
+    let mut best: Option<(f64, HwConfig)> = None;
+    let res = gd::fd_gd(
+        |x: &[f64]| {
+            let lat = to_latent(x);
+            match engine.decode_rounded(&[lat]) {
+                Ok(cfgs) => {
+                    let hw = coarsen(&cfgs[0]);
+                    let e = edp_of(&hw, g);
+                    if best.as_ref().map(|(b, _)| e < *b).unwrap_or(true) {
+                        best = Some((e, hw));
+                    }
+                    e.ln()
+                }
+                Err(_) => f64::INFINITY,
+            }
+        },
+        |r: &mut Pcg32| (0..8).map(|_| r.f64()).collect(),
+        0.05,
+        opts,
+        &mut rng,
+    );
+    let (best_edp, best_hw) = best.unwrap_or_else(|| {
+        let hw = TargetSpace::sample(&mut rng);
+        (edp_of(&hw, g), hw)
+    });
+    Ok(EdpOutcome {
+        best_edp,
+        best_hw,
+        search_time_s: timer.elapsed_s(),
+        evals: res.grad_evals,
+    })
+}

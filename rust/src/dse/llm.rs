@@ -1,0 +1,233 @@
+//! §VI: LLM inference co-design — Figs 22/23/24, Tables VII/VIII.
+//!
+//! A DNN is a *sequence* of GEMMs (Fig 20): the array/buffer/bandwidth
+//! parameters are shared across layers while each layer gets its own loop
+//! order. DiffAxE generates base-configuration candidates by conditioning
+//! the class sampler on each layer's workload; the coordinator then picks
+//! the per-layer loop orders exactly (given the shared base configuration
+//! the additive cost model makes per-layer choices independent, so 2·l
+//! simulations suffice) and keeps the candidate with the lowest whole-model
+//! EDP. The paper does this with an attention-based sequence PP; evaluating
+//! sequences natively in the simulator is the rust-coordinator adaptation
+//! of the same search (see DESIGN.md §3).
+
+use crate::baselines::{gd, FixedArch, GdOptions};
+use crate::design_space::{decode_rounded, encode_norm, HwConfig, LoopOrder, TargetSpace};
+use crate::energy::{asic, fpga, EnergyResult};
+use crate::models::{ClassMode, DiffAxE};
+use crate::sim::{simulate_seq, SeqConfig, SimResult};
+use crate::util::rng::Pcg32;
+use crate::util::stats::Timer;
+use crate::workload::{Gemm, LlmModel, Stage};
+use anyhow::Result;
+
+/// Evaluation platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Platform {
+    Asic32nm,
+    FpgaVu13p,
+}
+
+/// Whole-model evaluation of a sequence configuration.
+#[derive(Debug, Clone)]
+pub struct SeqEval {
+    pub cfg: SeqConfig,
+    pub sim: SimResult,
+    pub energy: EnergyResult,
+}
+
+/// Evaluate a base config on an LLM (one transformer block scaled by the
+/// block count), choosing each layer's loop order optimally.
+pub fn eval_llm(
+    base: &HwConfig,
+    model: LlmModel,
+    stage: Stage,
+    seq: u32,
+    platform: Platform,
+) -> SeqEval {
+    let gemms = model.layer_gemms(stage, seq);
+    // per-layer best order: independent given the shared base config
+    let orders: Vec<LoopOrder> = gemms
+        .iter()
+        .map(|g| {
+            LoopOrder::OS_ORDERS
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    let ea = layer_edp(base, g, a, platform);
+                    let eb = layer_edp(base, g, b, platform);
+                    ea.partial_cmp(&eb).unwrap()
+                })
+                .unwrap()
+        })
+        .collect();
+    let cfg = SeqConfig { base: *base, orders };
+    let mut sim = simulate_seq(&cfg, &gemms);
+    // scale one block to the whole model (linear in blocks)
+    let blocks = model.n_blocks() as u64;
+    sim = scale_sim(&sim, blocks);
+    let energy = match platform {
+        Platform::Asic32nm => asic::evaluate(base, &sim),
+        Platform::FpgaVu13p => fpga::evaluate(base, &sim),
+    };
+    SeqEval { cfg, sim, energy }
+}
+
+fn layer_edp(base: &HwConfig, g: &Gemm, order: LoopOrder, platform: Platform) -> f64 {
+    let hw = HwConfig { loop_order: order, ..*base };
+    let s = crate::sim::simulate(&hw, g);
+    match platform {
+        Platform::Asic32nm => asic::evaluate(&hw, &s).edp,
+        Platform::FpgaVu13p => fpga::evaluate(&hw, &s).edp,
+    }
+}
+
+fn scale_sim(s: &SimResult, blocks: u64) -> SimResult {
+    let mut out = *s;
+    out.cycles *= blocks;
+    out.compute_cycles *= blocks;
+    out.mem_cycles *= blocks;
+    out.dram.a_reads *= blocks;
+    out.dram.b_reads *= blocks;
+    out.dram.out_writes *= blocks;
+    out.dram.out_reads *= blocks;
+    out.sram.ip_reads *= blocks;
+    out.sram.wt_reads *= blocks;
+    out.sram.op_writes *= blocks;
+    out.sram.op_reads *= blocks;
+    out.sram.fills *= blocks;
+    out.macs_useful *= blocks;
+    out.pe_cycles *= blocks;
+    out
+}
+
+/// DiffAxE LLM co-design: candidate base configs from the low-EDP class
+/// sampler conditioned on each layer's shape; best whole-model EDP wins.
+pub fn diffaxe_llm(
+    engine: &DiffAxE,
+    model: LlmModel,
+    stage: Stage,
+    seq: u32,
+    n_per_layer: usize,
+    platform: Platform,
+    seed: u32,
+) -> Result<(SeqEval, f64)> {
+    let timer = Timer::start();
+    let gemms = model.layer_gemms(stage, seq);
+    let b = engine.stats.gen_batch;
+    let mut candidates: Vec<HwConfig> = Vec::new();
+    for (li, g) in gemms.iter().enumerate() {
+        let mut remaining = n_per_layer;
+        let mut chunk = 0u32;
+        while remaining > 0 {
+            let take = remaining.min(b);
+            let conds: Vec<(i32, [f32; 3])> = (0..take).map(|_| (0, g.norm_vec())).collect();
+            let s = seed.wrapping_add((li as u32) << 8).wrapping_add(chunk);
+            candidates.extend(engine.sample_class(ClassMode::Edp, s, &conds)?);
+            remaining -= take;
+            chunk += 1;
+        }
+    }
+    candidates.sort_by_key(|h| (h.r, h.c, h.ip_b, h.wt_b, h.op_b, h.bw));
+    candidates.dedup();
+    let best = candidates
+        .iter()
+        .map(|hw| eval_llm(hw, model, stage, seq, platform))
+        .min_by(|a, b| a.energy.edp.partial_cmp(&b.energy.edp).unwrap())
+        .expect("non-empty candidate set");
+    Ok((best, timer.elapsed_s()))
+}
+
+/// DOSA stand-in for §VI: finite-difference GD on whole-model EDP over the
+/// coarse grid (see DESIGN.md §3).
+pub fn dosa_llm(
+    model: LlmModel,
+    stage: Stage,
+    seq: u32,
+    platform: Platform,
+    seed: u64,
+) -> (SeqEval, f64) {
+    let timer = Timer::start();
+    let mut rng = Pcg32::new(seed, 66);
+    let opts = GdOptions { steps: 30, restarts: 3, ..Default::default() };
+    let res = gd::fd_gd(
+        |x: &[f64]| {
+            let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let hw = super::coarsen(&decode_rounded(&v));
+            eval_llm(&hw, model, stage, seq, platform).energy.edp.ln()
+        },
+        |r: &mut Pcg32| encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect(),
+        0.05,
+        &opts,
+        &mut rng,
+    );
+    let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+    let hw = super::coarsen(&decode_rounded(&v));
+    (eval_llm(&hw, model, stage, seq, platform), timer.elapsed_s())
+}
+
+/// Fixed-architecture evaluation (charitably granting per-layer loop-order
+/// choice — see [`FixedArch::config`]).
+pub fn fixed_llm(arch: FixedArch, model: LlmModel, stage: Stage, seq: u32, platform: Platform) -> SeqEval {
+    eval_llm(&arch.config(), model, stage, seq, platform)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_llm_scales_with_blocks() {
+        let hw = HwConfig::new_kb(32, 32, 128.0, 128.0, 32.0, 16, LoopOrder::Mnk);
+        let e = eval_llm(&hw, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm);
+        let gemms = LlmModel::BertBase.layer_gemms(Stage::Prefill, 128);
+        let one_block = simulate_seq(&e.cfg, &gemms);
+        assert_eq!(e.sim.cycles, one_block.cycles * 12);
+    }
+
+    #[test]
+    fn per_layer_orders_not_worse_than_uniform() {
+        let hw = HwConfig::new_kb(64, 64, 256.0, 64.0, 32.0, 16, LoopOrder::Mnk);
+        let opt = eval_llm(&hw, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm);
+        for uniform in LoopOrder::OS_ORDERS {
+            let gemms = LlmModel::BertBase.layer_gemms(Stage::Prefill, 128);
+            let cfg = SeqConfig::uniform(HwConfig { loop_order: uniform, ..hw }, gemms.len());
+            let sim = scale_sim(&simulate_seq(&cfg, &gemms), 12);
+            let e = asic::evaluate(&hw, &sim);
+            // per-layer EDP-optimal ordering beats (or ties) any uniform order
+            // on runtime-energy product within rounding
+            assert!(opt.energy.edp <= e.edp * 1.001,
+                    "{uniform:?}: {} vs {}", opt.energy.edp, e.edp);
+        }
+    }
+
+    #[test]
+    fn bigger_arrays_help_prefill_more_than_decode() {
+        // paper Fig 22 narrative: flexibility in PE sizing matters most in
+        // prefill; decode is latency/memory bound
+        let small = HwConfig::new_kb(16, 16, 128.0, 128.0, 32.0, 16, LoopOrder::Mnk);
+        let big = HwConfig::new_kb(128, 128, 128.0, 128.0, 32.0, 16, LoopOrder::Mnk);
+        let pf_gain = eval_llm(&small, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm)
+            .sim
+            .cycles as f64
+            / eval_llm(&big, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm).sim.cycles
+                as f64;
+        let dec_gain = eval_llm(&small, LlmModel::BertBase, Stage::Decode, 128, Platform::Asic32nm)
+            .sim
+            .cycles as f64
+            / eval_llm(&big, LlmModel::BertBase, Stage::Decode, 128, Platform::Asic32nm).sim.cycles
+                as f64;
+        assert!(pf_gain > dec_gain, "prefill gain {pf_gain} vs decode {dec_gain}");
+    }
+
+    #[test]
+    fn fixed_archs_evaluate_on_both_platforms() {
+        for arch in FixedArch::ALL {
+            for platform in [Platform::Asic32nm, Platform::FpgaVu13p] {
+                let e = fixed_llm(arch, LlmModel::BertBase, Stage::Prefill, 128, platform);
+                assert!(e.energy.edp > 0.0);
+                assert!(e.energy.power_w > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! The paper's four experiments as library calls (driven by the bench
+//! harnesses in `rust/benches/` and by the coordinator's request handlers).
+//!
+//! * [`perfgen`] — §IV-B.1 / Table III / Fig 16: runtime-conditioned
+//!   generation vs GD/BO/GANDSE baselines.
+//! * [`edp`] — §IV-B.2 / Table IV: power–performance class DSE, SP metric.
+//! * [`perfopt`] — §IV-B.3 / Fig 17/19/Table V: low-EDP-class generation
+//!   for performance.
+//! * [`llm`] — §VI / Figs 22-24 / Tables VII-VIII: LLM inference co-design
+//!   on ASIC + FPGA vs fixed architectures and a DOSA-style optimizer.
+
+pub mod edp;
+pub mod llm;
+pub mod perfgen;
+pub mod perfopt;
+
+use crate::design_space::HwConfig;
+use crate::energy::{asic, EnergyResult};
+use crate::sim::{simulate, SimResult};
+use crate::workload::Gemm;
+
+/// Simulate + ASIC-evaluate one (config, workload) pair.
+pub fn evaluate(hw: &HwConfig, g: &Gemm) -> (SimResult, EnergyResult) {
+    let s = simulate(hw, g);
+    let e = asic::evaluate(hw, &s);
+    (s, e)
+}
+
+/// Runtime in cycles.
+pub fn runtime_of(hw: &HwConfig, g: &Gemm) -> f64 {
+    simulate(hw, g).cycles as f64
+}
+
+/// EDP in µJ·cycles.
+pub fn edp_of(hw: &HwConfig, g: &Gemm) -> f64 {
+    let (s, e) = evaluate(hw, g);
+    let _ = s;
+    e.edp
+}
+
+/// Snap a config onto the coarse training grid — models the O(10^7)-grained
+/// space DOSA/Polaris search over (Table IV notes both operate on a much
+/// coarser granularity than the O(10^17) target space).
+pub fn coarsen(hw: &HwConfig) -> HwConfig {
+    use crate::design_space::params::TrainingSpace;
+    let snap_dim = |v: u32| {
+        *TrainingSpace::DIMS
+            .iter()
+            .min_by_key(|&&d| (d as i64 - v as i64).abs())
+            .unwrap()
+    };
+    let snap_buf = |b: u64| {
+        let kb = b as f64 / 1024.0;
+        let best = TrainingSpace::BUF_KB
+            .iter()
+            .min_by(|&&a, &&c| {
+                (a as f64 - kb).abs().partial_cmp(&(c as f64 - kb).abs()).unwrap()
+            })
+            .unwrap();
+        *best as u64 * 1024
+    };
+    let snap_bw = |v: u32| {
+        *TrainingSpace::BWS
+            .iter()
+            .min_by_key(|&&d| (d as i64 - v as i64).abs())
+            .unwrap()
+    };
+    HwConfig {
+        r: snap_dim(hw.r),
+        c: snap_dim(hw.c),
+        ip_b: snap_buf(hw.ip_b),
+        wt_b: snap_buf(hw.wt_b),
+        op_b: snap_buf(hw.op_b),
+        bw: snap_bw(hw.bw),
+        loop_order: hw.loop_order,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::{LoopOrder, TargetSpace};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn coarsen_lands_on_training_grid() {
+        use crate::design_space::params::TrainingSpace;
+        let mut rng = Pcg32::seeded(7);
+        for _ in 0..200 {
+            let hw = TargetSpace::sample(&mut rng);
+            let c = coarsen(&hw);
+            assert!(TrainingSpace::DIMS.contains(&c.r));
+            assert!(TrainingSpace::DIMS.contains(&c.c));
+            assert!(TrainingSpace::BUF_KB.contains(&((c.ip_b / 1024) as u32)));
+            assert!(TrainingSpace::BWS.contains(&c.bw));
+            assert_eq!(c.loop_order, hw.loop_order);
+        }
+    }
+
+    #[test]
+    fn coarsen_is_idempotent_on_grid_points() {
+        let hw = HwConfig::new_kb(64, 8, 256.0, 4.0, 1024.0, 16, LoopOrder::Nmk);
+        assert_eq!(coarsen(&hw), hw);
+    }
+
+    #[test]
+    fn evaluate_consistency() {
+        let hw = HwConfig::new_kb(32, 32, 128.0, 128.0, 32.0, 16, LoopOrder::Mnk);
+        let g = Gemm::new(128, 768, 768);
+        let (s, e) = evaluate(&hw, &g);
+        assert_eq!(runtime_of(&hw, &g), s.cycles as f64);
+        assert_eq!(edp_of(&hw, &g), e.edp);
+    }
+}

@@ -1,0 +1,80 @@
+//! Experiment 3 (§III-E, §IV-B.3, Figs 17/19, Table V): condition on the
+//! lowest-EDP percentile class to discover high-performance designs —
+//! including designs beating everything in the training data.
+
+use super::runtime_of;
+use crate::design_space::HwConfig;
+use crate::models::{ClassMode, DiffAxE};
+use crate::util::stats::Timer;
+use crate::workload::Gemm;
+use anyhow::Result;
+
+/// Result of one perf-opt run on one workload.
+#[derive(Debug, Clone)]
+pub struct PerfOutcome {
+    pub best_cycles: f64,
+    pub best_hw: HwConfig,
+    pub search_time_s: f64,
+    /// all generated (config, cycles, power) triples — Fig 19's scatter
+    pub generated: Vec<(HwConfig, f64, f64)>,
+}
+
+/// Generate `n` designs conditioned on class 0 (the lowest-EDP percentile),
+/// evaluate, return the fastest (paper: N_EDP = 10, class 1).
+pub fn diffaxe_perfopt(engine: &DiffAxE, g: &Gemm, n: usize, seed: u32) -> Result<PerfOutcome> {
+    let timer = Timer::start();
+    let b = engine.stats.gen_batch;
+    let mut generated = Vec::with_capacity(n);
+    let mut remaining = n;
+    let mut chunk = 0u32;
+    while remaining > 0 {
+        let take = remaining.min(b);
+        let conds: Vec<(i32, [f32; 3])> = (0..take).map(|_| (0, g.norm_vec())).collect();
+        let configs =
+            engine.sample_class(ClassMode::PerfOpt, seed.wrapping_add(chunk), &conds)?;
+        for hw in configs {
+            let (s, e) = super::evaluate(&hw, g);
+            generated.push((hw, s.cycles as f64, e.power_w));
+        }
+        remaining -= take;
+        chunk += 1;
+    }
+    let (best_hw, best_cycles, _) = generated
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .cloned()
+        .unwrap();
+    Ok(PerfOutcome { best_cycles, best_hw, search_time_s: timer.elapsed_s(), generated })
+}
+
+/// Best (lowest-runtime) configuration in the training design space for a
+/// workload — the "training data" baseline of Fig 19 / Table V.
+pub fn best_in_training_space(g: &Gemm) -> (HwConfig, f64) {
+    use crate::design_space::params::TrainingSpace;
+    let mut best: Option<(HwConfig, f64)> = None;
+    for hw in TrainingSpace::enumerate() {
+        let c = runtime_of(&hw, g);
+        if best.as_ref().map(|(_, b)| c < *b).unwrap_or(true) {
+            best = Some((hw, c));
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_best_is_a_training_config() {
+        use crate::design_space::params::TrainingSpace;
+        let g = Gemm::new(64, 256, 512);
+        let (hw, cycles) = best_in_training_space(&g);
+        assert!(TrainingSpace::DIMS.contains(&hw.r));
+        assert!(cycles > 0.0);
+        // sanity: it beats an arbitrary mid-grid config
+        let mid = crate::design_space::HwConfig::new_kb(
+            16, 16, 128.0, 128.0, 128.0, 8, crate::design_space::LoopOrder::Mnk);
+        assert!(cycles <= runtime_of(&mid, &g));
+    }
+}

@@ -1,0 +1,48 @@
+//! CACTI-7-style analytical SRAM/DRAM energy model at 32 nm.
+//!
+//! CACTI's per-access energy grows roughly with the square root of capacity
+//! (bitline/wordline lengths scale with array edge). We use
+//! `e(pJ/byte) = a + b·√(kB)` with constants chosen so the full-design-space
+//! power span matches the paper's Fig 10 (0.17–3.3 W) and Fig 1(b)'s
+//! DRAM-dominant-at-low-compute-density behaviour.
+
+/// Per-byte dynamic read/write energy of an SRAM of `size_b` bytes (pJ).
+pub fn sram_pj_per_byte(size_b: u64) -> f64 {
+    let kb = size_b as f64 / 1024.0;
+    0.05 + 0.012 * kb.sqrt()
+}
+
+/// Per-byte DRAM access energy (pJ) — LPDDR4-class interface at 32 nm.
+pub const DRAM_PJ_PER_BYTE: f64 = 20.0;
+
+/// SRAM leakage power per kB (watts).
+pub const SRAM_LEAK_W_PER_KB: f64 = 90e-6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_size() {
+        let mut prev = 0.0;
+        for kb in [4u64, 64, 128, 256, 512, 1024] {
+            let e = sram_pj_per_byte(kb * 1024);
+            assert!(e > prev, "energy must grow with capacity");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn sram_cheaper_than_dram() {
+        // on-chip access must stay well below DRAM for the reuse story
+        assert!(sram_pj_per_byte(1024 * 1024) < DRAM_PJ_PER_BYTE / 10.0);
+    }
+
+    #[test]
+    fn sublinear_scaling() {
+        let e4 = sram_pj_per_byte(4 * 1024);
+        let e1024 = sram_pj_per_byte(1024 * 1024);
+        // 256x capacity should cost ~16x the size-dependent term, not 256x
+        assert!(e1024 / e4 < 16.0);
+    }
+}

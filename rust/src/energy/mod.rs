@@ -1,0 +1,44 @@
+//! Energy / power models — the roles CACTI 7 [41] (SRAM + DRAM energy),
+//! NeuroSim [42] (MAC energy) and the Vivado flow (FPGA resources + power)
+//! play in the paper. Analytical stand-ins calibrated to the paper's own
+//! published numbers: the 0.17–3.3 W ASIC power span of Fig 10 and, for the
+//! FPGA, the *exact* resource-utilization rows of Table VIII.
+
+pub mod asic;
+pub mod cacti;
+pub mod fpga;
+
+use crate::sim::SimResult;
+
+/// Energy evaluation of one simulated run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyResult {
+    /// dynamic energy, microjoules
+    pub e_dyn_uj: f64,
+    /// leakage/static energy over the runtime, microjoules
+    pub e_static_uj: f64,
+    /// average power, watts
+    pub power_w: f64,
+    /// energy–delay product in the paper's units: µJ · cycles
+    pub edp: f64,
+    /// runtime in seconds at the platform clock
+    pub runtime_s: f64,
+}
+
+impl EnergyResult {
+    pub fn total_uj(&self) -> f64 {
+        self.e_dyn_uj + self.e_static_uj
+    }
+
+    pub(crate) fn from_parts(e_dyn_uj: f64, e_static_uj: f64, sim: &SimResult, freq_hz: f64) -> Self {
+        let runtime_s = sim.cycles as f64 / freq_hz;
+        let total = e_dyn_uj + e_static_uj;
+        EnergyResult {
+            e_dyn_uj,
+            e_static_uj,
+            power_w: total * 1e-6 / runtime_s,
+            edp: total * sim.cycles as f64,
+            runtime_s,
+        }
+    }
+}

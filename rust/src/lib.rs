@@ -1,0 +1,20 @@
+//! # DiffAxE — diffusion-driven accelerator generation and DSE
+//!
+//! Rust coordinator + substrates for the DiffAxE reproduction (see
+//! DESIGN.md). The generative models live in `python/compile/` and are
+//! AOT-lowered to HLO artifacts the [`runtime`] module executes via PJRT;
+//! everything else — the Scale-Sim-like simulator, energy models, design
+//! space, baselines and the DSE service — is native rust.
+
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod dataset;
+pub mod design_space;
+pub mod dse;
+pub mod energy;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,87 @@
+//! `diffaxe` — leader binary: dataset generation, DSE experiments and the
+//! generation service. Run with no arguments for usage.
+
+use anyhow::Result;
+use diffaxe::cli::Args;
+
+const USAGE: &str = "\
+diffaxe <subcommand> [options]
+
+subcommands:
+  gen-dataset   enumerate the training design space, simulate labels and
+                write artifacts/dataset/ (--workloads N --configs N --seed S
+                --out DIR; DIFFAXE_SCALE=paper|quick overrides defaults)
+  sim           simulate one configuration on one GEMM
+                (--r --c --ip-kb --wt-kb --op-kb --bw --order --m --k --n)
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("gen-dataset") => cmd_gen_dataset(&args),
+        Some("sim") => cmd_sim(&args),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_gen_dataset(args: &Args) -> Result<()> {
+    use diffaxe::dataset::{Dataset, GenConfig};
+    let mut cfg = GenConfig::from_env();
+    cfg.n_workloads = args.get_usize("workloads", cfg.n_workloads)?;
+    cfg.n_configs_per_workload = args.get_usize("configs", cfg.n_configs_per_workload)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let out = std::path::PathBuf::from(args.get_str("out", "artifacts/dataset"));
+    let t = diffaxe::util::stats::Timer::start();
+    let ds = Dataset::generate(&cfg);
+    ds.save(&out)?;
+    println!(
+        "gen-dataset: {} workloads x {} configs = {} rows -> {} ({:.1}s)",
+        cfg.n_workloads,
+        cfg.n_configs_per_workload,
+        ds.n_rows(),
+        out.display(),
+        t.elapsed_s()
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    use diffaxe::design_space::{HwConfig, LoopOrder};
+    use diffaxe::energy::{asic, fpga};
+    use diffaxe::sim::simulate;
+    use diffaxe::workload::Gemm;
+    let order = LoopOrder::from_name(args.get_str("order", "mnk"))
+        .ok_or_else(|| anyhow::anyhow!("unknown loop order"))?;
+    let hw = HwConfig::new_kb(
+        args.get_u64("r", 32)? as u32,
+        args.get_u64("c", 32)? as u32,
+        args.get_f64("ip-kb", 128.0)?,
+        args.get_f64("wt-kb", 128.0)?,
+        args.get_f64("op-kb", 32.0)?,
+        args.get_u64("bw", 16)? as u32,
+        order,
+    );
+    let g = Gemm::new(
+        args.get_u64("m", 128)? as u32,
+        args.get_u64("k", 768)? as u32,
+        args.get_u64("n", 768)? as u32,
+    );
+    let sim = simulate(&hw, &g);
+    let e = asic::evaluate(&hw, &sim);
+    let f = fpga::evaluate(&hw, &sim);
+    println!("hw: {hw}\nworkload: {g}");
+    println!(
+        "cycles={} (compute={} mem={}) util={:.3} dram_bytes={}",
+        sim.cycles,
+        sim.compute_cycles,
+        sim.mem_cycles,
+        sim.utilization(),
+        sim.dram.total()
+    );
+    println!("asic: power={:.3}W energy={:.1}uJ edp={:.3e}", e.power_w, e.total_uj(), e.edp);
+    println!("fpga: power={:.3}W edp={:.3e} resources={:?}", f.power_w, f.edp, fpga::resources(&hw));
+    Ok(())
+}

@@ -1,0 +1,319 @@
+//! The DiffAxE model engine: every AOT artifact compiled and wrapped behind
+//! typed batch APIs. This is the only place that knows artifact file names
+//! and executable input layouts.
+
+use super::norm::NormStats;
+use crate::design_space::{decode_rounded, HwConfig};
+use crate::runtime::{mat_f32, scalar_u32, to_vec_f32, vec_i32, HloExec, Runtime};
+use crate::workload::Gemm;
+use anyhow::Result;
+use std::path::Path;
+
+/// Which class-conditioned sampler to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClassMode {
+    /// §III-D: Eq. 8 power–performance classes (N_power × N_perf)
+    Edp,
+    /// §III-E: EDP percentile classes (N_EDP)
+    PerfOpt,
+}
+
+/// All compiled executables + the normalization contract.
+pub struct DiffAxE {
+    pub stats: NormStats,
+    sampler_runtime: HloExec,
+    sampler_edp: HloExec,
+    sampler_perfopt: HloExec,
+    encoder: HloExec,
+    decoder: HloExec,
+    pp: HloExec,
+    pp_grad: HloExec,
+    surrogate: HloExec,
+    surrogate_grad: HloExec,
+    gandse: HloExec,
+    airchitect1: HloExec,
+    airchitect2: HloExec,
+}
+
+impl DiffAxE {
+    /// Compile every artifact in `dir` (one-time service-start cost).
+    pub fn load(dir: &Path) -> Result<DiffAxE> {
+        let stats = NormStats::load(&dir.join("norm_stats.json"))?;
+        let rt = Runtime::cpu()?;
+        let load = |name: &str| rt.load_hlo(&dir.join(name));
+        Ok(DiffAxE {
+            stats,
+            sampler_runtime: load("sampler_runtime.hlo.txt")?,
+            sampler_edp: load("sampler_edp.hlo.txt")?,
+            sampler_perfopt: load("sampler_perfopt.hlo.txt")?,
+            encoder: load("encoder.hlo.txt")?,
+            decoder: load("decoder.hlo.txt")?,
+            pp: load("pp.hlo.txt")?,
+            pp_grad: load("pp_grad.hlo.txt")?,
+            surrogate: load("surrogate.hlo.txt")?,
+            surrogate_grad: load("surrogate_grad.hlo.txt")?,
+            gandse: load("gandse.hlo.txt")?,
+            airchitect1: load("airchitect1.hlo.txt")?,
+            airchitect2: load("airchitect2.hlo.txt")?,
+        })
+    }
+
+    /// True if `dir` holds a complete artifact set.
+    pub fn artifacts_present(dir: &Path) -> bool {
+        ["norm_stats.json", "sampler_runtime.hlo.txt", "decoder.hlo.txt"]
+            .iter()
+            .all(|f| dir.join(f).exists())
+    }
+
+    fn hw_dim(&self) -> usize {
+        self.stats.hw_dim
+    }
+
+    // ---- diffusion samplers ------------------------------------------------
+
+    /// Runtime-conditioned generation (§III-C): one request per batch slot
+    /// `(p_norm, w_norm)`. Pads to the executable's fixed batch and truncates
+    /// the result, so any `conds.len() <= gen_batch` works.
+    pub fn sample_runtime(&self, seed: u32, conds: &[(f32, [f32; 3])]) -> Result<Vec<HwConfig>> {
+        self.run_sampler(&self.sampler_runtime, seed, SamplerCond::Float(conds))
+    }
+
+    /// Class-conditioned generation (§III-D/E).
+    pub fn sample_class(
+        &self,
+        mode: ClassMode,
+        seed: u32,
+        conds: &[(i32, [f32; 3])],
+    ) -> Result<Vec<HwConfig>> {
+        let exe = match mode {
+            ClassMode::Edp => &self.sampler_edp,
+            ClassMode::PerfOpt => &self.sampler_perfopt,
+        };
+        self.run_sampler(exe, seed, SamplerCond::Class(conds))
+    }
+
+    fn run_sampler(&self, exe: &HloExec, seed: u32, conds: SamplerCond) -> Result<Vec<HwConfig>> {
+        let b = self.stats.gen_batch;
+        let n = conds.len();
+        anyhow::ensure!(n > 0, "empty generation request");
+        anyhow::ensure!(n <= b, "request {n} exceeds sampler batch {b}; chunk upstream");
+        let mut w_flat = Vec::with_capacity(b * 3);
+        let cond_lit = match conds {
+            SamplerCond::Float(cs) => {
+                let mut p = Vec::with_capacity(b);
+                for i in 0..b {
+                    let (pv, wv) = cs[i.min(n - 1)];
+                    p.push(pv);
+                    w_flat.extend_from_slice(&wv);
+                }
+                mat_f32(&p, b, 1)?
+            }
+            SamplerCond::Class(cs) => {
+                let mut c = Vec::with_capacity(b);
+                for i in 0..b {
+                    let (cv, wv) = cs[i.min(n - 1)];
+                    c.push(cv);
+                    w_flat.extend_from_slice(&wv);
+                }
+                vec_i32(&c)
+            }
+        };
+        let w_lit = mat_f32(&w_flat, b, 3)?;
+        let out = exe.run(&[scalar_u32(seed), cond_lit, w_lit])?;
+        let hw = to_vec_f32(&out[0])?;
+        let d = self.hw_dim();
+        anyhow::ensure!(hw.len() == b * d, "sampler output shape mismatch");
+        Ok(hw.chunks(d).take(n).map(decode_rounded).collect())
+    }
+
+    // ---- latent-space plumbing (for latent-GD/BO baselines) ---------------
+
+    /// Encode normalized hardware vectors into the Phase-1 latent space.
+    pub fn encode(&self, hw_rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.batched_map(&self.encoder, hw_rows, self.hw_dim(), self.stats.latent_dim, &[])
+    }
+
+    /// Decode latents back to normalized hardware vectors.
+    pub fn decode(&self, latents: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.batched_map(&self.decoder, latents, self.stats.latent_dim, self.hw_dim(), &[])
+    }
+
+    /// Decode latents and round into the target design space.
+    pub fn decode_rounded(&self, latents: &[Vec<f32>]) -> Result<Vec<HwConfig>> {
+        Ok(self.decode(latents)?.iter().map(|v| decode_rounded(v)).collect())
+    }
+
+    /// PP prediction for (latent, workload) pairs → normalized metric.
+    pub fn pp_predict(&self, latents: &[Vec<f32>], w: &Gemm) -> Result<Vec<f32>> {
+        let b = self.stats.pp_batch;
+        let d = self.stats.latent_dim;
+        let mut out = Vec::with_capacity(latents.len());
+        for chunk in latents.chunks(b) {
+            let (v_lit, n) = pad_rows(chunk, d, b)?;
+            let w_lit = broadcast_w(w, b)?;
+            let res = self.pp.run(&[v_lit, w_lit])?;
+            let preds = to_vec_f32(&res[0])?;
+            out.extend(preds.chunks(preds.len() / b).take(n).map(|c| c[0]));
+        }
+        Ok(out)
+    }
+
+    /// PP loss + gradient wrt latent, for latent-space gradient descent.
+    /// Returns (losses, grads).
+    #[allow(clippy::type_complexity)]
+    pub fn pp_grad(
+        &self,
+        latents: &[Vec<f32>],
+        w: &Gemm,
+        targets: &[f32],
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        anyhow::ensure!(latents.len() == targets.len());
+        let b = self.stats.pp_batch;
+        let d = self.stats.latent_dim;
+        let mut losses = Vec::new();
+        let mut grads = Vec::new();
+        for (vchunk, tchunk) in latents.chunks(b).zip(targets.chunks(b)) {
+            let (v_lit, n) = pad_rows(vchunk, d, b)?;
+            let w_lit = broadcast_w(w, b)?;
+            let mut t = tchunk.to_vec();
+            t.resize(b, 0.0);
+            let t_lit = mat_f32(&t, b, 1)?;
+            let res = self.pp_grad.run(&[v_lit, w_lit, t_lit])?;
+            losses.extend(to_vec_f32(&res[0])?.into_iter().take(n));
+            let g = to_vec_f32(&res[1])?;
+            grads.extend(g.chunks(d).take(n).map(|c| c.to_vec()));
+        }
+        Ok((losses, grads))
+    }
+
+    /// Differentiable surrogate prediction in hardware space (vanilla GD).
+    pub fn surrogate_predict(&self, hw_rows: &[Vec<f32>], w: &Gemm) -> Result<Vec<f32>> {
+        let b = self.stats.pp_batch;
+        let d = self.hw_dim();
+        let mut out = Vec::new();
+        for chunk in hw_rows.chunks(b) {
+            let (h_lit, n) = pad_rows(chunk, d, b)?;
+            let w_lit = broadcast_w(w, b)?;
+            let res = self.surrogate.run(&[h_lit, w_lit])?;
+            out.extend(to_vec_f32(&res[0])?.into_iter().take(n));
+        }
+        Ok(out)
+    }
+
+    /// Surrogate loss + gradient wrt hw (vanilla GD step).
+    #[allow(clippy::type_complexity)]
+    pub fn surrogate_grad(
+        &self,
+        hw_rows: &[Vec<f32>],
+        w: &Gemm,
+        targets: &[f32],
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        anyhow::ensure!(hw_rows.len() == targets.len());
+        let b = self.stats.pp_batch;
+        let d = self.hw_dim();
+        let mut losses = Vec::new();
+        let mut grads = Vec::new();
+        for (hchunk, tchunk) in hw_rows.chunks(b).zip(targets.chunks(b)) {
+            let (h_lit, n) = pad_rows(hchunk, d, b)?;
+            let w_lit = broadcast_w(w, b)?;
+            let mut t = tchunk.to_vec();
+            t.resize(b, 0.0);
+            let t_lit = xla::Literal::vec1(t.as_slice());
+            let res = self.surrogate_grad.run(&[h_lit, w_lit, t_lit])?;
+            losses.extend(to_vec_f32(&res[0])?.into_iter().take(n));
+            let g = to_vec_f32(&res[1])?;
+            grads.extend(g.chunks(d).take(n).map(|c| c.to_vec()));
+        }
+        Ok((losses, grads))
+    }
+
+    /// GANDSE one-shot generation.
+    pub fn gandse_generate(&self, seed: u32, conds: &[(f32, [f32; 3])]) -> Result<Vec<HwConfig>> {
+        self.run_sampler(&self.gandse, seed, SamplerCond::Float(conds))
+    }
+
+    /// AIRCHITECT v1 recommendation: argmax over the fixed grid.
+    pub fn airchitect_v1(&self, w: &Gemm) -> Result<HwConfig> {
+        let b = self.stats.pp_batch;
+        let w_lit = broadcast_w(w, b)?;
+        let res = self.airchitect1.run(&[w_lit])?;
+        let logits = to_vec_f32(&res[0])?;
+        let n_cfg = logits.len() / b;
+        let row = &logits[..n_cfg];
+        let best = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let grid = &self.stats.airchitect_grid;
+        anyhow::ensure!(best < grid.len(), "grid index out of range");
+        Ok(decode_rounded(&grid[best]))
+    }
+
+    /// AIRCHITECT v2 recommendation: direct regression.
+    pub fn airchitect_v2(&self, w: &Gemm) -> Result<HwConfig> {
+        let b = self.stats.pp_batch;
+        let w_lit = broadcast_w(w, b)?;
+        let res = self.airchitect2.run(&[w_lit])?;
+        let hw = to_vec_f32(&res[0])?;
+        Ok(decode_rounded(&hw[..self.hw_dim()]))
+    }
+
+    fn batched_map(
+        &self,
+        exe: &HloExec,
+        rows: &[Vec<f32>],
+        in_dim: usize,
+        out_dim: usize,
+        _extra: &[xla::Literal],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = self.stats.pp_batch;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(b) {
+            let (lit, n) = pad_rows(chunk, in_dim, b)?;
+            let res = exe.run(&[lit])?;
+            let flat = to_vec_f32(&res[0])?;
+            anyhow::ensure!(flat.len() == b * out_dim, "{} output shape", exe.name());
+            out.extend(flat.chunks(out_dim).take(n).map(|c| c.to_vec()));
+        }
+        Ok(out)
+    }
+}
+
+enum SamplerCond<'a> {
+    Float(&'a [(f32, [f32; 3])]),
+    Class(&'a [(i32, [f32; 3])]),
+}
+
+impl SamplerCond<'_> {
+    fn len(&self) -> usize {
+        match self {
+            SamplerCond::Float(c) => c.len(),
+            SamplerCond::Class(c) => c.len(),
+        }
+    }
+}
+
+/// Pack `rows` (each `dim` wide) into a `[batch, dim]` literal, padding by
+/// repeating the last row. Returns (literal, real row count).
+fn pad_rows(rows: &[Vec<f32>], dim: usize, batch: usize) -> Result<(xla::Literal, usize)> {
+    anyhow::ensure!(!rows.is_empty() && rows.len() <= batch);
+    let mut flat = Vec::with_capacity(batch * dim);
+    for i in 0..batch {
+        let r = &rows[i.min(rows.len() - 1)];
+        anyhow::ensure!(r.len() == dim, "row width {} != {dim}", r.len());
+        flat.extend_from_slice(r);
+    }
+    Ok((mat_f32(&flat, batch, dim)?, rows.len()))
+}
+
+/// `[batch, 3]` literal with the workload's normalized vector in every row.
+fn broadcast_w(w: &Gemm, batch: usize) -> Result<xla::Literal> {
+    let v = w.norm_vec();
+    let mut flat = Vec::with_capacity(batch * 3);
+    for _ in 0..batch {
+        flat.extend_from_slice(&v);
+    }
+    mat_f32(&flat, batch, 3)
+}

@@ -1,0 +1,8 @@
+//! Typed wrappers over the AOT artifacts: the normalization contract
+//! ([`norm`]) and the compiled model engine ([`engine`]).
+
+pub mod engine;
+pub mod norm;
+
+pub use engine::{ClassMode, DiffAxE};
+pub use norm::{NormStats, WorkloadStats};

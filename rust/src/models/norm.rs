@@ -1,0 +1,245 @@
+//! `norm_stats.json` — the normalization contract between the python
+//! compile path and the rust request path. Mirrors python/compile/norm.py.
+
+use crate::util::json::Json;
+use crate::util::stats::bin_index;
+use crate::workload::Gemm;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Per-workload label statistics and class edges.
+#[derive(Debug, Clone)]
+pub struct WorkloadStats {
+    pub gemm: Gemm,
+    pub log_rt_min: f64,
+    pub log_rt_max: f64,
+    pub power_min: f64,
+    pub power_max: f64,
+    pub log_edp_min: f64,
+    pub log_edp_max: f64,
+    pub power_edges: Vec<f64>,
+    pub rt_edges: Vec<f64>,
+    pub edp_edges: Vec<f64>,
+}
+
+impl WorkloadStats {
+    fn span(lo: f64, hi: f64) -> f64 {
+        (hi - lo).max(1e-9)
+    }
+
+    /// runtime cycles → normalized conditioning value in [0,1]
+    pub fn norm_runtime(&self, cycles: f64) -> f32 {
+        ((cycles.ln() - self.log_rt_min) / Self::span(self.log_rt_min, self.log_rt_max)) as f32
+    }
+
+    /// normalized value → runtime cycles
+    pub fn denorm_runtime(&self, p: f64) -> f64 {
+        (p * Self::span(self.log_rt_min, self.log_rt_max) + self.log_rt_min).exp()
+    }
+
+    /// observed runtime range in the training data
+    pub fn runtime_range(&self) -> (f64, f64) {
+        (self.log_rt_min.exp(), self.log_rt_max.exp())
+    }
+
+    /// Eq. 8 power–performance class of a simulated design.
+    pub fn power_perf_class(&self, power_w: f64, cycles: f64, n_power: usize) -> usize {
+        bin_index(&self.power_edges, power_w) + n_power * bin_index(&self.rt_edges, cycles)
+    }
+
+    pub fn edp_class(&self, edp: f64) -> usize {
+        bin_index(&self.edp_edges, edp)
+    }
+}
+
+/// Parsed `norm_stats.json`.
+#[derive(Debug, Clone)]
+pub struct NormStats {
+    pub scale: String,
+    pub t_steps: usize,
+    pub gen_batch: usize,
+    pub pp_batch: usize,
+    pub latent_dim: usize,
+    pub hw_dim: usize,
+    pub n_power: usize,
+    pub n_perf: usize,
+    pub n_edp: usize,
+    pub param_counts: HashMap<String, usize>,
+    pub airchitect_grid: Vec<Vec<f32>>,
+    pub workloads: Vec<WorkloadStats>,
+    by_mkn: HashMap<(u32, u32, u32), usize>,
+}
+
+impl NormStats {
+    pub fn load(path: &Path) -> Result<NormStats> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing norm_stats.json")?;
+        let usz = |key: &str| -> Result<usize> {
+            j.get(key).as_usize().with_context(|| format!("norm_stats.{key}"))
+        };
+        let mut workloads = Vec::new();
+        let mut by_mkn = HashMap::new();
+        for (i, w) in j.get("workloads").as_arr().context("workloads")?.iter().enumerate() {
+            let g = Gemm::new(
+                w.get("m").as_usize().context("m")? as u32,
+                w.get("k").as_usize().context("k")? as u32,
+                w.get("n").as_usize().context("n")? as u32,
+            );
+            by_mkn.insert((g.m, g.k, g.n), i);
+            let f = |key: &str| -> Result<f64> {
+                w.get(key).as_f64().with_context(|| format!("workload.{key}"))
+            };
+            workloads.push(WorkloadStats {
+                gemm: g,
+                log_rt_min: f("log_rt_min")?,
+                log_rt_max: f("log_rt_max")?,
+                power_min: f("power_min")?,
+                power_max: f("power_max")?,
+                log_edp_min: f("log_edp_min")?,
+                log_edp_max: f("log_edp_max")?,
+                power_edges: w.get("power_edges").as_f64_vec().context("power_edges")?,
+                rt_edges: w.get("rt_edges").as_f64_vec().context("rt_edges")?,
+                edp_edges: w.get("edp_edges").as_f64_vec().context("edp_edges")?,
+            });
+        }
+        let param_counts = j
+            .get("param_counts")
+            .as_obj()
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_usize().map(|n| (k.clone(), n)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let airchitect_grid = j
+            .get("airchitect_grid")
+            .as_arr()
+            .map(|rows| rows.iter().filter_map(|r| r.as_f32_vec()).collect())
+            .unwrap_or_default();
+        Ok(NormStats {
+            scale: j.get("scale").as_str().unwrap_or("unknown").to_string(),
+            t_steps: usz("t_steps")?,
+            gen_batch: usz("gen_batch")?,
+            pp_batch: usz("pp_batch")?,
+            latent_dim: usz("latent_dim")?,
+            hw_dim: usz("hw_dim")?,
+            n_power: usz("n_power")?,
+            n_perf: usz("n_perf")?,
+            n_edp: usz("n_edp")?,
+            param_counts,
+            airchitect_grid,
+            workloads,
+            by_mkn,
+        })
+    }
+
+    /// Stats for a workload: exact match, or nearest training workload in
+    /// normalized (M,K,N) space for unseen shapes.
+    pub fn stats_for(&self, g: &Gemm) -> &WorkloadStats {
+        if let Some(&i) = self.by_mkn.get(&(g.m, g.k, g.n)) {
+            return &self.workloads[i];
+        }
+        let target = g.norm_vec();
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for (i, w) in self.workloads.iter().enumerate() {
+            let v = w.gemm.norm_vec();
+            let d: f64 = target
+                .iter()
+                .zip(&v)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        &self.workloads[best]
+    }
+
+    /// Is this workload one the models were trained on?
+    pub fn is_known(&self, g: &Gemm) -> bool {
+        self.by_mkn.contains_key(&(g.m, g.k, g.n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "scale": "quick", "t_steps": 16, "gen_batch": 16, "pp_batch": 256,
+          "latent_dim": 128, "hw_dim": 8, "n_power": 3, "n_perf": 3, "n_edp": 10,
+          "param_counts": {"ddm": 1000, "ae_pp": 2000},
+          "airchitect_grid": [[0,0,0,0,0,0,1,0],[1,1,1,1,1,1,0,1]],
+          "workloads": [
+            {"m": 32, "k": 64, "n": 128,
+             "log_rt_min": 6.0, "log_rt_max": 12.0,
+             "power_min": 0.1, "power_max": 2.0,
+             "log_edp_min": 10.0, "log_edp_max": 20.0,
+             "power_edges": [0.1, 0.5, 1.0, 2.0],
+             "rt_edges": [400.0, 1000.0, 10000.0, 160000.0],
+             "edp_edges": [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0]}
+          ]
+        }"#
+        .to_string()
+    }
+
+    fn load_sample() -> NormStats {
+        let dir = std::env::temp_dir().join(format!("diffaxe_norm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("norm_stats.json");
+        std::fs::write(&p, sample_json()).unwrap();
+        let s = NormStats::load(&p).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        s
+    }
+
+    #[test]
+    fn parses_all_fields() {
+        let s = load_sample();
+        assert_eq!(s.t_steps, 16);
+        assert_eq!(s.gen_batch, 16);
+        assert_eq!(s.workloads.len(), 1);
+        assert_eq!(s.param_counts["ddm"], 1000);
+        assert_eq!(s.airchitect_grid.len(), 2);
+        assert_eq!(s.airchitect_grid[0].len(), 8);
+    }
+
+    #[test]
+    fn runtime_norm_roundtrip() {
+        let s = load_sample();
+        let w = &s.workloads[0];
+        for cycles in [500.0, 5_000.0, 120_000.0] {
+            let p = w.norm_runtime(cycles);
+            let back = w.denorm_runtime(p as f64);
+            assert!((back / cycles - 1.0).abs() < 1e-5, "{cycles} -> {p} -> {back}");
+        }
+        assert!((w.norm_runtime(w.runtime_range().0) - 0.0).abs() < 1e-6);
+        assert!((w.norm_runtime(w.runtime_range().1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn class_assignment_matches_eq8() {
+        let s = load_sample();
+        let w = &s.workloads[0];
+        // power 0.7 -> bin 1; runtime 50000 -> bin 2; class = 1 + 3*2 = 7
+        assert_eq!(w.power_perf_class(0.7, 50_000.0, 3), 7);
+        assert_eq!(w.edp_class(5.5), 4);
+        assert_eq!(w.edp_class(-1.0), 0); // clamps
+        assert_eq!(w.edp_class(99.0), 9);
+    }
+
+    #[test]
+    fn nearest_workload_fallback() {
+        let s = load_sample();
+        let exact = Gemm::new(32, 64, 128);
+        assert!(s.is_known(&exact));
+        let near = Gemm::new(33, 64, 130);
+        assert!(!s.is_known(&near));
+        assert_eq!(s.stats_for(&near).gemm, exact);
+    }
+}

@@ -1,0 +1,91 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them from
+//! the rust request path (no python anywhere near here).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. The
+//! compile step happens once per artifact at service start; execution is
+//! the only per-request cost.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shared PJRT client (CPU plugin).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<HloExec> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(HloExec { exe, path: path.to_path_buf() })
+    }
+}
+
+/// One compiled executable.
+pub struct HloExec {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl HloExec {
+    /// Execute with the given inputs; returns the flattened output tuple
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.path.display()))?;
+        lit.to_tuple().context("decomposing output tuple")
+    }
+
+    pub fn name(&self) -> String {
+        self.path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default()
+    }
+}
+
+// ---- Literal construction helpers -----------------------------------------
+
+/// f32 matrix literal of shape `[rows, cols]` from a flat row-major slice.
+pub fn mat_f32(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// i32 vector literal.
+pub fn vec_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// u32 scalar literal (e.g. PRNG seeds).
+pub fn scalar_u32(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 literal into a Vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

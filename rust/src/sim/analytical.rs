@@ -1,0 +1,332 @@
+//! Closed-form OS-dataflow performance model (see module docs in
+//! [`super`]). Exactly matched by the literal loop-nest oracle in
+//! [`super::trace`]; the property suite enforces bit-equality of traffic.
+//!
+//! §Perf: this function is the evaluation hot path (millions of calls per
+//! DSE run). All per-tile sums use the two-term closed form of
+//! [`super::tiles::Tiling`] — zero heap allocation per call (before/after
+//! in EXPERIMENTS.md §Perf).
+
+use super::tiles::Tiling;
+use super::{DramTraffic, SimResult, SramAccess};
+use crate::design_space::HwConfig;
+use crate::workload::Gemm;
+#[cfg(test)]
+use crate::design_space::LoopOrder;
+
+/// Position of the reuse-breaker loop relative to an operand's own loops.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum BreakerPos {
+    /// breaker is the innermost loop — each granule visited once
+    Inner,
+    /// breaker sits between the operand's own loops — per-slice reuse
+    Middle {
+        /// the operand's own loop that is outer to the breaker is `k`
+        /// (order k…breaker…tile) rather than the tile dimension
+        k_outer: bool,
+    },
+    /// breaker is the outermost loop — whole tensor re-swept per trip
+    Outer,
+}
+
+fn breaker_pos(nest: [char; 3], tile_dim: char, breaker: char) -> BreakerPos {
+    let pos = |c: char| nest.iter().position(|&x| x == c).unwrap();
+    let pb = pos(breaker);
+    let (pt, pk) = (pos(tile_dim), pos('k'));
+    if pb > pt && pb > pk {
+        BreakerPos::Inner
+    } else if pb < pt && pb < pk {
+        BreakerPos::Outer
+    } else {
+        BreakerPos::Middle { k_outer: pk < pb }
+    }
+}
+
+/// K-chunk size when `k` is *not* the innermost loop: bounded by what the
+/// input and weight buffers can hold per array row/column.
+pub(super) fn k_chunk(hw: &HwConfig, k: u32) -> u64 {
+    let by_ip = hw.ip_b / hw.r as u64;
+    let by_wt = hw.wt_b / hw.c as u64;
+    by_ip.min(by_wt).clamp(1, k as u64)
+}
+
+/// DRAM traffic for one streamed operand (A with its m-tiling / IPSz, or B
+/// with its n-tiling / WTSz, by symmetry).
+///
+/// * `tile`: tiling of the operand's non-shared dimension;
+/// * `chunks`: K-chunk tiling (shared dimension);
+/// * `trips`: breaker-loop trip count;
+/// * `cap`: the operand's buffer capacity in bytes.
+fn operand_traffic(pos: BreakerPos, tile: Tiling, chunks: Tiling, cap: u64, trips: u64) -> u64 {
+    let k_total = chunks.total();
+    let total = tile.total() * k_total;
+    if total <= cap {
+        return total; // whole tensor resident after first sweep
+    }
+    match pos {
+        BreakerPos::Inner => total,
+        BreakerPos::Outer => total * trips,
+        BreakerPos::Middle { k_outer: false } => {
+            // slice = one tile row/col across all of K
+            k_total * tile.sum_sized(|rows| if rows * k_total <= cap { 1 } else { trips })
+        }
+        BreakerPos::Middle { k_outer: true } => {
+            // slice = one K-chunk across the whole non-shared extent
+            let extent = tile.total();
+            extent * chunks.sum_sized(|kd| if extent * kd <= cap { 1 } else { trips })
+        }
+    }
+}
+
+/// Output DRAM traffic `(writes, partial_reads)`.
+///
+/// k-innermost: outputs leave the PEs exactly once → writes = M·N.
+/// Otherwise the output working set revisited between consecutive k-steps
+/// must fit OPSz or partials spill to DRAM once per chunk boundary.
+fn output_traffic(hw: &HwConfig, g: &Gemm, tk: u64, tm: Tiling, tn: Tiling) -> (u64, u64) {
+    let mn = g.out_elems();
+    if tk == 1 {
+        return (mn, 0);
+    }
+    let nest = hw.loop_order.nest();
+    let posn = |c: char| nest.iter().position(|&x| x == c).unwrap();
+    let pk = posn('k');
+    let m_inner = posn('m') > pk;
+    let n_inner = posn('n') > pk;
+    // Working-set slices revisited across k: full extent of the loops inner
+    // to k × one tile of the others.
+    let (mut writes, mut reads) = (0, 0);
+    let mut add_slices = |slices: Tiling, other_extent: u64, cap: u64| {
+        writes += other_extent
+            * slices.sum_sized(|s| if s * other_extent <= cap { 1 } else { tk });
+        reads += other_extent
+            * slices.sum_sized(|s| if s * other_extent <= cap { 0 } else { tk - 1 });
+    };
+    match (m_inner, n_inner) {
+        (true, true) => {
+            if mn <= hw.op_b {
+                writes = mn;
+            } else {
+                writes = mn * tk;
+                reads = mn * (tk - 1);
+            }
+        }
+        (true, false) => add_slices(tn, g.m as u64, hw.op_b),
+        (false, true) => add_slices(tm, g.n as u64, hw.op_b),
+        (false, false) => unreachable!("tk > 1 implies k is not innermost"),
+    }
+    (writes, reads)
+}
+
+/// The closed-form simulation (see module docs).
+pub fn simulate(hw: &HwConfig, g: &Gemm) -> SimResult {
+    let nest = hw.loop_order.nest();
+    let tm = Tiling::new(g.m as u64, hw.r as u64);
+    let tn = Tiling::new(g.n as u64, hw.c as u64);
+    let k_innermost = nest[2] == 'k';
+    let chunks = if k_innermost {
+        Tiling::new(g.k as u64, g.k as u64)
+    } else {
+        Tiling::new(g.k as u64, k_chunk(hw, g.k))
+    };
+    let tk = chunks.tiles;
+
+    // ---- compute cycles ----------------------------------------------
+    // per (i,j,k) fold: 2R + C + K' - 2 (skew fill + stream + drain)
+    let fold_overhead = 2 * hw.r as u64 + hw.c as u64 - 2;
+    let compute_cycles = tm.tiles * tn.tiles * (tk * fold_overhead + g.k as u64);
+
+    // ---- DRAM traffic --------------------------------------------------
+    // operand A: own loops (m, k), breaker n; operand B: (n, k), breaker m
+    let a_reads =
+        operand_traffic(breaker_pos(nest, 'm', 'n'), tm, chunks, hw.ip_b, tn.tiles);
+    let b_reads =
+        operand_traffic(breaker_pos(nest, 'n', 'm'), tn, chunks, hw.wt_b, tm.tiles);
+    let (out_writes, out_reads) = output_traffic(hw, g, tk, tm, tn);
+    let dram = DramTraffic { a_reads, b_reads, out_writes, out_reads };
+
+    // ---- SRAM accesses --------------------------------------------------
+    // every fold streams its full operand tiles from SRAM into the array
+    let ip_reads = tn.tiles * g.a_elems();
+    let wt_reads = tm.tiles * g.b_elems();
+    let op_writes = g.out_elems() + dram.out_reads; // results + partial respills
+    let op_reads = dram.out_writes; // everything written to DRAM passes through
+    let sram = SramAccess {
+        ip_reads,
+        wt_reads,
+        op_writes,
+        op_reads,
+        fills: dram.a_reads + dram.b_reads,
+    };
+
+    // ---- runtime ---------------------------------------------------------
+    let mem_cycles = dram.total().div_ceil(hw.bw as u64);
+    let cycles = compute_cycles.max(mem_cycles);
+
+    SimResult {
+        cycles,
+        compute_cycles,
+        mem_cycles,
+        dram,
+        sram,
+        macs_useful: g.macs(),
+        pe_cycles: compute_cycles * hw.macs(),
+        tk,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::params::TrainingSpace;
+
+    fn hw(r: u32, c: u32, ip: f64, wt: f64, op: f64, bw: u32, lo: LoopOrder) -> HwConfig {
+        HwConfig::new_kb(r, c, ip, wt, op, bw, lo)
+    }
+
+    #[test]
+    fn single_tile_compute_formula() {
+        // M=R, N=C, one fold, k innermost
+        let h = hw(16, 16, 1024.0, 1024.0, 1024.0, 32, LoopOrder::Mnk);
+        let g = Gemm::new(16, 100, 16);
+        let r = simulate(&h, &g);
+        assert_eq!(r.compute_cycles, 2 * 16 + 16 + 100 - 2);
+        assert_eq!(r.tk, 1);
+        // big buffers: every operand loaded exactly once
+        assert_eq!(r.dram.a_reads, 16 * 100);
+        assert_eq!(r.dram.b_reads, 100 * 16);
+        assert_eq!(r.dram.out_writes, 16 * 16);
+        assert_eq!(r.dram.out_reads, 0);
+    }
+
+    #[test]
+    fn weight_refetch_factor_mnk_small_wt_buffer() {
+        // mnk with WTSz too small for whole B and K*C > WTSz: B refetched
+        // once per m-tile (paper §V-C: factor ceil(M/R))
+        let h = hw(8, 8, 1024.0, 4.0, 1024.0, 32, LoopOrder::Mnk);
+        let g = Gemm::new(64, 1024, 64); // K*C = 8 kB > 4 kB
+        let r = simulate(&h, &g);
+        let tm = 64 / 8;
+        assert_eq!(r.dram.b_reads, g.b_elems() * tm);
+        // A row tile (8 x 1024 = 8 kB) fits the 1 MB input buffer: loaded once
+        assert_eq!(r.dram.a_reads, g.a_elems());
+    }
+
+    #[test]
+    fn input_refetch_factor_nmk_small_ip_buffer() {
+        // nmk with IPSz too small for whole A: A refetched ceil(N/C) times
+        // (paper §VI: "repetition in input activation loads by ceil(N/C)")
+        let h = hw(8, 8, 4.0, 1024.0, 1024.0, 32, LoopOrder::Nmk);
+        let g = Gemm::new(512, 512, 64);
+        let r = simulate(&h, &g);
+        let tn = 64 / 8;
+        assert_eq!(r.dram.a_reads, g.a_elems() * tn);
+    }
+
+    #[test]
+    fn full_residency_eliminates_refetch() {
+        // nmk but whole A fits -> loaded once despite n-outer order
+        let h = hw(8, 8, 512.0, 1024.0, 1024.0, 32, LoopOrder::Nmk);
+        let g = Gemm::new(512, 512, 64); // A = 256 kB <= 512 kB
+        let r = simulate(&h, &g);
+        assert_eq!(r.dram.a_reads, g.a_elems());
+    }
+
+    #[test]
+    fn partial_tiles_count_actual_bytes() {
+        let h = hw(16, 16, 1024.0, 1024.0, 1024.0, 32, LoopOrder::Mnk);
+        let g = Gemm::new(20, 10, 20); // partial edge tiles
+        let r = simulate(&h, &g);
+        assert_eq!(r.dram.a_reads, 200);
+        assert_eq!(r.dram.b_reads, 200);
+        assert_eq!(r.dram.out_writes, 400);
+        let folds = 2 * 2; // Tm=2, Tn=2
+        assert_eq!(r.compute_cycles, folds * (2 * 16 + 16 + 10 - 2));
+    }
+
+    #[test]
+    fn k_outer_orders_spill_partials() {
+        // kmn with a tiny output buffer: partial sums spill per chunk
+        let h = hw(8, 8, 4.0, 4.0, 4.0, 32, LoopOrder::Kmn);
+        let g = Gemm::new(128, 2048, 128); // out = 16 kB > 4 kB
+        let r = simulate(&h, &g);
+        assert!(r.tk > 1);
+        assert_eq!(r.dram.out_writes, g.out_elems() * r.tk);
+        assert_eq!(r.dram.out_reads, g.out_elems() * (r.tk - 1));
+    }
+
+    #[test]
+    fn k_outer_orders_keep_partials_when_opsz_large() {
+        let h = hw(8, 8, 4.0, 4.0, 64.0, 32, LoopOrder::Kmn);
+        let g = Gemm::new(128, 2048, 128); // out = 16 kB <= 64 kB
+        let r = simulate(&h, &g);
+        assert!(r.tk > 1);
+        assert_eq!(r.dram.out_writes, g.out_elems());
+        assert_eq!(r.dram.out_reads, 0);
+    }
+
+    #[test]
+    fn memory_bound_vs_compute_bound() {
+        let g = Gemm::new(256, 256, 256);
+        let fast_mem = simulate(&hw(8, 8, 1024.0, 1024.0, 1024.0, 32, LoopOrder::Mnk), &g);
+        assert!(!fast_mem.is_memory_bound(), "big array small bw should be compute bound");
+        let slow_mem = simulate(&hw(128, 128, 4.0, 4.0, 4.0, 2, LoopOrder::Mnk), &g);
+        assert!(slow_mem.is_memory_bound());
+        assert_eq!(slow_mem.cycles, slow_mem.mem_cycles);
+    }
+
+    #[test]
+    fn bandwidth_monotonicity() {
+        let g = Gemm::new(128, 512, 1024);
+        let mut prev = u64::MAX;
+        for bw in [2, 4, 8, 16, 32] {
+            let r = simulate(&hw(16, 16, 4.0, 4.0, 4.0, bw, LoopOrder::Mnk), &g);
+            assert!(r.cycles <= prev, "bw {bw} should not be slower");
+            prev = r.cycles;
+        }
+    }
+
+    #[test]
+    fn bigger_array_never_more_compute_cycles() {
+        let g = Gemm::new(333, 777, 555);
+        let small = simulate(&hw(8, 8, 64.0, 64.0, 64.0, 16, LoopOrder::Mnk), &g);
+        let big = simulate(&hw(64, 64, 64.0, 64.0, 64.0, 16, LoopOrder::Mnk), &g);
+        assert!(big.compute_cycles < small.compute_cycles);
+    }
+
+    #[test]
+    fn many_to_one_property_exists_in_training_space() {
+        // paper Fig 2(a): distinct configs hitting identical runtime
+        use std::collections::HashMap;
+        let g = Gemm::new(64, 768, 768);
+        let mut by_cycles: HashMap<u64, u32> = HashMap::new();
+        for (idx, hwc) in TrainingSpace::enumerate().enumerate() {
+            if idx % 7 != 0 {
+                continue; // subsample for test speed
+            }
+            *by_cycles.entry(simulate(&hwc, &g).cycles).or_default() += 1;
+        }
+        let max_collisions = by_cycles.values().max().copied().unwrap_or(0);
+        assert!(max_collisions >= 4, "expected many-to-one mapping, max {max_collisions}");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let g = Gemm::new(100, 100, 100);
+        for lo in LoopOrder::ALL {
+            let r = simulate(&hw(16, 32, 64.0, 64.0, 64.0, 8, lo), &g);
+            let u = r.utilization();
+            assert!(u > 0.0 && u <= 1.0, "{lo:?} utilization {u}");
+        }
+    }
+
+    #[test]
+    fn r_bigger_than_m_wastes_cycles() {
+        // paper §VI: R > M underutilizes and pays the drain overhead
+        let g = Gemm::new(1, 512, 512); // decode-style M=1
+        let small_r = simulate(&hw(4, 64, 64.0, 64.0, 64.0, 32, LoopOrder::Mnk), &g);
+        let big_r = simulate(&hw(128, 64, 64.0, 64.0, 64.0, 32, LoopOrder::Mnk), &g);
+        assert!(big_r.compute_cycles > small_r.compute_cycles);
+        assert!(big_r.utilization() < small_r.utilization());
+    }
+}

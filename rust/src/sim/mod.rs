@@ -1,0 +1,204 @@
+//! Performance simulator substrate — the role Scale-Sim [13] plays in the
+//! paper: cycle counts and memory-access tallies for a GEMM on a systolic
+//! array under output-stationary (OS) dataflow.
+//!
+//! Two implementations of the same model:
+//!
+//! * [`analytical`] — closed-form (used everywhere: dataset generation,
+//!   candidate evaluation, benchmarks). O(1) per (hardware, workload) pair.
+//! * [`trace`] — a literal tile-loop-nest simulator with explicit buffer
+//!   residency tracking. O(Tm·Tn·Tk) per pair; the *oracle* the analytical
+//!   formulas are property-tested against.
+//!
+//! # Model definition
+//!
+//! Element size is 1 byte (int8 inference). The R×C array computes one
+//! output tile (≤R rows × ≤C cols) per *fold*; the K-reduction streams
+//! through the PEs while partial sums stay in PE registers (OS). A fold
+//! costs `2R + C + K' − 2` cycles (Scale-Sim's OS fold latency: skew fill,
+//! stream, and an R-cycle output drain — the paper's "(R−M) cycle overhead"
+//! when R > M appears because the drain always costs R).
+//!
+//! The loop nest iterates output tiles `i < Tm = ⌈M/R⌉`, `j < Tn = ⌈N/C⌉`
+//! and K-chunks `k < Tk` in the configured [`LoopOrder`]. When `k` is the
+//! innermost loop the whole reduction happens per tile (`Tk = 1`); otherwise
+//! K is chunked to what the operand buffers can hold and partial sums spill
+//! through the output buffer (or DRAM if it cannot hold the revisited
+//! working set).
+//!
+//! DRAM traffic per operand follows a *stationarity* analysis: an operand
+//! granule is refetched once per trip of its reuse-breaker loop (the one
+//! loop that does not index it) unless the working set it must retain fits
+//! its buffer. [`trace`] implements the same policy operationally
+//! (scope-keyed residency sets with overflow flush) and the property suite
+//! checks exact agreement.
+//!
+//! Runtime = `max(compute cycles, DRAM bytes / BW)` — the Scale-Sim stall
+//! model's global approximation under double buffering.
+
+pub mod analytical;
+pub mod tiles;
+pub mod trace;
+
+use crate::design_space::{HwConfig, LoopOrder};
+use crate::workload::Gemm;
+
+/// DRAM traffic breakdown in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DramTraffic {
+    pub a_reads: u64,
+    pub b_reads: u64,
+    pub out_writes: u64,
+    /// partial-sum re-reads (only non-zero when K is chunked, i.e. the loop
+    /// order is not k-innermost)
+    pub out_reads: u64,
+}
+
+impl DramTraffic {
+    pub fn total(&self) -> u64 {
+        self.a_reads + self.b_reads + self.out_writes + self.out_reads
+    }
+}
+
+/// On-chip SRAM access tallies in bytes (elements are 1 byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SramAccess {
+    /// input-buffer reads feeding the array
+    pub ip_reads: u64,
+    /// weight-buffer reads feeding the array
+    pub wt_reads: u64,
+    /// output-buffer writes (results + partial spills)
+    pub op_writes: u64,
+    /// output-buffer reads (DRAM drain + partial reload)
+    pub op_reads: u64,
+    /// fills from DRAM into ip/wt buffers
+    pub fills: u64,
+}
+
+impl SramAccess {
+    pub fn total(&self) -> u64 {
+        self.ip_reads + self.wt_reads + self.op_writes + self.op_reads + self.fills
+    }
+}
+
+/// Full simulation result for one (hardware, GEMM) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimResult {
+    /// end-to-end runtime in cycles: max(compute, memory)
+    pub cycles: u64,
+    pub compute_cycles: u64,
+    pub mem_cycles: u64,
+    pub dram: DramTraffic,
+    pub sram: SramAccess,
+    /// useful multiply-accumulates (M·K·N)
+    pub macs_useful: u64,
+    /// PE-cycles clocked (R·C · compute cycles) — idle-PE overhead shows up
+    /// as the gap to `macs_useful`
+    pub pe_cycles: u64,
+    /// number of K-chunks (1 ⇔ k-innermost loop order)
+    pub tk: u64,
+}
+
+impl SimResult {
+    /// Fraction of clocked PE-cycles doing useful MACs.
+    pub fn utilization(&self) -> f64 {
+        if self.pe_cycles == 0 {
+            0.0
+        } else {
+            self.macs_useful as f64 / self.pe_cycles as f64
+        }
+    }
+
+    pub fn is_memory_bound(&self) -> bool {
+        self.mem_cycles > self.compute_cycles
+    }
+}
+
+/// Simulate one GEMM on one configuration (the fast analytical model).
+pub fn simulate(hw: &HwConfig, g: &Gemm) -> SimResult {
+    analytical::simulate(hw, g)
+}
+
+/// A design point for *sequence* workloads (paper §VI / Fig 20): shared
+/// systolic-array parameters plus an independent loop order per layer.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SeqConfig {
+    pub base: HwConfig,
+    /// per-layer loop orders; length = number of GEMMs in the sequence
+    pub orders: Vec<LoopOrder>,
+}
+
+impl SeqConfig {
+    pub fn uniform(base: HwConfig, n_layers: usize) -> Self {
+        SeqConfig { base, orders: vec![base.loop_order; n_layers] }
+    }
+
+    /// The configuration used for layer `l`.
+    pub fn layer_hw(&self, l: usize) -> HwConfig {
+        HwConfig { loop_order: self.orders[l], ..self.base }
+    }
+}
+
+/// Simulate a GEMM sequence layer by layer, summing cycles and traffic.
+pub fn simulate_seq(cfg: &SeqConfig, gemms: &[Gemm]) -> SimResult {
+    assert_eq!(cfg.orders.len(), gemms.len(), "one loop order per layer");
+    let mut acc: Option<SimResult> = None;
+    for (l, g) in gemms.iter().enumerate() {
+        let r = simulate(&cfg.layer_hw(l), g);
+        acc = Some(match acc {
+            None => r,
+            Some(a) => SimResult {
+                cycles: a.cycles + r.cycles,
+                compute_cycles: a.compute_cycles + r.compute_cycles,
+                mem_cycles: a.mem_cycles + r.mem_cycles,
+                dram: DramTraffic {
+                    a_reads: a.dram.a_reads + r.dram.a_reads,
+                    b_reads: a.dram.b_reads + r.dram.b_reads,
+                    out_writes: a.dram.out_writes + r.dram.out_writes,
+                    out_reads: a.dram.out_reads + r.dram.out_reads,
+                },
+                sram: SramAccess {
+                    ip_reads: a.sram.ip_reads + r.sram.ip_reads,
+                    wt_reads: a.sram.wt_reads + r.sram.wt_reads,
+                    op_writes: a.sram.op_writes + r.sram.op_writes,
+                    op_reads: a.sram.op_reads + r.sram.op_reads,
+                    fills: a.sram.fills + r.sram.fills,
+                },
+                macs_useful: a.macs_useful + r.macs_useful,
+                pe_cycles: a.pe_cycles + r.pe_cycles,
+                tk: a.tk.max(r.tk),
+            },
+        });
+    }
+    acc.expect("non-empty GEMM sequence")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::LoopOrder;
+
+    #[test]
+    fn seq_sums_layers() {
+        let hw = HwConfig::new_kb(16, 16, 64.0, 64.0, 64.0, 8, LoopOrder::Mnk);
+        let g1 = Gemm::new(64, 64, 64);
+        let g2 = Gemm::new(32, 128, 96);
+        let cfg = SeqConfig::uniform(hw, 2);
+        let seq = simulate_seq(&cfg, &[g1, g2]);
+        let (r1, r2) = (simulate(&hw, &g1), simulate(&hw, &g2));
+        assert_eq!(seq.cycles, r1.cycles + r2.cycles);
+        assert_eq!(seq.macs_useful, r1.macs_useful + r2.macs_useful);
+        assert_eq!(seq.dram.total(), r1.dram.total() + r2.dram.total());
+    }
+
+    #[test]
+    fn seq_respects_per_layer_orders() {
+        let base = HwConfig::new_kb(32, 32, 4.0, 4.0, 4.0, 4, LoopOrder::Mnk);
+        let g = Gemm::new(512, 512, 512);
+        let mixed = SeqConfig { base, orders: vec![LoopOrder::Mnk, LoopOrder::Nmk] };
+        let seq = simulate_seq(&mixed, &[g, g]);
+        let mnk = simulate(&base, &g);
+        let nmk = simulate(&HwConfig { loop_order: LoopOrder::Nmk, ..base }, &g);
+        assert_eq!(seq.dram.total(), mnk.dram.total() + nmk.dram.total());
+    }
+}

@@ -1,0 +1,90 @@
+//! Closed-form tile arithmetic for the analytical model's hot path.
+//!
+//! §Perf optimization: `simulate()` is called millions of times per DSE run
+//! (dataset generation, candidate evaluation, random/BO baselines). The
+//! original implementation materialized per-tile size vectors on every
+//! call; tiling along one dimension only ever produces `n-1` full tiles
+//! plus one remainder, so every per-tile sum collapses to two terms.
+
+/// Tiling of `total` into tiles of size `t`: `full` tiles of `t` elements
+/// plus an optional `last < t` remainder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiling {
+    pub tiles: u64,
+    pub full: u64,
+    pub tile: u64,
+    pub last: u64,
+}
+
+impl Tiling {
+    pub fn new(total: u64, t: u64) -> Tiling {
+        debug_assert!(total > 0 && t > 0);
+        let tiles = total.div_ceil(t);
+        let rem = total - (tiles - 1) * t;
+        if rem == t {
+            Tiling { tiles, full: tiles, tile: t, last: 0 }
+        } else {
+            Tiling { tiles, full: tiles - 1, tile: t, last: rem }
+        }
+    }
+
+    /// Σ over tiles of `f(tile_size) * tile_size` where f maps a tile's
+    /// working-set multiplier — two evaluations instead of `tiles`.
+    pub fn sum_sized(&self, mut f: impl FnMut(u64) -> u64) -> u64 {
+        let mut s = self.full * self.tile * f(self.tile);
+        if self.last > 0 {
+            s += self.last * f(self.last);
+        }
+        s
+    }
+
+    pub fn total(&self) -> u64 {
+        self.full * self.tile + self.last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_division() {
+        let t = Tiling::new(64, 16);
+        assert_eq!((t.tiles, t.full, t.last), (4, 4, 0));
+        assert_eq!(t.total(), 64);
+    }
+
+    #[test]
+    fn with_remainder() {
+        let t = Tiling::new(70, 16);
+        assert_eq!((t.tiles, t.full, t.last), (5, 4, 6));
+        assert_eq!(t.total(), 70);
+    }
+
+    #[test]
+    fn single_partial_tile() {
+        let t = Tiling::new(5, 16);
+        assert_eq!((t.tiles, t.full, t.last), (1, 0, 5));
+        assert_eq!(t.total(), 5);
+    }
+
+    #[test]
+    fn sum_sized_matches_naive() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..500 {
+            let total = rng.int_range(1, 500) as u64;
+            let tile = rng.int_range(1, 64) as u64;
+            let cap = rng.int_range(1, 400) as u64;
+            let t = Tiling::new(total, tile);
+            let f = |sz: u64| if sz * 7 <= cap { 1 } else { 3 };
+            let naive: u64 = (0..t.tiles)
+                .map(|i| {
+                    let sz = (total - i * tile).min(tile);
+                    sz * f(sz)
+                })
+                .sum();
+            assert_eq!(t.sum_sized(f), naive, "total={total} tile={tile}");
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Literal tile-loop-nest simulator — the *oracle* for the closed-form model
+//! in [`super::analytical`].
+//!
+//! It executes the actual three-deep tile loop nest and tracks operand-buffer
+//! residency operationally:
+//!
+//! * **whole-tensor bypass** — if an operand fits its buffer entirely it is
+//!   fetched once, period;
+//! * **scope-keyed residency** — otherwise the buffer retains granules while
+//!   the operand's own loop indices *outer to the reuse-breaker loop* are
+//!   unchanged (the tiling scope a double-buffered controller pins);
+//! * **overflow flush** — inserting past capacity drops everything but the
+//!   incoming granule (streaming fallback, no LRU).
+//!
+//! The property suite asserts the DRAM traffic and compute cycles here are
+//! *bit-identical* to the analytical formulas across random configurations,
+//! shapes and all six loop orders. Output-partial traffic is shared by
+//! construction (same formula; OS partial-sum behaviour is not a loop-nest
+//! property), so the oracle's signal is operand reuse + compute.
+
+use super::analytical::k_chunk;
+use super::{DramTraffic, SimResult, SramAccess};
+use crate::design_space::HwConfig;
+use crate::workload::Gemm;
+use std::collections::HashSet;
+
+/// Residency state for one streamed operand.
+struct Buffer {
+    cap: u64,
+    whole_fits: bool,
+    resident: HashSet<(u64, u64)>,
+    bytes: u64,
+    scope: Option<u64>,
+    traffic: u64,
+}
+
+impl Buffer {
+    fn new(cap: u64, total: u64) -> Self {
+        Buffer {
+            cap,
+            whole_fits: total <= cap,
+            resident: HashSet::new(),
+            bytes: 0,
+            scope: None,
+            traffic: 0,
+        }
+    }
+
+    /// Visit granule `id` of `size` bytes under scope key `scope`.
+    fn visit(&mut self, id: (u64, u64), size: u64, scope: u64) {
+        if self.whole_fits {
+            if self.resident.insert(id) {
+                self.traffic += size;
+            }
+            return;
+        }
+        if self.scope != Some(scope) {
+            self.resident.clear();
+            self.bytes = 0;
+            self.scope = Some(scope);
+        }
+        if self.resident.contains(&id) {
+            return; // hit
+        }
+        self.traffic += size;
+        self.resident.insert(id);
+        self.bytes += size;
+        if self.bytes > self.cap {
+            self.resident.clear();
+            self.bytes = 0;
+            // a granule larger than the buffer itself is pure streaming —
+            // nothing is retained
+            if size <= self.cap {
+                self.resident.insert(id);
+                self.bytes = size;
+            }
+        }
+    }
+}
+
+/// Scope key: pack the operand's own loop indices that are outer to the
+/// breaker into one u64 (indices are < 2^20 in any realistic shape).
+fn scope_key(indices: &[(bool, u64)]) -> u64 {
+    let mut key = 0u64;
+    for &(active, v) in indices {
+        key = key.wrapping_mul(1 << 21).wrapping_add(if active { v + 1 } else { 0 });
+    }
+    key
+}
+
+/// Run the literal loop nest; returns the same [`SimResult`] schema as the
+/// analytical model.
+pub fn simulate(hw: &HwConfig, g: &Gemm) -> SimResult {
+    let nest = hw.loop_order.nest();
+    let tm = g.m.div_ceil(hw.r) as u64;
+    let tn = g.n.div_ceil(hw.c) as u64;
+    let k_innermost = nest[2] == 'k';
+    let kc = if k_innermost { g.k as u64 } else { k_chunk(hw, g.k) };
+    let tk = (g.k as u64).div_ceil(kc);
+
+    let trip = |c: char| match c {
+        'm' => tm,
+        'n' => tn,
+        'k' => tk,
+        _ => unreachable!(),
+    };
+    let posn = |c: char| nest.iter().position(|&x| x == c).unwrap();
+
+    let tile_m = |i: u64| (g.m as u64 - i * hw.r as u64).min(hw.r as u64);
+    let tile_n = |j: u64| (g.n as u64 - j * hw.c as u64).min(hw.c as u64);
+    let tile_k = |k: u64| (g.k as u64 - k * kc).min(kc);
+
+    let mut a_buf = Buffer::new(hw.ip_b, g.a_elems());
+    let mut b_buf = Buffer::new(hw.wt_b, g.b_elems());
+
+    // is loop `c` outer to loop `u`?
+    let outer_to = |c: char, u: char| posn(c) < posn(u);
+
+    let fold_overhead = 2 * hw.r as u64 + hw.c as u64 - 2;
+    let mut compute_cycles = 0u64;
+
+    // literal nest execution
+    let (l0, l1, l2) = (nest[0], nest[1], nest[2]);
+    for x0 in 0..trip(l0) {
+        for x1 in 0..trip(l1) {
+            for x2 in 0..trip(l2) {
+                let idx = |c: char| {
+                    if c == l0 {
+                        x0
+                    } else if c == l1 {
+                        x1
+                    } else {
+                        x2
+                    }
+                };
+                let (i, j, k) = (idx('m'), idx('n'), idx('k'));
+                // A granule (i, k): scope = own loops outer to breaker 'n'
+                a_buf.visit(
+                    (i, k),
+                    tile_m(i) * tile_k(k),
+                    scope_key(&[(outer_to('m', 'n'), i), (outer_to('k', 'n'), k)]),
+                );
+                // B granule (j, k): breaker 'm'
+                b_buf.visit(
+                    (j, k),
+                    tile_n(j) * tile_k(k),
+                    scope_key(&[(outer_to('n', 'm'), j), (outer_to('k', 'm'), k)]),
+                );
+                compute_cycles += fold_overhead + tile_k(k);
+            }
+        }
+    }
+
+    // output traffic: shared formula (see module docs)
+    let reference = super::analytical::simulate(hw, g);
+    let dram = DramTraffic {
+        a_reads: a_buf.traffic,
+        b_reads: b_buf.traffic,
+        out_writes: reference.dram.out_writes,
+        out_reads: reference.dram.out_reads,
+    };
+    let sram = SramAccess {
+        ip_reads: tn * g.a_elems(),
+        wt_reads: tm * g.b_elems(),
+        op_writes: g.out_elems() + dram.out_reads,
+        op_reads: dram.out_writes,
+        fills: dram.a_reads + dram.b_reads,
+    };
+    let mem_cycles = dram.total().div_ceil(hw.bw as u64);
+    SimResult {
+        cycles: compute_cycles.max(mem_cycles),
+        compute_cycles,
+        mem_cycles,
+        dram,
+        sram,
+        macs_useful: g.macs(),
+        pe_cycles: compute_cycles * hw.macs(),
+        tk,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::LoopOrder;
+    use crate::util::rng::Pcg32;
+
+    fn random_hw(rng: &mut Pcg32, lo: LoopOrder) -> HwConfig {
+        let dims = [4u32, 8, 16, 32];
+        let bufs = [0.5f64, 1.0, 2.0, 4.0, 16.0, 64.0];
+        HwConfig {
+            r: *rng.choose(&dims),
+            c: *rng.choose(&dims),
+            ip_b: (*rng.choose(&bufs) * 1024.0) as u64,
+            wt_b: (*rng.choose(&bufs) * 1024.0) as u64,
+            op_b: (*rng.choose(&bufs) * 1024.0) as u64,
+            bw: rng.int_range(2, 32) as u32,
+            loop_order: lo,
+        }
+    }
+
+    fn random_gemm(rng: &mut Pcg32) -> Gemm {
+        Gemm::new(
+            rng.int_range(1, 96) as u32,
+            rng.int_range(1, 512) as u32,
+            rng.int_range(1, 96) as u32,
+        )
+    }
+
+    /// The core correctness property of the whole simulator: the closed-form
+    /// model and the literal loop-nest oracle agree exactly, for every loop
+    /// order, across random configurations and shapes.
+    #[test]
+    fn analytical_matches_trace_exactly() {
+        let mut rng = Pcg32::seeded(2024);
+        for lo in LoopOrder::ALL {
+            for case in 0..150 {
+                let hw = random_hw(&mut rng, lo);
+                let g = random_gemm(&mut rng);
+                let t = simulate(&hw, &g);
+                let a = crate::sim::analytical::simulate(&hw, &g);
+                assert_eq!(
+                    t.dram, a.dram,
+                    "traffic mismatch [{lo:?} case {case}] hw={hw} g={g}\n trace={t:?}\n analytical={a:?}"
+                );
+                assert_eq!(t.compute_cycles, a.compute_cycles, "[{lo:?} case {case}] {hw} {g}");
+                assert_eq!(t.cycles, a.cycles, "[{lo:?} case {case}] {hw} {g}");
+                assert_eq!(t.sram, a.sram, "[{lo:?} case {case}] {hw} {g}");
+            }
+        }
+    }
+
+    /// Tiny-buffer corner: buffers smaller than a single granule must still
+    /// agree (streaming fallback).
+    #[test]
+    fn agrees_with_sub_granule_buffers() {
+        let mut rng = Pcg32::seeded(5);
+        for lo in LoopOrder::ALL {
+            for _ in 0..40 {
+                let mut hw = random_hw(&mut rng, lo);
+                hw.ip_b = 256;
+                hw.wt_b = 128;
+                hw.op_b = 128;
+                let g = random_gemm(&mut rng);
+                let t = simulate(&hw, &g);
+                let a = crate::sim::analytical::simulate(&hw, &g);
+                assert_eq!(t.dram, a.dram, "{lo:?} {hw} {g}");
+            }
+        }
+    }
+
+    /// Exhaustive small grid: all orders x dims on a fixed small GEMM.
+    #[test]
+    fn agrees_on_small_grid() {
+        for lo in LoopOrder::ALL {
+            for r in [4u32, 8] {
+                for c in [4u32, 8] {
+                    for buf in [256u64, 1024, 8192] {
+                        let hw = HwConfig {
+                            r,
+                            c,
+                            ip_b: buf,
+                            wt_b: buf,
+                            op_b: buf,
+                            bw: 8,
+                            loop_order: lo,
+                        };
+                        let g = Gemm::new(20, 40, 24);
+                        let t = simulate(&hw, &g);
+                        let a = crate::sim::analytical::simulate(&hw, &g);
+                        assert_eq!(t.dram, a.dram, "{lo:?} {hw}");
+                        assert_eq!(t.cycles, a.cycles, "{lo:?} {hw}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_lower_bound_is_compulsory() {
+        // DRAM reads can never be below one full load of each operand
+        let mut rng = Pcg32::seeded(6);
+        for _ in 0..200 {
+            let lo = *rng.choose(&LoopOrder::ALL);
+            let hw = random_hw(&mut rng, lo);
+            let g = random_gemm(&mut rng);
+            let t = simulate(&hw, &g);
+            assert!(t.dram.a_reads >= g.a_elems(), "{hw} {g}");
+            assert!(t.dram.b_reads >= g.b_elems(), "{hw} {g}");
+            assert!(t.dram.out_writes >= g.out_elems(), "{hw} {g}");
+        }
+    }
+}

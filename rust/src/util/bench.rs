@@ -1,0 +1,66 @@
+//! Shared plumbing for the paper-table bench harnesses (`rust/benches/`).
+//! criterion is not in the offline registry, so benches are
+//! `harness = false` binaries that time with [`crate::util::stats::Timer`]
+//! and print through [`crate::util::table::Table`].
+
+/// How much work each bench does. `DIFFAXE_BENCH=quick|full` overrides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchScale {
+    Quick,
+    Default,
+    Full,
+}
+
+impl BenchScale {
+    pub fn from_env() -> Self {
+        match std::env::var("DIFFAXE_BENCH").as_deref() {
+            Ok("quick") => BenchScale::Quick,
+            Ok("full") => BenchScale::Full,
+            _ => BenchScale::Default,
+        }
+    }
+
+    /// pick (quick, default, full)
+    pub fn pick<T: Copy>(&self, q: T, d: T, f: T) -> T {
+        match self {
+            BenchScale::Quick => q,
+            BenchScale::Default => d,
+            BenchScale::Full => f,
+        }
+    }
+}
+
+/// Standard header every bench prints (so bench_output.txt is parseable).
+pub fn banner(id: &str, what: &str) {
+    println!("\n=== {id} — {what} ===");
+    println!("(scale: {:?}; set DIFFAXE_BENCH=quick|full to resize)", BenchScale::from_env());
+}
+
+/// Time a closure over `iters` runs, reporting mean seconds.
+pub fn time_mean<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t = crate::util::stats::Timer::start();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed_s() / iters.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_pick() {
+        assert_eq!(BenchScale::Quick.pick(1, 2, 3), 1);
+        assert_eq!(BenchScale::Default.pick(1, 2, 3), 2);
+        assert_eq!(BenchScale::Full.pick(1, 2, 3), 3);
+    }
+
+    #[test]
+    fn time_mean_positive() {
+        let t = time_mean(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+}

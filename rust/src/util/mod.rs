@@ -1,0 +1,12 @@
+//! Cross-cutting substrates: PRNG, JSON, statistics, linear algebra, PCA,
+//! table rendering. These exist as first-class modules because the offline
+//! crate registry carries only the `xla` dependency closure (no serde / rand
+//! / criterion), so the library provides its own implementations.
+
+pub mod bench;
+pub mod json;
+pub mod linalg;
+pub mod pca;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,177 @@
+//! Principal component analysis via power iteration with deflation.
+//!
+//! Used to regenerate the paper's latent-space visualizations (Figs 2(b), 7,
+//! 11): we project hardware/latent vectors onto the top-2 principal
+//! components and emit (pc1, pc2, metric) triples.
+
+use super::linalg::{dot, norm2, Mat};
+use super::rng::Pcg32;
+
+/// Result of a PCA: component directions (rows) and explained variance.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    /// `k x d` matrix; row i is the i-th principal direction (unit norm).
+    pub components: Mat,
+    /// eigenvalue (variance) along each component.
+    pub explained_variance: Vec<f64>,
+    /// per-feature mean subtracted before projection.
+    pub mean: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit the top-`k` principal components of `x` (`n x d`, rows = samples).
+    pub fn fit(x: &Mat, k: usize, seed: u64) -> Pca {
+        let (n, d) = (x.rows, x.cols);
+        assert!(n >= 2, "need at least 2 samples");
+        let k = k.min(d);
+        // center
+        let mut mean = vec![0.0; d];
+        for i in 0..n {
+            for (m, v) in mean.iter_mut().zip(x.row(i)) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        // covariance (d x d) — d is small (<=128) in all our uses.
+        let mut cov = Mat::zeros(d, d);
+        for i in 0..n {
+            let r = x.row(i);
+            for a in 0..d {
+                let xa = r[a] - mean[a];
+                for b in a..d {
+                    cov[(a, b)] += xa * (r[b] - mean[b]);
+                }
+            }
+        }
+        for a in 0..d {
+            for b in a..d {
+                let v = cov[(a, b)] / (n - 1) as f64;
+                cov[(a, b)] = v;
+                cov[(b, a)] = v;
+            }
+        }
+
+        let mut rng = Pcg32::new(seed, 77);
+        let mut components = Mat::zeros(k, d);
+        let mut explained = Vec::with_capacity(k);
+        let mut cov_defl = cov;
+        for c in 0..k {
+            let (vec_c, lam) = power_iteration(&cov_defl, &mut rng);
+            for j in 0..d {
+                components[(c, j)] = vec_c[j];
+            }
+            explained.push(lam);
+            // deflate: cov -= lam * v v^T
+            for a in 0..d {
+                for b in 0..d {
+                    cov_defl[(a, b)] -= lam * vec_c[a] * vec_c[b];
+                }
+            }
+        }
+        Pca { components, explained_variance: explained, mean }
+    }
+
+    /// Project samples (`n x d`) onto the fitted components (`n x k`).
+    pub fn transform(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.mean.len());
+        let k = self.components.rows;
+        let mut out = Mat::zeros(x.rows, k);
+        let mut centered = vec![0.0; x.cols];
+        for i in 0..x.rows {
+            for (c, (v, m)) in centered.iter_mut().zip(x.row(i).iter().zip(&self.mean)) {
+                *c = v - m;
+            }
+            for j in 0..k {
+                out[(i, j)] = dot(&centered, self.components.row(j));
+            }
+        }
+        out
+    }
+}
+
+/// Dominant eigenpair of a symmetric matrix by power iteration.
+fn power_iteration(a: &Mat, rng: &mut Pcg32) -> (Vec<f64>, f64) {
+    let d = a.rows;
+    let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let nv = norm2(&v).max(1e-30);
+    v.iter_mut().for_each(|x| *x /= nv);
+    let mut lam = 0.0;
+    for _ in 0..500 {
+        let w = a.matvec(&v);
+        let nw = norm2(&w);
+        if nw < 1e-300 {
+            // zero matrix (fully deflated): any unit vector, eigenvalue 0
+            return (v, 0.0);
+        }
+        let v_new: Vec<f64> = w.iter().map(|x| x / nw).collect();
+        let lam_new = dot(&v_new, &a.matvec(&v_new));
+        let delta: f64 = v_new
+            .iter()
+            .zip(&v)
+            .map(|(a, b)| (a - b).abs().min((a + b).abs()))
+            .fold(0.0, f64::max);
+        v = v_new;
+        lam = lam_new;
+        if delta < 1e-12 {
+            break;
+        }
+    }
+    (v, lam)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_dominant_axis() {
+        // points along direction (3,4)/5 with small orthogonal noise
+        let mut rng = Pcg32::seeded(99);
+        let dir = [0.6, 0.8];
+        let orth = [-0.8, 0.6];
+        let rows: Vec<Vec<f64>> = (0..500)
+            .map(|_| {
+                let t = rng.normal() * 10.0;
+                let s = rng.normal() * 0.1;
+                vec![t * dir[0] + s * orth[0], t * dir[1] + s * orth[1]]
+            })
+            .collect();
+        let x = Mat::from_rows(&rows);
+        let pca = Pca::fit(&x, 2, 1);
+        let c0 = pca.components.row(0);
+        let cosine = (c0[0] * dir[0] + c0[1] * dir[1]).abs();
+        assert!(cosine > 0.999, "pc1 {c0:?} not aligned with {dir:?}");
+        assert!(pca.explained_variance[0] > 50.0 * pca.explained_variance[1]);
+    }
+
+    #[test]
+    fn transform_centers_data() {
+        let x = Mat::from_rows(&[
+            vec![1.0, 0.0],
+            vec![2.0, 0.0],
+            vec![3.0, 0.0],
+        ]);
+        let pca = Pca::fit(&x, 1, 2);
+        let proj = pca.transform(&x);
+        let mean: f64 = (0..3).map(|i| proj[(i, 0)]).sum::<f64>() / 3.0;
+        assert!(mean.abs() < 1e-9);
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let mut rng = Pcg32::seeded(4);
+        let rows: Vec<Vec<f64>> =
+            (0..200).map(|_| (0..5).map(|_| rng.normal()).collect()).collect();
+        let x = Mat::from_rows(&rows);
+        let pca = Pca::fit(&x, 3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                let d = dot(pca.components.row(i), pca.components.row(j));
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((d - expect).abs() < 1e-6, "({i},{j}) dot={d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Small statistics substrate: summaries, percentiles, histograms, timers.
+
+use std::time::Instant;
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute mean/std/min/max of a slice. Empty input yields NaNs with n=0.
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary { n: 0, mean: f64::NAN, std: f64::NAN, min: f64::NAN, max: f64::NAN };
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Summary { n: xs.len(), mean, std: var.sqrt(), min, max }
+}
+
+/// Percentile with linear interpolation (q in [0, 100]). Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&q), "q out of range: {q}");
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Percentile-based bin edges dividing data into `n_bins` equal-mass bins.
+/// Returns `n_bins + 1` edges (first = min, last = max).
+pub fn percentile_edges(xs: &[f64], n_bins: usize) -> Vec<f64> {
+    assert!(n_bins >= 1);
+    (0..=n_bins)
+        .map(|i| percentile(xs, 100.0 * i as f64 / n_bins as f64))
+        .collect()
+}
+
+/// Assign a value to a percentile bin given edges from [`percentile_edges`].
+/// Values outside the range clamp to the first/last bin.
+pub fn bin_index(edges: &[f64], x: f64) -> usize {
+    let n_bins = edges.len() - 1;
+    for i in 0..n_bins {
+        if x <= edges[i + 1] {
+            return i;
+        }
+    }
+    n_bins - 1
+}
+
+/// Fixed-bin latency histogram (microseconds, exponential buckets), used by
+/// the coordinator's metrics.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds; bucket 0 covers [0, 2).
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { counts: vec![0; 40], total: 0, sum_us: 0.0 }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let b = if us < 2.0 { 0 } else { (us.log2().floor() as usize).min(self.counts.len() - 1) };
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum_us += us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    /// Approximate percentile from the exponential buckets (upper bound of
+    /// the containing bucket).
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q / 100.0 * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Wall-clock timer for the hand-rolled bench harness.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Geometric mean (for normalized-metric aggregation across workloads).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interp() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_bins_balanced() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let edges = percentile_edges(&xs, 4);
+        assert_eq!(edges.len(), 5);
+        let mut counts = [0usize; 4];
+        for &x in &xs {
+            counts[bin_index(&edges, x)] += 1;
+        }
+        for c in counts {
+            assert!((230..=270).contains(&c), "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn bin_index_clamps() {
+        let edges = vec![0.0, 1.0, 2.0];
+        assert_eq!(bin_index(&edges, -5.0), 0);
+        assert_eq!(bin_index(&edges, 99.0), 1);
+    }
+
+    #[test]
+    fn latency_hist() {
+        let mut h = LatencyHist::new();
+        for _ in 0..90 {
+            h.record_us(100.0);
+        }
+        for _ in 0..10 {
+            h.record_us(10_000.0);
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.mean_us() > 100.0 && h.mean_us() < 10_000.0);
+        assert!(h.percentile_us(50.0) <= 256.0);
+        assert!(h.percentile_us(99.0) >= 8192.0);
+    }
+
+    #[test]
+    fn geomean_of_equal_ratios() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+}

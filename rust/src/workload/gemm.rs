@@ -1,0 +1,82 @@
+//! GEMM workload type: `(M, K) x (K, N)` matrix multiply, the computation
+//! that dominates LLM/ViT inference (paper §I).
+
+/// A single GEMM workload `w = (M, K, N)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Gemm {
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+}
+
+/// Paper §IV-A workload ranges.
+pub const M_MAX: u32 = 1024;
+pub const K_MAX: u32 = 4096;
+pub const N_MAX: u32 = 30_000;
+
+impl Gemm {
+    pub fn new(m: u32, k: u32, n: u32) -> Self {
+        assert!(m >= 1 && k >= 1 && n >= 1, "GEMM dims must be positive");
+        Gemm { m, k, n }
+    }
+
+    /// Total multiply-accumulates.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// Operand footprints in elements.
+    pub fn a_elems(&self) -> u64 {
+        self.m as u64 * self.k as u64
+    }
+    pub fn b_elems(&self) -> u64 {
+        self.k as u64 * self.n as u64
+    }
+    pub fn out_elems(&self) -> u64 {
+        self.m as u64 * self.n as u64
+    }
+
+    /// Normalized workload vector for model conditioning: (M, K, N) min–max
+    /// normalized over the §IV-A ranges (mirrored in python/compile/norm.py).
+    pub fn norm_vec(&self) -> [f32; 3] {
+        [
+            (self.m - 1) as f32 / (M_MAX - 1) as f32,
+            (self.k - 1) as f32 / (K_MAX - 1) as f32,
+            (self.n - 1) as f32 / (N_MAX - 1) as f32,
+        ]
+    }
+}
+
+impl std::fmt::Display for Gemm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{},{})", self.m, self.k, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macs_and_footprints() {
+        let g = Gemm::new(2, 3, 4);
+        assert_eq!(g.macs(), 24);
+        assert_eq!(g.a_elems(), 6);
+        assert_eq!(g.b_elems(), 12);
+        assert_eq!(g.out_elems(), 8);
+    }
+
+    #[test]
+    fn norm_vec_bounds() {
+        let lo = Gemm::new(1, 1, 1).norm_vec();
+        assert_eq!(lo, [0.0, 0.0, 0.0]);
+        let hi = Gemm::new(M_MAX, K_MAX, N_MAX).norm_vec();
+        assert_eq!(hi, [1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_zero_dims() {
+        Gemm::new(0, 1, 1);
+    }
+}

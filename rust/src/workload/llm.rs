@@ -1,0 +1,157 @@
+//! LLM workload extraction (paper §VI): a transformer layer is a sequence of
+//! GEMMs whose shapes depend on the inference stage — *prefill* processes the
+//! whole prompt (M = sequence length), *decode* generates one token
+//! auto-regressively (M = 1, attended KV length = context).
+//!
+//! The paper evaluates BERT-base, OPT-350M and LLaMA-2-7B with a default
+//! prefill sequence length of 128 tokens (Fig 22).
+
+use super::gemm::Gemm;
+
+/// Inference stage of an LLM forward pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// prompt processing; M = sequence length
+    Prefill,
+    /// auto-regressive generation; M = 1, attention spans the KV cache
+    Decode,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 2] = [Stage::Prefill, Stage::Decode];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+        }
+    }
+}
+
+/// Transformer architecture description (decoder-only or encoder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LlmModel {
+    BertBase,
+    Opt350m,
+    Llama2_7b,
+}
+
+impl LlmModel {
+    pub const ALL: [LlmModel; 3] = [LlmModel::BertBase, LlmModel::Opt350m, LlmModel::Llama2_7b];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LlmModel::BertBase => "BERT-base",
+            LlmModel::Opt350m => "OPT-350M",
+            LlmModel::Llama2_7b => "LLaMA-2-7B",
+        }
+    }
+
+    /// (hidden, ffn-intermediate, head_dim, gated-mlp?)
+    fn dims(&self) -> (u32, u32, u32, bool) {
+        match self {
+            LlmModel::BertBase => (768, 3072, 64, false),
+            LlmModel::Opt350m => (1024, 4096, 64, false),
+            // LLaMA-2-7B: SwiGLU MLP with intermediate 11008
+            LlmModel::Llama2_7b => (4096, 11008, 128, true),
+        }
+    }
+
+    /// Number of transformer blocks (used only for whole-model energy
+    /// scaling; the per-layer GEMM sequence repeats identically).
+    pub fn n_blocks(&self) -> u32 {
+        match self {
+            LlmModel::BertBase => 12,
+            LlmModel::Opt350m => 24,
+            LlmModel::Llama2_7b => 32,
+        }
+    }
+
+    /// The GEMM sequence of one transformer block at the given stage.
+    ///
+    /// `seq` is the prompt length for prefill / the KV-cache length for
+    /// decode. Attention score/context GEMMs are expressed per-head with the
+    /// head count folded into M (heads are data-parallel rows); projection
+    /// GEMMs use the full hidden width. BERT-base yields the 6-GEMM sequence
+    /// whose per-layer loop orders appear in paper Table VII.
+    pub fn layer_gemms(&self, stage: Stage, seq: u32) -> Vec<Gemm> {
+        let (h, ffn, dh, gated) = self.dims();
+        let heads = h / dh;
+        let m = match stage {
+            Stage::Prefill => seq,
+            Stage::Decode => 1,
+        };
+        let kv = seq; // attended length
+        let mut gs = vec![
+            // fused QKV projection: (m, h) x (h, 3h)
+            Gemm::new(m, h, 3 * h),
+            // attention scores per head, heads folded into rows:
+            // (m*heads, dh) x (dh, kv)
+            Gemm::new(m * heads, dh, kv),
+            // attention context: (m*heads, kv) x (kv, dh)
+            Gemm::new(m * heads, kv, dh),
+            // output projection: (m, h) x (h, h)
+            Gemm::new(m, h, h),
+        ];
+        if gated {
+            // SwiGLU: gate+up fused, then down
+            gs.push(Gemm::new(m, h, 2 * ffn));
+            gs.push(Gemm::new(m, ffn, h));
+        } else {
+            gs.push(Gemm::new(m, h, ffn));
+            gs.push(Gemm::new(m, ffn, h));
+        }
+        gs
+    }
+}
+
+/// Default evaluation sequence length (paper Fig 22: "Prefill represents a
+/// default sequence length of 128 tokens").
+pub const DEFAULT_SEQ: u32 = 128;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_prefill_matches_paper_six_gemms() {
+        let gs = LlmModel::BertBase.layer_gemms(Stage::Prefill, DEFAULT_SEQ);
+        assert_eq!(gs.len(), 6); // Table VII lists 6 per-layer loop orders
+        assert_eq!(gs[0], Gemm::new(128, 768, 2304)); // QKV
+        assert_eq!(gs[1], Gemm::new(128 * 12, 64, 128)); // scores
+        assert_eq!(gs[2], Gemm::new(128 * 12, 128, 64)); // context
+        assert_eq!(gs[3], Gemm::new(128, 768, 768)); // out proj
+        assert_eq!(gs[4], Gemm::new(128, 768, 3072)); // FFN up
+        assert_eq!(gs[5], Gemm::new(128, 3072, 768)); // FFN down
+    }
+
+    #[test]
+    fn decode_has_m_equal_one_for_projections() {
+        for model in LlmModel::ALL {
+            let gs = model.layer_gemms(Stage::Decode, DEFAULT_SEQ);
+            // QKV, out-proj and FFN GEMMs must have M = 1 in decode
+            assert_eq!(gs[0].m, 1, "{}", model.name());
+            assert_eq!(gs[3].m, 1);
+            assert_eq!(gs[4].m, 1);
+            assert_eq!(gs[5].m, 1);
+        }
+    }
+
+    #[test]
+    fn llama_uses_gated_mlp() {
+        let gs = LlmModel::Llama2_7b.layer_gemms(Stage::Prefill, 128);
+        assert_eq!(gs[4], Gemm::new(128, 4096, 2 * 11008));
+        assert_eq!(gs[5], Gemm::new(128, 11008, 4096));
+    }
+
+    #[test]
+    fn prefill_macs_exceed_decode() {
+        for model in LlmModel::ALL {
+            let pf: u64 =
+                model.layer_gemms(Stage::Prefill, 128).iter().map(|g| g.macs()).sum();
+            let dec: u64 =
+                model.layer_gemms(Stage::Decode, 128).iter().map(|g| g.macs()).sum();
+            assert!(pf > 10 * dec, "{}: prefill {pf} vs decode {dec}", model.name());
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! AI workloads. A workload is a GEMM `(M,K) x (K,N)` (paper §I), or — for
+//! the §VI LLM extension — a *sequence* of GEMMs, one per DNN layer.
+
+pub mod gemm;
+pub mod llm;
+pub mod suite;
+
+pub use gemm::Gemm;
+pub use llm::{LlmModel, Stage};
+pub use suite::WorkloadSuite;

@@ -1,0 +1,127 @@
+//! The evaluation workload suite (paper §IV-A: 600 distinct GEMM workloads
+//! with M: 1–1024, K: 1–4096, N: 1–30000, Fig 12).
+//!
+//! The suite mixes (a) the GEMM layers of real transformer models at several
+//! sequence lengths — the cluster structure visible in Fig 12 — and (b)
+//! log-uniform random shapes filling the remaining volume. Generation is
+//! deterministic in (seed, size) so every experiment sees the same suite.
+
+use super::gemm::{Gemm, K_MAX, M_MAX, N_MAX};
+use super::llm::{LlmModel, Stage};
+use crate::util::rng::Pcg32;
+
+/// A reproducible set of GEMM workloads.
+#[derive(Debug, Clone)]
+pub struct WorkloadSuite {
+    pub workloads: Vec<Gemm>,
+}
+
+impl WorkloadSuite {
+    /// Paper-scale suite size.
+    pub const PAPER_SIZE: usize = 600;
+
+    /// Build a suite of `size` workloads, deterministic in `seed`.
+    pub fn generate(size: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 600);
+        let mut set = std::collections::HashSet::new();
+        let mut out = Vec::with_capacity(size);
+
+        // (a) model-derived shapes first: LLM/ViT layers at several seq lens,
+        // clamped into the §IV-A ranges.
+        'outer: for model in LlmModel::ALL {
+            for stage in Stage::ALL {
+                for seq in [32, 128, 512] {
+                    for g in model.layer_gemms(stage, seq) {
+                        let g = Gemm::new(
+                            g.m.min(M_MAX),
+                            g.k.min(K_MAX),
+                            g.n.min(N_MAX),
+                        );
+                        if out.len() >= size {
+                            break 'outer;
+                        }
+                        if set.insert(g) {
+                            out.push(g);
+                        }
+                    }
+                }
+            }
+        }
+
+        // (b) fill with log-uniform random shapes.
+        while out.len() < size {
+            let g = Gemm::new(
+                log_uniform(&mut rng, 1, M_MAX),
+                log_uniform(&mut rng, 1, K_MAX),
+                log_uniform(&mut rng, 1, N_MAX),
+            );
+            if set.insert(g) {
+                out.push(g);
+            }
+        }
+        WorkloadSuite { workloads: out }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workloads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workloads.is_empty()
+    }
+}
+
+/// Integer sampled log-uniformly in `[lo, hi]`.
+fn log_uniform(rng: &mut Pcg32, lo: u32, hi: u32) -> u32 {
+    let (llo, lhi) = ((lo as f64).ln(), (hi as f64).ln());
+    let v = rng.range_f64(llo, lhi).exp().round() as u32;
+    v.clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct() {
+        let a = WorkloadSuite::generate(100, 7);
+        let b = WorkloadSuite::generate(100, 7);
+        assert_eq!(a.workloads, b.workloads);
+        let set: std::collections::HashSet<_> = a.workloads.iter().collect();
+        assert_eq!(set.len(), 100, "workloads must be distinct (paper: 600 distinct)");
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = WorkloadSuite::generate(100, 7);
+        let b = WorkloadSuite::generate(100, 8);
+        assert_ne!(a.workloads, b.workloads);
+    }
+
+    #[test]
+    fn shapes_within_paper_ranges() {
+        let s = WorkloadSuite::generate(WorkloadSuite::PAPER_SIZE, 1);
+        assert_eq!(s.len(), 600);
+        for g in &s.workloads {
+            assert!(g.m >= 1 && g.m <= M_MAX, "{g}");
+            assert!(g.k >= 1 && g.k <= K_MAX, "{g}");
+            assert!(g.n >= 1 && g.n <= N_MAX, "{g}");
+        }
+    }
+
+    #[test]
+    fn includes_model_layers() {
+        let s = WorkloadSuite::generate(200, 1);
+        // BERT QKV prefill @128 must be present
+        assert!(s.workloads.contains(&Gemm::new(128, 768, 2304)));
+    }
+
+    #[test]
+    fn log_uniform_spans_range() {
+        let mut rng = Pcg32::seeded(3);
+        let vs: Vec<u32> = (0..5000).map(|_| log_uniform(&mut rng, 1, 30_000)).collect();
+        assert!(vs.iter().any(|&v| v < 10));
+        assert!(vs.iter().any(|&v| v > 10_000));
+        assert!(vs.iter().all(|&v| (1..=30_000).contains(&v)));
+    }
+}
