@@ -1,6 +1,7 @@
 //! The coordinator as a *service*: start the engine thread + TCP front end,
-//! drive it over the wire with mixed concurrent requests, and print the
-//! service metrics (batch occupancy, latencies).
+//! drive it over the wire with mixed concurrent requests — generic v2
+//! `search` requests, a multi-search `batch`, a deprecated v1 alias line —
+//! and print the service metrics (batch occupancy, latencies).
 //!
 //! ```bash
 //! cargo run --release --example dse_service            # self-driving demo
@@ -8,11 +9,14 @@
 //! ```
 //!
 //! Wire protocol: one JSON object per line, e.g.
-//! `{"type":"generate","m":128,"k":768,"n":2304,"target_cycles":1e6,"count":8}`.
+//! `{"v":2,"type":"search","objective":{"kind":"runtime","m":128,"k":768,
+//! "n":2304,"target_cycles":1e6},"budget":{"evals":8},"optimizer":"diffaxe"}`.
 
-use diffaxe::coordinator::{server, Request, Response, Service, ServiceConfig};
+use diffaxe::coordinator::{server, Request, Response, SearchRequest, Service, ServiceConfig};
+use diffaxe::dse::llm::Platform;
+use diffaxe::dse::{Budget, Objective, OptimizerKind};
 use diffaxe::models::DiffAxE;
-use diffaxe::workload::{Gemm, LlmModel, Stage};
+use diffaxe::workload::{llm::DEFAULT_SEQ, Gemm, LlmModel, Stage};
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
@@ -38,16 +42,18 @@ fn main() -> anyhow::Result<()> {
         handles.push(std::thread::spawn(move || -> anyhow::Result<String> {
             let mut client = server::Client::connect(&addr)?;
             let g = Gemm::new(128, 768, 2304);
-            let resp = client.request(&Request::GenerateRuntime {
-                g,
-                target_cycles: 4e5 * (i + 1) as f64,
-                n: 8,
-            })?;
+            let target = 4e5 * (i + 1) as f64;
+            let resp = client.request(&Request::Search(SearchRequest::new(
+                Objective::Runtime { g, target_cycles: target },
+                Budget::evals(8),
+                OptimizerKind::DiffAxE,
+            )))?;
             Ok(match resp {
-                Response::Designs(d) => {
-                    format!("client {i}: {} designs, best |err| cycles={:.0}", d.len(),
-                            d.iter().map(|x| x.cycles).fold(f64::MAX, f64::min))
-                }
+                Response::Outcome(o) => format!(
+                    "client {i}: {} designs, best |err| {:.1}%",
+                    o.evals,
+                    100.0 * o.best_score()
+                ),
                 other => format!("client {i}: {other:?}"),
             })
         }));
@@ -56,20 +62,62 @@ fn main() -> anyhow::Result<()> {
         println!("{}", h.join().unwrap()?);
     }
 
-    // one EDP search and one LLM co-design over the same wire
     let mut client = server::Client::connect(&addr)?;
-    if let Response::Designs(d) =
-        client.request(&Request::EdpSearch { g: Gemm::new(128, 4096, 8192), n_per_class: 8 })?
-    {
-        println!("EDP search best: {} edp={:.3e}", d[0].hw, d[0].edp);
+
+    // one EDP search and one LLM co-design over the same wire — any
+    // optimizer is selectable by name, not just the diffusion engine
+    let g = Gemm::new(128, 4096, 8192);
+    if let Response::Outcome(o) = client.request(&Request::Search(SearchRequest::new(
+        Objective::MinEdp { g },
+        Budget::default().with_per_class(8),
+        OptimizerKind::DiffAxE,
+    )))? {
+        let d = o.best().unwrap();
+        println!("EDP search best: {} edp={:.3e}", d.hw, d.edp);
     }
-    if let Response::Designs(d) = client.request(&Request::LlmSearch {
-        model: LlmModel::Opt350m,
-        stage: Stage::Decode,
-        n_per_layer: 8,
-    })? {
-        println!("OPT-350M decode co-design: {} edp={:.3e}", d[0].hw, d[0].edp);
+    if let Response::Outcome(o) = client.request(&Request::Search(SearchRequest::new(
+        Objective::LlmEdp {
+            model: LlmModel::Opt350m,
+            stage: Stage::Decode,
+            seq: DEFAULT_SEQ,
+            platform: Platform::Asic32nm,
+        },
+        Budget::default().with_per_class(8),
+        OptimizerKind::DiffAxE,
+    )))? {
+        let d = o.best().unwrap();
+        println!("OPT-350M decode co-design: {} edp={:.3e}", d.hw, d.edp);
     }
+
+    // a batch request: three strategies on one workload, one round-trip
+    let batch = Request::Batch(vec![
+        SearchRequest::new(Objective::MinEdp { g }, Budget::evals(64), OptimizerKind::RandomSearch),
+        SearchRequest::new(Objective::MinEdp { g }, Budget::evals(64), OptimizerKind::VanillaBo),
+        SearchRequest::new(
+            Objective::MinEdp { g },
+            Budget::evals(1),
+            OptimizerKind::parse("fixed-nvdla").unwrap(),
+        ),
+    ]);
+    if let Response::Batch(outs) = client.request(&batch)? {
+        for o in &outs {
+            println!(
+                "batch: {:<16} best edp={:.3e} ({} evals, {:.2}s)",
+                o.optimizer,
+                o.best().unwrap().edp,
+                o.evals,
+                o.search_time_s
+            );
+        }
+    }
+
+    // deprecated v1 alias lines still parse (compatibility shim)
+    if let Response::Outcome(o) = client.send_line(
+        r#"{"type":"generate","m":128,"k":768,"n":2304,"target_cycles":1e6,"count":4}"#,
+    )? {
+        println!("legacy v1 'generate' alias: {} designs", o.evals);
+    }
+
     if let Response::MetricsText(m) = client.request(&Request::Metrics)? {
         println!("\nservice metrics: {m}");
     }

@@ -7,16 +7,18 @@
 //!     → whose denoiser layers are
 //!   L1 Pallas kernels (interpret-mode, lowered into the same HLO).
 //!
-//! The driver starts the service, then plays a realistic co-design session:
-//! (1) runtime-conditioned generation across a batch of transformer-layer
-//! workloads at three target speeds each, (2) an EDP search per workload,
-//! and (3) full-LLM co-design for BERT/OPT/LLaMA prefill+decode — reporting
-//! the paper's headline metrics: generation error, ms/design, and EDP
-//! improvement over NVDLA and DOSA.
+//! The driver starts the service, then plays a realistic co-design session
+//! over the generic v2 protocol: (1) runtime-conditioned generation across
+//! a batch of transformer-layer workloads at three target speeds each,
+//! (2) an EDP search per workload, and (3) full-LLM co-design for
+//! BERT/OPT/LLaMA prefill+decode with the NVDLA and DOSA baselines served
+//! by the same wire request — reporting the paper's headline metrics:
+//! generation error, ms/design, and EDP improvement over NVDLA and DOSA.
 
 use diffaxe::baselines::FixedArch;
-use diffaxe::coordinator::{Request, Response, Service, ServiceConfig};
-use diffaxe::dse::llm::{dosa_llm, fixed_llm, Platform};
+use diffaxe::coordinator::{Request, Response, SearchRequest, Service, ServiceConfig};
+use diffaxe::dse::llm::Platform;
+use diffaxe::dse::{Budget, Objective, OptimizerKind};
 use diffaxe::models::DiffAxE;
 use diffaxe::util::stats::{geomean, Timer};
 use diffaxe::util::table::{fnum, Table};
@@ -40,26 +42,28 @@ fn main() -> anyhow::Result<()> {
         ("OPT-350M FFN2", Gemm::new(128, 4096, 1024)),
         ("LLaMA-2 down-proj", Gemm::new(128, 4096, 4096)),
     ];
-    // targets derived from request results themselves: ask for 3 speeds
+    // ask each layer for designs at three target speeds, concurrently — the
+    // engine thread packs all of it into shared sampler batches
     let mut errs = Vec::new();
     let mut designs_total = 0usize;
     let t_gen = Timer::start();
     let mut rxs = Vec::new();
     for (_, g) in &layers {
         for speed in [3e5, 1e6, 5e6] {
-            rxs.push((*g, speed, svc.handle().submit(Request::GenerateRuntime {
-                g: *g,
-                target_cycles: speed,
-                n: 16,
-            })));
+            rxs.push((*g, svc.handle().submit(Request::Search(SearchRequest::new(
+                Objective::Runtime { g: *g, target_cycles: speed },
+                Budget::evals(16),
+                OptimizerKind::DiffAxE,
+            )))));
         }
     }
-    for (g, target, rx) in rxs {
+    for (g, rx) in rxs {
         match rx.recv()? {
-            Response::Designs(ds) => {
-                designs_total += ds.len();
-                for d in &ds {
-                    errs.push(((d.cycles - target) / target).abs());
+            Response::Outcome(o) => {
+                designs_total += o.evals;
+                // the trace IS the per-design |error| under Objective::Runtime
+                errs.extend(o.trace.iter().copied());
+                for d in &o.ranked {
                     assert!(d.hw.in_target_space(), "invalid design for {g}");
                 }
             }
@@ -79,9 +83,13 @@ fn main() -> anyhow::Result<()> {
     // --- phase 2: EDP search per layer ------------------------------------
     let mut edp_rows = Vec::new();
     for (name, g) in &layers {
-        let resp = svc.handle().request(Request::EdpSearch { g: *g, n_per_class: 16 });
-        if let Response::Designs(ds) = resp {
-            edp_rows.push((*name, ds[0].clone()));
+        let resp = svc.handle().request(Request::Search(SearchRequest::new(
+            Objective::MinEdp { g: *g },
+            Budget::default().with_per_class(16),
+            OptimizerKind::DiffAxE,
+        )));
+        if let Response::Outcome(o) = resp {
+            edp_rows.push((*name, *o.best().unwrap()));
         }
     }
     let mut t = Table::new(&["layer", "best design (EDP search)", "cycles", "power", "EDP"]);
@@ -97,31 +105,35 @@ fn main() -> anyhow::Result<()> {
     println!("\nphase 2 — EDP search:\n{}", t.render());
 
     // --- phase 3: whole-LLM co-design, the paper's headline ---------------
+    // every strategy goes over the same wire: one Batch request per
+    // (model, stage) carries DiffAxE + the NVDLA and DOSA baselines
     let mut nvdla_ratios = Vec::new();
     let mut dosa_ratios = Vec::new();
     let mut t3 = Table::new(&["model", "stage", "DiffAxE EDP", "NVDLA/DiffAxE", "DOSA/DiffAxE"]);
     for model in LlmModel::ALL {
         for stage in Stage::ALL {
-            let resp = svc.handle().request(Request::LlmSearch {
-                model,
-                stage,
-                n_per_layer: 16,
-            });
-            let ours = match resp {
-                Response::Designs(ds) => ds[0].clone(),
+            let obj = Objective::LlmEdp { model, stage, seq: DEFAULT_SEQ, platform: Platform::Asic32nm };
+            let resp = svc.handle().request(Request::Batch(vec![
+                SearchRequest::new(obj, Budget::default().with_per_class(16), OptimizerKind::DiffAxE),
+                SearchRequest::new(obj, Budget::evals(1), OptimizerKind::Fixed(FixedArch::Nvdla)),
+                // ~1600 FD evaluations matches the pre-refactor DOSA
+                // schedule (30 steps x 3 restarts, 17 evals/step)
+                SearchRequest::new(obj, Budget::evals(1600), OptimizerKind::DosaGd),
+            ]));
+            let outs = match resp {
+                Response::Batch(outs) => outs,
                 other => anyhow::bail!("unexpected {other:?}"),
             };
-            let nvdla =
-                fixed_llm(FixedArch::Nvdla, model, stage, DEFAULT_SEQ, Platform::Asic32nm);
-            let (dosa, _) = dosa_llm(model, stage, DEFAULT_SEQ, Platform::Asic32nm, 17);
-            nvdla_ratios.push(nvdla.energy.edp / ours.edp);
-            dosa_ratios.push(dosa.energy.edp / ours.edp);
+            let (ours, nvdla, dosa) =
+                (outs[0].best().unwrap(), outs[1].best().unwrap(), outs[2].best().unwrap());
+            nvdla_ratios.push(nvdla.edp / ours.edp);
+            dosa_ratios.push(dosa.edp / ours.edp);
             t3.row(&[
                 model.name().to_string(),
                 stage.name().to_string(),
                 fnum(ours.edp),
-                fnum(nvdla.energy.edp / ours.edp),
-                fnum(dosa.energy.edp / ours.edp),
+                fnum(nvdla.edp / ours.edp),
+                fnum(dosa.edp / ours.edp),
             ]);
         }
     }

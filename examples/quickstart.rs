@@ -1,10 +1,11 @@
-//! Quickstart: generate accelerator designs hitting a target runtime.
+//! Quickstart: generate accelerator designs hitting a target runtime
+//! through the unified DSE API (`Session` + `Objective` + `Optimizer`).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use diffaxe::dse;
+use diffaxe::dse::{Budget, Objective, OptimizerKind, Session};
 use diffaxe::models::DiffAxE;
 use diffaxe::workload::Gemm;
 use std::path::Path;
@@ -16,45 +17,59 @@ fn main() -> anyhow::Result<()> {
         "artifacts/ missing — run `make artifacts` first"
     );
     println!("loading + compiling AOT artifacts (one-time cost)...");
-    let engine = DiffAxE::load(dir)?;
+    let mut session = Session::load(dir)?;
+    let stats = session.engine().unwrap().stats.clone();
     println!(
         "ready: scale={} T={} diffusion-batch={}",
-        engine.stats.scale, engine.stats.t_steps, engine.stats.gen_batch
+        stats.scale, stats.t_steps, stats.gen_batch
     );
 
     // BERT-base QKV projection at sequence length 128
     let g = Gemm::new(128, 768, 2304);
-    let st = engine.stats.stats_for(&g);
+    let st = stats.stats_for(&g);
     let (lo, hi) = st.runtime_range();
     let target = (lo.ln() * 0.5 + hi.ln() * 0.5).exp(); // mid-range target
     println!("\nworkload {g}: asking for designs with runtime ~{target:.0} cycles");
 
-    let p = st.norm_runtime(target);
-    let conds: Vec<(f32, [f32; 3])> = (0..16).map(|_| (p, g.norm_vec())).collect();
-    let t = std::time::Instant::now();
-    let designs = engine.sample_runtime(7, &conds)?;
-    let dt = t.elapsed().as_secs_f64();
+    let objective = Objective::Runtime { g, target_cycles: target };
+    let outcome =
+        session.search(OptimizerKind::DiffAxE, &objective, &Budget::evals(16), 7)?;
 
-    println!("generated {} designs in {:.0} ms ({:.1} ms each):\n", designs.len(),
-             dt * 1e3, dt * 1e3 / designs.len() as f64);
+    println!(
+        "generated {} designs in {:.0} ms ({:.1} ms each), ranked best-first:\n",
+        outcome.evals,
+        outcome.search_time_s * 1e3,
+        outcome.search_time_s * 1e3 / outcome.evals.max(1) as f64
+    );
     println!("{:<52} {:>12} {:>9} {:>8}", "design", "cycles", "err", "power");
-    let mut errs = Vec::new();
-    for hw in &designs {
-        let (s, e) = dse::evaluate(hw, &g);
-        let err = (s.cycles as f64 - target) / target;
-        errs.push(err.abs());
+    for d in &outcome.ranked {
+        let err = (d.cycles - target) / target;
         println!(
             "{:<52} {:>12} {:>8.1}% {:>7.2}W",
-            hw.to_string(),
-            s.cycles,
+            d.hw.to_string(),
+            d.cycles as u64,
             err * 100.0,
-            e.power_w
+            d.power_w
         );
     }
     println!(
-        "\nmean |error| {:.1}% across {} generated designs",
-        100.0 * errs.iter().sum::<f64>() / errs.len() as f64,
-        errs.len()
+        "\nmean |error| {:.1}% across {} generated designs; best {:.1}%",
+        100.0 * outcome.mean_score(),
+        outcome.evals,
+        100.0 * outcome.best_score()
+    );
+
+    // the same session serves every other strategy; one-liner baseline:
+    let random = session.search(
+        OptimizerKind::RandomSearch,
+        &Objective::MinEdp { g },
+        &Budget::evals(256),
+        7,
+    )?;
+    println!(
+        "bonus: random-search min-EDP over 256 samples: {} edp={:.3e}",
+        random.best().unwrap().hw,
+        random.best().unwrap().edp
     );
     Ok(())
 }

@@ -1,6 +1,7 @@
 //! Fig 17 / Fig 19 / Table V: DSE for performance — normalized runtime and
 //! search time vs AIRCHITECT v1/v2, VAESA (latent BO), and the best
-//! configuration in the training data.
+//! configuration in the training data, every searcher selected by
+//! `OptimizerKind` through one `Session`.
 //!
 //! Paper shape: DiffAxE fastest designs (lowest normalized runtime), large
 //! search-time advantage over VAESA, and generated designs beating the best
@@ -8,10 +9,10 @@
 //! (Table V).
 
 use diffaxe::baselines::BoOptions;
-use diffaxe::dse::{edp, perfopt, runtime_of};
+use diffaxe::dse::{perfopt, runtime_of, Budget, Objective, OptimizerKind, Session};
 use diffaxe::models::DiffAxE;
 use diffaxe::util::bench::{banner, BenchScale};
-use diffaxe::util::stats::{geomean, Timer};
+use diffaxe::util::stats::geomean;
 use diffaxe::util::table::{fnum, Table};
 use std::path::Path;
 
@@ -22,52 +23,58 @@ fn main() -> anyhow::Result<()> {
         println!("SKIP: run `make artifacts` first");
         return Ok(());
     }
-    let engine = DiffAxE::load(dir)?;
+    let mut session = Session::load(dir)?;
     let scale = BenchScale::from_env();
-    let n_workloads = scale.pick(2, 6, engine.stats.workloads.len());
+    let stats = session.engine().unwrap().stats.clone();
+    let n_workloads = scale.pick(2, 6, stats.workloads.len());
     let n_designs = scale.pick(32, 128, 1000);
-    let bo_opts = BoOptions {
+    session.bo_opts = BoOptions {
         n_init: scale.pick(6, 10, 16),
         budget: scale.pick(15, 40, 150),
         pool: scale.pick(64, 200, 512),
         ..Default::default()
     };
+    let bo_evals = session.bo_opts.budget;
 
     let mut norm_rt = vec![vec![]; 4]; // air1, air2, vaesa, train-best (normalized to DiffAxE)
     let mut times = [0.0f64; 5];
     let mut beat_training = 0usize;
-    let mut example: Option<(perfopt::PerfOutcome, f64)> = None;
+    let mut example: Option<(diffaxe::dse::DesignReport, f64)> = None;
 
-    for (wi, w) in engine.stats.workloads.iter().take(n_workloads).enumerate() {
+    for (wi, w) in stats.workloads.iter().take(n_workloads).enumerate() {
         let g = w.gemm;
-        let t0 = Timer::start();
-        let ours = perfopt::diffaxe_perfopt(&engine, &g, n_designs, 200 + wi as u32)?;
-        times[4] += t0.elapsed_s();
+        let perf = Objective::MaxPerf { g };
+        let seed = 200 + wi as u64;
 
-        let t1 = Timer::start();
-        let a1 = engine.airchitect_v1(&g)?;
-        times[0] += t1.elapsed_s();
-        let t2 = Timer::start();
-        let a2 = engine.airchitect_v2(&g)?;
-        times[1] += t2.elapsed_s();
-        // VAESA: latent BO minimizing runtime == EDP search objective swap;
-        // reuse latent BO with the runtime objective via edp helper on EDP —
-        // for performance use lowest-runtime of its EDP search designs
-        let t3 = Timer::start();
-        let vaesa = edp::latent_bo_edp(&engine, &g, &bo_opts, 300 + wi as u64)?;
-        times[2] += t3.elapsed_s();
-        let (train_hw, train_cycles) = perfopt::best_in_training_space(&g);
-        let _ = train_hw;
+        let ours =
+            session.search(OptimizerKind::DiffAxE, &perf, &Budget::evals(n_designs), seed)?;
+        let best_cycles = ours.best_score();
+        times[4] += ours.search_time_s;
 
-        norm_rt[0].push(runtime_of(&a1, &g) / ours.best_cycles);
-        norm_rt[1].push(runtime_of(&a2, &g) / ours.best_cycles);
-        norm_rt[2].push(runtime_of(&vaesa.best_hw, &g) / ours.best_cycles);
-        norm_rt[3].push(train_cycles / ours.best_cycles);
-        if ours.best_cycles < train_cycles {
+        let a1 = session.search(OptimizerKind::AirchitectV1, &perf, &Budget::evals(1), seed)?;
+        times[0] += a1.search_time_s;
+        let a2 = session.search(OptimizerKind::AirchitectV2, &perf, &Budget::evals(1), seed)?;
+        times[1] += a2.search_time_s;
+        // VAESA: latent BO on the EDP objective; for performance read the
+        // runtime of its lowest-EDP design (the paper's protocol)
+        let vaesa = session.search(
+            OptimizerKind::LatentBo,
+            &Objective::MinEdp { g },
+            &Budget::evals(bo_evals),
+            300 + wi as u64,
+        )?;
+        times[2] += vaesa.search_time_s;
+        let (_, train_cycles) = perfopt::best_in_training_space(&g);
+
+        norm_rt[0].push(a1.best_score() / best_cycles);
+        norm_rt[1].push(a2.best_score() / best_cycles);
+        norm_rt[2].push(runtime_of(&vaesa.best().unwrap().hw, &g) / best_cycles);
+        norm_rt[3].push(train_cycles / best_cycles);
+        if best_cycles < train_cycles {
             beat_training += 1;
         }
         if example.is_none() {
-            example = Some((ours, train_cycles));
+            example = Some((*ours.best().unwrap(), train_cycles));
         }
     }
 
@@ -89,20 +96,20 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Table V style detail for the first workload
-    if let Some((ours, train_cycles)) = example {
-        let g = engine.stats.workloads[0].gemm;
+    if let Some((best, train_cycles)) = example {
+        let g = stats.workloads[0].gemm;
         let (train_hw, _) = perfopt::best_in_training_space(&g);
         println!("\nTable V analogue for {g}:");
         let mut tv = Table::new(&["Parameter", "DiffAxE", "Training best"]);
-        tv.row(&["R x C".into(), format!("{}x{}", ours.best_hw.r, ours.best_hw.c),
+        tv.row(&["R x C".into(), format!("{}x{}", best.hw.r, best.hw.c),
                  format!("{}x{}", train_hw.r, train_hw.c)]);
-        tv.row(&["IPSz (kB)".into(), fnum(ours.best_hw.ip_kb()), fnum(train_hw.ip_kb())]);
-        tv.row(&["WTSz (kB)".into(), fnum(ours.best_hw.wt_kb()), fnum(train_hw.wt_kb())]);
-        tv.row(&["OPSz (kB)".into(), fnum(ours.best_hw.op_kb()), fnum(train_hw.op_kb())]);
-        tv.row(&["BW (B/cyc)".into(), ours.best_hw.bw.to_string(), train_hw.bw.to_string()]);
-        tv.row(&["Loop order".into(), ours.best_hw.loop_order.name().into(),
+        tv.row(&["IPSz (kB)".into(), fnum(best.hw.ip_kb()), fnum(train_hw.ip_kb())]);
+        tv.row(&["WTSz (kB)".into(), fnum(best.hw.wt_kb()), fnum(train_hw.wt_kb())]);
+        tv.row(&["OPSz (kB)".into(), fnum(best.hw.op_kb()), fnum(train_hw.op_kb())]);
+        tv.row(&["BW (B/cyc)".into(), best.hw.bw.to_string(), train_hw.bw.to_string()]);
+        tv.row(&["Loop order".into(), best.hw.loop_order.name().into(),
                  train_hw.loop_order.name().into()]);
-        tv.row(&["Runtime (cycles)".into(), fnum(ours.best_cycles), fnum(train_cycles)]);
+        tv.row(&["Runtime (cycles)".into(), fnum(best.cycles), fnum(train_cycles)]);
         println!("{}", tv.render());
     }
     Ok(())

@@ -1,13 +1,15 @@
 //! Fig 22 / Table VII: LLM inference EDP on the 32 nm ASIC —
 //! Eyeriss / ShiDianNao / NVDLA / DOSA vs DiffAxE across BERT-base,
-//! OPT-350M and LLaMA-2-7B, prefill (seq 128) and decode.
+//! OPT-350M and LLaMA-2-7B, prefill (seq 128) and decode — one
+//! `Objective::LlmEdp` served by every optimizer kind.
 //!
 //! Paper shape: DiffAxE lowest EDP everywhere; the gap vs fixed
 //! architectures is largest in prefill (PE-array flexibility); DiffAxE
 //! > 2x better than DOSA.
 
-use diffaxe::baselines::FixedArch;
-use diffaxe::dse::llm::{diffaxe_llm, dosa_llm, fixed_llm, Platform};
+use diffaxe::baselines::{FixedArch, GdOptions};
+use diffaxe::dse::llm::{eval_model, Platform};
+use diffaxe::dse::{Budget, Objective, OptimizerKind, Session};
 use diffaxe::models::DiffAxE;
 use diffaxe::util::bench::{banner, BenchScale};
 use diffaxe::util::table::{fnum, Table};
@@ -21,10 +23,13 @@ fn main() -> anyhow::Result<()> {
         println!("SKIP: run `make artifacts` first");
         return Ok(());
     }
-    let engine = DiffAxE::load(dir)?;
+    let mut session = Session::load(dir)?;
+    session.gd_opts = GdOptions { steps: 30, restarts: 3, ..Default::default() };
     let scale = BenchScale::from_env();
     let n_per_layer = scale.pick(8, 32, 128);
     let platform = Platform::Asic32nm;
+    let gen_budget = Budget::default().with_per_class(n_per_layer);
+    let gd_budget = Budget::evals(scale.pick(600, 1600, 5000));
 
     let mut t = Table::new(&[
         "Model", "Stage", "Eyeriss", "ShiDianNao", "NVDLA", "DOSA", "DiffAxE",
@@ -34,40 +39,50 @@ fn main() -> anyhow::Result<()> {
     let mut table7: Option<String> = None;
     for model in LlmModel::ALL {
         for stage in Stage::ALL {
-            let (ours, _time) =
-                diffaxe_llm(&engine, model, stage, DEFAULT_SEQ, n_per_layer, platform, 42)?;
-            let (dosa, _t) = dosa_llm(model, stage, DEFAULT_SEQ, platform, 17);
+            let obj = Objective::LlmEdp { model, stage, seq: DEFAULT_SEQ, platform };
+            let ours = session.search(OptimizerKind::DiffAxE, &obj, &gen_budget, 42)?;
+            let dosa = session.search(OptimizerKind::DosaGd, &obj, &gd_budget, 17)?;
             let fixed: Vec<f64> = FixedArch::ALL
                 .iter()
-                .map(|&a| fixed_llm(a, model, stage, DEFAULT_SEQ, platform).energy.edp)
-                .collect();
-            let base = ours.energy.edp;
-            dosa_ratios.push(dosa.energy.edp / base);
+                .map(|&a| {
+                    session
+                        .search(OptimizerKind::Fixed(a), &obj, &Budget::evals(1), 0)
+                        .map(|o| o.best().unwrap().edp)
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let base = ours.best().unwrap().edp;
+            let dosa_edp = dosa.best().unwrap().edp;
+            dosa_ratios.push(dosa_edp / base);
             t.row(&[
                 model.name().to_string(),
                 stage.name().to_string(),
                 fnum(fixed[0] / base),
                 fnum(fixed[1] / base),
                 fnum(fixed[2] / base),
-                fnum(dosa.energy.edp / base),
+                fnum(dosa_edp / base),
                 "1.00".into(),
                 format!("abs {:.2e} uJ-cyc", base),
             ]);
             if model == LlmModel::BertBase && table7.is_none() {
-                // Table VII analogue: config + per-layer orders
+                // Table VII analogue: re-derive the full sequence config
+                // (per-layer loop orders) for the winning base designs
+                let ours_seq =
+                    eval_model(&ours.best().unwrap().hw, model, stage, DEFAULT_SEQ, platform);
+                let dosa_seq =
+                    eval_model(&dosa.best().unwrap().hw, model, stage, DEFAULT_SEQ, platform);
                 let orders: Vec<&str> =
-                    ours.cfg.orders.iter().map(|o| o.name()).collect();
+                    ours_seq.cfg.orders.iter().map(|o| o.name()).collect();
                 table7 = Some(format!(
                     "Table VII analogue (BERT-base {}): DiffAxE {} orders [{}] runtime {:.3e} \
                      cycles edp {:.3e} | DOSA {} runtime {:.3e} edp {:.3e}",
                     stage.name(),
-                    ours.cfg.base,
+                    ours_seq.cfg.base,
                     orders.join(","),
-                    ours.sim.cycles as f64,
-                    ours.energy.edp,
-                    dosa.cfg.base,
-                    dosa.sim.cycles as f64,
-                    dosa.energy.edp
+                    ours_seq.sim.cycles as f64,
+                    ours_seq.energy.edp,
+                    dosa_seq.cfg.base,
+                    dosa_seq.sim.cycles as f64,
+                    dosa_seq.energy.edp
                 ));
             }
         }

@@ -1,11 +1,13 @@
 //! Fig 24: EDP and runtime of BERT-base prefill/decode on the VU13P FPGA —
-//! fixed architectures vs DOSA vs DiffAxE.
+//! fixed architectures vs DOSA vs DiffAxE, all through the `Optimizer`
+//! trait on `Objective::LlmEdp`.
 //!
 //! Paper shape: DiffAxE lowest EDP in both stages (7.5x / 8x better than
 //! DOSA on the paper's testbed).
 
-use diffaxe::baselines::FixedArch;
-use diffaxe::dse::llm::{diffaxe_llm, dosa_llm, fixed_llm, Platform};
+use diffaxe::baselines::{FixedArch, GdOptions};
+use diffaxe::dse::llm::Platform;
+use diffaxe::dse::{Budget, Objective, OptimizerKind, Session};
 use diffaxe::models::DiffAxE;
 use diffaxe::util::bench::{banner, BenchScale};
 use diffaxe::util::table::{fnum, Table};
@@ -19,38 +21,50 @@ fn main() -> anyhow::Result<()> {
         println!("SKIP: run `make artifacts` first");
         return Ok(());
     }
-    let engine = DiffAxE::load(dir)?;
+    let mut session = Session::load(dir)?;
+    session.gd_opts = GdOptions { steps: 30, restarts: 3, ..Default::default() };
     let scale = BenchScale::from_env();
     let n = scale.pick(8, 32, 128);
     let platform = Platform::FpgaVu13p;
+    let gd_budget = Budget::evals(scale.pick(600, 1600, 5000));
 
     let mut t = Table::new(&["Stage", "Architecture", "Runtime (cycles)", "EDP (uJ-cyc)", "EDP / DiffAxE"]);
     for stage in Stage::ALL {
-        let (ours, _) =
-            diffaxe_llm(&engine, LlmModel::BertBase, stage, DEFAULT_SEQ, n, platform, 42)?;
-        let base = ours.energy.edp;
+        let obj =
+            Objective::LlmEdp { model: LlmModel::BertBase, stage, seq: DEFAULT_SEQ, platform };
+        let ours = session.search(
+            OptimizerKind::DiffAxE,
+            &obj,
+            &Budget::default().with_per_class(n),
+            42,
+        )?;
+        let base = ours.best().unwrap().edp;
         for arch in FixedArch::ALL {
-            let e = fixed_llm(arch, LlmModel::BertBase, stage, DEFAULT_SEQ, platform);
+            let e = session
+                .search(OptimizerKind::Fixed(arch), &obj, &Budget::evals(1), 0)?;
+            let d = *e.best().unwrap();
             t.row(&[
                 stage.name().to_string(),
                 arch.name().to_string(),
-                fnum(e.sim.cycles as f64),
-                fnum(e.energy.edp),
-                fnum(e.energy.edp / base),
+                fnum(d.cycles),
+                fnum(d.edp),
+                fnum(d.edp / base),
             ]);
         }
-        let (dosa, _) = dosa_llm(LlmModel::BertBase, stage, DEFAULT_SEQ, platform, 17);
+        let dosa = session.search(OptimizerKind::DosaGd, &obj, &gd_budget, 17)?;
+        let d = *dosa.best().unwrap();
         t.row(&[
             stage.name().to_string(),
             "DOSA".to_string(),
-            fnum(dosa.sim.cycles as f64),
-            fnum(dosa.energy.edp),
-            fnum(dosa.energy.edp / base),
+            fnum(d.cycles),
+            fnum(d.edp),
+            fnum(d.edp / base),
         ]);
+        let b = *ours.best().unwrap();
         t.row(&[
             stage.name().to_string(),
             "DiffAxE".to_string(),
-            fnum(ours.sim.cycles as f64),
+            fnum(b.cycles),
             fnum(base),
             "1.00".to_string(),
         ]);

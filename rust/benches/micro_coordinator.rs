@@ -2,15 +2,25 @@
 //! throughput with and without cross-request batching, plus sampler batch
 //! occupancy. The paper's headline — milliseconds per generated
 //! configuration — is measured here end to end (request → diffusion →
-//! decode → rounding → simulation → reply).
+//! decode → rounding → batched simulation → reply), now through the
+//! generic v2 `search` request.
 
-use diffaxe::coordinator::{Request, Response, Service, ServiceConfig};
+use diffaxe::coordinator::{Request, Response, SearchRequest, Service, ServiceConfig};
+use diffaxe::dse::{Budget, Objective, OptimizerKind};
 use diffaxe::models::DiffAxE;
 use diffaxe::util::bench::{banner, BenchScale};
 use diffaxe::util::stats::Timer;
 use diffaxe::util::table::{fnum, Table};
 use diffaxe::workload::Gemm;
 use std::path::Path;
+
+fn generate(g: Gemm, target_cycles: f64, n: usize) -> Request {
+    Request::Search(SearchRequest::new(
+        Objective::Runtime { g, target_cycles },
+        Budget::evals(n),
+        OptimizerKind::DiffAxE,
+    ))
+}
 
 fn main() -> anyhow::Result<()> {
     banner("micro:coordinator", "end-to-end generation service latency/throughput");
@@ -27,10 +37,10 @@ fn main() -> anyhow::Result<()> {
     // (1) one large request — full batches
     let n_large = scale.pick(64, 256, 1024);
     let timer = Timer::start();
-    let resp = svc.handle().request(Request::GenerateRuntime { g, target_cycles: 1e6, n: n_large });
+    let resp = svc.handle().request(generate(g, 1e6, n_large));
     let dt = timer.elapsed_s();
     let designs = match resp {
-        Response::Designs(d) => d.len(),
+        Response::Outcome(o) => o.evals,
         other => panic!("{other:?}"),
     };
     t.row(&[
@@ -47,18 +57,12 @@ fn main() -> anyhow::Result<()> {
     let per_req = 8;
     let timer = Timer::start();
     let rxs: Vec<_> = (0..n_req)
-        .map(|i| {
-            svc.handle().submit(Request::GenerateRuntime {
-                g,
-                target_cycles: 5e5 + 1e5 * i as f64,
-                n: per_req,
-            })
-        })
+        .map(|i| svc.handle().submit(generate(g, 5e5 + 1e5 * i as f64, per_req)))
         .collect();
     let mut total = 0;
     for rx in rxs {
-        if let Response::Designs(d) = rx.recv().unwrap() {
-            total += d.len();
+        if let Response::Outcome(o) = rx.recv().unwrap() {
+            total += o.evals;
         }
     }
     let dt = timer.elapsed_s();
@@ -69,6 +73,34 @@ fn main() -> anyhow::Result<()> {
         fnum(dt),
         fnum(dt * 1e3 / total as f64),
         fnum(total as f64 / dt),
+    ]);
+
+    // (3) one Batch request carrying several searches in one round-trip
+    let n_batch = scale.pick(4, 8, 16);
+    let timer = Timer::start();
+    let resp = svc.handle().request(Request::Batch(
+        (0..n_batch)
+            .map(|i| {
+                SearchRequest::new(
+                    Objective::Runtime { g, target_cycles: 4e5 * (i + 1) as f64 },
+                    Budget::evals(per_req),
+                    OptimizerKind::DiffAxE,
+                )
+            })
+            .collect(),
+    ));
+    let dt = timer.elapsed_s();
+    let designs = match resp {
+        Response::Batch(outs) => outs.iter().map(|o| o.evals).sum::<usize>(),
+        other => panic!("{other:?}"),
+    };
+    t.row(&[
+        format!("batch request x{n_batch}"),
+        "1".into(),
+        designs.to_string(),
+        fnum(dt),
+        fnum(dt * 1e3 / designs as f64),
+        fnum(designs as f64 / dt),
     ]);
     println!("{}", t.render());
 

@@ -1,6 +1,7 @@
 //! Micro-benchmarks of the L3 hot path pieces: simulator throughput,
-//! energy evaluation, encoding/rounding, and the trace oracle for
-//! comparison. These drive the §Perf iteration in EXPERIMENTS.md.
+//! energy evaluation, encoding/rounding, the batched-vs-scalar evaluation
+//! hot path, and the trace oracle for comparison. These drive the §Perf
+//! iteration in EXPERIMENTS.md.
 
 use diffaxe::design_space::{decode_rounded, encode_norm, TargetSpace};
 use diffaxe::energy::{asic, fpga};
@@ -67,6 +68,27 @@ fn main() {
         }),
     );
     println!("{}", t.render());
+
+    // batched vs scalar evaluation: the shared vectorized objective every
+    // optimizer runs on (dse::evaluate_batch partitions the batch over
+    // threads; results are bit-identical to the scalar loop)
+    let g_batch = gemms[0];
+    let batch = &configs[..1024];
+    let reps = scale.pick(3, 10, 30);
+    let t_scalar = time_mean(reps, || {
+        for hw in batch {
+            black_box(diffaxe::dse::evaluate(hw, &g_batch));
+        }
+    });
+    let t_batch = time_mean(reps, || {
+        black_box(diffaxe::dse::evaluate_batch(batch, &g_batch));
+    });
+    println!(
+        "evaluate 1024 configs: scalar {:.2} ms, evaluate_batch {:.2} ms => {:.1}x speedup",
+        t_scalar * 1e3,
+        t_batch * 1e3,
+        t_scalar / t_batch
+    );
 
     // trace oracle cost for context (not on the hot path)
     let small = Gemm::new(64, 256, 64);

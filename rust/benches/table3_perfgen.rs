@@ -1,13 +1,15 @@
 //! Table III / Fig 16: runtime-conditioned hardware generation —
 //! `error_gen` and search time for DiffAxE vs vanilla GD (DOSA), vanilla
-//! BO, latent GD (Polaris), latent BO (VAESA) and GANDSE.
+//! BO, latent GD (Polaris), latent BO (VAESA) and GANDSE, every method
+//! driven through the one `Optimizer` trait.
 //!
 //! Paper shape to reproduce: DiffAxE achieves the lowest error_gen at
 //! millisecond-scale per-configuration time; latent methods beat vanilla;
 //! GANDSE is fast but inaccurate (surrogate error).
 
 use diffaxe::baselines::{BoOptions, GdOptions};
-use diffaxe::dse::perfgen;
+use diffaxe::dse::api::{Budget, GanDse, LatentBo, Polaris, VanillaBo, VanillaGd};
+use diffaxe::dse::perfgen::{self, ErrorStat};
 use diffaxe::models::DiffAxE;
 use diffaxe::util::bench::{banner, BenchScale};
 use diffaxe::util::table::{fnum, Table};
@@ -21,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         println!("SKIP: run `make artifacts` first");
         return Ok(());
     }
-    let engine = DiffAxE::load(dir)?;
+    let mut engine = DiffAxE::load(dir)?;
     let scale = BenchScale::from_env();
     let n_workloads = scale.pick(2, 8, engine.stats.workloads.len());
     let n_targets = scale.pick(2, 5, 20); // paper: 20
@@ -48,14 +50,55 @@ fn main() -> anyhow::Result<()> {
         restarts: scale.pick(2, 3, 6),
         ..Default::default()
     };
+    // budgets: the generative methods amortize a design batch; the
+    // optimization baselines run their own schedules under a generous cap
+    let gen_budget = Budget::evals(n_designs);
+    let bo_budget = Budget::evals(bo_opts.budget);
+    let gd_budget = Budget::evals(1_000_000);
 
     let mut results = Vec::new();
-    results.push(perfgen::run_vanilla_gd(&engine, &queries, &gd_opts, 1)?);
-    results.push(perfgen::run_vanilla_bo(&queries, &bo_opts, 2));
-    results.push(perfgen::run_latent_gd(&engine, &queries, &gd_opts, 3)?);
-    results.push(perfgen::run_latent_bo(&engine, &queries, &bo_opts, 4)?);
-    results.push(perfgen::run_gandse(&engine, &queries, n_designs, 5)?);
-    results.push(perfgen::run_diffaxe(&engine, &queries, n_designs, 6)?);
+    results.push(perfgen::evaluate_method(
+        &mut VanillaGd { engine: Some(&engine), opts: gd_opts.clone() },
+        &queries,
+        &gd_budget,
+        ErrorStat::BestFound,
+        1,
+    )?);
+    results.push(perfgen::evaluate_method(
+        &mut VanillaBo { opts: bo_opts.clone() },
+        &queries,
+        &bo_budget,
+        ErrorStat::BestFound,
+        2,
+    )?);
+    results.push(perfgen::evaluate_method(
+        &mut Polaris { engine: &engine, opts: gd_opts.clone() },
+        &queries,
+        &gd_budget,
+        ErrorStat::BestFound,
+        3,
+    )?);
+    results.push(perfgen::evaluate_method(
+        &mut LatentBo { engine: &engine, opts: bo_opts.clone() },
+        &queries,
+        &bo_budget,
+        ErrorStat::BestFound,
+        4,
+    )?);
+    results.push(perfgen::evaluate_method(
+        &mut GanDse { engine: &engine },
+        &queries,
+        &gen_budget,
+        ErrorStat::MeanOfGenerated,
+        5,
+    )?);
+    results.push(perfgen::evaluate_method(
+        &mut engine,
+        &queries,
+        &gen_budget,
+        ErrorStat::MeanOfGenerated,
+        6,
+    )?);
 
     let mut t = Table::new(&["Method", "Time/query (s)", "Time/design (ms)", "error_gen (%)"]);
     for r in &results {
@@ -68,7 +111,7 @@ fn main() -> anyhow::Result<()> {
             r.search_time_s
         };
         t.row(&[
-            r.name.to_string(),
+            r.name.clone(),
             fnum(r.search_time_s),
             fnum(per_design * 1e3),
             fnum(r.error_gen * 100.0),

@@ -1,13 +1,14 @@
 //! Table IV: EDP-oriented DSE — SP (= EDP_random / EDP_method, higher
 //! better) and search time for random / vanilla BO / VAESA / DOSA /
-//! Polaris / DiffAxE.
+//! Polaris / DiffAxE, all selected by `OptimizerKind` through one
+//! `Session`.
 //!
 //! Paper shape: SP(DiffAxE) > SP(VAESA) > 1 ≳ SP(vanilla BO) ≫ SP of the
 //! coarse-space GD methods (DOSA, Polaris), with DiffAxE orders of
 //! magnitude faster than the BO methods.
 
 use diffaxe::baselines::{BoOptions, GdOptions};
-use diffaxe::dse::edp;
+use diffaxe::dse::{Budget, Objective, OptimizerKind, Session};
 use diffaxe::models::DiffAxE;
 use diffaxe::util::bench::{banner, BenchScale};
 use diffaxe::util::stats::geomean;
@@ -21,50 +22,93 @@ fn main() -> anyhow::Result<()> {
         println!("SKIP: run `make artifacts` first");
         return Ok(());
     }
-    let engine = DiffAxE::load(dir)?;
+    let mut session = Session::load(dir)?;
     let scale = BenchScale::from_env();
-    let n_workloads = scale.pick(2, 6, engine.stats.workloads.len());
+    let stats = session.engine().unwrap().stats.clone();
+    let n_workloads = scale.pick(2, 6, stats.workloads.len());
     let n_per_class = scale.pick(8, 32, 1000); // paper: 1000
-    let n_classes = engine.stats.n_power * engine.stats.n_perf;
-    let budget = n_per_class * n_classes;
-    let bo_opts = BoOptions {
+    let n_classes = stats.n_power * stats.n_perf;
+    let total_budget = n_per_class * n_classes;
+    session.bo_opts = BoOptions {
         n_init: scale.pick(6, 10, 16),
         budget: scale.pick(15, 40, 150),
         pool: scale.pick(64, 200, 512),
         ..Default::default()
     };
-    let gd_opts = GdOptions { steps: scale.pick(10, 25, 60), restarts: scale.pick(2, 3, 4), ..Default::default() };
+    session.gd_opts =
+        GdOptions { steps: scale.pick(10, 25, 60), restarts: scale.pick(2, 3, 4), ..Default::default() };
+    let bo_evals = session.bo_opts.budget;
 
     struct Agg {
+        kind: OptimizerKind,
         name: &'static str,
         space: &'static str,
+        budget: Budget,
         sps: Vec<f64>,
         time: f64,
     }
     let mut methods = vec![
-        Agg { name: "Random Search", space: "O(10^17)", sps: vec![], time: 0.0 },
-        Agg { name: "Vanilla BO", space: "O(10^17)", sps: vec![], time: 0.0 },
-        Agg { name: "VAESA (latent BO)", space: "O(10^17)", sps: vec![], time: 0.0 },
-        Agg { name: "DOSA (vanilla GD)", space: "~O(10^7)", sps: vec![], time: 0.0 },
-        Agg { name: "Polaris (latent GD)", space: "~O(10^7)", sps: vec![], time: 0.0 },
-        Agg { name: "DiffAxE (ours)", space: "O(10^17)", sps: vec![], time: 0.0 },
+        Agg {
+            kind: OptimizerKind::RandomSearch,
+            name: "Random Search",
+            space: "O(10^17)",
+            budget: Budget::evals(total_budget),
+            sps: vec![],
+            time: 0.0,
+        },
+        Agg {
+            kind: OptimizerKind::VanillaBo,
+            name: "Vanilla BO",
+            space: "O(10^17)",
+            budget: Budget::evals(bo_evals),
+            sps: vec![],
+            time: 0.0,
+        },
+        Agg {
+            kind: OptimizerKind::LatentBo,
+            name: "VAESA (latent BO)",
+            space: "O(10^17)",
+            budget: Budget::evals(bo_evals),
+            sps: vec![],
+            time: 0.0,
+        },
+        Agg {
+            kind: OptimizerKind::DosaGd,
+            name: "DOSA (vanilla GD)",
+            space: "~O(10^7)",
+            budget: Budget::evals(1_000_000),
+            sps: vec![],
+            time: 0.0,
+        },
+        Agg {
+            kind: OptimizerKind::Polaris,
+            name: "Polaris (latent GD)",
+            space: "~O(10^7)",
+            budget: Budget::evals(1_000_000),
+            sps: vec![],
+            time: 0.0,
+        },
+        Agg {
+            kind: OptimizerKind::DiffAxE,
+            name: "DiffAxE (ours)",
+            space: "O(10^17)",
+            budget: Budget::evals(total_budget).with_per_class(n_per_class),
+            sps: vec![],
+            time: 0.0,
+        },
     ];
 
-    for (wi, w) in engine.stats.workloads.iter().take(n_workloads).enumerate() {
-        let g = w.gemm;
+    for (wi, w) in stats.workloads.iter().take(n_workloads).enumerate() {
+        let obj = Objective::MinEdp { g: w.gemm };
         let seed = 100 + wi as u64;
-        let rand = edp::random_edp(&g, budget, seed);
-        let outs = [
-            rand.clone(),
-            edp::vanilla_bo_edp(&g, &bo_opts, seed),
-            edp::latent_bo_edp(&engine, &g, &bo_opts, seed)?,
-            edp::dosa_edp(&g, &gd_opts, seed),
-            edp::polaris_edp(&engine, &g, &gd_opts, seed)?,
-            edp::diffaxe_edp(&engine, &g, n_per_class, seed as u32)?,
-        ];
-        for (m, o) in methods.iter_mut().zip(&outs) {
-            m.sps.push(rand.best_edp / o.best_edp);
-            m.time += o.search_time_s;
+        let mut outs = Vec::with_capacity(methods.len());
+        for m in &methods {
+            outs.push(session.search(m.kind, &obj, &m.budget, seed)?);
+        }
+        let rand_best = outs[0].best_score(); // SP normalizer (methods[0] = random)
+        for (m, out) in methods.iter_mut().zip(&outs) {
+            m.sps.push(rand_best / out.best_score());
+            m.time += out.search_time_s;
         }
     }
 

@@ -3,11 +3,13 @@
 //!
 //! The resource model is calibrated to reproduce the paper's utilization
 //! rows *exactly* (see energy::fpga); this bench prints both the paper's
-//! fixed rows and the rows for the designs our DOSA/DiffAxE searches found.
+//! fixed rows and the rows for the designs our DOSA/DiffAxE searches found
+//! (both searches run through the `Optimizer` trait).
 
-use diffaxe::baselines::FixedArch;
+use diffaxe::baselines::{FixedArch, GdOptions};
 use diffaxe::design_space::{HwConfig, LoopOrder};
-use diffaxe::dse::llm::{diffaxe_llm, dosa_llm, Platform};
+use diffaxe::dse::llm::Platform;
+use diffaxe::dse::{Budget, Objective, OptimizerKind, Session};
 use diffaxe::energy::fpga;
 use diffaxe::models::DiffAxE;
 use diffaxe::util::bench::{banner, BenchScale};
@@ -53,15 +55,32 @@ fn main() -> anyhow::Result<()> {
     // rows for the designs found by OUR searches (freshly optimized)
     let dir = Path::new("artifacts");
     if DiffAxE::artifacts_present(dir) {
-        let engine = DiffAxE::load(dir)?;
+        let mut session = Session::load(dir)?;
+        session.gd_opts = GdOptions { steps: 30, restarts: 3, ..Default::default() };
         let scale = BenchScale::from_env();
         let n = scale.pick(8, 32, 128);
-        let (ours, _) = diffaxe_llm(&engine, LlmModel::BertBase, Stage::Prefill, DEFAULT_SEQ,
-                                    n, Platform::FpgaVu13p, 42)?;
-        let (dosa, _) = dosa_llm(LlmModel::BertBase, Stage::Prefill, DEFAULT_SEQ,
-                                 Platform::FpgaVu13p, 17);
+        let obj = Objective::LlmEdp {
+            model: LlmModel::BertBase,
+            stage: Stage::Prefill,
+            seq: DEFAULT_SEQ,
+            platform: Platform::FpgaVu13p,
+        };
+        let ours = session.search(
+            OptimizerKind::DiffAxE,
+            &obj,
+            &Budget::default().with_per_class(n),
+            42,
+        )?;
+        let dosa = session.search(
+            OptimizerKind::DosaGd,
+            &obj,
+            &Budget::evals(scale.pick(600, 1600, 5000)),
+            17,
+        )?;
         let mut t2 = Table::new(&["Found design", "#DSP", "#BRAM", "#URAM", "Power (W)"]);
-        for (name, hw) in [("DOSA (ours)", dosa.cfg.base), ("DiffAxE (ours)", ours.cfg.base)] {
+        for (name, hw) in
+            [("DOSA (ours)", dosa.best().unwrap().hw), ("DiffAxE (ours)", ours.best().unwrap().hw)]
+        {
             let r = fpga::resources(&hw);
             let e = fixed_power(&hw);
             t2.row(&[name.to_string(), r.dsp.to_string(), r.bram.to_string(),

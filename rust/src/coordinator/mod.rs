@@ -1,7 +1,9 @@
-//! L3 coordinator — the DiffAxE generation *service*: a dedicated engine
-//! thread owning the compiled PJRT executables, continuous batching of
-//! generation requests into the fixed-batch diffusion sampler, a
-//! newline-JSON TCP front end, and service metrics.
+//! L3 coordinator — the DiffAxE DSE *service*: a dedicated engine thread
+//! owning a [`crate::dse::Session`], continuous batching of
+//! runtime-generation searches into the fixed-batch diffusion sampler, a
+//! versioned newline-JSON TCP front end speaking generic
+//! objective/budget/optimizer requests (see [`protocol`]), and service
+//! metrics.
 
 pub mod metrics;
 pub mod protocol;
@@ -9,5 +11,10 @@ pub mod server;
 pub mod service;
 
 pub use metrics::Metrics;
-pub use protocol::{DesignReport, Request, Response};
-pub use service::{Handle, Service, ServiceConfig};
+pub use protocol::{
+    ErrorCode, Request, Response, SearchRequest, WireError, PROTOCOL_VERSION,
+};
+pub use service::{Handle, Service, ServiceConfig, DEFAULT_TOP_K};
+
+// the wire's design unit is the DSE layer's report type
+pub use crate::dse::api::DesignReport;

@@ -1,167 +1,461 @@
 //! Request/response types and their JSON wire encoding (newline-delimited
 //! JSON over TCP — see [`super::server`]).
+//!
+//! # Versioning
+//!
+//! Every message may carry a `"v"` field. Requests without one are treated
+//! as protocol v1 (the original four hardcoded request forms, kept as
+//! deprecated parse-only aliases); `"v"` above [`PROTOCOL_VERSION`] yields
+//! a structured [`Response::Error`] with code `unsupported_version` rather
+//! than a dropped connection. Unknown JSON fields are ignored everywhere,
+//! so additive evolution never breaks old peers.
+//!
+//! # v2 request forms
+//!
+//! One generic search request replaces the per-task variants — any
+//! [`Objective`] × [`Budget`] × [`OptimizerKind`]:
+//!
+//! ```json
+//! {"v":2,"type":"search",
+//!  "objective":{"kind":"runtime","m":128,"k":768,"n":2304,"target_cycles":1e6},
+//!  "budget":{"evals":16},
+//!  "optimizer":"diffaxe"}
+//! ```
+//!
+//! and a `batch` request carries several searches in one round-trip:
+//!
+//! ```json
+//! {"v":2,"type":"batch","requests":[{"objective":…,"budget":…,"optimizer":…},…]}
+//! ```
+//!
+//! Batch semantics: every item is validated before any runs (a detectably
+//! bad pairing answers `bad_request` up front); execution is then
+//! all-or-nothing — a mid-batch internal failure answers a single
+//! `internal` error rather than a partial outcome list.
 
-use crate::design_space::HwConfig;
+use crate::dse::api::{Budget, DesignReport, Objective, OptimizerKind, SearchOutcome};
+use crate::dse::llm::Platform;
 use crate::util::json::Json;
-use crate::workload::{Gemm, LlmModel, Stage};
+use crate::workload::{llm::DEFAULT_SEQ, Gemm, LlmModel, Stage};
 use anyhow::{bail, Context, Result};
+
+/// Highest protocol version this build speaks.
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// Structured wire-error categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// malformed or semantically invalid request
+    BadRequest,
+    /// request's `"v"` is newer than [`PROTOCOL_VERSION`]
+    UnsupportedVersion,
+    /// the request was valid but serving it failed
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnsupportedVersion => "unsupported_version",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ErrorCode> {
+        [ErrorCode::BadRequest, ErrorCode::UnsupportedVersion, ErrorCode::Internal]
+            .into_iter()
+            .find(|c| c.name() == s)
+    }
+}
+
+/// A request that could not be decoded, with its error category — the
+/// server turns this into a [`Response::Error`] on the same connection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    fn bad(message: impl Into<String>) -> WireError {
+        WireError { code: ErrorCode::BadRequest, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.name(), self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One search: what to optimize, how much to spend, and with which
+/// strategy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchRequest {
+    pub objective: Objective,
+    pub budget: Budget,
+    pub optimizer: OptimizerKind,
+    /// cap on ranked designs in the response (`None` = server default)
+    pub top_k: Option<usize>,
+}
+
+impl SearchRequest {
+    pub fn new(objective: Objective, budget: Budget, optimizer: OptimizerKind) -> SearchRequest {
+        SearchRequest { objective, budget, optimizer, top_k: None }
+    }
+}
 
 /// A DSE request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// §III-C: generate `n` designs hitting `target_cycles` on workload `g`.
-    GenerateRuntime { g: Gemm, target_cycles: f64, n: usize },
-    /// §III-D: power–performance class DSE, `n_per_class` designs per class.
-    EdpSearch { g: Gemm, n_per_class: usize },
-    /// §III-E: lowest-EDP-class generation for performance.
-    PerfSearch { g: Gemm, n: usize },
-    /// §VI: whole-LLM co-design.
-    LlmSearch { model: LlmModel, stage: Stage, n_per_layer: usize },
+    /// one generic search
+    Search(SearchRequest),
+    /// several searches served in one round-trip
+    Batch(Vec<SearchRequest>),
     /// service introspection
     Metrics,
-}
-
-/// One evaluated design.
-#[derive(Debug, Clone, PartialEq)]
-pub struct DesignReport {
-    pub hw: HwConfig,
-    pub cycles: f64,
-    pub power_w: f64,
-    pub edp: f64,
 }
 
 /// A DSE response.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
+    /// protocol-v1 result shape (parse compatibility; v2 serves `Outcome`)
     Designs(Vec<DesignReport>),
+    /// one search's full outcome (ranked designs + trace + accounting)
+    Outcome(SearchOutcome),
+    /// outcomes of a `Batch` request, in request order
+    Batch(Vec<SearchOutcome>),
     MetricsText(String),
-    Error(String),
+    Error { code: ErrorCode, message: String },
 }
 
+impl Response {
+    pub fn error(code: ErrorCode, message: impl Into<String>) -> Response {
+        Response::Error { code, message: message.into() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// objective / budget encoding
+// ---------------------------------------------------------------------------
+
+fn gemm_from_json(j: &Json) -> Result<Gemm, WireError> {
+    let dim = |k: &str| -> Result<u32, WireError> {
+        let v = j.get(k).as_usize().ok_or_else(|| WireError::bad(format!("missing '{k}'")))?;
+        if v < 1 || v > u32::MAX as usize {
+            return Err(WireError::bad(format!("'{k}' out of range: {v}")));
+        }
+        Ok(v as u32)
+    };
+    Ok(Gemm::new(dim("m")?, dim("k")?, dim("n")?))
+}
+
+fn gemm_fields(g: &Gemm) -> Vec<(&'static str, Json)> {
+    vec![
+        ("m", Json::Num(g.m as f64)),
+        ("k", Json::Num(g.k as f64)),
+        ("n", Json::Num(g.n as f64)),
+    ]
+}
+
+fn objective_to_json(o: &Objective) -> Json {
+    match o {
+        Objective::Runtime { g, target_cycles } => {
+            let mut fields = vec![("kind", Json::Str("runtime".into()))];
+            fields.extend(gemm_fields(g));
+            fields.push(("target_cycles", Json::Num(*target_cycles)));
+            Json::obj(fields)
+        }
+        Objective::MinEdp { g } => {
+            let mut fields = vec![("kind", Json::Str("min_edp".into()))];
+            fields.extend(gemm_fields(g));
+            Json::obj(fields)
+        }
+        Objective::MaxPerf { g } => {
+            let mut fields = vec![("kind", Json::Str("max_perf".into()))];
+            fields.extend(gemm_fields(g));
+            Json::obj(fields)
+        }
+        Objective::LlmEdp { model, stage, seq, platform } => Json::obj(vec![
+            ("kind", Json::Str("llm_edp".into())),
+            ("model", Json::Str(model.wire_name().into())),
+            ("stage", Json::Str(stage.name().into())),
+            ("seq", Json::Num(*seq as f64)),
+            ("platform", Json::Str(platform.name().into())),
+        ]),
+    }
+}
+
+fn objective_from_json(j: &Json) -> Result<Objective, WireError> {
+    let kind = j
+        .get("kind")
+        .as_str()
+        .ok_or_else(|| WireError::bad("objective missing 'kind'"))?;
+    Ok(match kind {
+        "runtime" => Objective::Runtime {
+            g: gemm_from_json(j)?,
+            target_cycles: j
+                .get("target_cycles")
+                .as_f64()
+                .ok_or_else(|| WireError::bad("missing 'target_cycles'"))?,
+        },
+        "min_edp" => Objective::MinEdp { g: gemm_from_json(j)? },
+        "max_perf" => Objective::MaxPerf { g: gemm_from_json(j)? },
+        "llm_edp" => {
+            let model_name = j.get("model").as_str().unwrap_or("");
+            let model = LlmModel::from_name(model_name)
+                .ok_or_else(|| WireError::bad(format!("unknown model {model_name:?}")))?;
+            let stage_name = j.get("stage").as_str().unwrap_or("prefill");
+            let stage = Stage::from_name(stage_name)
+                .ok_or_else(|| WireError::bad(format!("unknown stage {stage_name:?}")))?;
+            let platform_name = j.get("platform").as_str().unwrap_or("asic-32nm");
+            let platform = Platform::from_name(platform_name)
+                .ok_or_else(|| WireError::bad(format!("unknown platform {platform_name:?}")))?;
+            let seq = j.get("seq").as_usize().unwrap_or(DEFAULT_SEQ as usize) as u32;
+            Objective::LlmEdp { model, stage, seq, platform }
+        }
+        other => return Err(WireError::bad(format!("unknown objective kind {other:?}"))),
+    })
+}
+
+fn budget_to_json(b: &Budget) -> Json {
+    let mut fields = vec![("evals", Json::Num(b.evals as f64))];
+    if let Some(pc) = b.per_class {
+        fields.push(("per_class", Json::Num(pc as f64)));
+    }
+    if let Some(w) = b.wall_clock_s {
+        fields.push(("wall_clock_s", Json::Num(w)));
+    }
+    Json::obj(fields)
+}
+
+fn budget_from_json(j: &Json) -> Result<Budget, WireError> {
+    if matches!(j, Json::Null) {
+        return Ok(Budget::default());
+    }
+    let mut b = Budget::default();
+    if let Some(n) = j.get("evals").as_usize() {
+        b.evals = n;
+    }
+    b.per_class = j.get("per_class").as_usize();
+    b.wall_clock_s = j.get("wall_clock_s").as_f64();
+    Ok(b)
+}
+
+fn search_from_json(j: &Json) -> Result<SearchRequest, WireError> {
+    let objective = objective_from_json(j.get("objective"))?;
+    let budget = budget_from_json(j.get("budget"))?;
+    let opt_name = j.get("optimizer").as_str().unwrap_or("diffaxe");
+    let optimizer = OptimizerKind::parse(opt_name)
+        .ok_or_else(|| WireError::bad(format!("unknown optimizer {opt_name:?}")))?;
+    Ok(SearchRequest { objective, budget, optimizer, top_k: j.get("top_k").as_usize() })
+}
+
+fn search_to_json(s: &SearchRequest) -> Json {
+    let mut fields = vec![
+        ("objective", objective_to_json(&s.objective)),
+        ("budget", budget_to_json(&s.budget)),
+        ("optimizer", Json::Str(s.optimizer.name().into())),
+    ];
+    if let Some(k) = s.top_k {
+        fields.push(("top_k", Json::Num(k as f64)));
+    }
+    Json::obj(fields)
+}
+
+// ---------------------------------------------------------------------------
+// requests
+// ---------------------------------------------------------------------------
+
 impl Request {
-    pub fn from_json(j: &Json) -> Result<Request> {
-        let ty = j.get("type").as_str().context("request missing 'type'")?;
-        let gemm = || -> Result<Gemm> {
-            Ok(Gemm::new(
-                j.get("m").as_usize().context("m")? as u32,
-                j.get("k").as_usize().context("k")? as u32,
-                j.get("n").as_usize().context("n")? as u32,
-            ))
-        };
+    /// Decode a request. Accepts the generic v2 forms and the deprecated
+    /// v1 aliases (`generate`, `edp_search`, `perf_search`, `llm_search`),
+    /// which parse into the equivalent [`SearchRequest`] with the
+    /// `diffaxe` optimizer.
+    pub fn from_json(j: &Json) -> Result<Request, WireError> {
+        if let Some(v) = j.get("v").as_f64() {
+            if v > PROTOCOL_VERSION as f64 {
+                return Err(WireError {
+                    code: ErrorCode::UnsupportedVersion,
+                    message: format!("request v{v} exceeds supported v{PROTOCOL_VERSION}"),
+                });
+            }
+        }
+        let ty = j
+            .get("type")
+            .as_str()
+            .ok_or_else(|| WireError::bad("request missing 'type'"))?;
         Ok(match ty {
-            "generate" => Request::GenerateRuntime {
-                g: gemm()?,
-                target_cycles: j.get("target_cycles").as_f64().context("target_cycles")?,
-                n: j.get("count").as_usize().unwrap_or(16),
-            },
-            "edp_search" => Request::EdpSearch {
-                g: gemm()?,
-                n_per_class: j.get("per_class").as_usize().unwrap_or(32),
-            },
-            "perf_search" => Request::PerfSearch {
-                g: gemm()?,
-                n: j.get("count").as_usize().unwrap_or(64),
-            },
-            "llm_search" => {
-                let model = match j.get("model").as_str().unwrap_or("") {
-                    "bert-base" => LlmModel::BertBase,
-                    "opt-350m" => LlmModel::Opt350m,
-                    "llama-2-7b" => LlmModel::Llama2_7b,
-                    other => bail!("unknown model {other:?}"),
-                };
-                let stage = match j.get("stage").as_str().unwrap_or("prefill") {
-                    "prefill" => Stage::Prefill,
-                    "decode" => Stage::Decode,
-                    other => bail!("unknown stage {other:?}"),
-                };
-                Request::LlmSearch {
-                    model,
-                    stage,
-                    n_per_layer: j.get("per_layer").as_usize().unwrap_or(32),
+            "search" => Request::Search(search_from_json(j)?),
+            "batch" => {
+                let items = j
+                    .get("requests")
+                    .as_arr()
+                    .ok_or_else(|| WireError::bad("batch missing 'requests'"))?;
+                if items.is_empty() {
+                    return Err(WireError::bad("batch must carry at least one search"));
                 }
+                Request::Batch(items.iter().map(search_from_json).collect::<Result<_, _>>()?)
             }
             "metrics" => Request::Metrics,
-            other => bail!("unknown request type {other:?}"),
+            // ---- deprecated v1 aliases ------------------------------------
+            // each alias pins `top_k` to its v1 response shape: `generate`
+            // returned `count` designs, the three searches their single best
+            "generate" => {
+                let count = j.get("count").as_usize().unwrap_or(16);
+                Request::Search(SearchRequest {
+                    objective: Objective::Runtime {
+                        g: gemm_from_json(j)?,
+                        target_cycles: j
+                            .get("target_cycles")
+                            .as_f64()
+                            .ok_or_else(|| WireError::bad("missing 'target_cycles'"))?,
+                    },
+                    budget: Budget::evals(count),
+                    optimizer: OptimizerKind::DiffAxE,
+                    top_k: Some(count),
+                })
+            }
+            "edp_search" => Request::Search(SearchRequest {
+                objective: Objective::MinEdp { g: gemm_from_json(j)? },
+                budget: Budget::default()
+                    .with_per_class(j.get("per_class").as_usize().unwrap_or(32)),
+                optimizer: OptimizerKind::DiffAxE,
+                top_k: Some(1),
+            }),
+            "perf_search" => Request::Search(SearchRequest {
+                objective: Objective::MaxPerf { g: gemm_from_json(j)? },
+                budget: Budget::evals(j.get("count").as_usize().unwrap_or(64)),
+                optimizer: OptimizerKind::DiffAxE,
+                top_k: Some(1),
+            }),
+            "llm_search" => {
+                let model_name = j.get("model").as_str().unwrap_or("");
+                let model = LlmModel::from_name(model_name)
+                    .ok_or_else(|| WireError::bad(format!("unknown model {model_name:?}")))?;
+                let stage_name = j.get("stage").as_str().unwrap_or("prefill");
+                let stage = Stage::from_name(stage_name)
+                    .ok_or_else(|| WireError::bad(format!("unknown stage {stage_name:?}")))?;
+                Request::Search(SearchRequest {
+                    objective: Objective::LlmEdp {
+                        model,
+                        stage,
+                        seq: DEFAULT_SEQ,
+                        platform: Platform::Asic32nm,
+                    },
+                    budget: Budget::default()
+                        .with_per_class(j.get("per_layer").as_usize().unwrap_or(32)),
+                    optimizer: OptimizerKind::DiffAxE,
+                    top_k: Some(1),
+                })
+            }
+            other => return Err(WireError::bad(format!("unknown request type {other:?}"))),
         })
     }
 
+    /// Encode as the generic v2 wire form (v1 aliases are parse-only).
     pub fn to_json(&self) -> Json {
+        let versioned = |mut fields: Vec<(&'static str, Json)>| {
+            fields.insert(0, ("v", Json::Num(PROTOCOL_VERSION as f64)));
+            Json::obj(fields)
+        };
         match self {
-            Request::GenerateRuntime { g, target_cycles, n } => Json::obj(vec![
-                ("type", Json::Str("generate".into())),
-                ("m", Json::Num(g.m as f64)),
-                ("k", Json::Num(g.k as f64)),
-                ("n", Json::Num(g.n as f64)),
-                ("target_cycles", Json::Num(*target_cycles)),
-                ("count", Json::Num(*n as f64)),
+            Request::Search(s) => {
+                let mut j = versioned(vec![("type", Json::Str("search".into()))]);
+                if let (Json::Obj(o), Json::Obj(inner)) = (&mut j, search_to_json(s)) {
+                    o.extend(inner);
+                }
+                j
+            }
+            Request::Batch(items) => versioned(vec![
+                ("type", Json::Str("batch".into())),
+                ("requests", Json::Arr(items.iter().map(search_to_json).collect())),
             ]),
-            Request::EdpSearch { g, n_per_class } => Json::obj(vec![
-                ("type", Json::Str("edp_search".into())),
-                ("m", Json::Num(g.m as f64)),
-                ("k", Json::Num(g.k as f64)),
-                ("n", Json::Num(g.n as f64)),
-                ("per_class", Json::Num(*n_per_class as f64)),
-            ]),
-            Request::PerfSearch { g, n } => Json::obj(vec![
-                ("type", Json::Str("perf_search".into())),
-                ("m", Json::Num(g.m as f64)),
-                ("k", Json::Num(g.k as f64)),
-                ("n", Json::Num(g.n as f64)),
-                ("count", Json::Num(*n as f64)),
-            ]),
-            Request::LlmSearch { model, stage, n_per_layer } => Json::obj(vec![
-                ("type", Json::Str("llm_search".into())),
-                (
-                    "model",
-                    Json::Str(
-                        match model {
-                            LlmModel::BertBase => "bert-base",
-                            LlmModel::Opt350m => "opt-350m",
-                            LlmModel::Llama2_7b => "llama-2-7b",
-                        }
-                        .into(),
-                    ),
-                ),
-                ("stage", Json::Str(stage.name().into())),
-                ("per_layer", Json::Num(*n_per_layer as f64)),
-            ]),
-            Request::Metrics => Json::obj(vec![("type", Json::Str("metrics".into()))]),
+            Request::Metrics => versioned(vec![("type", Json::Str("metrics".into()))]),
         }
     }
 }
 
-impl DesignReport {
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("r", Json::Num(self.hw.r as f64)),
-            ("c", Json::Num(self.hw.c as f64)),
-            ("ip_kb", Json::Num(self.hw.ip_kb())),
-            ("wt_kb", Json::Num(self.hw.wt_kb())),
-            ("op_kb", Json::Num(self.hw.op_kb())),
-            ("bw", Json::Num(self.hw.bw as f64)),
-            ("loop_order", Json::Str(self.hw.loop_order.name().into())),
-            ("cycles", Json::Num(self.cycles)),
-            ("power_w", Json::Num(self.power_w)),
-            ("edp", Json::Num(self.edp)),
-        ])
-    }
+// ---------------------------------------------------------------------------
+// designs / outcomes / responses
+// ---------------------------------------------------------------------------
 
-    pub fn from_json(j: &Json) -> Result<DesignReport> {
-        use crate::design_space::{LoopOrder, params};
-        let num = |k: &str| j.get(k).as_f64().with_context(|| format!("design.{k}"));
-        let hw = HwConfig {
-            r: num("r")? as u32,
-            c: num("c")? as u32,
-            ip_b: (num("ip_kb")? * 1024.0).round() as u64,
-            wt_b: (num("wt_kb")? * 1024.0).round() as u64,
-            op_b: (num("op_kb")? * 1024.0).round() as u64,
-            bw: num("bw")? as u32,
-            loop_order: LoopOrder::from_name(j.get("loop_order").as_str().unwrap_or("mnk"))
-                .context("loop_order")?,
-        };
-        let _ = params::DIM_MIN; // keep params in scope for doc-link stability
-        Ok(DesignReport { hw, cycles: num("cycles")?, power_w: num("power_w")?, edp: num("edp")? })
-    }
+/// JSON encoding of a [`DesignReport`] (implemented here so the DSE layer
+/// stays transport-free).
+pub fn design_to_json(d: &DesignReport) -> Json {
+    Json::obj(vec![
+        ("r", Json::Num(d.hw.r as f64)),
+        ("c", Json::Num(d.hw.c as f64)),
+        ("ip_kb", Json::Num(d.hw.ip_kb())),
+        ("wt_kb", Json::Num(d.hw.wt_kb())),
+        ("op_kb", Json::Num(d.hw.op_kb())),
+        ("bw", Json::Num(d.hw.bw as f64)),
+        ("loop_order", Json::Str(d.hw.loop_order.name().into())),
+        ("cycles", Json::Num(d.cycles)),
+        ("power_w", Json::Num(d.power_w)),
+        ("edp", Json::Num(d.edp)),
+    ])
+}
+
+/// Decode a [`DesignReport`], validating the configuration against the
+/// target-space parameter ranges (Table II) so malformed peers cannot
+/// smuggle nonsense dimensions into downstream consumers.
+pub fn design_from_json(j: &Json) -> Result<DesignReport> {
+    use crate::design_space::{params, HwConfig, LoopOrder};
+    let num = |k: &str| j.get(k).as_f64().with_context(|| format!("design.{k}"));
+    let hw = HwConfig {
+        r: num("r")? as u32,
+        c: num("c")? as u32,
+        ip_b: (num("ip_kb")? * 1024.0).round() as u64,
+        wt_b: (num("wt_kb")? * 1024.0).round() as u64,
+        op_b: (num("op_kb")? * 1024.0).round() as u64,
+        bw: num("bw")? as u32,
+        loop_order: LoopOrder::from_name(j.get("loop_order").as_str().unwrap_or("mnk"))
+            .context("loop_order")?,
+    };
+    let dim_ok = |d: u32| (params::DIM_MIN..=params::DIM_MAX).contains(&d);
+    let buf_ok = |b: u64| (params::BUF_MIN_B..=params::BUF_MAX_B).contains(&b);
+    anyhow::ensure!(
+        dim_ok(hw.r)
+            && dim_ok(hw.c)
+            && buf_ok(hw.ip_b)
+            && buf_ok(hw.wt_b)
+            && buf_ok(hw.op_b)
+            && (params::BW_MIN..=params::BW_MAX).contains(&hw.bw),
+        "design outside target-space parameter ranges: {hw}"
+    );
+    Ok(DesignReport { hw, cycles: num("cycles")?, power_w: num("power_w")?, edp: num("edp")? })
+}
+
+fn outcome_fields(o: &SearchOutcome) -> Vec<(&'static str, Json)> {
+    vec![
+        ("optimizer", Json::Str(o.optimizer.clone())),
+        ("designs", Json::Arr(o.ranked.iter().map(design_to_json).collect())),
+        ("trace", Json::arr_f64(&o.trace)),
+        ("evals", Json::Num(o.evals as f64)),
+        ("search_time_s", Json::Num(o.search_time_s)),
+    ]
+}
+
+fn outcome_from_json(j: &Json) -> Result<SearchOutcome> {
+    let ranked = j
+        .get("designs")
+        .as_arr()
+        .context("outcome.designs")?
+        .iter()
+        .map(design_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let trace = j.get("trace").as_f64_vec().context("outcome.trace")?;
+    Ok(SearchOutcome {
+        optimizer: j.get("optimizer").as_str().unwrap_or("").to_string(),
+        evals: j.get("evals").as_usize().unwrap_or(trace.len()),
+        search_time_s: j.get("search_time_s").as_f64().unwrap_or(0.0),
+        ranked,
+        trace,
+    })
 }
 
 impl Response {
@@ -169,15 +463,31 @@ impl Response {
         match self {
             Response::Designs(ds) => Json::obj(vec![
                 ("status", Json::Str("ok".into())),
-                ("designs", Json::Arr(ds.iter().map(|d| d.to_json()).collect())),
+                ("designs", Json::Arr(ds.iter().map(design_to_json).collect())),
+            ]),
+            Response::Outcome(o) => {
+                // carries "designs" too, so v1 readers keep working
+                let mut fields = vec![
+                    ("status", Json::Str("ok".into())),
+                    ("v", Json::Num(PROTOCOL_VERSION as f64)),
+                ];
+                fields.extend(outcome_fields(o));
+                Json::obj(fields)
+            }
+            Response::Batch(outs) => Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("v", Json::Num(PROTOCOL_VERSION as f64)),
+                ("outcomes", Json::Arr(outs.iter().map(|o| Json::obj(outcome_fields(o))).collect())),
             ]),
             Response::MetricsText(s) => Json::obj(vec![
                 ("status", Json::Str("ok".into())),
                 ("metrics", Json::Str(s.clone())),
             ]),
-            Response::Error(e) => Json::obj(vec![
+            Response::Error { code, message } => Json::obj(vec![
                 ("status", Json::Str("error".into())),
-                ("message", Json::Str(e.clone())),
+                ("v", Json::Num(PROTOCOL_VERSION as f64)),
+                ("code", Json::Str(code.name().into())),
+                ("message", Json::Str(message.clone())),
             ]),
         }
     }
@@ -187,20 +497,31 @@ impl Response {
             Some("ok") => {
                 if let Some(m) = j.get("metrics").as_str() {
                     Ok(Response::MetricsText(m.to_string()))
+                } else if let Some(outs) = j.get("outcomes").as_arr() {
+                    Ok(Response::Batch(
+                        outs.iter().map(outcome_from_json).collect::<Result<Vec<_>>>()?,
+                    ))
+                } else if !matches!(j.get("trace"), Json::Null) {
+                    Ok(Response::Outcome(outcome_from_json(j)?))
                 } else {
                     let ds = j
                         .get("designs")
                         .as_arr()
                         .context("designs")?
                         .iter()
-                        .map(DesignReport::from_json)
+                        .map(design_from_json)
                         .collect::<Result<Vec<_>>>()?;
                     Ok(Response::Designs(ds))
                 }
             }
-            Some("error") => {
-                Ok(Response::Error(j.get("message").as_str().unwrap_or("").to_string()))
-            }
+            Some("error") => Ok(Response::Error {
+                code: j
+                    .get("code")
+                    .as_str()
+                    .and_then(ErrorCode::from_name)
+                    .unwrap_or(ErrorCode::Internal),
+                message: j.get("message").as_str().unwrap_or("").to_string(),
+            }),
             _ => bail!("bad response"),
         }
     }
@@ -209,14 +530,48 @@ impl Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::design_space::{HwConfig, LoopOrder};
+
+    fn parse(s: &str) -> Result<Request, WireError> {
+        Request::from_json(&Json::parse(s).unwrap())
+    }
 
     #[test]
-    fn request_roundtrip() {
+    fn generic_request_roundtrip() {
         let reqs = vec![
-            Request::GenerateRuntime { g: Gemm::new(128, 768, 768), target_cycles: 1e6, n: 32 },
-            Request::EdpSearch { g: Gemm::new(1, 2, 3), n_per_class: 5 },
-            Request::PerfSearch { g: Gemm::new(9, 9, 9), n: 7 },
-            Request::LlmSearch { model: LlmModel::BertBase, stage: Stage::Decode, n_per_layer: 4 },
+            Request::Search(SearchRequest::new(
+                Objective::Runtime { g: Gemm::new(128, 768, 768), target_cycles: 1e6 },
+                Budget::evals(32),
+                OptimizerKind::DiffAxE,
+            )),
+            Request::Search(SearchRequest {
+                objective: Objective::MinEdp { g: Gemm::new(1, 2, 3) },
+                budget: Budget::evals(90).with_per_class(5).with_wall_clock(1.5),
+                optimizer: OptimizerKind::VanillaBo,
+                top_k: Some(3),
+            }),
+            Request::Search(SearchRequest::new(
+                Objective::LlmEdp {
+                    model: LlmModel::BertBase,
+                    stage: Stage::Decode,
+                    seq: 64,
+                    platform: Platform::FpgaVu13p,
+                },
+                Budget::default().with_per_class(4),
+                OptimizerKind::DosaGd,
+            )),
+            Request::Batch(vec![
+                SearchRequest::new(
+                    Objective::MaxPerf { g: Gemm::new(9, 9, 9) },
+                    Budget::evals(7),
+                    OptimizerKind::RandomSearch,
+                ),
+                SearchRequest::new(
+                    Objective::MinEdp { g: Gemm::new(4, 5, 6) },
+                    Budget::evals(8),
+                    OptimizerKind::Fixed(crate::baselines::FixedArch::Nvdla),
+                ),
+            ]),
             Request::Metrics,
         ];
         for r in reqs {
@@ -226,24 +581,173 @@ mod tests {
     }
 
     #[test]
+    fn legacy_aliases_still_parse() {
+        let r = parse(r#"{"type":"generate","m":128,"k":768,"n":2304,"target_cycles":1e6,"count":8}"#)
+            .unwrap();
+        assert_eq!(
+            r,
+            Request::Search(SearchRequest {
+                objective: Objective::Runtime { g: Gemm::new(128, 768, 2304), target_cycles: 1e6 },
+                budget: Budget::evals(8),
+                optimizer: OptimizerKind::DiffAxE,
+                top_k: Some(8), // v1 `generate` returned `count` designs
+            })
+        );
+        let r = parse(r#"{"type":"edp_search","m":1,"k":2,"n":3,"per_class":5}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::Search(SearchRequest {
+                objective: Objective::MinEdp { g: Gemm::new(1, 2, 3) },
+                budget: Budget::default().with_per_class(5),
+                optimizer: OptimizerKind::DiffAxE,
+                top_k: Some(1), // v1 `edp_search` returned the single best
+            })
+        );
+        let r = parse(r#"{"type":"perf_search","m":9,"k":9,"n":9,"count":7}"#).unwrap();
+        assert!(matches!(
+            r,
+            Request::Search(SearchRequest {
+                objective: Objective::MaxPerf { .. },
+                optimizer: OptimizerKind::DiffAxE,
+                ..
+            })
+        ));
+        let r = parse(r#"{"type":"llm_search","model":"bert-base","stage":"decode","per_layer":4}"#)
+            .unwrap();
+        assert_eq!(
+            r,
+            Request::Search(SearchRequest {
+                objective: Objective::LlmEdp {
+                    model: LlmModel::BertBase,
+                    stage: Stage::Decode,
+                    seq: DEFAULT_SEQ,
+                    platform: Platform::Asic32nm,
+                },
+                budget: Budget::default().with_per_class(4),
+                optimizer: OptimizerKind::DiffAxE,
+                top_k: Some(1),
+            })
+        );
+    }
+
+    #[test]
+    fn unknown_fields_are_ignored() {
+        let r = parse(
+            r#"{"v":2,"type":"search","some_future_flag":true,"nested":{"x":1},
+                "objective":{"kind":"min_edp","m":4,"k":5,"n":6,"hint":"fast"},
+                "budget":{"evals":12,"gpu_hours":99},"optimizer":"random"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Search(SearchRequest::new(
+                Objective::MinEdp { g: Gemm::new(4, 5, 6) },
+                Budget::evals(12),
+                OptimizerKind::RandomSearch,
+            ))
+        );
+        // legacy form with extra fields parses too
+        assert!(parse(r#"{"type":"metrics","extra":[1,2,3]}"#).is_ok());
+    }
+
+    #[test]
+    fn version_mismatch_is_a_structured_error() {
+        let err = parse(r#"{"v":3,"type":"search"}"#).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnsupportedVersion);
+        // and it serializes into an error *response*, not a hangup
+        let resp = Response::error(err.code, err.message);
+        let j = Json::parse(&resp.to_json().to_string()).unwrap();
+        match Response::from_json(&j).unwrap() {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::UnsupportedVersion);
+                assert!(message.contains("v3"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // a request at exactly the supported version is fine
+        assert!(parse(r#"{"v":2,"type":"metrics"}"#).is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse(r#"{"type":"nope"}"#).is_err());
+        assert!(parse(r#"{"type":"generate","m":1}"#).is_err());
+        assert!(parse(r#"{"type":"search","objective":{"kind":"warp"}}"#).is_err());
+        assert!(parse(r#"{"type":"batch","requests":[]}"#).is_err());
+        // zero GEMM dims must not panic the connection thread
+        let err =
+            parse(r#"{"type":"generate","m":0,"k":1,"n":1,"target_cycles":1.0}"#).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        // unknown optimizer name
+        let err = parse(
+            r#"{"type":"search","objective":{"kind":"min_edp","m":1,"k":1,"n":1},
+                "optimizer":"sgd"}"#,
+        )
+        .unwrap_err();
+        assert!(err.message.contains("sgd"));
+    }
+
+    #[test]
     fn response_roundtrip() {
-        use crate::design_space::LoopOrder;
         let d = DesignReport {
             hw: HwConfig::new_kb(16, 32, 64.0, 128.0, 8.5, 12, LoopOrder::Nmk),
             cycles: 12345.0,
             power_w: 1.25,
             edp: 3.4e8,
         };
-        let resp = Response::Designs(vec![d]);
-        let j = Json::parse(&resp.to_json().to_string()).unwrap();
-        assert_eq!(Response::from_json(&j).unwrap(), resp);
+        let outcome = SearchOutcome {
+            optimizer: "DiffAxE".into(),
+            ranked: vec![d],
+            trace: vec![0.25],
+            evals: 1,
+            search_time_s: 0.5,
+        };
+        for resp in [
+            Response::Designs(vec![d]),
+            Response::Outcome(outcome.clone()),
+            Response::Batch(vec![outcome.clone(), outcome]),
+            Response::MetricsText("requests=1".into()),
+            Response::error(ErrorCode::Internal, "boom"),
+        ] {
+            let j = Json::parse(&resp.to_json().to_string()).unwrap();
+            assert_eq!(Response::from_json(&j).unwrap(), resp);
+        }
     }
 
     #[test]
-    fn rejects_malformed() {
-        let j = Json::parse(r#"{"type": "nope"}"#).unwrap();
-        assert!(Request::from_json(&j).is_err());
-        let j = Json::parse(r#"{"type": "generate", "m": 1}"#).unwrap();
-        assert!(Request::from_json(&j).is_err());
+    fn outcome_response_is_v1_readable() {
+        // a v1 client reads "designs" from a v2 Outcome response
+        let d = DesignReport {
+            hw: HwConfig::new_kb(8, 8, 64.0, 64.0, 16.0, 8, LoopOrder::Mnk),
+            cycles: 10.0,
+            power_w: 0.5,
+            edp: 5.0,
+        };
+        let out = SearchOutcome {
+            optimizer: "Random Search".into(),
+            ranked: vec![d],
+            trace: vec![5.0],
+            evals: 1,
+            search_time_s: 0.0,
+        };
+        let j = Response::Outcome(out).to_json();
+        let designs = j.get("designs").as_arr().unwrap();
+        assert_eq!(designs.len(), 1);
+        assert_eq!(design_from_json(&designs[0]).unwrap(), d);
+    }
+
+    #[test]
+    fn design_validation_rejects_out_of_range() {
+        let d = DesignReport {
+            hw: HwConfig::new_kb(16, 32, 64.0, 128.0, 8.5, 12, LoopOrder::Nmk),
+            cycles: 1.0,
+            power_w: 1.0,
+            edp: 1.0,
+        };
+        let mut j = design_to_json(&d);
+        if let Json::Obj(o) = &mut j {
+            o.insert("r".into(), Json::Num(100000.0));
+        }
+        assert!(design_from_json(&j).is_err());
     }
 }

@@ -4,7 +4,7 @@
 //! per connection (DSE request rates are low; the engine thread is the
 //! shared resource and does the batching).
 
-use super::protocol::{Request, Response};
+use super::protocol::{ErrorCode, Request, Response};
 use super::service::Handle;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -57,12 +57,15 @@ fn handle_conn(handle: Handle, stream: TcpStream) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
+        // every decode failure — bad JSON, bad request, unsupported
+        // version — answers with a structured error on the same
+        // connection; the stream is never dropped mid-session
         let response = match Json::parse(&line) {
             Ok(j) => match Request::from_json(&j) {
                 Ok(req) => handle.request(req),
-                Err(e) => Response::Error(format!("bad request: {e:#}")),
+                Err(e) => Response::error(e.code, e.message),
             },
-            Err(e) => Response::Error(format!("bad json: {e}")),
+            Err(e) => Response::error(ErrorCode::BadRequest, format!("bad json: {e}")),
         };
         writeln!(writer, "{}", response.to_json())?;
         writer.flush()?;
@@ -83,11 +86,16 @@ impl Client {
     }
 
     pub fn request(&mut self, req: &Request) -> Result<Response> {
-        writeln!(self.writer, "{}", req.to_json())?;
+        self.send_line(&req.to_json().to_string())
+    }
+
+    /// Send one raw wire line (legacy-alias and compatibility testing).
+    pub fn send_line(&mut self, line: &str) -> Result<Response> {
+        writeln!(self.writer, "{line}")?;
         self.writer.flush()?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let j = Json::parse(&line).context("parsing response")?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        let j = Json::parse(&reply).context("parsing response")?;
         Response::from_json(&j)
     }
 }

@@ -1,19 +1,24 @@
-//! The DSE service: a dedicated engine thread owning the PJRT executables
-//! (they hold raw C pointers and are deliberately never shared), fed by a
-//! cloneable handle over an mpsc channel.
+//! The DSE service: a dedicated engine thread owning a [`Session`] (the
+//! PJRT executables hold raw C pointers and are deliberately never shared),
+//! fed by a cloneable handle over an mpsc channel.
 //!
-//! Runtime-generation requests are **dynamically batched**: the engine
-//! thread drains the queue up to the sampler's fixed batch width (slots can
-//! mix workloads — the sampler conditions per batch element) before issuing
-//! one diffusion call, then splits, evaluates, and replies per request.
-//! This is the vLLM-router-style continuous batching adapted to design
-//! generation: the expensive fixed-batch executable always runs as full as
-//! the queue allows.
+//! Runtime-generation searches with the `diffaxe` optimizer are
+//! **dynamically batched**: the engine thread drains the queue up to the
+//! sampler's fixed batch width (slots can mix workloads — the sampler
+//! conditions per batch element) before issuing one diffusion call, then
+//! splits, batch-evaluates, and replies per request. This is the
+//! vLLM-router-style continuous batching adapted to design generation: the
+//! expensive fixed-batch executable always runs as full as the queue
+//! allows. Every other `(objective, optimizer)` pair — and whole `Batch`
+//! requests — run directly on the session between sampler flushes.
 
 use super::metrics::Metrics;
-use super::protocol::{DesignReport, Request, Response};
-use crate::dse;
-use crate::models::DiffAxE;
+use super::protocol::{ErrorCode, Request, Response, SearchRequest};
+use crate::dse::api::{
+    evaluate_batch, DesignReport, Objective, OptimizerKind, SearchOutcome, Session,
+};
+use crate::design_space::HwConfig;
+use crate::util::rng;
 use crate::workload::Gemm;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -21,13 +26,19 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Default cap on ranked designs carried in one response (requests can
+/// override with `top_k`).
+pub const DEFAULT_TOP_K: usize = 64;
+
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub artifacts_dir: std::path::PathBuf,
     /// how long the batcher waits to fill a sampler batch
     pub batch_window: Duration,
-    pub seed: u32,
+    /// root seed; per-sampler-call and per-search seeds derive from it via
+    /// [`rng::derive`]
+    pub seed: u64,
 }
 
 impl ServiceConfig {
@@ -59,11 +70,11 @@ impl Handle {
         let (reply_tx, reply_rx) = channel();
         let job = Job { request, reply: reply_tx, submitted: Instant::now() };
         if self.tx.send(job).is_err() {
-            return Response::Error("service stopped".into());
+            return Response::error(ErrorCode::Internal, "service stopped");
         }
         reply_rx
             .recv()
-            .unwrap_or_else(|_| Response::Error("service dropped request".into()))
+            .unwrap_or_else(|_| Response::error(ErrorCode::Internal, "service dropped request"))
     }
 
     /// Submit without waiting; the receiver yields the response.
@@ -100,19 +111,19 @@ impl Service {
             std::thread::Builder::new()
                 .name("diffaxe-engine".into())
                 .spawn(move || {
-                    // the engine must be constructed on this thread: PJRT
+                    // the session must be constructed on this thread: PJRT
                     // handles are !Send
-                    let engine = match DiffAxE::load(&cfg.artifacts_dir) {
-                        Ok(e) => {
+                    let session = match Session::load(&cfg.artifacts_dir) {
+                        Ok(s) => {
                             let _ = ready_tx.send(Ok(()));
-                            e
+                            s
                         }
                         Err(e) => {
                             let _ = ready_tx.send(Err(e));
                             return;
                         }
                     };
-                    engine_loop(engine, cfg, rx, metrics, stop);
+                    engine_loop(session, cfg, rx, metrics, stop);
                 })?
         };
         ready_rx.recv()??;
@@ -137,25 +148,28 @@ impl Drop for Service {
     }
 }
 
-/// A runtime-generation request waiting in the batcher. `acc` collects
+/// A runtime-generation search waiting in the batcher. `acc` collects
 /// designs across sampler calls when the request spans batches.
 struct PendingGen {
     g: Gemm,
     p_norm: f32,
     n: usize,
+    top_k: usize,
+    objective: Objective,
     acc: Vec<DesignReport>,
     reply: Sender<Response>,
     submitted: Instant,
 }
 
 fn engine_loop(
-    engine: DiffAxE,
+    mut session: Session,
     cfg: ServiceConfig,
     rx: Receiver<Job>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) {
-    let mut seed = cfg.seed;
+    let gen_batch = session.engine().expect("service session has an engine").stats.gen_batch;
+    let mut stream = 0u64;
     let mut pending: Vec<PendingGen> = Vec::new();
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -173,7 +187,7 @@ fn engine_loop(
                 Ok(j) => Some(j),
                 Err(RecvTimeoutError::Timeout) => None,
                 Err(RecvTimeoutError::Disconnected) => {
-                    flush_gen_batch(&engine, &mut pending, &mut seed, &metrics);
+                    flush_gen_batch(&session, &mut pending, cfg.seed, &mut stream, &metrics);
                     return;
                 }
             }
@@ -181,12 +195,24 @@ fn engine_loop(
 
         if let Some(job) = job {
             match job.request {
-                Request::GenerateRuntime { g, target_cycles, n } => {
-                    let st = engine.stats.stats_for(&g);
+                // runtime-conditioned diffusion joins the continuous batcher
+                // (wall-clock-capped requests go through the direct path,
+                // which honours Budget::wall_clock_s)
+                Request::Search(sr)
+                    if sr.optimizer == OptimizerKind::DiffAxE
+                        && matches!(sr.objective, Objective::Runtime { .. })
+                        && sr.budget.wall_clock_s.is_none() =>
+                {
+                    let Objective::Runtime { g, target_cycles } = sr.objective else {
+                        unreachable!("guard matched Runtime")
+                    };
+                    let engine = session.engine().expect("engine");
                     pending.push(PendingGen {
                         g,
-                        p_norm: st.norm_runtime(target_cycles),
-                        n: n.max(1),
+                        p_norm: engine.stats.stats_for(&g).norm_runtime(target_cycles),
+                        n: sr.budget.evals.max(1),
+                        top_k: sr.top_k.unwrap_or(DEFAULT_TOP_K),
+                        objective: sr.objective,
                         acc: Vec::new(),
                         reply: job.reply,
                         submitted: job.submitted,
@@ -194,12 +220,14 @@ fn engine_loop(
                 }
                 other => {
                     // non-batchable requests flush the batch first (ordering)
-                    flush_gen_batch(&engine, &mut pending, &mut seed, &metrics);
-                    let resp = handle_direct(&engine, &other, &mut seed, &metrics);
+                    flush_gen_batch(&session, &mut pending, cfg.seed, &mut stream, &metrics);
+                    let resp =
+                        handle_direct(&mut session, &other, cfg.seed, &mut stream, &metrics);
                     metrics.record_request(
                         job.submitted.elapsed().as_secs_f64() * 1e6,
                         match &resp {
-                            Response::Designs(d) => d.len(),
+                            Response::Outcome(o) => o.ranked.len(),
+                            Response::Batch(outs) => outs.iter().map(|o| o.ranked.len()).sum(),
                             _ => 0,
                         },
                     );
@@ -209,26 +237,29 @@ fn engine_loop(
         }
 
         // flush when full or when the window expired with waiters
-        let slots: usize = pending.iter().map(|p| p.n).sum();
+        let slots: usize = pending.iter().map(|p| p.n.saturating_sub(p.acc.len())).sum();
         let window_expired = pending
             .iter()
             .map(|p| p.submitted.elapsed())
             .max()
             .map(|d| d >= cfg.batch_window)
             .unwrap_or(false);
-        if slots >= engine.stats.gen_batch || (window_expired && !pending.is_empty()) {
-            flush_gen_batch(&engine, &mut pending, &mut seed, &metrics);
+        if slots >= gen_batch || (window_expired && !pending.is_empty()) {
+            flush_gen_batch(&session, &mut pending, cfg.seed, &mut stream, &metrics);
         }
     }
 }
 
-/// Pack pending generation requests into sampler batches and reply.
+/// Pack pending generation requests into sampler batches, batch-evaluate
+/// the designs, and reply with ranked outcomes.
 fn flush_gen_batch(
-    engine: &DiffAxE,
+    session: &Session,
     pending: &mut Vec<PendingGen>,
-    seed: &mut u32,
+    seed: u64,
+    stream: &mut u64,
     metrics: &Arc<Metrics>,
 ) {
+    let Some(engine) = session.engine() else { return };
     while !pending.is_empty() {
         let b = engine.stats.gen_batch;
         // take whole requests while they fit; split oversized ones
@@ -244,103 +275,133 @@ fn flush_gen_batch(
                 break;
             }
         }
-        *seed = seed.wrapping_add(1);
+        *stream += 1;
         let t = Instant::now();
-        let result = engine.sample_runtime(*seed, &slots);
+        let result = engine.sample_runtime(rng::derive_u32(seed, *stream), &slots);
         metrics.record_sampler_call(t.elapsed().as_secs_f64() * 1e6, slots.len(), b);
         match result {
             Ok(configs) => {
-                let mut evaluated = 0;
+                // group the new designs per owning request so each group
+                // runs through the vectorized evaluation hot path
+                let mut per_owner: Vec<Vec<HwConfig>> = vec![Vec::new(); pending.len()];
                 for (slot, hw) in configs.into_iter().enumerate() {
-                    let idx = owners[slot];
+                    per_owner[owners[slot]].push(hw);
+                }
+                let mut evaluated = 0;
+                for (idx, cfgs) in per_owner.iter().enumerate() {
+                    if cfgs.is_empty() {
+                        continue;
+                    }
                     let g = pending[idx].g;
-                    let (s, e) = dse::evaluate(&hw, &g);
-                    evaluated += 1;
-                    pending[idx].acc.push(DesignReport {
-                        hw,
-                        cycles: s.cycles as f64,
-                        power_w: e.power_w,
-                        edp: e.edp,
-                    });
+                    for (hw, (s, e)) in cfgs.iter().zip(evaluate_batch(cfgs, &g)) {
+                        pending[idx].acc.push(DesignReport::from_sim(*hw, &s, &e));
+                    }
+                    evaluated += cfgs.len();
                 }
                 metrics.record_evaluations(evaluated);
                 // retire fully-served requests (from the end, keep indices valid)
                 for idx in (0..pending.len()).rev() {
                     if pending[idx].acc.len() >= pending[idx].n {
                         let p = pending.remove(idx);
-                        metrics.record_request(
-                            p.submitted.elapsed().as_secs_f64() * 1e6,
-                            p.acc.len(),
-                        );
-                        let _ = p.reply.send(Response::Designs(p.acc));
+                        let latency_s = p.submitted.elapsed().as_secs_f64();
+                        metrics.record_request(latency_s * 1e6, p.acc.len());
+                        let outcome = SearchOutcome::from_reports(
+                            "DiffAxE",
+                            &p.objective,
+                            p.acc,
+                            latency_s,
+                        )
+                        .truncated(p.top_k);
+                        let _ = p.reply.send(Response::Outcome(outcome));
                     }
                 }
             }
             Err(e) => {
                 metrics.record_error();
                 for p in pending.drain(..) {
-                    let _ = p.reply.send(Response::Error(format!("sampler failed: {e:#}")));
+                    let _ = p.reply.send(Response::error(
+                        ErrorCode::Internal,
+                        format!("sampler failed: {e:#}"),
+                    ));
                 }
             }
         }
     }
 }
 
+/// Run one search on the session with a derived per-request seed.
+fn run_search(
+    session: &mut Session,
+    sr: &SearchRequest,
+    seed: u64,
+    stream: &mut u64,
+) -> Result<SearchOutcome> {
+    *stream += 1;
+    let out = session.search(sr.optimizer, &sr.objective, &sr.budget, rng::derive(seed, *stream))?;
+    Ok(out.truncated(sr.top_k.unwrap_or(DEFAULT_TOP_K)))
+}
+
+/// Reject detectably-invalid (objective, optimizer) pairings up front —
+/// a client error, reported before any budget is spent.
+fn validate(sr: &SearchRequest) -> Result<(), String> {
+    if sr.optimizer.supports(&sr.objective) {
+        Ok(())
+    } else {
+        Err(format!("optimizer {:?} does not serve this objective", sr.optimizer.name()))
+    }
+}
+
 fn handle_direct(
-    engine: &DiffAxE,
+    session: &mut Session,
     req: &Request,
-    seed: &mut u32,
+    seed: u64,
+    stream: &mut u64,
     metrics: &Arc<Metrics>,
 ) -> Response {
-    *seed = seed.wrapping_add(1);
-    let run = || -> Result<Response> {
-        match req {
-            Request::EdpSearch { g, n_per_class } => {
-                let out = dse::edp::diffaxe_edp(engine, g, *n_per_class, *seed)?;
-                let (s, e) = dse::evaluate(&out.best_hw, g);
-                Ok(Response::Designs(vec![DesignReport {
-                    hw: out.best_hw,
-                    cycles: s.cycles as f64,
-                    power_w: e.power_w,
-                    edp: e.edp,
-                }]))
+    match req {
+        Request::Metrics => Response::MetricsText(metrics.snapshot().to_string()),
+        Request::Search(sr) => {
+            if let Err(msg) = validate(sr) {
+                return Response::error(ErrorCode::BadRequest, msg);
             }
-            Request::PerfSearch { g, n } => {
-                let out = dse::perfopt::diffaxe_perfopt(engine, g, *n, *seed)?;
-                let (s, e) = dse::evaluate(&out.best_hw, g);
-                Ok(Response::Designs(vec![DesignReport {
-                    hw: out.best_hw,
-                    cycles: s.cycles as f64,
-                    power_w: e.power_w,
-                    edp: e.edp,
-                }]))
+            match run_search(session, sr, seed, stream) {
+                Ok(out) => {
+                    metrics.record_evaluations(out.evals);
+                    Response::Outcome(out)
+                }
+                Err(e) => {
+                    metrics.record_error();
+                    Response::error(ErrorCode::Internal, format!("{e:#}"))
+                }
             }
-            Request::LlmSearch { model, stage, n_per_layer } => {
-                let (best, _t) = dse::llm::diffaxe_llm(
-                    engine,
-                    *model,
-                    *stage,
-                    crate::workload::llm::DEFAULT_SEQ,
-                    *n_per_layer,
-                    dse::llm::Platform::Asic32nm,
-                    *seed,
-                )?;
-                Ok(Response::Designs(vec![DesignReport {
-                    hw: best.cfg.base,
-                    cycles: best.sim.cycles as f64,
-                    power_w: best.energy.power_w,
-                    edp: best.energy.edp,
-                }]))
-            }
-            Request::Metrics => Ok(Response::MetricsText(metrics.snapshot().to_string())),
-            Request::GenerateRuntime { .. } => unreachable!("batched upstream"),
         }
-    };
-    match run() {
-        Ok(r) => r,
-        Err(e) => {
-            metrics.record_error();
-            Response::Error(format!("{e:#}"))
+        Request::Batch(items) => {
+            // validate the whole batch before running any item, so a bad
+            // pairing cannot discard minutes of completed sibling searches
+            for (i, sr) in items.iter().enumerate() {
+                if let Err(msg) = validate(sr) {
+                    return Response::error(ErrorCode::BadRequest, format!("batch item {i}: {msg}"));
+                }
+            }
+            let mut outs = Vec::with_capacity(items.len());
+            for (i, sr) in items.iter().enumerate() {
+                match run_search(session, sr, seed, stream) {
+                    Ok(out) => {
+                        metrics.record_evaluations(out.evals);
+                        outs.push(out);
+                    }
+                    Err(e) => {
+                        // all-or-nothing by protocol contract (see the
+                        // `batch` docs in protocol.rs)
+                        metrics.record_error();
+                        return Response::error(
+                            ErrorCode::Internal,
+                            format!("batch item {i} ({}): {e:#}", sr.optimizer.name()),
+                        );
+                    }
+                }
+            }
+            Response::Batch(outs)
         }
     }
 }

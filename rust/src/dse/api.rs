@@ -1,0 +1,1184 @@
+//! The unified DSE API: one [`Objective`] × [`Budget`] interface served by
+//! every search strategy through the [`Optimizer`] trait, plus a
+//! [`Session`] that owns the generative-engine handle and a batched
+//! evaluation hot path ([`evaluate_batch`]).
+//!
+//! The paper's four experiment settings (runtime-conditioned generation,
+//! EDP-class DSE, perf-opt generation, LLM co-design) and its baseline zoo
+//! (BO, GD, random, fixed architectures, GANDSE, AIRCHITECT) all reduce to
+//! `optimizer.search(&objective, &budget, seed) -> SearchOutcome`, so a new
+//! workload or a new searcher is one impl, not a new family of free
+//! functions. The coordinator's wire protocol
+//! ([`crate::coordinator::protocol`]) speaks these exact types.
+//!
+//! # Budget semantics
+//!
+//! `Budget::evals` is honoured exactly by the generative and random
+//! searchers and by BO (it becomes the BO evaluation budget). The GD
+//! searchers take their step/restart structure from their [`GdOptions`]
+//! but cap it so the implied evaluation count (finite differences spend
+//! `1 + 2·dim` evaluations per step) stays within `Budget::evals`, and
+//! report their true cost in [`SearchOutcome::evals`]. `Budget::per_class`
+//! overrides the per-class (or per-layer) generation count for
+//! class-conditioned searches; `Budget::wall_clock_s` is a best-effort cap
+//! checked between sampler / evaluation chunks.
+//!
+//! # Determinism
+//!
+//! Every optimizer derives its randomness from the caller's `seed: u64`
+//! through [`crate::util::rng::split`]; the same `(objective, budget,
+//! seed)` triple yields the same `SearchOutcome` (modulo `search_time_s`).
+
+use super::coarsen;
+use crate::baselines::{bo, gd, BoOptions, FixedArch, GdOptions};
+use crate::design_space::{decode_rounded, encode_norm, HwConfig, TargetSpace, NORM_DIM};
+use crate::energy::EnergyResult;
+use crate::models::{ClassMode, DiffAxE};
+use crate::sim::SimResult;
+use crate::util::rng::{self, Pcg32};
+use crate::util::stats::Timer;
+use crate::workload::{Gemm, LlmModel, Stage};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub use super::llm::Platform;
+
+// ---------------------------------------------------------------------------
+// shared vocabulary types
+// ---------------------------------------------------------------------------
+
+/// What a search is optimizing: a workload plus a metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// §III-C: hit a target runtime — score is `|cycles − T*| / T*`.
+    Runtime { g: Gemm, target_cycles: f64 },
+    /// §III-D: minimize EDP (µJ·cycles) on one GEMM.
+    MinEdp { g: Gemm },
+    /// §III-E: minimize runtime (cycles) on one GEMM.
+    MaxPerf { g: Gemm },
+    /// §VI: minimize whole-model EDP for an LLM inference stage (per-layer
+    /// loop orders chosen optimally for every candidate base config).
+    LlmEdp { model: LlmModel, stage: Stage, seq: u32, platform: Platform },
+}
+
+impl Objective {
+    /// The single GEMM this objective evaluates on, if it is GEMM-shaped.
+    pub fn gemm(&self) -> Option<Gemm> {
+        match self {
+            Objective::Runtime { g, .. }
+            | Objective::MinEdp { g }
+            | Objective::MaxPerf { g } => Some(*g),
+            Objective::LlmEdp { .. } => None,
+        }
+    }
+
+    /// Score of an already-evaluated design (lower is better).
+    pub fn score_report(&self, d: &DesignReport) -> f64 {
+        match self {
+            Objective::Runtime { target_cycles, .. } => {
+                ((d.cycles - target_cycles) / target_cycles).abs()
+            }
+            Objective::MinEdp { .. } | Objective::LlmEdp { .. } => d.edp,
+            Objective::MaxPerf { .. } => d.cycles,
+        }
+    }
+
+    /// Evaluate one configuration under this objective.
+    pub fn evaluate(&self, hw: &HwConfig) -> DesignReport {
+        match self {
+            Objective::Runtime { g, .. }
+            | Objective::MinEdp { g }
+            | Objective::MaxPerf { g } => {
+                let (s, e) = super::evaluate(hw, g);
+                DesignReport::from_sim(*hw, &s, &e)
+            }
+            Objective::LlmEdp { model, stage, seq, platform } => {
+                let ev = super::llm::eval_model(hw, *model, *stage, *seq, *platform);
+                DesignReport {
+                    hw: *hw,
+                    cycles: ev.sim.cycles as f64,
+                    power_w: ev.energy.power_w,
+                    edp: ev.energy.edp,
+                }
+            }
+        }
+    }
+
+    /// Score one configuration (evaluates it; lower is better).
+    pub fn score(&self, hw: &HwConfig) -> f64 {
+        self.score_report(&self.evaluate(hw))
+    }
+
+    /// Evaluate a batch of configurations in parallel, preserving order.
+    /// Results are bit-identical to calling [`Objective::evaluate`] per
+    /// element (the evaluation is pure; threads only partition the batch).
+    pub fn evaluate_all(&self, cfgs: &[HwConfig]) -> Vec<DesignReport> {
+        match self {
+            Objective::Runtime { g, .. }
+            | Objective::MinEdp { g }
+            | Objective::MaxPerf { g } => evaluate_batch(cfgs, g)
+                .into_iter()
+                .zip(cfgs)
+                .map(|((s, e), hw)| DesignReport::from_sim(*hw, &s, &e))
+                .collect(),
+            Objective::LlmEdp { .. } => par_map(cfgs, |hw| self.evaluate(hw)),
+        }
+    }
+
+    /// Loss transform for gradient descent: log-compress the wide-dynamic-
+    /// range metrics (EDP spans decades); relative runtime error is already
+    /// well-scaled.
+    fn gd_loss(&self, score: f64) -> f64 {
+        match self {
+            Objective::Runtime { .. } => score,
+            _ => score.max(f64::MIN_POSITIVE).ln(),
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Objective::Runtime { g, target_cycles } => {
+                write!(f, "runtime {g} -> {target_cycles:.0} cycles")
+            }
+            Objective::MinEdp { g } => write!(f, "min-EDP {g}"),
+            Objective::MaxPerf { g } => write!(f, "max-perf {g}"),
+            Objective::LlmEdp { model, stage, seq, platform } => {
+                write!(f, "LLM-EDP {} {} seq={seq} {platform:?}", model.name(), stage.name())
+            }
+        }
+    }
+}
+
+/// How much a search may spend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Budget {
+    /// Total evaluation budget (designs generated / points evaluated).
+    pub evals: usize,
+    /// Per-class (EDP classes) or per-layer (LLM) generation count for the
+    /// class-conditioned searches; derived from `evals` when `None`.
+    pub per_class: Option<usize>,
+    /// Best-effort wall-clock cap in seconds, checked between chunks.
+    pub wall_clock_s: Option<f64>,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Budget { evals: 256, per_class: None, wall_clock_s: None }
+    }
+}
+
+impl Budget {
+    /// A plain evaluation-count budget.
+    pub fn evals(n: usize) -> Budget {
+        Budget { evals: n, ..Default::default() }
+    }
+
+    /// Builder: set the per-class generation count.
+    pub fn with_per_class(mut self, n: usize) -> Budget {
+        self.per_class = Some(n);
+        self
+    }
+
+    /// Builder: set the wall-clock cap.
+    pub fn with_wall_clock(mut self, s: f64) -> Budget {
+        self.wall_clock_s = Some(s);
+        self
+    }
+
+    /// Per-class count for a search over `n_classes` classes.
+    pub fn class_count(&self, n_classes: usize) -> usize {
+        self.per_class.unwrap_or_else(|| (self.evals / n_classes.max(1)).max(1))
+    }
+
+    /// True once the wall-clock cap (if any) has been reached.
+    pub fn expired(&self, timer: &Timer) -> bool {
+        self.wall_clock_s.map(|cap| timer.elapsed_s() >= cap).unwrap_or(false)
+    }
+}
+
+/// One evaluated design. This is also the wire unit the coordinator
+/// returns (see [`crate::coordinator::protocol`] for its JSON encoding).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignReport {
+    pub hw: HwConfig,
+    pub cycles: f64,
+    pub power_w: f64,
+    pub edp: f64,
+}
+
+impl DesignReport {
+    pub fn from_sim(hw: HwConfig, s: &SimResult, e: &EnergyResult) -> DesignReport {
+        DesignReport { hw, cycles: s.cycles as f64, power_w: e.power_w, edp: e.edp }
+    }
+}
+
+/// The result of one `Optimizer::search` call: every evaluated design
+/// ranked best-first, the per-evaluation score trace (evaluation order),
+/// and cost accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchOutcome {
+    /// Display name of the optimizer that produced this outcome.
+    pub optimizer: String,
+    /// Evaluated designs, best (lowest score) first.
+    pub ranked: Vec<DesignReport>,
+    /// Objective score of each evaluation, in evaluation order.
+    pub trace: Vec<f64>,
+    /// Number of objective evaluations actually spent.
+    pub evals: usize,
+    /// Wall-clock cost in seconds.
+    pub search_time_s: f64,
+}
+
+impl SearchOutcome {
+    /// Rank `reports` under `objective` and assemble the outcome.
+    pub fn from_reports(
+        optimizer: &str,
+        objective: &Objective,
+        reports: Vec<DesignReport>,
+        search_time_s: f64,
+    ) -> SearchOutcome {
+        let trace: Vec<f64> = reports.iter().map(|d| objective.score_report(d)).collect();
+        let mut order: Vec<usize> = (0..reports.len()).collect();
+        order.sort_by(|&a, &b| {
+            trace[a].partial_cmp(&trace[b]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let ranked: Vec<DesignReport> = order.into_iter().map(|i| reports[i]).collect();
+        SearchOutcome {
+            optimizer: optimizer.to_string(),
+            evals: reports.len(),
+            ranked,
+            trace,
+            search_time_s,
+        }
+    }
+
+    /// Best design found (lowest score), if any evaluation happened.
+    pub fn best(&self) -> Option<&DesignReport> {
+        self.ranked.first()
+    }
+
+    /// Best (minimum) score over the whole search.
+    pub fn best_score(&self) -> f64 {
+        self.trace.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Mean score over every evaluation — the paper's `error_gen` protocol
+    /// for the generative methods (all generated designs count).
+    pub fn mean_score(&self) -> f64 {
+        if self.trace.is_empty() {
+            f64::NAN
+        } else {
+            self.trace.iter().sum::<f64>() / self.trace.len() as f64
+        }
+    }
+
+    /// Keep only the top-`k` ranked designs (trace and accounting intact).
+    pub fn truncated(mut self, k: usize) -> SearchOutcome {
+        self.ranked.truncate(k);
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batched evaluation hot path
+// ---------------------------------------------------------------------------
+
+/// Below this batch size threading overhead beats the win; run inline.
+const PAR_THRESHOLD: usize = 64;
+
+/// Simulate + ASIC-evaluate a batch of configurations on one workload,
+/// partitioned over threads. Order-preserving and bit-identical to calling
+/// [`super::evaluate`] per element — the hot path is pure, so threads only
+/// split the index range.
+pub fn evaluate_batch(cfgs: &[HwConfig], g: &Gemm) -> Vec<(SimResult, EnergyResult)> {
+    par_map(cfgs, |hw| super::evaluate(hw, g))
+}
+
+/// Order-preserving parallel map over contiguous chunks via scoped threads
+/// (rayon is not in the offline registry).
+fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if threads <= 1 || items.len() < PAR_THRESHOLD {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        let mut out = Vec::with_capacity(items.len());
+        for h in handles {
+            out.extend(h.join().expect("evaluation worker panicked"));
+        }
+        out
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the Optimizer trait
+// ---------------------------------------------------------------------------
+
+/// A search strategy: anything that can spend a [`Budget`] chasing an
+/// [`Objective`] from a seed.
+pub trait Optimizer {
+    /// Display name (used in tables and wire responses).
+    fn name(&self) -> &'static str;
+
+    /// Run the search. Deterministic in `(objective, budget, seed)`.
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome>;
+}
+
+impl<T: Optimizer + ?Sized> Optimizer for &mut T {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+        (**self).search(obj, budget, seed)
+    }
+}
+
+/// Nameable optimizer selector — the wire protocol's `"optimizer"` field
+/// and [`Session::search`]'s strategy key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    DiffAxE,
+    VanillaBo,
+    LatentBo,
+    VanillaGd,
+    DosaGd,
+    Polaris,
+    RandomSearch,
+    Fixed(FixedArch),
+    GanDse,
+    AirchitectV1,
+    AirchitectV2,
+}
+
+impl OptimizerKind {
+    pub const ALL: [OptimizerKind; 13] = [
+        OptimizerKind::DiffAxE,
+        OptimizerKind::VanillaBo,
+        OptimizerKind::LatentBo,
+        OptimizerKind::VanillaGd,
+        OptimizerKind::DosaGd,
+        OptimizerKind::Polaris,
+        OptimizerKind::RandomSearch,
+        OptimizerKind::Fixed(FixedArch::Eyeriss),
+        OptimizerKind::Fixed(FixedArch::ShiDianNao),
+        OptimizerKind::Fixed(FixedArch::Nvdla),
+        OptimizerKind::GanDse,
+        OptimizerKind::AirchitectV1,
+        OptimizerKind::AirchitectV2,
+    ];
+
+    /// Stable wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::DiffAxE => "diffaxe",
+            OptimizerKind::VanillaBo => "vanilla-bo",
+            OptimizerKind::LatentBo => "latent-bo",
+            OptimizerKind::VanillaGd => "vanilla-gd",
+            OptimizerKind::DosaGd => "dosa-gd",
+            OptimizerKind::Polaris => "polaris",
+            OptimizerKind::RandomSearch => "random",
+            OptimizerKind::Fixed(FixedArch::Eyeriss) => "fixed-eyeriss",
+            OptimizerKind::Fixed(FixedArch::ShiDianNao) => "fixed-shidiannao",
+            OptimizerKind::Fixed(FixedArch::Nvdla) => "fixed-nvdla",
+            OptimizerKind::GanDse => "gandse",
+            OptimizerKind::AirchitectV1 => "airchitect-v1",
+            OptimizerKind::AirchitectV2 => "airchitect-v2",
+        }
+    }
+
+    /// Parse a wire name (inverse of [`OptimizerKind::name`]).
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        OptimizerKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Whether this strategy needs the compiled generative engine.
+    pub fn needs_engine(&self) -> bool {
+        matches!(
+            self,
+            OptimizerKind::DiffAxE
+                | OptimizerKind::LatentBo
+                | OptimizerKind::Polaris
+                | OptimizerKind::GanDse
+                | OptimizerKind::AirchitectV1
+                | OptimizerKind::AirchitectV2
+        )
+    }
+
+    /// Whether this strategy can serve the given objective (lets callers
+    /// reject an unsupported pairing before any budget is spent).
+    pub fn supports(&self, obj: &Objective) -> bool {
+        match self {
+            OptimizerKind::GanDse => matches!(obj, Objective::Runtime { .. }),
+            OptimizerKind::AirchitectV1 | OptimizerKind::AirchitectV2 => obj.gemm().is_some(),
+            _ => true,
+        }
+    }
+}
+
+/// Chunked conditional generation: draw up to `n` configurations in
+/// sampler-batch-sized chunks, stopping early at the wall-clock cap. The
+/// closure gets `(chunk_index, take)` and performs one sampler call.
+fn sample_chunked(
+    n: usize,
+    gen_batch: usize,
+    budget: &Budget,
+    timer: &Timer,
+    mut sample: impl FnMut(u64, usize) -> Result<Vec<HwConfig>>,
+) -> Result<Vec<HwConfig>> {
+    let mut cfgs = Vec::with_capacity(n);
+    let mut chunk = 0u64;
+    while cfgs.len() < n && !budget.expired(timer) {
+        let take = (n - cfgs.len()).min(gen_batch);
+        cfgs.extend(sample(chunk, take)?);
+        chunk += 1;
+    }
+    Ok(cfgs)
+}
+
+// ---------------------------------------------------------------------------
+// generative searches (the engine IS an optimizer)
+// ---------------------------------------------------------------------------
+
+impl Optimizer for DiffAxE {
+    fn name(&self) -> &'static str {
+        "DiffAxE"
+    }
+
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+        let timer = Timer::start();
+        let b = self.stats.gen_batch;
+        let cfgs = match obj {
+            Objective::Runtime { g, target_cycles } => {
+                let p = self.stats.stats_for(g).norm_runtime(*target_cycles);
+                sample_chunked(budget.evals.max(1), b, budget, &timer, |chunk, take| {
+                    let conds: Vec<(f32, [f32; 3])> = vec![(p, g.norm_vec()); take];
+                    self.sample_runtime(rng::derive_u32(seed, chunk), &conds)
+                })?
+            }
+            Objective::MinEdp { g } => {
+                let n_classes = self.stats.n_power * self.stats.n_perf;
+                let per_class = budget.class_count(n_classes);
+                let mut cfgs = Vec::with_capacity(n_classes * per_class);
+                for class in 0..n_classes {
+                    if budget.expired(&timer) {
+                        break;
+                    }
+                    cfgs.extend(sample_chunked(per_class, b, budget, &timer, |chunk, take| {
+                        let conds: Vec<(i32, [f32; 3])> =
+                            vec![(class as i32, g.norm_vec()); take];
+                        let s = rng::derive_u32(seed, ((class as u64) << 24) | chunk);
+                        self.sample_class(ClassMode::Edp, s, &conds)
+                    })?);
+                }
+                cfgs
+            }
+            Objective::MaxPerf { g } => {
+                // condition on class 0: the lowest-EDP percentile (§III-E)
+                sample_chunked(budget.evals.max(1), b, budget, &timer, |chunk, take| {
+                    let conds: Vec<(i32, [f32; 3])> = vec![(0, g.norm_vec()); take];
+                    self.sample_class(ClassMode::PerfOpt, rng::derive_u32(seed, chunk), &conds)
+                })?
+            }
+            Objective::LlmEdp { model, stage, seq, .. } => {
+                // candidate base configs from the low-EDP class conditioned
+                // on each layer's shape; dedup before the expensive
+                // whole-model evaluation
+                let gemms = model.layer_gemms(*stage, *seq);
+                let per_layer = budget.class_count(gemms.len());
+                let mut cfgs = Vec::with_capacity(gemms.len() * per_layer);
+                for (li, g) in gemms.iter().enumerate() {
+                    if budget.expired(&timer) {
+                        break;
+                    }
+                    cfgs.extend(sample_chunked(per_layer, b, budget, &timer, |chunk, take| {
+                        let conds: Vec<(i32, [f32; 3])> = vec![(0, g.norm_vec()); take];
+                        let s = rng::derive_u32(seed, ((li as u64) << 24) | chunk);
+                        self.sample_class(ClassMode::Edp, s, &conds)
+                    })?);
+                }
+                cfgs.sort_by_key(|h| (h.r, h.c, h.ip_b, h.wt_b, h.op_b, h.bw));
+                cfgs.dedup();
+                cfgs
+            }
+        };
+        anyhow::ensure!(!cfgs.is_empty(), "generation produced no candidates");
+        let reports = obj.evaluate_all(&cfgs);
+        Ok(SearchOutcome::from_reports("DiffAxE", obj, reports, timer.elapsed_s()))
+    }
+}
+
+/// GANDSE one-shot GAN generation — runtime-conditioned only.
+pub struct GanDse<'e> {
+    pub engine: &'e DiffAxE,
+}
+
+impl Optimizer for GanDse<'_> {
+    fn name(&self) -> &'static str {
+        "GANDSE"
+    }
+
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+        let Objective::Runtime { g, target_cycles } = obj else {
+            bail!("GANDSE is runtime-conditioned only; objective {obj} unsupported");
+        };
+        let timer = Timer::start();
+        let b = self.engine.stats.gen_batch;
+        let p = self.engine.stats.stats_for(g).norm_runtime(*target_cycles);
+        let cfgs = sample_chunked(budget.evals.max(1), b, budget, &timer, |chunk, take| {
+            let conds: Vec<(f32, [f32; 3])> = vec![(p, g.norm_vec()); take];
+            self.engine.gandse_generate(rng::derive_u32(seed, chunk), &conds)
+        })?;
+        let reports = obj.evaluate_all(&cfgs);
+        Ok(SearchOutcome::from_reports("GANDSE", obj, reports, timer.elapsed_s()))
+    }
+}
+
+/// AIRCHITECT v1/v2 one-shot recommenders (Fig 17 baselines).
+pub struct Airchitect<'e> {
+    pub engine: &'e DiffAxE,
+    /// v2 = direct regression; v1 = argmax over the fixed grid.
+    pub v2: bool,
+}
+
+impl Optimizer for Airchitect<'_> {
+    fn name(&self) -> &'static str {
+        if self.v2 { "AIRCHITECT v2" } else { "AIRCHITECT" }
+    }
+
+    fn search(&mut self, obj: &Objective, _budget: &Budget, _seed: u64) -> Result<SearchOutcome> {
+        let timer = Timer::start();
+        let g = obj
+            .gemm()
+            .with_context(|| format!("AIRCHITECT recommends per-GEMM; objective {obj} unsupported"))?;
+        let hw =
+            if self.v2 { self.engine.airchitect_v2(&g)? } else { self.engine.airchitect_v1(&g)? };
+        let reports = vec![obj.evaluate(&hw)];
+        Ok(SearchOutcome::from_reports(self.name(), obj, reports, timer.elapsed_s()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// optimization baselines
+// ---------------------------------------------------------------------------
+
+/// Vanilla BO over the 8-d normalized hardware encoding.
+#[derive(Debug, Clone, Default)]
+pub struct VanillaBo {
+    pub opts: BoOptions,
+}
+
+/// Clamp BO options so `bo::minimize`'s invariants hold under any budget.
+fn bo_opts_for(opts: &BoOptions, budget: &Budget) -> BoOptions {
+    let mut o = opts.clone();
+    o.budget = budget.evals.max(2);
+    o.n_init = o.n_init.clamp(2, o.budget);
+    o
+}
+
+/// Cap a GD schedule so its implied evaluation count stays within
+/// `budget.evals`. `evals_per_step` is 1 for analytic gradients and
+/// `1 + 2·dim` for central finite differences; each restart spends
+/// `steps + 1` gradient evaluations.
+fn gd_opts_for(opts: &GdOptions, budget: &Budget, evals_per_step: usize) -> GdOptions {
+    let mut o = opts.clone();
+    let unit = evals_per_step.max(1);
+    o.restarts = o.restarts.max(1).min((budget.evals / (2 * unit)).max(1));
+    o.steps = o.steps.max(1).min((budget.evals / (o.restarts * unit)).max(2) - 1);
+    o
+}
+
+impl Optimizer for VanillaBo {
+    fn name(&self) -> &'static str {
+        "Vanilla BO"
+    }
+
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+        let timer = Timer::start();
+        let o = bo_opts_for(&self.opts, budget);
+        let mut rng = rng::split(seed, 10);
+        let mut reports = Vec::with_capacity(o.budget);
+        bo::minimize(
+            |r: &mut Pcg32| {
+                encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect()
+            },
+            |x| {
+                let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                let d = obj.evaluate(&decode_rounded(&v));
+                let s = obj.score_report(&d);
+                reports.push(d);
+                s
+            },
+            &o,
+            &mut rng,
+        );
+        Ok(SearchOutcome::from_reports("Vanilla BO", obj, reports, timer.elapsed_s()))
+    }
+}
+
+/// VAESA-style latent BO: search the Phase-1 latent space, decode through
+/// the AE, evaluate on the simulator.
+pub struct LatentBo<'e> {
+    pub engine: &'e DiffAxE,
+    pub opts: BoOptions,
+}
+
+impl Optimizer for LatentBo<'_> {
+    fn name(&self) -> &'static str {
+        "Latent BO (VAESA)"
+    }
+
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+        let timer = Timer::start();
+        let o = bo_opts_for(&self.opts, budget);
+        let mut rng = rng::split(seed, 11);
+        // candidate generator: latents of random target-space configs
+        let pool: Vec<Vec<f32>> = (0..(o.budget * 2).max(4))
+            .map(|_| encode_norm(&TargetSpace::sample(&mut rng)).to_vec())
+            .collect();
+        let latents = self.engine.encode(&pool)?;
+        let mut pool_iter = 0usize;
+        let mut reports = Vec::with_capacity(o.budget);
+        let engine = self.engine;
+        bo::minimize(
+            |_r: &mut Pcg32| {
+                let l = &latents[pool_iter % latents.len()];
+                pool_iter += 1;
+                l.iter().map(|&x| x as f64).collect()
+            },
+            |x| {
+                let lat: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                match engine.decode_rounded(&[lat]) {
+                    Ok(cfgs) => {
+                        let d = obj.evaluate(&cfgs[0]);
+                        let s = obj.score_report(&d);
+                        reports.push(d);
+                        s
+                    }
+                    Err(_) => f64::INFINITY,
+                }
+            },
+            &o,
+            &mut rng,
+        );
+        anyhow::ensure!(!reports.is_empty(), "latent decode failed for every BO iterate");
+        Ok(SearchOutcome::from_reports("Latent BO (VAESA)", obj, reports, timer.elapsed_s()))
+    }
+}
+
+/// Vanilla GD in hardware space: the exported differentiable surrogate's
+/// gradient for runtime objectives (when the engine is available), plain
+/// finite differences on the real simulator otherwise.
+pub struct VanillaGd<'e> {
+    pub engine: Option<&'e DiffAxE>,
+    pub opts: GdOptions,
+}
+
+impl Optimizer for VanillaGd<'_> {
+    fn name(&self) -> &'static str {
+        "Vanilla GD"
+    }
+
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+        let timer = Timer::start();
+        let mut rng = rng::split(seed, 12);
+        let reports = match (obj, self.engine) {
+            (Objective::Runtime { g, target_cycles }, Some(engine)) => {
+                let opts = gd_opts_for(&self.opts, budget, 1);
+                let p = engine.stats.stats_for(g).norm_runtime(*target_cycles);
+                let res = gd::descend(
+                    |x: &[f64]| {
+                        let hw: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                        let (losses, grads) =
+                            engine.surrogate_grad(&[hw], g, &[p]).expect("surrogate_grad");
+                        (losses[0] as f64, grads[0].iter().map(|&g| g as f64).collect())
+                    },
+                    |r: &mut Pcg32| {
+                        encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect()
+                    },
+                    &opts,
+                    &mut rng,
+                );
+                let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+                // the surrogate was trained on the coarse grid: snap to it
+                vec![obj.evaluate(&coarsen(&decode_rounded(&v)))]
+            }
+            _ => {
+                let opts = gd_opts_for(&self.opts, budget, 1 + 2 * NORM_DIM);
+                let mut reports = Vec::new();
+                let res = gd::fd_gd(
+                    |x: &[f64]| {
+                        let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                        let d = obj.evaluate(&decode_rounded(&v));
+                        let s = obj.score_report(&d);
+                        reports.push(d);
+                        obj.gd_loss(s)
+                    },
+                    |r: &mut Pcg32| {
+                        encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect()
+                    },
+                    0.05,
+                    &opts,
+                    &mut rng,
+                );
+                let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+                reports.push(obj.evaluate(&decode_rounded(&v)));
+                reports
+            }
+        };
+        Ok(SearchOutcome::from_reports("Vanilla GD", obj, reports, timer.elapsed_s()))
+    }
+}
+
+/// DOSA-style GD: finite differences on the real simulator over the
+/// *coarse* training grid (Table IV: DOSA searches ~O(10^7) granularity).
+#[derive(Debug, Clone, Default)]
+pub struct DosaGd {
+    pub opts: GdOptions,
+}
+
+impl Optimizer for DosaGd {
+    fn name(&self) -> &'static str {
+        "DOSA (coarse GD)"
+    }
+
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+        let timer = Timer::start();
+        let opts = gd_opts_for(&self.opts, budget, 1 + 2 * NORM_DIM);
+        let mut rng = rng::split(seed, 13);
+        let mut reports = Vec::new();
+        let res = gd::fd_gd(
+            |x: &[f64]| {
+                let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                let d = obj.evaluate(&coarsen(&decode_rounded(&v)));
+                let s = obj.score_report(&d);
+                reports.push(d);
+                obj.gd_loss(s)
+            },
+            |r: &mut Pcg32| {
+                encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect()
+            },
+            0.05,
+            &opts,
+            &mut rng,
+        );
+        let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+        reports.push(obj.evaluate(&coarsen(&decode_rounded(&v))));
+        Ok(SearchOutcome::from_reports("DOSA (coarse GD)", obj, reports, timer.elapsed_s()))
+    }
+}
+
+/// Polaris-style latent GD: the exported PP gradient in latent space for
+/// runtime objectives; a random 8-d latent subspace descended by finite
+/// differences (multi-fidelity flavour) for the EDP-class objectives.
+pub struct Polaris<'e> {
+    pub engine: &'e DiffAxE,
+    pub opts: GdOptions,
+}
+
+impl Optimizer for Polaris<'_> {
+    fn name(&self) -> &'static str {
+        "Polaris (latent GD)"
+    }
+
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+        let timer = Timer::start();
+        let mut rng = rng::split(seed, 14);
+        let engine = self.engine;
+        let reports = match obj {
+            Objective::Runtime { g, target_cycles } => {
+                let p = engine.stats.stats_for(g).norm_runtime(*target_cycles);
+                // the latent space has no box bounds: clamp off
+                let res = gd::descend(
+                    |x: &[f64]| {
+                        let lat: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                        let (losses, grads) =
+                            engine.pp_grad(&[lat], g, &[p]).expect("pp_grad");
+                        (losses[0] as f64, grads[0].iter().map(|&g| g as f64).collect())
+                    },
+                    |r: &mut Pcg32| {
+                        let hw = encode_norm(&TargetSpace::sample(r)).to_vec();
+                        engine.encode(&[hw]).expect("encode")[0]
+                            .iter()
+                            .map(|&x| x as f64)
+                            .collect()
+                    },
+                    &GdOptions { clamp: false, ..gd_opts_for(&self.opts, budget, 1) },
+                    &mut rng,
+                );
+                let lat: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+                vec![obj.evaluate(&engine.decode_rounded(&[lat])?[0])]
+            }
+            _ => {
+                // FD over the full latent dim is expensive; descend a random
+                // 8-d subspace around an encoded anchor
+                let anchor = {
+                    let hw = encode_norm(&TargetSpace::sample(&mut rng)).to_vec();
+                    engine.encode(&[hw])?[0].clone()
+                };
+                let d = anchor.len();
+                let dirs: Vec<Vec<f32>> = (0..8)
+                    .map(|_| {
+                        let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                        v.iter().map(|x| x / n).collect()
+                    })
+                    .collect();
+                let to_latent = |x: &[f64]| -> Vec<f32> {
+                    let mut l = anchor.clone();
+                    for (coef, dir) in x.iter().zip(&dirs) {
+                        for (li, di) in l.iter_mut().zip(dir) {
+                            *li += (*coef as f32 - 0.5) * 8.0 * di;
+                        }
+                    }
+                    l
+                };
+                let mut reports = Vec::new();
+                gd::fd_gd(
+                    |x: &[f64]| match engine.decode_rounded(&[to_latent(x)]) {
+                        Ok(cfgs) => {
+                            let d = obj.evaluate(&coarsen(&cfgs[0]));
+                            let s = obj.score_report(&d);
+                            reports.push(d);
+                            obj.gd_loss(s)
+                        }
+                        Err(_) => f64::INFINITY,
+                    },
+                    |r: &mut Pcg32| (0..8).map(|_| r.f64()).collect(),
+                    0.05,
+                    &gd_opts_for(&self.opts, budget, 1 + 2 * 8),
+                    &mut rng,
+                );
+                anyhow::ensure!(!reports.is_empty(), "latent decode failed for every iterate");
+                reports
+            }
+        };
+        Ok(SearchOutcome::from_reports("Polaris (latent GD)", obj, reports, timer.elapsed_s()))
+    }
+}
+
+/// Uniform random search over the full target design space.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RandomSearch;
+
+impl Optimizer for RandomSearch {
+    fn name(&self) -> &'static str {
+        "Random Search"
+    }
+
+    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+        let timer = Timer::start();
+        let mut rng = rng::split(seed, 15);
+        let n = budget.evals.max(1);
+        let mut reports = Vec::with_capacity(n);
+        while reports.len() < n && !budget.expired(&timer) {
+            let take = (n - reports.len()).min(1024);
+            let cfgs: Vec<HwConfig> = (0..take).map(|_| TargetSpace::sample(&mut rng)).collect();
+            reports.extend(obj.evaluate_all(&cfgs));
+        }
+        Ok(SearchOutcome::from_reports("Random Search", obj, reports, timer.elapsed_s()))
+    }
+}
+
+impl Optimizer for FixedArch {
+    fn name(&self) -> &'static str {
+        FixedArch::name(self)
+    }
+
+    fn search(&mut self, obj: &Objective, _budget: &Budget, _seed: u64) -> Result<SearchOutcome> {
+        let timer = Timer::start();
+        // one candidate: the fixed silicon (LLM objectives still grant it
+        // per-layer loop-order choice — charitable, see FixedArch::config)
+        let reports = vec![obj.evaluate(&self.config())];
+        Ok(SearchOutcome::from_reports(FixedArch::name(self), obj, reports, timer.elapsed_s()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session: engine ownership + strategy dispatch
+// ---------------------------------------------------------------------------
+
+/// A DSE session: owns the (optional) generative engine and the shared
+/// baseline options, dispatches [`Session::search`] calls to any
+/// [`OptimizerKind`], and exposes the batched evaluation hot path.
+///
+/// The engine holds PJRT executables (raw C pointers, deliberately
+/// `!Send`), so a `Session` lives on one thread — the coordinator service
+/// wraps one in its dedicated engine thread.
+pub struct Session {
+    engine: Option<DiffAxE>,
+    pub bo_opts: BoOptions,
+    pub gd_opts: GdOptions,
+}
+
+impl Session {
+    /// A session around a loaded engine.
+    pub fn new(engine: DiffAxE) -> Session {
+        Session { engine: Some(engine), bo_opts: BoOptions::default(), gd_opts: GdOptions::default() }
+    }
+
+    /// Load the AOT artifacts in `dir` and wrap them in a session.
+    pub fn load(dir: &Path) -> Result<Session> {
+        Ok(Session::new(DiffAxE::load(dir)?))
+    }
+
+    /// A session without the generative engine: only the simulator-backed
+    /// strategies (random, vanilla BO/GD, DOSA GD, fixed archs) work.
+    pub fn simulator_only() -> Session {
+        Session { engine: None, bo_opts: BoOptions::default(), gd_opts: GdOptions::default() }
+    }
+
+    pub fn engine(&self) -> Option<&DiffAxE> {
+        self.engine.as_ref()
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.engine.is_some()
+    }
+
+    fn engine_required(&self, kind: OptimizerKind) -> Result<&DiffAxE> {
+        self.engine
+            .as_ref()
+            .with_context(|| format!("optimizer {:?} requires the generative engine", kind.name()))
+    }
+
+    /// Evaluate a batch of configurations on one workload over the
+    /// session's vectorized objective (see [`evaluate_batch`]).
+    pub fn evaluate_batch(&self, cfgs: &[HwConfig], g: &Gemm) -> Vec<(SimResult, EnergyResult)> {
+        evaluate_batch(cfgs, g)
+    }
+
+    /// Run one search with the named strategy.
+    pub fn search(
+        &mut self,
+        kind: OptimizerKind,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        match kind {
+            OptimizerKind::DiffAxE => self
+                .engine
+                .as_mut()
+                .context("optimizer \"diffaxe\" requires the generative engine")?
+                .search(obj, budget, seed),
+            OptimizerKind::VanillaBo => {
+                VanillaBo { opts: self.bo_opts.clone() }.search(obj, budget, seed)
+            }
+            OptimizerKind::LatentBo => {
+                LatentBo { engine: self.engine_required(kind)?, opts: self.bo_opts.clone() }
+                    .search(obj, budget, seed)
+            }
+            OptimizerKind::VanillaGd => {
+                VanillaGd { engine: self.engine.as_ref(), opts: self.gd_opts.clone() }
+                    .search(obj, budget, seed)
+            }
+            OptimizerKind::DosaGd => {
+                DosaGd { opts: self.gd_opts.clone() }.search(obj, budget, seed)
+            }
+            OptimizerKind::Polaris => {
+                Polaris { engine: self.engine_required(kind)?, opts: self.gd_opts.clone() }
+                    .search(obj, budget, seed)
+            }
+            OptimizerKind::RandomSearch => RandomSearch.search(obj, budget, seed),
+            OptimizerKind::Fixed(mut arch) => arch.search(obj, budget, seed),
+            OptimizerKind::GanDse => {
+                GanDse { engine: self.engine_required(kind)? }.search(obj, budget, seed)
+            }
+            OptimizerKind::AirchitectV1 => {
+                Airchitect { engine: self.engine_required(kind)?, v2: false }
+                    .search(obj, budget, seed)
+            }
+            OptimizerKind::AirchitectV2 => {
+                Airchitect { engine: self.engine_required(kind)?, v2: true }
+                    .search(obj, budget, seed)
+            }
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::LoopOrder;
+
+    fn small_gd() -> GdOptions {
+        GdOptions { steps: 4, restarts: 2, ..Default::default() }
+    }
+
+    fn small_bo() -> BoOptions {
+        BoOptions { n_init: 4, budget: 10, pool: 16, ..Default::default() }
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_scalar() {
+        let mut rng = Pcg32::seeded(7);
+        let cfgs: Vec<HwConfig> = (0..200).map(|_| TargetSpace::sample(&mut rng)).collect();
+        let g = Gemm::new(128, 768, 768);
+        let batch = evaluate_batch(&cfgs, &g);
+        assert_eq!(batch.len(), cfgs.len());
+        for (hw, (s, e)) in cfgs.iter().zip(&batch) {
+            let (s2, e2) = crate::dse::evaluate(hw, &g);
+            assert_eq!(*s, s2);
+            assert_eq!(*e, e2);
+        }
+    }
+
+    #[test]
+    fn evaluate_all_preserves_order() {
+        let mut rng = Pcg32::seeded(9);
+        let cfgs: Vec<HwConfig> = (0..130).map(|_| TargetSpace::sample(&mut rng)).collect();
+        let obj = Objective::MaxPerf { g: Gemm::new(64, 256, 512) };
+        let reports = obj.evaluate_all(&cfgs);
+        for (hw, d) in cfgs.iter().zip(&reports) {
+            assert_eq!(*hw, d.hw);
+            assert_eq!(d.cycles, obj.evaluate(hw).cycles);
+        }
+    }
+
+    fn engine_free_outcomes(obj: &Objective, budget: &Budget, seed: u64) -> Vec<SearchOutcome> {
+        vec![
+            RandomSearch.search(obj, budget, seed).unwrap(),
+            VanillaBo { opts: small_bo() }.search(obj, budget, seed).unwrap(),
+            VanillaGd { engine: None, opts: small_gd() }.search(obj, budget, seed).unwrap(),
+            DosaGd { opts: small_gd() }.search(obj, budget, seed).unwrap(),
+            FixedArch::Eyeriss.search(obj, budget, seed).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn same_seed_same_outcome_for_every_engine_free_optimizer() {
+        for obj in [
+            Objective::MinEdp { g: Gemm::new(64, 256, 512) },
+            Objective::Runtime { g: Gemm::new(128, 768, 768), target_cycles: 1e6 },
+            Objective::MaxPerf { g: Gemm::new(32, 128, 256) },
+        ] {
+            let budget = Budget::evals(16);
+            let a = engine_free_outcomes(&obj, &budget, 42);
+            let b = engine_free_outcomes(&obj, &budget, 42);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.optimizer, y.optimizer);
+                assert_eq!(x.ranked, y.ranked, "{} not deterministic", x.optimizer);
+                assert_eq!(x.trace, y.trace, "{} trace not deterministic", x.optimizer);
+                assert_eq!(x.evals, y.evals);
+            }
+        }
+    }
+
+    #[test]
+    fn ranked_is_sorted_and_consistent_with_trace() {
+        let obj = Objective::MinEdp { g: Gemm::new(128, 512, 512) };
+        let out = RandomSearch.search(&obj, &Budget::evals(64), 3).unwrap();
+        assert_eq!(out.evals, 64);
+        assert_eq!(out.trace.len(), 64);
+        assert_eq!(out.ranked.len(), 64);
+        for w in out.ranked.windows(2) {
+            assert!(obj.score_report(&w[0]) <= obj.score_report(&w[1]));
+        }
+        assert_eq!(obj.score_report(out.best().unwrap()), out.best_score());
+    }
+
+    #[test]
+    fn budget_is_honoured_by_count_driven_searchers() {
+        let obj = Objective::MaxPerf { g: Gemm::new(64, 256, 512) };
+        let out = RandomSearch.search(&obj, &Budget::evals(33), 1).unwrap();
+        assert_eq!(out.evals, 33);
+        let out = VanillaBo { opts: small_bo() }.search(&obj, &Budget::evals(12), 1).unwrap();
+        assert_eq!(out.evals, 12);
+    }
+
+    #[test]
+    fn gd_respects_eval_budget_cap() {
+        let obj = Objective::MinEdp { g: Gemm::new(64, 256, 512) };
+        let out = DosaGd { opts: GdOptions::default() }
+            .search(&obj, &Budget::evals(40), 5)
+            .unwrap();
+        // one final evaluation of the best iterate may exceed the cap
+        assert!(out.evals <= 41, "evals {} exceed budget", out.evals);
+    }
+
+    #[test]
+    fn fixed_arch_reports_its_own_config() {
+        let obj = Objective::MinEdp { g: Gemm::new(128, 768, 2304) };
+        let out = FixedArch::Nvdla.search(&obj, &Budget::default(), 0).unwrap();
+        assert_eq!(out.evals, 1);
+        assert_eq!(out.best().unwrap().hw, FixedArch::Nvdla.config());
+    }
+
+    #[test]
+    fn optimizer_kind_names_roundtrip() {
+        for k in OptimizerKind::ALL {
+            assert_eq!(OptimizerKind::parse(k.name()), Some(k), "{k:?}");
+        }
+        assert_eq!(OptimizerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn supports_rejects_known_mismatches() {
+        let g = Gemm::new(4, 4, 4);
+        let runtime = Objective::Runtime { g, target_cycles: 1.0 };
+        let edp = Objective::MinEdp { g };
+        let llm = Objective::LlmEdp {
+            model: LlmModel::BertBase,
+            stage: Stage::Prefill,
+            seq: 8,
+            platform: Platform::Asic32nm,
+        };
+        assert!(OptimizerKind::GanDse.supports(&runtime));
+        assert!(!OptimizerKind::GanDse.supports(&edp));
+        assert!(OptimizerKind::AirchitectV1.supports(&edp));
+        assert!(!OptimizerKind::AirchitectV2.supports(&llm));
+        for k in OptimizerKind::ALL {
+            assert!(k.supports(&runtime) || k != OptimizerKind::DiffAxE);
+        }
+        assert!(OptimizerKind::RandomSearch.supports(&llm));
+    }
+
+    #[test]
+    fn budget_class_count_derivation() {
+        assert_eq!(Budget::evals(90).class_count(9), 10);
+        assert_eq!(Budget::evals(4).class_count(9), 1);
+        assert_eq!(Budget::evals(90).with_per_class(7).class_count(9), 7);
+    }
+
+    #[test]
+    fn session_without_engine_rejects_generative_kinds() {
+        let mut s = Session::simulator_only();
+        let obj = Objective::MinEdp { g: Gemm::new(64, 64, 64) };
+        assert!(s.search(OptimizerKind::DiffAxE, &obj, &Budget::evals(4), 1).is_err());
+        assert!(s.search(OptimizerKind::LatentBo, &obj, &Budget::evals(4), 1).is_err());
+        // simulator-backed kinds work
+        let out = s.search(OptimizerKind::RandomSearch, &obj, &Budget::evals(4), 1).unwrap();
+        assert_eq!(out.evals, 4);
+        let out = s
+            .search(OptimizerKind::Fixed(FixedArch::Eyeriss), &obj, &Budget::evals(1), 1)
+            .unwrap();
+        assert_eq!(out.best().unwrap().hw, FixedArch::Eyeriss.config());
+    }
+
+    #[test]
+    fn objective_scoring_matches_metrics() {
+        let hw = HwConfig::new_kb(32, 32, 128.0, 128.0, 32.0, 16, LoopOrder::Mnk);
+        let g = Gemm::new(128, 768, 768);
+        let (s, e) = crate::dse::evaluate(&hw, &g);
+        let d = Objective::MinEdp { g }.evaluate(&hw);
+        assert_eq!(d.edp, e.edp);
+        assert_eq!(d.cycles, s.cycles as f64);
+        let rt = Objective::Runtime { g, target_cycles: 2.0 * s.cycles as f64 };
+        assert!((rt.score(&hw) - 0.5).abs() < 1e-12);
+    }
+}

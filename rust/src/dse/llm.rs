@@ -2,30 +2,48 @@
 //!
 //! A DNN is a *sequence* of GEMMs (Fig 20): the array/buffer/bandwidth
 //! parameters are shared across layers while each layer gets its own loop
-//! order. DiffAxE generates base-configuration candidates by conditioning
-//! the class sampler on each layer's workload; the coordinator then picks
-//! the per-layer loop orders exactly (given the shared base configuration
-//! the additive cost model makes per-layer choices independent, so 2·l
-//! simulations suffice) and keeps the candidate with the lowest whole-model
-//! EDP. The paper does this with an attention-based sequence PP; evaluating
-//! sequences natively in the simulator is the rust-coordinator adaptation
-//! of the same search (see DESIGN.md §3).
+//! order. This module holds the whole-model evaluator [`eval_model`] that
+//! `Objective::LlmEdp` scores candidates with: given a shared base
+//! configuration the additive cost model makes per-layer loop-order choices
+//! independent, so 2·l simulations pick them exactly, and one block scales
+//! linearly to the whole model. The paper does this with an attention-based
+//! sequence PP; evaluating sequences natively in the simulator is the
+//! rust-coordinator adaptation of the same search (see DESIGN.md §3).
+//!
+//! The searches themselves (DiffAxE per-layer conditioning, the DOSA-style
+//! coarse GD, fixed architectures) are [`crate::dse::api::Optimizer`] impls
+//! driven with `Objective::LlmEdp`.
 
-use crate::baselines::{gd, FixedArch, GdOptions};
-use crate::design_space::{decode_rounded, encode_norm, HwConfig, LoopOrder, TargetSpace};
+use crate::design_space::{HwConfig, LoopOrder};
 use crate::energy::{asic, fpga, EnergyResult};
-use crate::models::{ClassMode, DiffAxE};
 use crate::sim::{simulate_seq, SeqConfig, SimResult};
-use crate::util::rng::Pcg32;
-use crate::util::stats::Timer;
 use crate::workload::{Gemm, LlmModel, Stage};
-use anyhow::Result;
 
 /// Evaluation platform.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Platform {
     Asic32nm,
     FpgaVu13p,
+}
+
+impl Platform {
+    /// Stable wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Platform::Asic32nm => "asic-32nm",
+            Platform::FpgaVu13p => "fpga-vu13p",
+        }
+    }
+
+    /// Parse a wire name (inverse of [`Platform::name`]; `"asic"` and
+    /// `"fpga"` shorthands accepted).
+    pub fn from_name(s: &str) -> Option<Platform> {
+        match s {
+            "asic-32nm" | "asic" => Some(Platform::Asic32nm),
+            "fpga-vu13p" | "fpga" => Some(Platform::FpgaVu13p),
+            _ => None,
+        }
+    }
 }
 
 /// Whole-model evaluation of a sequence configuration.
@@ -38,7 +56,7 @@ pub struct SeqEval {
 
 /// Evaluate a base config on an LLM (one transformer block scaled by the
 /// block count), choosing each layer's loop order optimally.
-pub fn eval_llm(
+pub fn eval_model(
     base: &HwConfig,
     model: LlmModel,
     stage: Stage,
@@ -54,8 +72,8 @@ pub fn eval_llm(
                 .iter()
                 .copied()
                 .min_by(|&a, &b| {
-                    let ea = layer_edp(base, g, a, platform);
-                    let eb = layer_edp(base, g, b, platform);
+                    let ea = edp_for_order(base, g, a, platform);
+                    let eb = edp_for_order(base, g, b, platform);
                     ea.partial_cmp(&eb).unwrap()
                 })
                 .unwrap()
@@ -73,7 +91,7 @@ pub fn eval_llm(
     SeqEval { cfg, sim, energy }
 }
 
-fn layer_edp(base: &HwConfig, g: &Gemm, order: LoopOrder, platform: Platform) -> f64 {
+fn edp_for_order(base: &HwConfig, g: &Gemm, order: LoopOrder, platform: Platform) -> f64 {
     let hw = HwConfig { loop_order: order, ..*base };
     let s = crate::sim::simulate(&hw, g);
     match platform {
@@ -101,85 +119,15 @@ fn scale_sim(s: &SimResult, blocks: u64) -> SimResult {
     out
 }
 
-/// DiffAxE LLM co-design: candidate base configs from the low-EDP class
-/// sampler conditioned on each layer's shape; best whole-model EDP wins.
-pub fn diffaxe_llm(
-    engine: &DiffAxE,
-    model: LlmModel,
-    stage: Stage,
-    seq: u32,
-    n_per_layer: usize,
-    platform: Platform,
-    seed: u32,
-) -> Result<(SeqEval, f64)> {
-    let timer = Timer::start();
-    let gemms = model.layer_gemms(stage, seq);
-    let b = engine.stats.gen_batch;
-    let mut candidates: Vec<HwConfig> = Vec::new();
-    for (li, g) in gemms.iter().enumerate() {
-        let mut remaining = n_per_layer;
-        let mut chunk = 0u32;
-        while remaining > 0 {
-            let take = remaining.min(b);
-            let conds: Vec<(i32, [f32; 3])> = (0..take).map(|_| (0, g.norm_vec())).collect();
-            let s = seed.wrapping_add((li as u32) << 8).wrapping_add(chunk);
-            candidates.extend(engine.sample_class(ClassMode::Edp, s, &conds)?);
-            remaining -= take;
-            chunk += 1;
-        }
-    }
-    candidates.sort_by_key(|h| (h.r, h.c, h.ip_b, h.wt_b, h.op_b, h.bw));
-    candidates.dedup();
-    let best = candidates
-        .iter()
-        .map(|hw| eval_llm(hw, model, stage, seq, platform))
-        .min_by(|a, b| a.energy.edp.partial_cmp(&b.energy.edp).unwrap())
-        .expect("non-empty candidate set");
-    Ok((best, timer.elapsed_s()))
-}
-
-/// DOSA stand-in for §VI: finite-difference GD on whole-model EDP over the
-/// coarse grid (see DESIGN.md §3).
-pub fn dosa_llm(
-    model: LlmModel,
-    stage: Stage,
-    seq: u32,
-    platform: Platform,
-    seed: u64,
-) -> (SeqEval, f64) {
-    let timer = Timer::start();
-    let mut rng = Pcg32::new(seed, 66);
-    let opts = GdOptions { steps: 30, restarts: 3, ..Default::default() };
-    let res = gd::fd_gd(
-        |x: &[f64]| {
-            let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-            let hw = super::coarsen(&decode_rounded(&v));
-            eval_llm(&hw, model, stage, seq, platform).energy.edp.ln()
-        },
-        |r: &mut Pcg32| encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect(),
-        0.05,
-        &opts,
-        &mut rng,
-    );
-    let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
-    let hw = super::coarsen(&decode_rounded(&v));
-    (eval_llm(&hw, model, stage, seq, platform), timer.elapsed_s())
-}
-
-/// Fixed-architecture evaluation (charitably granting per-layer loop-order
-/// choice — see [`FixedArch::config`]).
-pub fn fixed_llm(arch: FixedArch, model: LlmModel, stage: Stage, seq: u32, platform: Platform) -> SeqEval {
-    eval_llm(&arch.config(), model, stage, seq, platform)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::FixedArch;
 
     #[test]
-    fn eval_llm_scales_with_blocks() {
+    fn eval_model_scales_with_blocks() {
         let hw = HwConfig::new_kb(32, 32, 128.0, 128.0, 32.0, 16, LoopOrder::Mnk);
-        let e = eval_llm(&hw, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm);
+        let e = eval_model(&hw, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm);
         let gemms = LlmModel::BertBase.layer_gemms(Stage::Prefill, 128);
         let one_block = simulate_seq(&e.cfg, &gemms);
         assert_eq!(e.sim.cycles, one_block.cycles * 12);
@@ -188,7 +136,7 @@ mod tests {
     #[test]
     fn per_layer_orders_not_worse_than_uniform() {
         let hw = HwConfig::new_kb(64, 64, 256.0, 64.0, 32.0, 16, LoopOrder::Mnk);
-        let opt = eval_llm(&hw, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm);
+        let opt = eval_model(&hw, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm);
         for uniform in LoopOrder::OS_ORDERS {
             let gemms = LlmModel::BertBase.layer_gemms(Stage::Prefill, 128);
             let cfg = SeqConfig::uniform(HwConfig { loop_order: uniform, ..hw }, gemms.len());
@@ -207,15 +155,15 @@ mod tests {
         // prefill; decode is latency/memory bound
         let small = HwConfig::new_kb(16, 16, 128.0, 128.0, 32.0, 16, LoopOrder::Mnk);
         let big = HwConfig::new_kb(128, 128, 128.0, 128.0, 32.0, 16, LoopOrder::Mnk);
-        let pf_gain = eval_llm(&small, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm)
+        let pf_gain = eval_model(&small, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm)
             .sim
             .cycles as f64
-            / eval_llm(&big, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm).sim.cycles
+            / eval_model(&big, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm).sim.cycles
                 as f64;
-        let dec_gain = eval_llm(&small, LlmModel::BertBase, Stage::Decode, 128, Platform::Asic32nm)
+        let dec_gain = eval_model(&small, LlmModel::BertBase, Stage::Decode, 128, Platform::Asic32nm)
             .sim
             .cycles as f64
-            / eval_llm(&big, LlmModel::BertBase, Stage::Decode, 128, Platform::Asic32nm).sim.cycles
+            / eval_model(&big, LlmModel::BertBase, Stage::Decode, 128, Platform::Asic32nm).sim.cycles
                 as f64;
         assert!(pf_gain > dec_gain, "prefill gain {pf_gain} vs decode {dec_gain}");
     }
@@ -224,10 +172,19 @@ mod tests {
     fn fixed_archs_evaluate_on_both_platforms() {
         for arch in FixedArch::ALL {
             for platform in [Platform::Asic32nm, Platform::FpgaVu13p] {
-                let e = fixed_llm(arch, LlmModel::BertBase, Stage::Prefill, 128, platform);
+                let e = eval_model(&arch.config(), LlmModel::BertBase, Stage::Prefill, 128, platform);
                 assert!(e.energy.edp > 0.0);
                 assert!(e.energy.power_w > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn platform_names_roundtrip() {
+        for p in [Platform::Asic32nm, Platform::FpgaVu13p] {
+            assert_eq!(Platform::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Platform::from_name("asic"), Some(Platform::Asic32nm));
+        assert_eq!(Platform::from_name("tpu"), None);
     }
 }

@@ -1,18 +1,37 @@
-//! The paper's four experiments as library calls (driven by the bench
-//! harnesses in `rust/benches/` and by the coordinator's request handlers).
+//! Design-space exploration, unified behind one API (see [`api`]).
 //!
-//! * [`perfgen`] — §IV-B.1 / Table III / Fig 16: runtime-conditioned
-//!   generation vs GD/BO/GANDSE baselines.
-//! * [`edp`] — §IV-B.2 / Table IV: power–performance class DSE, SP metric.
-//! * [`perfopt`] — §IV-B.3 / Fig 17/19/Table V: low-EDP-class generation
-//!   for performance.
-//! * [`llm`] — §VI / Figs 22-24 / Tables VII-VIII: LLM inference co-design
-//!   on ASIC + FPGA vs fixed architectures and a DOSA-style optimizer.
+//! Every search setting is an [`api::Objective`] (workload + metric) and
+//! every strategy — the diffusion engine and each paper baseline — is an
+//! [`api::Optimizer`]: `optimizer.search(&objective, &budget, seed)` yields
+//! a ranked [`api::SearchOutcome`]. An [`api::Session`] owns the engine
+//! handle, dispatches strategies by [`api::OptimizerKind`], and provides
+//! the batched evaluation hot path [`api::evaluate_batch`] all searchers
+//! share. The paper's experiments map onto the objectives as:
+//!
+//! * `Objective::Runtime` — §IV-B.1 / Table III / Fig 16: runtime-
+//!   conditioned generation vs GD/BO/GANDSE baselines (protocol helpers in
+//!   [`perfgen`]).
+//! * `Objective::MinEdp` — §IV-B.2 / Table IV: power–performance class
+//!   DSE, SP metric.
+//! * `Objective::MaxPerf` — §IV-B.3 / Fig 17/19/Table V: low-EDP-class
+//!   generation for performance ([`perfopt`] keeps the training-set-best
+//!   reference point).
+//! * `Objective::LlmEdp` — §VI / Figs 22-24 / Tables VII-VIII: LLM
+//!   inference co-design on ASIC + FPGA ([`llm`] holds the whole-model
+//!   sequence evaluator).
+//!
+//! The coordinator serves the same types over the wire
+//! ([`crate::coordinator::protocol`]).
 
-pub mod edp;
+pub mod api;
 pub mod llm;
 pub mod perfgen;
 pub mod perfopt;
+
+pub use api::{
+    evaluate_batch, Budget, DesignReport, Objective, Optimizer, OptimizerKind, SearchOutcome,
+    Session,
+};
 
 use crate::design_space::HwConfig;
 use crate::energy::{asic, EnergyResult};
@@ -33,9 +52,7 @@ pub fn runtime_of(hw: &HwConfig, g: &Gemm) -> f64 {
 
 /// EDP in µJ·cycles.
 pub fn edp_of(hw: &HwConfig, g: &Gemm) -> f64 {
-    let (s, e) = evaluate(hw, g);
-    let _ = s;
-    e.edp
+    asic::evaluate(hw, &simulate(hw, g)).edp
 }
 
 /// Snap a config onto the coarse training grid — models the O(10^7)-grained

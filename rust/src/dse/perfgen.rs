@@ -1,21 +1,19 @@
-//! Experiment 1 (§IV-B.1, Table III, Fig 16): generate hardware hitting a
-//! target runtime, and the five optimization baselines adapted to the same
-//! objective `min |T_gen − T*| / T*`.
+//! Experiment protocol for §IV-B.1 (Table III, Fig 16): runtime-conditioned
+//! generation. The per-method free functions are gone — every strategy is an
+//! [`Optimizer`] and [`evaluate_method`] drives it over a query set, so the
+//! (method × task) matrix collapses to one loop.
 
-use super::{coarsen, runtime_of};
-use crate::baselines::{bo, gd, BoOptions, GdOptions};
-use crate::design_space::{decode_rounded, encode_norm, HwConfig, TargetSpace};
+use super::api::{Budget, Objective, Optimizer};
 use crate::models::DiffAxE;
-use crate::util::rng::Pcg32;
-use crate::util::stats::Timer;
+use crate::util::rng;
 use crate::workload::Gemm;
 use anyhow::Result;
 
 /// One method's aggregate result over a set of (workload, target) queries.
 #[derive(Debug, Clone)]
 pub struct MethodResult {
-    pub name: &'static str,
-    /// mean |T_gen − T*| / T*
+    pub name: String,
+    /// mean `|T_gen − T*| / T*` under the chosen [`ErrorStat`]
     pub error_gen: f64,
     /// mean wall-clock search time per query (seconds)
     pub search_time_s: f64,
@@ -27,6 +25,23 @@ pub struct MethodResult {
 pub struct Query {
     pub g: Gemm,
     pub target_cycles: f64,
+}
+
+impl Query {
+    pub fn objective(&self) -> Objective {
+        Objective::Runtime { g: self.g, target_cycles: self.target_cycles }
+    }
+}
+
+/// How a method's per-query error is read off its [`SearchOutcome`]:
+/// the generative methods report the mean over *all* generated designs
+/// (the paper's protocol), the optimization baselines their single best.
+///
+/// [`SearchOutcome`]: super::api::SearchOutcome
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorStat {
+    MeanOfGenerated,
+    BestFound,
 }
 
 /// Sample `n_targets` uniform (in log space) runtime targets per workload
@@ -45,212 +60,31 @@ pub fn make_queries(engine: &DiffAxE, workloads: &[Gemm], n_targets: usize) -> V
     out
 }
 
-fn rel_err(hw: &HwConfig, q: &Query) -> f64 {
-    ((runtime_of(hw, &q.g) - q.target_cycles) / q.target_cycles).abs()
-}
-
-/// DiffAxE: one diffusion batch per query (n designs), error = mean over
-/// generated designs (the paper's protocol: all generated designs count).
-pub fn run_diffaxe(
-    engine: &DiffAxE,
+/// Drive one optimizer over every query and aggregate the Table III
+/// metrics. Each query gets an independent seed stream derived from
+/// `seed` and its index.
+pub fn evaluate_method(
+    opt: &mut dyn Optimizer,
     queries: &[Query],
-    n_designs: usize,
-    seed: u32,
-) -> Result<MethodResult> {
-    let mut errs = Vec::new();
-    let timer = Timer::start();
-    for (qi, q) in queries.iter().enumerate() {
-        let st = engine.stats.stats_for(&q.g);
-        let p = st.norm_runtime(q.target_cycles);
-        let n = n_designs.min(engine.stats.gen_batch);
-        let conds: Vec<(f32, [f32; 3])> = (0..n).map(|_| (p, q.g.norm_vec())).collect();
-        let configs = engine.sample_runtime(seed.wrapping_add(qi as u32), &conds)?;
-        let mean: f64 = configs.iter().map(|c| rel_err(c, q)).sum::<f64>() / configs.len() as f64;
-        errs.push(mean);
-    }
-    Ok(MethodResult {
-        name: "DiffAxE",
-        error_gen: mean(&errs),
-        search_time_s: timer.elapsed_s() / queries.len() as f64,
-        queries: queries.len(),
-    })
-}
-
-/// GANDSE: one-shot GAN generation (same query protocol).
-pub fn run_gandse(engine: &DiffAxE, queries: &[Query], n_designs: usize, seed: u32) -> Result<MethodResult> {
-    let mut errs = Vec::new();
-    let timer = Timer::start();
-    for (qi, q) in queries.iter().enumerate() {
-        let st = engine.stats.stats_for(&q.g);
-        let p = st.norm_runtime(q.target_cycles);
-        let n = n_designs.min(engine.stats.gen_batch);
-        let conds: Vec<(f32, [f32; 3])> = (0..n).map(|_| (p, q.g.norm_vec())).collect();
-        let configs = engine.gandse_generate(seed.wrapping_add(qi as u32), &conds)?;
-        let mean: f64 = configs.iter().map(|c| rel_err(c, q)).sum::<f64>() / configs.len() as f64;
-        errs.push(mean);
-    }
-    Ok(MethodResult {
-        name: "GANDSE",
-        error_gen: mean(&errs),
-        search_time_s: timer.elapsed_s() / queries.len() as f64,
-        queries: queries.len(),
-    })
-}
-
-/// Vanilla BO directly over the 8-d normalized hardware encoding.
-pub fn run_vanilla_bo(queries: &[Query], opts: &BoOptions, seed: u64) -> MethodResult {
-    let mut errs = Vec::new();
-    let timer = Timer::start();
-    for (qi, q) in queries.iter().enumerate() {
-        let mut rng = Pcg32::new(seed, qi as u64);
-        let res = bo::minimize(
-            |r: &mut Pcg32| encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect(),
-            |x| {
-                let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-                rel_err(&decode_rounded(&v), q)
-            },
-            opts,
-            &mut rng,
-        );
-        errs.push(res.best_y);
-    }
-    MethodResult {
-        name: "Vanilla BO",
-        error_gen: mean(&errs),
-        search_time_s: timer.elapsed_s() / queries.len() as f64,
-        queries: queries.len(),
-    }
-}
-
-/// VAESA-style latent BO: search the Phase-1 latent space, decode through
-/// the AE, evaluate on the simulator.
-pub fn run_latent_bo(
-    engine: &DiffAxE,
-    queries: &[Query],
-    opts: &BoOptions,
+    budget: &Budget,
+    stat: ErrorStat,
     seed: u64,
 ) -> Result<MethodResult> {
-    let mut errs = Vec::new();
-    let timer = Timer::start();
+    let mut errs = Vec::with_capacity(queries.len());
+    let mut time_s = 0.0;
     for (qi, q) in queries.iter().enumerate() {
-        let mut rng = Pcg32::new(seed, 1000 + qi as u64);
-        // candidate generator: latents of random target-space configs
-        let pool: Vec<Vec<f32>> = (0..opts.budget * 2)
-            .map(|_| encode_norm(&TargetSpace::sample(&mut rng)).to_vec())
-            .collect();
-        let latents = engine.encode(&pool)?;
-        let mut pool_iter = 0usize;
-        let mut err = f64::INFINITY;
-        {
-            let sample = |r: &mut Pcg32| -> Vec<f64> {
-                let _ = &r;
-                let l = &latents[pool_iter % latents.len()];
-                pool_iter += 1;
-                l.iter().map(|&x| x as f64).collect()
-            };
-            let objective = |x: &[f64]| -> f64 {
-                let lat: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-                match engine.decode_rounded(&[lat]) {
-                    Ok(cfgs) => rel_err(&cfgs[0], q),
-                    Err(_) => f64::INFINITY,
-                }
-            };
-            let res = bo::minimize(sample, objective, opts, &mut rng);
-            err = err.min(res.best_y);
-        }
-        errs.push(err);
+        let out = opt.search(&q.objective(), budget, rng::derive(seed, qi as u64))?;
+        errs.push(match stat {
+            ErrorStat::MeanOfGenerated => out.mean_score(),
+            ErrorStat::BestFound => out.best_score(),
+        });
+        time_s += out.search_time_s;
     }
+    let n = queries.len().max(1);
     Ok(MethodResult {
-        name: "Latent BO (VAESA)",
-        error_gen: mean(&errs),
-        search_time_s: timer.elapsed_s() / queries.len() as f64,
+        name: opt.name().to_string(),
+        error_gen: errs.iter().sum::<f64>() / n as f64,
+        search_time_s: time_s / n as f64,
         queries: queries.len(),
     })
-}
-
-/// Vanilla GD (DOSA-style): descend the exported differentiable surrogate in
-/// hardware space, then evaluate the rounded design on the simulator.
-pub fn run_vanilla_gd(
-    engine: &DiffAxE,
-    queries: &[Query],
-    opts: &GdOptions,
-    seed: u64,
-) -> Result<MethodResult> {
-    let mut errs = Vec::new();
-    let timer = Timer::start();
-    for (qi, q) in queries.iter().enumerate() {
-        let st = engine.stats.stats_for(&q.g);
-        let p = st.norm_runtime(q.target_cycles);
-        let mut rng = Pcg32::new(seed, 2000 + qi as u64);
-        let res = gd::descend(
-            |x: &[f64]| {
-                let hw: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-                let (losses, grads) = engine
-                    .surrogate_grad(&[hw], &q.g, &[p])
-                    .expect("surrogate_grad");
-                (losses[0] as f64, grads[0].iter().map(|&g| g as f64).collect())
-            },
-            |r: &mut Pcg32| encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect(),
-            opts,
-            &mut rng,
-        );
-        let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
-        // DOSA searches a coarse space: snap to the training grid
-        errs.push(rel_err(&coarsen(&decode_rounded(&v)), q));
-    }
-    Ok(MethodResult {
-        name: "Vanilla GD (DOSA)",
-        error_gen: mean(&errs),
-        search_time_s: timer.elapsed_s() / queries.len() as f64,
-        queries: queries.len(),
-    })
-}
-
-/// Latent GD (Polaris-style): descend the PP gradient in latent space.
-pub fn run_latent_gd(
-    engine: &DiffAxE,
-    queries: &[Query],
-    opts: &GdOptions,
-    seed: u64,
-) -> Result<MethodResult> {
-    let mut errs = Vec::new();
-    let timer = Timer::start();
-    let d = engine.stats.latent_dim;
-    for (qi, q) in queries.iter().enumerate() {
-        let st = engine.stats.stats_for(&q.g);
-        let p = st.norm_runtime(q.target_cycles);
-        let mut rng = Pcg32::new(seed, 3000 + qi as u64);
-        // init at encodings of random configs (the latent space has no box
-        // bounds, so clamp is off)
-        let res = gd::descend(
-            |x: &[f64]| {
-                let lat: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-                let (losses, grads) = engine.pp_grad(&[lat], &q.g, &[p]).expect("pp_grad");
-                (losses[0] as f64, grads[0].iter().map(|&g| g as f64).collect())
-            },
-            |r: &mut Pcg32| {
-                let hw = encode_norm(&TargetSpace::sample(r)).to_vec();
-                engine.encode(&[hw]).expect("encode")[0]
-                    .iter()
-                    .map(|&x| x as f64)
-                    .collect()
-            },
-            &GdOptions { clamp: false, ..opts.clone() },
-            &mut rng,
-        );
-        let lat: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
-        let hw = engine.decode_rounded(&[lat])?[0];
-        errs.push(rel_err(&hw, q));
-        let _ = d;
-    }
-    Ok(MethodResult {
-        name: "Latent GD (Polaris)",
-        error_gen: mean(&errs),
-        search_time_s: timer.elapsed_s() / queries.len() as f64,
-        queries: queries.len(),
-    })
-}
-
-fn mean(xs: &[f64]) -> f64 {
-    xs.iter().sum::<f64>() / xs.len().max(1) as f64
 }

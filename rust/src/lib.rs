@@ -5,6 +5,36 @@
 //! AOT-lowered to HLO artifacts the [`runtime`] module executes via PJRT;
 //! everything else — the Scale-Sim-like simulator, energy models, design
 //! space, baselines and the DSE service — is native rust.
+//!
+//! ## The unified DSE API
+//!
+//! All design-space exploration goes through [`dse::api`]: an
+//! [`dse::Objective`] (workload + metric) and a [`dse::Budget`] are handed
+//! to any [`dse::Optimizer`] — the diffusion engine itself
+//! ([`models::DiffAxE`]) or any paper baseline (BO, GD, random search,
+//! fixed architectures, GANDSE, AIRCHITECT) — and come back as a ranked
+//! [`dse::SearchOutcome`]. A [`dse::Session`] owns the engine handle,
+//! dispatches strategies by name ([`dse::OptimizerKind`]), and provides
+//! the thread-parallel [`dse::evaluate_batch`] hot path every searcher
+//! shares:
+//!
+//! ```no_run
+//! use diffaxe::dse::{Budget, Objective, OptimizerKind, Session};
+//! use diffaxe::workload::Gemm;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = Session::load(std::path::Path::new("artifacts"))?;
+//! let objective = Objective::MinEdp { g: Gemm::new(128, 768, 2304) };
+//! let outcome =
+//!     session.search(OptimizerKind::DiffAxE, &objective, &Budget::evals(256), 42)?;
+//! println!("best: {} edp={:.3e}", outcome.best().unwrap().hw, outcome.best().unwrap().edp);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The [`coordinator`] serves the same types over a versioned
+//! newline-JSON TCP protocol (generic `search` + multi-search `batch`
+//! requests; see [`coordinator::protocol`]).
 
 pub mod baselines;
 pub mod cli;

@@ -13,6 +13,11 @@ subcommands:
                 --out DIR; DIFFAXE_SCALE=paper|quick overrides defaults)
   sim           simulate one configuration on one GEMM
                 (--r --c --ip-kb --wt-kb --op-kb --bw --order --m --k --n)
+  search        run one DSE search through the unified Optimizer API
+                (--objective runtime|min-edp|max-perf --m --k --n
+                [--target-cycles T] --optimizer NAME --evals N [--per-class N]
+                [--seed S] [--top N] [--artifacts DIR]; engine-backed
+                optimizers need the AOT artifacts, the rest run standalone)
 ";
 
 fn main() -> Result<()> {
@@ -20,11 +25,68 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("gen-dataset") => cmd_gen_dataset(&args),
         Some("sim") => cmd_sim(&args),
+        Some("search") => cmd_search(&args),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
         }
     }
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    use diffaxe::dse::{Budget, Objective, OptimizerKind, Session};
+    use diffaxe::models::DiffAxE;
+    use diffaxe::workload::Gemm;
+    let g = Gemm::new(
+        args.get_u64("m", 128)? as u32,
+        args.get_u64("k", 768)? as u32,
+        args.get_u64("n", 2304)? as u32,
+    );
+    let objective = match args.get_str("objective", "min-edp") {
+        "runtime" => Objective::Runtime {
+            g,
+            target_cycles: args.get_f64("target-cycles", 1e6)?,
+        },
+        "min-edp" => Objective::MinEdp { g },
+        "max-perf" => Objective::MaxPerf { g },
+        other => anyhow::bail!("unknown objective {other:?} (runtime|min-edp|max-perf)"),
+    };
+    let name = args.get_str("optimizer", "random");
+    let kind = OptimizerKind::parse(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown optimizer {name:?}"))?;
+    let mut budget = Budget::evals(args.get_usize("evals", 256)?);
+    if let Some(pc) = args.get("per-class") {
+        budget = budget.with_per_class(pc.parse()?);
+    }
+    let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let mut session = if kind.needs_engine() {
+        anyhow::ensure!(
+            DiffAxE::artifacts_present(&dir),
+            "optimizer {name:?} needs the AOT artifacts — run `make artifacts`"
+        );
+        Session::load(&dir)?
+    } else if DiffAxE::artifacts_present(&dir) {
+        Session::load(&dir)?
+    } else {
+        Session::simulator_only()
+    };
+    let out = session.search(kind, &objective, &budget, args.get_u64("seed", 1)?)?;
+    println!(
+        "{}: {} evaluations in {:.2}s on {objective}",
+        out.optimizer, out.evals, out.search_time_s
+    );
+    for (i, d) in out.ranked.iter().take(args.get_usize("top", 5)?).enumerate() {
+        println!(
+            "#{:<2} {}  cycles={:.3e} power={:.2}W edp={:.3e} score={:.4}",
+            i + 1,
+            d.hw,
+            d.cycles,
+            d.power_w,
+            d.edp,
+            objective.score_report(d)
+        );
+    }
+    Ok(())
 }
 
 fn cmd_gen_dataset(args: &Args) -> Result<()> {

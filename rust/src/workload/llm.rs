@@ -26,6 +26,11 @@ impl Stage {
             Stage::Decode => "decode",
         }
     }
+
+    /// Parse a wire name (inverse of [`Stage::name`]).
+    pub fn from_name(s: &str) -> Option<Stage> {
+        Stage::ALL.iter().copied().find(|st| st.name() == s)
+    }
 }
 
 /// Transformer architecture description (decoder-only or encoder).
@@ -45,6 +50,20 @@ impl LlmModel {
             LlmModel::Opt350m => "OPT-350M",
             LlmModel::Llama2_7b => "LLaMA-2-7B",
         }
+    }
+
+    /// Stable lowercase wire name.
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            LlmModel::BertBase => "bert-base",
+            LlmModel::Opt350m => "opt-350m",
+            LlmModel::Llama2_7b => "llama-2-7b",
+        }
+    }
+
+    /// Parse a wire name (inverse of [`LlmModel::wire_name`]).
+    pub fn from_name(s: &str) -> Option<LlmModel> {
+        LlmModel::ALL.iter().copied().find(|m| m.wire_name() == s)
     }
 
     /// (hidden, ffn-intermediate, head_dim, gated-mlp?)

@@ -1,7 +1,11 @@
 //! Integration tests over the coordinator service + TCP server (skip
 //! vacuously without artifacts, like integration_runtime).
 
-use diffaxe::coordinator::{server, Request, Response, Service, ServiceConfig};
+use diffaxe::baselines::FixedArch;
+use diffaxe::coordinator::{
+    server, ErrorCode, Request, Response, SearchRequest, Service, ServiceConfig,
+};
+use diffaxe::dse::{Budget, Objective, OptimizerKind};
 use diffaxe::models::DiffAxE;
 use diffaxe::workload::{Gemm, LlmModel, Stage};
 use std::path::Path;
@@ -27,21 +31,33 @@ fn some_workload() -> Gemm {
     Gemm::new(128, 768, 2304)
 }
 
+fn generate(g: Gemm, target_cycles: f64, n: usize) -> Request {
+    Request::Search(SearchRequest::new(
+        Objective::Runtime { g, target_cycles },
+        Budget::evals(n),
+        OptimizerKind::DiffAxE,
+    ))
+}
+
 #[test]
 fn generate_request_roundtrip() {
     let Some(svc) = service() else { return };
     let g = some_workload();
-    let resp = svc.handle().request(Request::GenerateRuntime {
-        g,
-        target_cycles: 1e6,
-        n: 8,
-    });
+    let resp = svc.handle().request(generate(g, 1e6, 8));
     match resp {
-        Response::Designs(ds) => {
-            assert_eq!(ds.len(), 8);
-            for d in &ds {
+        Response::Outcome(o) => {
+            assert_eq!(o.evals, 8);
+            assert_eq!(o.ranked.len(), 8);
+            assert_eq!(o.trace.len(), 8);
+            assert_eq!(o.optimizer, "DiffAxE");
+            for d in &o.ranked {
                 assert!(d.hw.in_target_space());
                 assert!(d.cycles > 0.0 && d.power_w > 0.0 && d.edp > 0.0);
+            }
+            // ranked is best-first under |err|/T*
+            let err = |d: &diffaxe::dse::DesignReport| ((d.cycles - 1e6) / 1e6).abs();
+            for w in o.ranked.windows(2) {
+                assert!(err(&w[0]) <= err(&w[1]));
             }
         }
         other => panic!("unexpected response {other:?}"),
@@ -55,17 +71,11 @@ fn concurrent_requests_are_batched_together() {
     // submit several requests before any can complete; the batcher should
     // pack them into shared sampler calls
     let rxs: Vec<_> = (0..6)
-        .map(|i| {
-            svc.handle().submit(Request::GenerateRuntime {
-                g,
-                target_cycles: 5e5 * (i + 1) as f64,
-                n: 4,
-            })
-        })
+        .map(|i| svc.handle().submit(generate(g, 5e5 * (i + 1) as f64, 4)))
         .collect();
     for rx in rxs {
         match rx.recv().unwrap() {
-            Response::Designs(ds) => assert_eq!(ds.len(), 4),
+            Response::Outcome(o) => assert_eq!(o.ranked.len(), 4),
             other => panic!("unexpected {other:?}"),
         }
     }
@@ -79,18 +89,19 @@ fn concurrent_requests_are_batched_together() {
 fn oversized_request_spans_batches() {
     let Some(svc) = service() else { return };
     let g = some_workload();
-    let b = {
-        // gen_batch from a fresh engine handle is awkward; request more than
-        // any plausible batch instead
-        160
-    };
-    let resp = svc.handle().request(Request::GenerateRuntime {
-        g,
-        target_cycles: 1e6,
-        n: b,
-    });
-    match resp {
-        Response::Designs(ds) => assert_eq!(ds.len(), b),
+    // request more than any plausible sampler batch; ask to keep all ranks
+    let n = 160;
+    let mut req = SearchRequest::new(
+        Objective::Runtime { g, target_cycles: 1e6 },
+        Budget::evals(n),
+        OptimizerKind::DiffAxE,
+    );
+    req.top_k = Some(n);
+    match svc.handle().request(Request::Search(req)) {
+        Response::Outcome(o) => {
+            assert_eq!(o.evals, n);
+            assert_eq!(o.ranked.len(), n);
+        }
         other => panic!("unexpected {other:?}"),
     }
 }
@@ -99,15 +110,27 @@ fn oversized_request_spans_batches() {
 fn edp_and_perf_search_requests() {
     let Some(svc) = service() else { return };
     let g = some_workload();
-    match svc.handle().request(Request::EdpSearch { g, n_per_class: 4 }) {
-        Response::Designs(ds) => {
-            assert_eq!(ds.len(), 1);
-            assert!(ds[0].edp > 0.0);
+    let req = Request::Search(SearchRequest::new(
+        Objective::MinEdp { g },
+        Budget::default().with_per_class(4),
+        OptimizerKind::DiffAxE,
+    ));
+    match svc.handle().request(req) {
+        Response::Outcome(o) => {
+            assert!(!o.ranked.is_empty());
+            assert!(o.ranked[0].edp > 0.0);
+            // best-first by EDP
+            assert!(o.ranked.first().unwrap().edp <= o.ranked.last().unwrap().edp);
         }
         other => panic!("unexpected {other:?}"),
     }
-    match svc.handle().request(Request::PerfSearch { g, n: 16 }) {
-        Response::Designs(ds) => assert_eq!(ds.len(), 1),
+    let req = Request::Search(SearchRequest::new(
+        Objective::MaxPerf { g },
+        Budget::evals(16),
+        OptimizerKind::DiffAxE,
+    ));
+    match svc.handle().request(req) {
+        Response::Outcome(o) => assert_eq!(o.evals, 16),
         other => panic!("unexpected {other:?}"),
     }
 }
@@ -115,14 +138,109 @@ fn edp_and_perf_search_requests() {
 #[test]
 fn llm_search_request() {
     let Some(svc) = service() else { return };
-    match svc.handle().request(Request::LlmSearch {
-        model: LlmModel::BertBase,
-        stage: Stage::Decode,
-        n_per_layer: 4,
-    }) {
-        Response::Designs(ds) => {
-            assert_eq!(ds.len(), 1);
-            assert!(ds[0].hw.in_target_space());
+    let req = Request::Search(SearchRequest::new(
+        Objective::LlmEdp {
+            model: LlmModel::BertBase,
+            stage: Stage::Decode,
+            seq: diffaxe::workload::llm::DEFAULT_SEQ,
+            platform: diffaxe::dse::llm::Platform::Asic32nm,
+        },
+        Budget::default().with_per_class(4),
+        OptimizerKind::DiffAxE,
+    ));
+    match svc.handle().request(req) {
+        Response::Outcome(o) => {
+            assert!(!o.ranked.is_empty());
+            assert!(o.ranked[0].hw.in_target_space());
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn optimizers_selectable_by_name_over_the_wire() {
+    let Some(svc) = service() else { return };
+    let g = some_workload();
+    // every strategy is reachable through the same generic request
+    for (name, expect) in [
+        ("random", "Random Search"),
+        ("vanilla-bo", "Vanilla BO"),
+        ("latent-bo", "Latent BO (VAESA)"),
+        ("vanilla-gd", "Vanilla GD"),
+        ("dosa-gd", "DOSA (coarse GD)"),
+        ("polaris", "Polaris (latent GD)"),
+        ("fixed-nvdla", "NVDLA"),
+        ("diffaxe", "DiffAxE"),
+    ] {
+        let req = Request::Search(SearchRequest::new(
+            Objective::MinEdp { g },
+            Budget::evals(12),
+            OptimizerKind::parse(name).unwrap(),
+        ));
+        match svc.handle().request(req) {
+            Response::Outcome(o) => {
+                assert_eq!(o.optimizer, expect, "wire name {name}");
+                assert!(!o.ranked.is_empty());
+            }
+            other => panic!("{name}: unexpected {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn unsupported_pairing_is_a_bad_request_before_any_work() {
+    let Some(svc) = service() else { return };
+    let g = some_workload();
+    // GANDSE is runtime-conditioned only: pairing it with min-EDP must be
+    // rejected as a client error, not reported as an internal failure
+    let req = Request::Search(SearchRequest::new(
+        Objective::MinEdp { g },
+        Budget::evals(8),
+        OptimizerKind::GanDse,
+    ));
+    match svc.handle().request(req) {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadRequest),
+        other => panic!("unexpected {other:?}"),
+    }
+    // in a batch, validation runs before any item executes
+    let req = Request::Batch(vec![
+        SearchRequest::new(Objective::MinEdp { g }, Budget::evals(8), OptimizerKind::RandomSearch),
+        SearchRequest::new(Objective::MinEdp { g }, Budget::evals(8), OptimizerKind::GanDse),
+    ]);
+    match svc.handle().request(req) {
+        Response::Error { code, message } => {
+            assert_eq!(code, ErrorCode::BadRequest);
+            assert!(message.contains("batch item 1"), "{message}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn batch_request_returns_outcomes_in_order() {
+    let Some(svc) = service() else { return };
+    let g = some_workload();
+    let req = Request::Batch(vec![
+        SearchRequest::new(Objective::MinEdp { g }, Budget::evals(8), OptimizerKind::RandomSearch),
+        SearchRequest::new(
+            Objective::MaxPerf { g },
+            Budget::evals(1),
+            OptimizerKind::Fixed(FixedArch::Eyeriss),
+        ),
+        SearchRequest::new(
+            Objective::Runtime { g, target_cycles: 1e6 },
+            Budget::evals(4),
+            OptimizerKind::DiffAxE,
+        ),
+    ]);
+    match svc.handle().request(req) {
+        Response::Batch(outs) => {
+            assert_eq!(outs.len(), 3);
+            assert_eq!(outs[0].optimizer, "Random Search");
+            assert_eq!(outs[1].optimizer, "Eyeriss");
+            assert_eq!(outs[1].ranked[0].hw, FixedArch::Eyeriss.config());
+            assert_eq!(outs[2].optimizer, "DiffAxE");
+            assert_eq!(outs[2].evals, 4);
         }
         other => panic!("unexpected {other:?}"),
     }
@@ -133,14 +251,11 @@ fn tcp_server_end_to_end() {
     let Some(svc) = service() else { return };
     let addr = server::serve_ephemeral(svc.handle()).unwrap();
     let mut client = server::Client::connect(&addr).unwrap();
-    let resp = client
-        .request(&Request::GenerateRuntime { g: some_workload(), target_cycles: 2e6, n: 4 })
-        .unwrap();
+    let resp = client.request(&generate(some_workload(), 2e6, 4)).unwrap();
     match resp {
-        Response::Designs(ds) => assert_eq!(ds.len(), 4),
+        Response::Outcome(o) => assert_eq!(o.ranked.len(), 4),
         other => panic!("unexpected {other:?}"),
     }
-    // malformed line must yield an error response, not kill the connection
     let resp = client.request(&Request::Metrics).unwrap();
     match resp {
         Response::MetricsText(t) => assert!(t.contains("requests=")),
@@ -149,12 +264,46 @@ fn tcp_server_end_to_end() {
 }
 
 #[test]
+fn tcp_legacy_aliases_and_errors() {
+    let Some(svc) = service() else { return };
+    let addr = server::serve_ephemeral(svc.handle()).unwrap();
+    let mut client = server::Client::connect(&addr).unwrap();
+
+    // a v1 client line still works end to end
+    let resp = client
+        .send_line(r#"{"type":"generate","m":128,"k":768,"n":2304,"target_cycles":1e6,"count":4}"#)
+        .unwrap();
+    match resp {
+        Response::Outcome(o) => assert_eq!(o.ranked.len(), 4),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // a newer-versioned envelope gets a structured error, same connection
+    let resp = client.send_line(r#"{"v":99,"type":"search"}"#).unwrap();
+    match resp {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::UnsupportedVersion),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // malformed JSON also answers instead of hanging up
+    let resp = client.send_line("{not json").unwrap();
+    match resp {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadRequest),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // and the connection is still alive afterwards
+    let resp = client.send_line(r#"{"type":"metrics"}"#).unwrap();
+    assert!(matches!(resp, Response::MetricsText(_)));
+}
+
+#[test]
 fn service_survives_unknown_workloads() {
     // nearest-stats fallback: a workload not in the training suite
     let Some(svc) = service() else { return };
     let g = Gemm::new(333, 777, 1234);
-    match svc.handle().request(Request::GenerateRuntime { g, target_cycles: 1e6, n: 4 }) {
-        Response::Designs(ds) => assert_eq!(ds.len(), 4),
+    match svc.handle().request(generate(g, 1e6, 4)) {
+        Response::Outcome(o) => assert_eq!(o.ranked.len(), 4),
         other => panic!("unexpected {other:?}"),
     }
 }
