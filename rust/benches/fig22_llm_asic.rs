@@ -91,6 +91,7 @@ fn main() -> anyhow::Result<()> {
     if let Some(s) = table7 {
         println!("{s}");
     }
+    println!("eval-cache: {}", session.cache_stats());
     let geo = diffaxe::util::stats::geomean(&dosa_ratios);
     println!(
         "paper-shape checks: DOSA/DiffAxE EDP geo-mean {:.2}x (paper: >2x in every scenario, \

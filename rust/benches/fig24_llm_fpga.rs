@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
+    println!("eval-cache: {}", session.cache_stats());
     println!("paper-shape check: DiffAxE lowest EDP in both stages (paper: 7.5x/8x vs DOSA)");
     Ok(())
 }

@@ -1,16 +1,51 @@
 //! Micro-benchmarks of the L3 hot path pieces: simulator throughput,
 //! energy evaluation, encoding/rounding, the batched-vs-scalar evaluation
-//! hot path, and the trace oracle for comparison. These drive the §Perf
-//! iteration in EXPERIMENTS.md.
+//! hot path, the memoized/pooled evaluation core (pooled-vs-spawn,
+//! cache hit rate, LlmEdp candidate throughput vs the pre-memoization
+//! path), and the trace oracle for comparison. These drive the §Perf
+//! iteration in EXPERIMENTS.md; the eval-core sections also emit
+//! `BENCH_eval_core.json` so the perf trajectory is machine-readable.
 
-use diffaxe::design_space::{decode_rounded, encode_norm, TargetSpace};
+use diffaxe::design_space::{decode_rounded, encode_norm, HwConfig, TargetSpace};
+use diffaxe::dse::eval::{par_map, EvalCache};
+use diffaxe::dse::llm::{eval_model_reference, Platform};
+use diffaxe::dse::{coarsen, Objective};
 use diffaxe::energy::{asic, fpga};
 use diffaxe::sim::{simulate, trace};
 use diffaxe::util::bench::{banner, time_mean, BenchScale};
+use diffaxe::util::json::Json;
 use diffaxe::util::rng::Pcg32;
 use diffaxe::util::table::{fnum, Table};
-use diffaxe::workload::Gemm;
+use diffaxe::workload::{Gemm, LlmModel, Stage};
+use std::collections::BTreeMap;
 use std::hint::black_box;
+
+/// The pre-PR batched evaluation path, retained for comparison: one scoped
+/// thread spawn per call (what the persistent `WorkerPool` replaced).
+fn spawn_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if threads <= 1 || items.len() < 64 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        let mut out = Vec::with_capacity(items.len());
+        for h in handles {
+            out.extend(h.join().expect("evaluation worker panicked"));
+        }
+        out
+    })
+}
 
 fn main() {
     banner("micro:sim", "simulator + evaluation-pipeline throughput");
@@ -70,8 +105,9 @@ fn main() {
     println!("{}", t.render());
 
     // batched vs scalar evaluation: the shared vectorized objective every
-    // optimizer runs on (dse::evaluate_batch partitions the batch over
-    // threads; results are bit-identical to the scalar loop)
+    // optimizer runs on (dse::evaluate_batch memoizes through the shared
+    // EvalCache and partitions the batch over the persistent pool; results
+    // are bit-identical to the scalar loop)
     let g_batch = gemms[0];
     let batch = &configs[..1024];
     let reps = scale.pick(3, 10, 30);
@@ -84,11 +120,137 @@ fn main() {
         black_box(diffaxe::dse::evaluate_batch(batch, &g_batch));
     });
     println!(
-        "evaluate 1024 configs: scalar {:.2} ms, evaluate_batch {:.2} ms => {:.1}x speedup",
+        "evaluate 1024 configs: scalar {:.2} ms, evaluate_batch (pooled + memoized) {:.2} ms \
+         => {:.1}x speedup",
         t_scalar * 1e3,
         t_batch * 1e3,
         t_scalar / t_batch
     );
+
+    let mut json = BTreeMap::new();
+
+    // --- pooled vs spawn: many small batches, the coordinator's shape ----
+    // The continuous batcher serves a stream of modest batches; the win of
+    // the persistent pool is amortizing thread spawn across them. Both
+    // sides run the identical uncached closure, isolating spawn cost from
+    // the memoization win measured below.
+    let small_batch = &configs[..96];
+    let n_batches = scale.pick(20, 100, 400);
+    let t_spawn = time_mean(reps, || {
+        for _ in 0..n_batches {
+            black_box(spawn_map(small_batch, |hw| diffaxe::dse::evaluate(hw, &g_batch)));
+        }
+    });
+    let t_pool = time_mean(reps, || {
+        for _ in 0..n_batches {
+            black_box(par_map(small_batch, move |hw| diffaxe::dse::evaluate(hw, &g_batch)));
+        }
+    });
+    let pool_speedup = t_spawn / t_pool;
+    println!(
+        "pooled vs spawn ({n_batches} batches x 96 cfgs): spawn {:.2} ms, pool {:.2} ms \
+         => {:.2}x speedup",
+        t_spawn * 1e3,
+        t_pool * 1e3,
+        pool_speedup
+    );
+    json.insert("pooled_vs_spawn_speedup".into(), Json::Num(pool_speedup));
+
+    // --- cache hit rate: recurring rounded design points (Fig 2a) --------
+    // Searches revisit grid points constantly (FD probes, decoder rounding
+    // many-to-one); model that as a small distinct pool visited repeatedly.
+    let distinct: Vec<HwConfig> = {
+        let mut rng = Pcg32::seeded(33);
+        (0..512).map(|_| coarsen(&TargetSpace::sample(&mut rng))).collect()
+    };
+    let visits = scale.pick(4_096, 16_384, 65_536);
+    let cache = EvalCache::new(EvalCache::DEFAULT_SHARDS, EvalCache::DEFAULT_CAP_PER_SHARD);
+    let t_uncached = time_mean(reps, || {
+        for i in 0..visits {
+            black_box(diffaxe::dse::evaluate(&distinct[i % 512], &g_batch));
+        }
+    });
+    let t_cached = time_mean(reps, || {
+        for i in 0..visits {
+            black_box(cache.evaluate(&distinct[i % 512], &g_batch));
+        }
+    });
+    let cstats = cache.stats();
+    let cache_speedup = t_uncached / t_cached;
+    println!(
+        "eval cache ({visits} visits over 512 distinct): uncached {:.0} ns/op, cached {:.0} \
+         ns/op => {:.2}x; {cstats}",
+        t_uncached / visits as f64 * 1e9,
+        t_cached / visits as f64 * 1e9,
+        cache_speedup
+    );
+    json.insert("cache_hit_rate".into(), Json::Num(cstats.hit_rate()));
+    json.insert("cache_speedup".into(), Json::Num(cache_speedup));
+
+    // --- LlmEdp candidate throughput: the §VI co-design hot loop ---------
+    // Pre-PR path: per-call layer_gemms alloc, one full simulate + energy
+    // evaluation per (layer, order) probe, a simulate_seq re-simulation,
+    // and a thread spawn per batch. New core: memoized workload, one
+    // cached simulation per (shape, order), coefficient dot products, the
+    // persistent pool, and the shared eval cache.
+    let obj = Objective::LlmEdp {
+        model: LlmModel::BertBase,
+        stage: Stage::Prefill,
+        seq: 128,
+        platform: Platform::Asic32nm,
+    };
+    let stream: Vec<HwConfig> = {
+        let mut rng = Pcg32::seeded(34);
+        let pool: Vec<HwConfig> =
+            (0..64).map(|_| coarsen(&TargetSpace::sample(&mut rng))).collect();
+        (0..scale.pick(128, 256, 1024)).map(|i| pool[i % 64]).collect()
+    };
+    let llm_reps = scale.pick(2, 5, 10);
+    let t_ref = time_mean(llm_reps, || {
+        black_box(spawn_map(&stream, |hw| {
+            eval_model_reference(hw, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm)
+                .energy
+                .edp
+        }));
+    });
+    // cold pass: all-distinct candidates + cleared cache, so intra-stream
+    // duplicates cannot hide behind memoization — this is the pure
+    // algorithmic fast-path win over the reference
+    let fresh: Vec<HwConfig> = {
+        let mut rng = Pcg32::seeded(35);
+        (0..stream.len()).map(|_| TargetSpace::sample(&mut rng)).collect()
+    };
+    let t_cold = time_mean(llm_reps, || {
+        EvalCache::global().clear();
+        black_box(obj.evaluate_all(&fresh));
+    });
+    let t_warm = time_mean(llm_reps, || {
+        black_box(obj.evaluate_all(&stream));
+    });
+    let n_cand = stream.len() as f64;
+    let (ref_cps, cold_cps, warm_cps) = (n_cand / t_ref, n_cand / t_cold, n_cand / t_warm);
+    println!(
+        "LlmEdp candidates/sec (BERT prefill, {} candidates):\n\
+         \x20 pre-PR (spawn + reference eval):          {:.0}/s\n\
+         \x20 eval core, cold + all-distinct:           {:.0}/s ({:.2}x)\n\
+         \x20 eval core, steady state (64 distinct):    {:.0}/s ({:.2}x)",
+        stream.len(),
+        ref_cps,
+        cold_cps,
+        cold_cps / ref_cps,
+        warm_cps,
+        warm_cps / ref_cps
+    );
+    json.insert("llm_ref_candidates_per_s".into(), Json::Num(ref_cps));
+    json.insert("llm_cold_candidates_per_s".into(), Json::Num(cold_cps));
+    json.insert("llm_warm_candidates_per_s".into(), Json::Num(warm_cps));
+    json.insert("llm_speedup_cold".into(), Json::Num(cold_cps / ref_cps));
+    json.insert("llm_speedup_warm".into(), Json::Num(warm_cps / ref_cps));
+    json.insert("batch_speedup".into(), Json::Num(t_scalar / t_batch));
+
+    let out = Json::Obj(json).to_string();
+    std::fs::write("BENCH_eval_core.json", &out).expect("write BENCH_eval_core.json");
+    println!("wrote BENCH_eval_core.json: {out}");
 
     // trace oracle cost for context (not on the hot path)
     let small = Gemm::new(64, 256, 64);

@@ -14,6 +14,10 @@ struct Inner {
     batch_slots_used: u64,
     batch_slots_total: u64,
     errors: u64,
+    /// cumulative eval-cache counters (absolute values mirrored from
+    /// [`crate::dse::eval::EvalCache`] after each evaluation burst)
+    cache_hits: u64,
+    cache_misses: u64,
     request_latency: LatencyHist,
     sampler_latency: LatencyHist,
 }
@@ -34,9 +38,25 @@ pub struct Snapshot {
     pub errors: u64,
     /// mean fraction of sampler batch slots carrying real requests
     pub batch_occupancy: f64,
+    /// cumulative evaluation-cache hits/misses (see
+    /// [`crate::dse::eval::EvalCache`])
+    pub cache_hits: u64,
+    pub cache_misses: u64,
     pub request_p50_us: f64,
     pub request_p99_us: f64,
     pub sampler_mean_us: f64,
+}
+
+impl Snapshot {
+    /// Fraction of evaluations served from the memo table.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
 }
 
 impl Metrics {
@@ -63,6 +83,14 @@ impl Metrics {
         self.inner.lock().unwrap().designs_evaluated += n as u64;
     }
 
+    /// Mirror the eval-cache counters (absolute cumulative values; the
+    /// cache is the source of truth, this just makes them scrapeable).
+    pub fn record_cache(&self, hits: u64, misses: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.cache_hits = hits;
+        m.cache_misses = misses;
+    }
+
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
     }
@@ -80,6 +108,8 @@ impl Metrics {
             } else {
                 m.batch_slots_used as f64 / m.batch_slots_total as f64
             },
+            cache_hits: m.cache_hits,
+            cache_misses: m.cache_misses,
             request_p50_us: m.request_latency.percentile_us(50.0),
             request_p99_us: m.request_latency.percentile_us(99.0),
             sampler_mean_us: m.sampler_latency.mean_us(),
@@ -92,12 +122,16 @@ impl std::fmt::Display for Snapshot {
         write!(
             f,
             "requests={} designs={} evals={} sampler_calls={} occupancy={:.2} \
+             cache_hits={} cache_misses={} cache_hit_rate={:.3} \
              p50={:.0}us p99={:.0}us sampler_mean={:.0}us errors={}",
             self.requests,
             self.designs_generated,
             self.designs_evaluated,
             self.sampler_calls,
             self.batch_occupancy,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_hit_rate(),
             self.request_p50_us,
             self.request_p99_us,
             self.sampler_mean_us,
@@ -117,6 +151,7 @@ mod tests {
         m.record_request(2000.0, 20);
         m.record_sampler_call(5000.0, 30, 128);
         m.record_evaluations(30);
+        m.record_cache(75, 25);
         m.record_error();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
@@ -125,7 +160,12 @@ mod tests {
         assert_eq!(s.sampler_calls, 1);
         assert_eq!(s.errors, 1);
         assert!((s.batch_occupancy - 30.0 / 128.0).abs() < 1e-9);
+        assert_eq!((s.cache_hits, s.cache_misses), (75, 25));
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
         assert!(s.request_p50_us > 0.0);
+        // record_cache mirrors absolutes, it does not accumulate
+        m.record_cache(80, 40);
+        assert_eq!(m.snapshot().cache_hits, 80);
     }
 
     #[test]
@@ -133,5 +173,6 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.batch_occupancy, 0.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
     }
 }

@@ -11,12 +11,15 @@
 //! expensive fixed-batch executable always runs as full as the queue
 //! allows. Every other `(objective, optimizer)` pair — and whole `Batch`
 //! requests — run directly on the session between sampler flushes.
+//!
+//! Candidate evaluation goes through the session's memoized, pooled hot
+//! path ([`crate::dse::eval`]): recurring rounded design points across
+//! requests are served from the sharded eval cache, whose hit/miss counters
+//! are mirrored into [`Metrics`] after every evaluation burst.
 
 use super::metrics::Metrics;
 use super::protocol::{ErrorCode, Request, Response, SearchRequest};
-use crate::dse::api::{
-    evaluate_batch, DesignReport, Objective, OptimizerKind, SearchOutcome, Session,
-};
+use crate::dse::api::{DesignReport, Objective, OptimizerKind, SearchOutcome, Session};
 use crate::design_space::HwConfig;
 use crate::util::rng;
 use crate::workload::Gemm;
@@ -293,12 +296,16 @@ fn flush_gen_batch(
                         continue;
                     }
                     let g = pending[idx].g;
-                    for (hw, (s, e)) in cfgs.iter().zip(evaluate_batch(cfgs, &g)) {
+                    // memoized + pooled hot path: recurring rounded designs
+                    // across requests become cache hits
+                    for (hw, (s, e)) in cfgs.iter().zip(session.evaluate_batch(cfgs, &g)) {
                         pending[idx].acc.push(DesignReport::from_sim(*hw, &s, &e));
                     }
                     evaluated += cfgs.len();
                 }
                 metrics.record_evaluations(evaluated);
+                let cs = session.cache_stats();
+                metrics.record_cache(cs.hits, cs.misses);
                 // retire fully-served requests (from the end, keep indices valid)
                 for idx in (0..pending.len()).rev() {
                     if pending[idx].acc.len() >= pending[idx].n {
@@ -367,6 +374,8 @@ fn handle_direct(
             match run_search(session, sr, seed, stream) {
                 Ok(out) => {
                     metrics.record_evaluations(out.evals);
+                    let cs = session.cache_stats();
+                    metrics.record_cache(cs.hits, cs.misses);
                     Response::Outcome(out)
                 }
                 Err(e) => {
@@ -388,6 +397,8 @@ fn handle_direct(
                 match run_search(session, sr, seed, stream) {
                     Ok(out) => {
                         metrics.record_evaluations(out.evals);
+                        let cs = session.cache_stats();
+                        metrics.record_cache(cs.hits, cs.misses);
                         outs.push(out);
                     }
                     Err(e) => {

@@ -30,6 +30,7 @@
 //! seed)` triple yields the same `SearchOutcome` (modulo `search_time_s`).
 
 use super::coarsen;
+use super::eval::{par_map, CacheStats, EvalCache};
 use crate::baselines::{bo, gd, BoOptions, FixedArch, GdOptions};
 use crate::design_space::{decode_rounded, encode_norm, HwConfig, TargetSpace, NORM_DIM};
 use crate::energy::EnergyResult;
@@ -83,23 +84,21 @@ impl Objective {
         }
     }
 
-    /// Evaluate one configuration under this objective.
+    /// Evaluate one configuration under this objective. Memoized through
+    /// the shared [`EvalCache`] (bit-identical to uncached evaluation —
+    /// the function is pure), so searchers that revisit grid points (DOSA
+    /// finite differences, BO re-probes) pay a lookup, not a simulation.
     pub fn evaluate(&self, hw: &HwConfig) -> DesignReport {
         match self {
             Objective::Runtime { g, .. }
             | Objective::MinEdp { g }
             | Objective::MaxPerf { g } => {
-                let (s, e) = super::evaluate(hw, g);
+                let (s, e) = EvalCache::global().evaluate(hw, g);
                 DesignReport::from_sim(*hw, &s, &e)
             }
             Objective::LlmEdp { model, stage, seq, platform } => {
                 let ev = super::llm::eval_model(hw, *model, *stage, *seq, *platform);
-                DesignReport {
-                    hw: *hw,
-                    cycles: ev.sim.cycles as f64,
-                    power_w: ev.energy.power_w,
-                    edp: ev.energy.edp,
-                }
+                DesignReport::from_sim(*hw, &ev.sim, &ev.energy)
             }
         }
     }
@@ -121,7 +120,17 @@ impl Objective {
                 .zip(cfgs)
                 .map(|((s, e), hw)| DesignReport::from_sim(*hw, &s, &e))
                 .collect(),
-            Objective::LlmEdp { .. } => par_map(cfgs, |hw| self.evaluate(hw)),
+            Objective::LlmEdp { model, stage, seq, platform } => {
+                // hoist the workload memo lookup out of the per-candidate
+                // loop: one Arc clone here instead of a memo-mutex hit per
+                // candidate on every pool worker
+                let wl = crate::workload::model_workload(*model, *stage, *seq);
+                let platform = *platform;
+                par_map(cfgs, move |hw| {
+                    let ev = super::llm::eval_workload(hw, &wl, platform);
+                    DesignReport::from_sim(*hw, &ev.sim, &ev.energy)
+                })
+            }
         }
     }
 
@@ -285,42 +294,15 @@ impl SearchOutcome {
 // batched evaluation hot path
 // ---------------------------------------------------------------------------
 
-/// Below this batch size threading overhead beats the win; run inline.
-const PAR_THRESHOLD: usize = 64;
-
 /// Simulate + ASIC-evaluate a batch of configurations on one workload,
-/// partitioned over threads. Order-preserving and bit-identical to calling
-/// [`super::evaluate`] per element — the hot path is pure, so threads only
-/// split the index range.
+/// memoized through the shared [`EvalCache`] and partitioned over the
+/// persistent [`crate::dse::eval::WorkerPool`]. Order-preserving and
+/// bit-identical to calling [`super::evaluate`] per element — the hot path
+/// is pure, so the cache only short-circuits recomputation and threads
+/// only split the index range.
 pub fn evaluate_batch(cfgs: &[HwConfig], g: &Gemm) -> Vec<(SimResult, EnergyResult)> {
-    par_map(cfgs, |hw| super::evaluate(hw, g))
-}
-
-/// Order-preserving parallel map over contiguous chunks via scoped threads
-/// (rayon is not in the offline registry).
-fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
-where
-    T: Sync,
-    R: Send,
-    F: Fn(&T) -> R + Sync,
-{
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    if threads <= 1 || items.len() < PAR_THRESHOLD {
-        return items.iter().map(|t| f(t)).collect();
-    }
-    let chunk = items.len().div_ceil(threads);
-    std::thread::scope(|s| {
-        let f = &f;
-        let handles: Vec<_> = items
-            .chunks(chunk)
-            .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
-            .collect();
-        let mut out = Vec::with_capacity(items.len());
-        for h in handles {
-            out.extend(h.join().expect("evaluation worker panicked"));
-        }
-        out
-    })
+    let g = *g;
+    par_map(cfgs, move |hw| EvalCache::global().evaluate(hw, &g))
 }
 
 // ---------------------------------------------------------------------------
@@ -913,7 +895,9 @@ impl Optimizer for FixedArch {
 
 /// A DSE session: owns the (optional) generative engine and the shared
 /// baseline options, dispatches [`Session::search`] calls to any
-/// [`OptimizerKind`], and exposes the batched evaluation hot path.
+/// [`OptimizerKind`], and exposes the batched evaluation hot path —
+/// memoized through the shared [`EvalCache`] and partitioned over the
+/// persistent worker pool (see [`crate::dse::eval`]).
 ///
 /// The engine holds PJRT executables (raw C pointers, deliberately
 /// `!Send`), so a `Session` lives on one thread — the coordinator service
@@ -955,10 +939,17 @@ impl Session {
             .with_context(|| format!("optimizer {:?} requires the generative engine", kind.name()))
     }
 
-    /// Evaluate a batch of configurations on one workload over the
-    /// session's vectorized objective (see [`evaluate_batch`]).
+    /// Evaluate a batch of configurations on one workload through the
+    /// shared memo table and the persistent worker pool (see
+    /// [`evaluate_batch`]).
     pub fn evaluate_batch(&self, cfgs: &[HwConfig], g: &Gemm) -> Vec<(SimResult, EnergyResult)> {
         evaluate_batch(cfgs, g)
+    }
+
+    /// Counters of the shared evaluation cache this session's batched and
+    /// LLM hot paths run through (exported by the coordinator's metrics).
+    pub fn cache_stats(&self) -> CacheStats {
+        EvalCache::global().stats()
     }
 
     /// Run one search with the named strategy.
@@ -1035,6 +1026,24 @@ mod tests {
             let (s2, e2) = crate::dse::evaluate(hw, &g);
             assert_eq!(*s, s2);
             assert_eq!(*e, e2);
+        }
+    }
+
+    #[test]
+    fn session_cached_batch_is_bit_identical_to_scalar() {
+        let s = Session::simulator_only();
+        let mut rng = Pcg32::seeded(11);
+        let mut cfgs: Vec<HwConfig> = (0..150).map(|_| TargetSpace::sample(&mut rng)).collect();
+        let dups = cfgs[..50].to_vec();
+        cfgs.extend(dups); // recurring rounded points: the cache's bread and butter
+        let g = Gemm::new(64, 512, 256);
+        for _ in 0..2 {
+            let batch = s.evaluate_batch(&cfgs, &g);
+            for (hw, (sr, er)) in cfgs.iter().zip(&batch) {
+                let (s2, e2) = crate::dse::evaluate(hw, &g);
+                assert_eq!(*sr, s2);
+                assert_eq!(*er, e2);
+            }
         }
     }
 

@@ -1,0 +1,407 @@
+//! The memoized, pooled evaluation core shared by every optimizer.
+//!
+//! Candidate scoring is the hot path of every search strategy — the paper's
+//! headline numbers (17000× over BO, 145.6×/1312× structured-DSE speedups,
+//! O(10^17) LLM co-design sweeps) are all throughput claims about exactly
+//! this loop. Two structural facts make it optimizable without touching a
+//! single result bit:
+//!
+//! 1. **Evaluation is pure.** `(HwConfig, Gemm) → (SimResult,
+//!    EnergyResult)` has no state, so results can be memoized and the work
+//!    partitioned over threads; cached, pooled and scalar paths are
+//!    bit-identical by construction.
+//! 2. **Rounded design points recur.** Generation and rounding are
+//!    many-to-one (paper Fig 2a): decoders snap a continuous latent onto a
+//!    discrete grid, coarse searchers (DOSA) revisit grid points across
+//!    finite-difference probes and restarts, and the coordinator serves
+//!    many clients chasing the same workloads. A memo table converts that
+//!    recurrence into lookups.
+//!
+//! # Cache keying
+//!
+//! [`EvalCache`] maps `(HwConfig, Gemm)` → `(SimResult, EnergyResult)`,
+//! where the energy half is the 32 nm ASIC evaluation (the
+//! [`crate::dse::evaluate`] pair). The key includes the loop order (it is a
+//! field of `HwConfig`), so the LLM fast path's per-`(layer, order)` probes
+//! are individually cached. FPGA consumers reuse the cached `SimResult` and
+//! re-price energy through [`crate::energy::EnergyCoeffs`] — a dot product,
+//! cheap enough to never be worth caching per platform.
+//!
+//! The table is **lock-striped**: the key hash picks one of
+//! [`EvalCache::DEFAULT_SHARDS`] independently-locked shards, so concurrent
+//! pool workers rarely contend. Each shard is capacity-bounded
+//! ([`EvalCache::DEFAULT_CAP_PER_SHARD`]) and clears wholesale when full —
+//! eviction precision is worthless for a memo of recurring points, and a
+//! bounded table keeps a long-lived coordinator's footprint flat (~tens of
+//! MB at the defaults). Raise the shard count if profiles show contention
+//! (more shards = less contention, slightly worse locality); raise the
+//! per-shard cap if hit rates sag on workloads with huge working sets.
+//!
+//! # Pool lifecycle
+//!
+//! [`WorkerPool`] replaces the per-call `std::thread::scope` spawning the
+//! batched hot path used before: the coordinator serves many *small*
+//! batches, and re-spawning OS threads per batch wastes more time than the
+//! evaluation itself. The pool spawns `available_parallelism` workers once
+//! (lazily, on first parallel batch), keeps them parked on a shared channel,
+//! and never tears them down — workers exit only when the process does.
+//! [`par_map`] splits a batch into contiguous per-worker chunks, runs the
+//! chunks on the pool, and reassembles results in input order; a panicking
+//! closure is caught on the worker (which survives for the next job) and
+//! re-raised on the caller. Jobs must not call [`par_map`] themselves — a
+//! nested call from a worker runs inline rather than deadlocking the pool.
+//!
+//! # Tuning `PAR_THRESHOLD`
+//!
+//! Below [`PAR_THRESHOLD`] items, a batch runs inline on the caller: one
+//! analytical evaluation costs ~0.5 µs, so at small sizes channel round
+//! trips and cache-line handoffs cost more than they save. The default (64)
+//! was chosen with `benches/micro_sim.rs`; re-measure there before changing
+//! it — the crossover moves with simulator cost, not with core count.
+
+use crate::design_space::HwConfig;
+use crate::energy::EnergyResult;
+use crate::sim::SimResult;
+use crate::workload::Gemm;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Below this batch size threading overhead beats the win; run inline.
+pub const PAR_THRESHOLD: usize = 64;
+
+// ---------------------------------------------------------------------------
+// persistent worker pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Name prefix of pool worker threads (also the nested-call guard: a
+/// [`par_map`] issued from a worker thread runs inline).
+const WORKER_NAME: &str = "eval-worker";
+
+/// A long-lived, channel-fed thread pool for evaluation batches (rayon is
+/// not in the offline registry). One process-wide instance, spawned lazily
+/// by [`WorkerPool::global`]; see the module docs for the lifecycle.
+pub struct WorkerPool {
+    tx: Mutex<Sender<Job>>,
+    workers: usize,
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+impl WorkerPool {
+    /// The shared pool (spawned on first use).
+    pub fn global() -> &'static WorkerPool {
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            WorkerPool::with_workers(n)
+        })
+    }
+
+    fn with_workers(n: usize) -> WorkerPool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..n {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("{WORKER_NAME}-{i}"))
+                .spawn(move || loop {
+                    // take the next job while holding the queue lock, run it
+                    // after releasing; exit when every sender is gone
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => return,
+                    }
+                })
+                .expect("spawn eval-worker thread");
+        }
+        WorkerPool { tx: Mutex::new(tx), workers: n }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn submit(&self, job: Job) {
+        self.tx.lock().unwrap().send(job).expect("eval-worker queue closed");
+    }
+}
+
+/// Order-preserving parallel map over the persistent [`WorkerPool`].
+///
+/// Bit-identical to `items.iter().map(f).collect()` — the closure must be
+/// pure; threads only partition the index range. Runs inline when the batch
+/// is below [`PAR_THRESHOLD`], when the machine has a single core, or when
+/// called from a pool worker (nested parallelism guard). A panic inside `f`
+/// is forwarded to the caller after the batch drains; the workers survive.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Clone + Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(&T) -> R + Send + Sync + 'static,
+{
+    let nested = std::thread::current().name().is_some_and(|n| n.starts_with(WORKER_NAME));
+    if nested || items.len() < PAR_THRESHOLD {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let pool = WorkerPool::global();
+    if pool.workers() <= 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    // From<&[T]> clones straight into the Arc allocation: one copy, not two
+    let shared: Arc<[T]> = Arc::from(items);
+    let f = Arc::new(f);
+    let chunk = items.len().div_ceil(pool.workers());
+    let n_chunks = items.len().div_ceil(chunk);
+    let (tx, rx) = channel();
+    for ci in 0..n_chunks {
+        let lo = ci * chunk;
+        let hi = ((ci + 1) * chunk).min(shared.len());
+        let shared = shared.clone();
+        let f = f.clone();
+        let tx = tx.clone();
+        pool.submit(Box::new(move || {
+            let out = catch_unwind(AssertUnwindSafe(|| {
+                shared[lo..hi].iter().map(|t| f(t)).collect::<Vec<R>>()
+            }));
+            let _ = tx.send((ci, out));
+        }));
+    }
+    drop(tx);
+    let mut slots: Vec<Option<Vec<R>>> = (0..n_chunks).map(|_| None).collect();
+    let mut panicked = None;
+    for _ in 0..n_chunks {
+        let (ci, res) = rx.recv().expect("eval-worker dropped a chunk result");
+        match res {
+            Ok(v) => slots[ci] = Some(v),
+            Err(payload) => panicked = Some(payload),
+        }
+    }
+    if let Some(payload) = panicked {
+        resume_unwind(payload);
+    }
+    let mut out = Vec::with_capacity(shared.len());
+    for s in slots {
+        out.extend(s.expect("every chunk reported exactly once"));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// sharded evaluation cache
+// ---------------------------------------------------------------------------
+
+/// Point-in-time cache counters (monotonic except `entries`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// entries currently resident across all shards
+    pub entries: u64,
+    /// shard wholesale-clear events (capacity evictions)
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} hit_rate={:.3} entries={} evictions={}",
+            self.hits,
+            self.misses,
+            self.hit_rate(),
+            self.entries,
+            self.evictions
+        )
+    }
+}
+
+/// Memo key: the configuration (loop order included) and the workload.
+type EvalKey = (HwConfig, Gemm);
+/// Memo value: the simulation and its 32 nm ASIC energy evaluation.
+type EvalValue = (SimResult, EnergyResult);
+type Shard = Mutex<HashMap<EvalKey, EvalValue>>;
+
+/// Lock-striped memo table for the pure evaluation function — see the
+/// module docs for keying, sharding and eviction policy.
+pub struct EvalCache {
+    shards: Vec<Shard>,
+    cap_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+static CACHE: OnceLock<EvalCache> = OnceLock::new();
+
+impl EvalCache {
+    /// Default shard count — enough stripes that `available_parallelism`
+    /// workers rarely collide on one lock.
+    pub const DEFAULT_SHARDS: usize = 16;
+
+    /// Default per-shard entry cap (~16 k entries × 16 shards ≈ 260 k
+    /// cached points, tens of MB).
+    pub const DEFAULT_CAP_PER_SHARD: usize = 1 << 14;
+
+    /// A cache with explicit geometry (benches and tests).
+    pub fn new(shards: usize, cap_per_shard: usize) -> EvalCache {
+        EvalCache {
+            shards: (0..shards.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+            cap_per_shard: cap_per_shard.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache behind [`crate::dse::evaluate_batch`] (and
+    /// thus `Session::evaluate_batch` and the coordinator's batcher), the
+    /// scalar `Objective::evaluate` scoring path, and the LLM fast path's
+    /// per-(layer, order) probes.
+    pub fn global() -> &'static EvalCache {
+        CACHE.get_or_init(|| EvalCache::new(Self::DEFAULT_SHARDS, Self::DEFAULT_CAP_PER_SHARD))
+    }
+
+    fn shard_of(&self, key: &EvalKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Simulate + ASIC-evaluate through the memo table. Bit-identical to
+    /// [`crate::dse::evaluate`] (the function is pure; the table only
+    /// short-circuits recomputation).
+    pub fn evaluate(&self, hw: &HwConfig, g: &Gemm) -> EvalValue {
+        let key = (*hw, *g);
+        let si = self.shard_of(&key);
+        if let Some(v) = self.shards[si].lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *v;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // compute outside the lock: misses must not serialize on the shard
+        let v = crate::dse::evaluate(hw, g);
+        let mut m = self.shards[si].lock().unwrap();
+        if m.len() >= self.cap_per_shard {
+            m.clear();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        m.insert(key, v);
+        v
+    }
+
+    /// Cached simulation only (the LLM fast path re-prices energy itself
+    /// through [`crate::energy::EnergyCoeffs`]).
+    pub fn simulate(&self, hw: &HwConfig, g: &Gemm) -> SimResult {
+        self.evaluate(hw, g).0
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.shards.iter().map(|s| s.lock().unwrap().len() as u64).sum(),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every entry (counters keep accumulating). Benches use this to
+    /// measure cold-path cost.
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::TargetSpace;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn cache_returns_bit_identical_results_and_counts_hits() {
+        let cache = EvalCache::new(4, 1024);
+        let mut rng = Pcg32::seeded(3);
+        let g = Gemm::new(128, 768, 768);
+        let cfgs: Vec<HwConfig> = (0..32).map(|_| TargetSpace::sample(&mut rng)).collect();
+        for hw in &cfgs {
+            let (s, e) = cache.evaluate(hw, &g);
+            let (s2, e2) = crate::dse::evaluate(hw, &g);
+            assert_eq!(s, s2);
+            assert_eq!(e, e2);
+        }
+        let cold = cache.stats();
+        assert_eq!(cold.misses, 32);
+        assert_eq!(cold.entries, 32);
+        for hw in &cfgs {
+            let (s, e) = cache.evaluate(hw, &g);
+            let (s2, e2) = crate::dse::evaluate(hw, &g);
+            assert_eq!(s, s2);
+            assert_eq!(e, e2);
+        }
+        let warm = cache.stats();
+        assert_eq!(warm.hits, 32);
+        assert_eq!(warm.misses, 32);
+        assert!((warm.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_eviction_bounds_entries() {
+        let cache = EvalCache::new(2, 8);
+        let mut rng = Pcg32::seeded(9);
+        let g = Gemm::new(64, 64, 64);
+        for _ in 0..200 {
+            let hw = TargetSpace::sample(&mut rng);
+            cache.evaluate(&hw, &g);
+        }
+        let s = cache.stats();
+        assert!(s.entries <= 2 * 8, "entries {} exceed cap", s.entries);
+        assert!(s.evictions > 0, "200 inserts into 16 slots must evict");
+    }
+
+    #[test]
+    fn par_map_matches_inline_and_preserves_order() {
+        let items: Vec<u64> = (0..(PAR_THRESHOLD as u64 * 4)).collect();
+        let out = par_map(&items, |&x| x * x + 1);
+        let expect: Vec<u64> = items.iter().map(|&x| x * x + 1).collect();
+        assert_eq!(out, expect);
+        // below the threshold: inline path, same contract
+        let small: Vec<u64> = (0..5).collect();
+        assert_eq!(par_map(&small, |&x| x + 7), vec![7, 8, 9, 10, 11]);
+        assert_eq!(par_map(&[] as &[u64], |&x| x), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn par_map_panic_propagates_and_pool_survives() {
+        let items: Vec<u64> = (0..(PAR_THRESHOLD as u64 * 2)).collect();
+        let crashed = std::panic::catch_unwind(|| {
+            par_map(&items, |&x| if x == 100 { panic!("boom") } else { x })
+        });
+        assert!(crashed.is_err(), "worker panic must reach the caller");
+        // the pool still serves subsequent batches
+        let out = par_map(&items, |&x| x + 1);
+        assert_eq!(out.len(), items.len());
+        assert_eq!(out[0], 1);
+    }
+}

@@ -5,19 +5,44 @@
 //! order. This module holds the whole-model evaluator [`eval_model`] that
 //! `Objective::LlmEdp` scores candidates with: given a shared base
 //! configuration the additive cost model makes per-layer loop-order choices
-//! independent, so 2·l simulations pick them exactly, and one block scales
-//! linearly to the whole model. The paper does this with an attention-based
-//! sequence PP; evaluating sequences natively in the simulator is the
-//! rust-coordinator adaptation of the same search (see DESIGN.md §3).
+//! independent, so one simulation per `(distinct layer shape, loop order)`
+//! pair picks them exactly, and one block scales linearly to the whole
+//! model. The paper does this with an attention-based sequence PP;
+//! evaluating sequences natively in the simulator is the rust-coordinator
+//! adaptation of the same search (see DESIGN.md §3).
+//!
+//! # The fast path
+//!
+//! [`eval_model`] is the per-candidate hot loop of every LLM search, so it
+//! leans on three structural facts (see [`crate::dse::eval`] for the shared
+//! machinery):
+//!
+//! * the workload is fixed across candidates — [`ModelWorkload`] memoizes
+//!   the layer list (and dedups identical GEMM shapes) once per
+//!   `(model, stage, seq)` instead of re-allocating it per candidate;
+//! * energy coefficients depend only on the base parameters, never on the
+//!   loop order — one [`EnergyCoeffs`] prices every order probe, so order
+//!   selection is a dot product over [`SimResult`] counters instead of a
+//!   full energy evaluation per probe;
+//! * per-layer winners are summed directly ([`SimResult::add`]) — the
+//!   winning simulations are already in hand, so nothing is re-simulated.
+//!
+//! Layer simulations go through the global [`EvalCache`], which converts
+//! the many-to-one recurrence of rounded design points (Fig 2a) into
+//! lookups across candidates and requests. [`eval_model_reference`] retains
+//! the pre-memoization implementation; `tests/eval_core.rs` proves the two
+//! bit-identical over every `LlmModel` × `Stage` × `Platform`.
 //!
 //! The searches themselves (DiffAxE per-layer conditioning, the DOSA-style
 //! coarse GD, fixed architectures) are [`crate::dse::api::Optimizer`] impls
 //! driven with `Objective::LlmEdp`.
 
+use super::eval::EvalCache;
 use crate::design_space::{HwConfig, LoopOrder};
-use crate::energy::{asic, fpga, EnergyResult};
+use crate::energy::{asic, fpga, EnergyCoeffs, EnergyResult};
 use crate::sim::{simulate_seq, SeqConfig, SimResult};
-use crate::workload::{Gemm, LlmModel, Stage};
+use crate::workload::{model_workload, Gemm, LlmModel, ModelWorkload, Stage};
+use std::cmp::Ordering;
 
 /// Evaluation platform.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +69,22 @@ impl Platform {
             _ => None,
         }
     }
+
+    /// Loop-order-independent energy coefficients of `hw` on this platform.
+    pub fn coeffs(&self, hw: &HwConfig) -> EnergyCoeffs {
+        match self {
+            Platform::Asic32nm => asic::coeffs(hw),
+            Platform::FpgaVu13p => fpga::coeffs(hw),
+        }
+    }
+
+    /// Full energy evaluation of a simulated run on this platform.
+    pub fn evaluate(&self, hw: &HwConfig, sim: &SimResult) -> EnergyResult {
+        match self {
+            Platform::Asic32nm => asic::evaluate(hw, sim),
+            Platform::FpgaVu13p => fpga::evaluate(hw, sim),
+        }
+    }
 }
 
 /// Whole-model evaluation of a sequence configuration.
@@ -55,8 +96,70 @@ pub struct SeqEval {
 }
 
 /// Evaluate a base config on an LLM (one transformer block scaled by the
-/// block count), choosing each layer's loop order optimally.
+/// block count), choosing each layer's loop order optimally. Fast path —
+/// see the module docs; bit-identical to [`eval_model_reference`].
 pub fn eval_model(
+    base: &HwConfig,
+    model: LlmModel,
+    stage: Stage,
+    seq: u32,
+    platform: Platform,
+) -> SeqEval {
+    eval_workload(base, &model_workload(model, stage, seq), platform)
+}
+
+/// [`eval_model`] over an already-shared [`ModelWorkload`] (the objective
+/// hot loop holds one and skips the memo lookup entirely).
+pub fn eval_workload(base: &HwConfig, wl: &ModelWorkload, platform: Platform) -> SeqEval {
+    let cache = EvalCache::global();
+    let coeffs = platform.coeffs(base);
+    // one cached simulation per (distinct shape, order); order selection by
+    // coefficient dot product. First-minimal tie-break and NaN-safe
+    // comparison (total_cmp: a NaN EDP loses to any number) match the
+    // reference `min_by` exactly.
+    let best: Vec<(LoopOrder, SimResult)> = wl
+        .unique
+        .iter()
+        .map(|g| {
+            let mut probes = LoopOrder::OS_ORDERS.iter().copied();
+            let first = probes.next().expect("OS_ORDERS is non-empty");
+            let mut best_order = first;
+            let mut best_sim = cache.simulate(&HwConfig { loop_order: first, ..*base }, g);
+            let mut best_edp = coeffs.edp(&best_sim);
+            for order in probes {
+                let sim = cache.simulate(&HwConfig { loop_order: order, ..*base }, g);
+                let edp = coeffs.edp(&sim);
+                if edp.total_cmp(&best_edp) == Ordering::Less {
+                    best_order = order;
+                    best_sim = sim;
+                    best_edp = edp;
+                }
+            }
+            (best_order, best_sim)
+        })
+        .collect();
+    let orders: Vec<LoopOrder> = wl.layer_to_unique.iter().map(|&u| best[u].0).collect();
+    // sum the winning per-layer simulations directly (u64 counters: exact)
+    let mut acc: Option<SimResult> = None;
+    for &u in &wl.layer_to_unique {
+        acc = Some(match acc {
+            None => best[u].1,
+            Some(a) => a.add(&best[u].1),
+        });
+    }
+    // scale one block to the whole model (linear in blocks)
+    let sim = acc.expect("non-empty GEMM sequence").scale(wl.blocks);
+    let energy = coeffs.evaluate(&sim);
+    SeqEval { cfg: SeqConfig { base: *base, orders }, sim, energy }
+}
+
+/// The pre-memoization implementation, retained as the equivalence oracle:
+/// one full `simulate` + platform `evaluate` per (layer, order) probe, a
+/// `simulate_seq` re-simulation of the chosen orders, and a fresh
+/// `layer_gemms` allocation per call. `tests/eval_core.rs` and
+/// `benches/micro_sim.rs` hold [`eval_model`] to bit-identity and to a
+/// throughput multiple against this path.
+pub fn eval_model_reference(
     base: &HwConfig,
     model: LlmModel,
     stage: Stage,
@@ -74,49 +177,21 @@ pub fn eval_model(
                 .min_by(|&a, &b| {
                     let ea = edp_for_order(base, g, a, platform);
                     let eb = edp_for_order(base, g, b, platform);
-                    ea.partial_cmp(&eb).unwrap()
+                    ea.total_cmp(&eb)
                 })
-                .unwrap()
+                .expect("OS_ORDERS is non-empty")
         })
         .collect();
     let cfg = SeqConfig { base: *base, orders };
-    let mut sim = simulate_seq(&cfg, &gemms);
-    // scale one block to the whole model (linear in blocks)
-    let blocks = model.n_blocks() as u64;
-    sim = scale_sim(&sim, blocks);
-    let energy = match platform {
-        Platform::Asic32nm => asic::evaluate(base, &sim),
-        Platform::FpgaVu13p => fpga::evaluate(base, &sim),
-    };
+    let sim = simulate_seq(&cfg, &gemms).scale(model.n_blocks() as u64);
+    let energy = platform.evaluate(base, &sim);
     SeqEval { cfg, sim, energy }
 }
 
 fn edp_for_order(base: &HwConfig, g: &Gemm, order: LoopOrder, platform: Platform) -> f64 {
     let hw = HwConfig { loop_order: order, ..*base };
     let s = crate::sim::simulate(&hw, g);
-    match platform {
-        Platform::Asic32nm => asic::evaluate(&hw, &s).edp,
-        Platform::FpgaVu13p => fpga::evaluate(&hw, &s).edp,
-    }
-}
-
-fn scale_sim(s: &SimResult, blocks: u64) -> SimResult {
-    let mut out = *s;
-    out.cycles *= blocks;
-    out.compute_cycles *= blocks;
-    out.mem_cycles *= blocks;
-    out.dram.a_reads *= blocks;
-    out.dram.b_reads *= blocks;
-    out.dram.out_writes *= blocks;
-    out.dram.out_reads *= blocks;
-    out.sram.ip_reads *= blocks;
-    out.sram.wt_reads *= blocks;
-    out.sram.op_writes *= blocks;
-    out.sram.op_reads *= blocks;
-    out.sram.fills *= blocks;
-    out.macs_useful *= blocks;
-    out.pe_cycles *= blocks;
-    out
+    platform.evaluate(&hw, &s).edp
 }
 
 #[cfg(test)]
@@ -134,13 +209,26 @@ mod tests {
     }
 
     #[test]
+    fn fast_path_matches_reference_spot_check() {
+        // the exhaustive model × stage × platform sweep lives in
+        // tests/eval_core.rs; this guards the module in isolation
+        let hw = HwConfig::new_kb(48, 24, 256.0, 32.0, 16.0, 8, LoopOrder::Nmk);
+        let a = eval_model(&hw, LlmModel::Opt350m, Stage::Decode, 96, Platform::FpgaVu13p);
+        let b = eval_model_reference(&hw, LlmModel::Opt350m, Stage::Decode, 96, Platform::FpgaVu13p);
+        assert_eq!(a.cfg, b.cfg);
+        assert_eq!(a.sim, b.sim);
+        assert_eq!(a.energy.edp.to_bits(), b.energy.edp.to_bits());
+        assert_eq!(a.energy.power_w.to_bits(), b.energy.power_w.to_bits());
+    }
+
+    #[test]
     fn per_layer_orders_not_worse_than_uniform() {
         let hw = HwConfig::new_kb(64, 64, 256.0, 64.0, 32.0, 16, LoopOrder::Mnk);
         let opt = eval_model(&hw, LlmModel::BertBase, Stage::Prefill, 128, Platform::Asic32nm);
         for uniform in LoopOrder::OS_ORDERS {
             let gemms = LlmModel::BertBase.layer_gemms(Stage::Prefill, 128);
             let cfg = SeqConfig::uniform(HwConfig { loop_order: uniform, ..hw }, gemms.len());
-            let sim = scale_sim(&simulate_seq(&cfg, &gemms), 12);
+            let sim = simulate_seq(&cfg, &gemms).scale(12);
             let e = asic::evaluate(&hw, &sim);
             // per-layer EDP-optimal ordering beats (or ties) any uniform order
             // on runtime-energy product within rounding

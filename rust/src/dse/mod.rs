@@ -6,7 +6,10 @@
 //! a ranked [`api::SearchOutcome`]. An [`api::Session`] owns the engine
 //! handle, dispatches strategies by [`api::OptimizerKind`], and provides
 //! the batched evaluation hot path [`api::evaluate_batch`] all searchers
-//! share. The paper's experiments map onto the objectives as:
+//! share — backed by the memoized, pooled evaluation core in [`eval`]
+//! (sharded `(config, workload)` memo table + persistent worker pool,
+//! bit-identical to scalar evaluation). The paper's experiments map onto
+//! the objectives as:
 //!
 //! * `Objective::Runtime` — §IV-B.1 / Table III / Fig 16: runtime-
 //!   conditioned generation vs GD/BO/GANDSE baselines (protocol helpers in
@@ -24,6 +27,7 @@
 //! ([`crate::coordinator::protocol`]).
 
 pub mod api;
+pub mod eval;
 pub mod llm;
 pub mod perfgen;
 pub mod perfopt;
@@ -32,6 +36,7 @@ pub use api::{
     evaluate_batch, Budget, DesignReport, Objective, Optimizer, OptimizerKind, SearchOutcome,
     Session,
 };
+pub use eval::{par_map, CacheStats, EvalCache};
 
 use crate::design_space::HwConfig;
 use crate::energy::{asic, EnergyResult};
@@ -70,10 +75,8 @@ pub fn coarsen(hw: &HwConfig) -> HwConfig {
         let kb = b as f64 / 1024.0;
         let best = TrainingSpace::BUF_KB
             .iter()
-            .min_by(|&&a, &&c| {
-                (a as f64 - kb).abs().partial_cmp(&(c as f64 - kb).abs()).unwrap()
-            })
-            .unwrap();
+            .min_by(|&&a, &&c| (a as f64 - kb).abs().total_cmp(&(c as f64 - kb).abs()))
+            .expect("BUF_KB grid is non-empty");
         *best as u64 * 1024
     };
     let snap_bw = |v: u32| {

@@ -7,7 +7,7 @@
 //! under-utilized R > M decode configurations (paper §VI).
 
 use super::cacti::{sram_pj_per_byte, DRAM_PJ_PER_BYTE, SRAM_LEAK_W_PER_KB};
-use super::EnergyResult;
+use super::{EnergyCoeffs, EnergyResult};
 use crate::design_space::HwConfig;
 use crate::sim::SimResult;
 
@@ -26,20 +26,30 @@ pub const PE_LEAK_W: f64 = 9e-6;
 /// Baseline controller/IO static power (W).
 pub const BASE_STATIC_W: f64 = 0.04;
 
+/// Per-access coefficient vector of a configuration — a pure function of
+/// the array shape and buffer sizes (the loop order never enters), so one
+/// vector prices every loop-order variant of a candidate.
+pub fn coeffs(hw: &HwConfig) -> EnergyCoeffs {
+    EnergyCoeffs {
+        mac_pj: E_MAC_PJ,
+        pe_cycle_pj: E_PE_CLK_PJ,
+        compute_units: 0,
+        compute_cycle_pj: 0.0,
+        ip_pj: sram_pj_per_byte(hw.ip_b),
+        wt_pj: sram_pj_per_byte(hw.wt_b),
+        op_pj: sram_pj_per_byte(hw.op_b),
+        fill_pj: fill_pj_per_byte(hw),
+        dram_pj: DRAM_PJ_PER_BYTE,
+        static_w: BASE_STATIC_W
+            + PE_LEAK_W * hw.macs() as f64
+            + SRAM_LEAK_W_PER_KB * hw.total_buf_b() as f64 / 1024.0,
+        freq_hz: FREQ_HZ,
+    }
+}
+
 /// Evaluate dynamic + static energy for a simulated run.
 pub fn evaluate(hw: &HwConfig, sim: &SimResult) -> EnergyResult {
-    let e_dyn_pj = sim.macs_useful as f64 * E_MAC_PJ
-        + sim.pe_cycles as f64 * E_PE_CLK_PJ
-        + sim.sram.ip_reads as f64 * sram_pj_per_byte(hw.ip_b)
-        + sim.sram.wt_reads as f64 * sram_pj_per_byte(hw.wt_b)
-        + (sim.sram.op_writes + sim.sram.op_reads) as f64 * sram_pj_per_byte(hw.op_b)
-        + sim.sram.fills as f64 * fill_pj_per_byte(hw)
-        + sim.dram.total() as f64 * DRAM_PJ_PER_BYTE;
-    let p_static_w = BASE_STATIC_W
-        + PE_LEAK_W * hw.macs() as f64
-        + SRAM_LEAK_W_PER_KB * hw.total_buf_b() as f64 / 1024.0;
-    let runtime_s = sim.cycles as f64 / FREQ_HZ;
-    EnergyResult::from_parts(e_dyn_pj * 1e-6, p_static_w * runtime_s * 1e6, sim, FREQ_HZ)
+    coeffs(hw).evaluate(sim)
 }
 
 /// DRAM→SRAM fill writes: charged at the destination buffer's write energy

@@ -16,7 +16,7 @@
 //! clock. Only relative power/EDP ordering matters for Figs 23/24.
 
 use super::cacti::DRAM_PJ_PER_BYTE;
-use super::EnergyResult;
+use super::{EnergyCoeffs, EnergyResult};
 use crate::design_space::HwConfig;
 use crate::sim::SimResult;
 
@@ -112,23 +112,35 @@ fn buf_pj_per_byte(size_b: u64) -> f64 {
     }
 }
 
+/// Per-access coefficient vector of a configuration — a pure function of
+/// the resource mapping (array shape + buffer sizes; the loop order never
+/// enters). The DSP count enters as the integer `compute_units` multiplier
+/// so the `compute_cycles · DSP` product is taken in u64 exactly as the
+/// original scalar model did (bit-identical energy).
+pub fn coeffs(hw: &HwConfig) -> EnergyCoeffs {
+    let res = resources(hw);
+    EnergyCoeffs {
+        mac_pj: DSP_MAC_PJ,
+        pe_cycle_pj: 0.0,
+        compute_units: res.dsp,
+        compute_cycle_pj: DSP_CLK_PJ,
+        ip_pj: buf_pj_per_byte(hw.ip_b),
+        wt_pj: buf_pj_per_byte(hw.wt_b),
+        op_pj: buf_pj_per_byte(hw.op_b),
+        fill_pj: 1.0,
+        dram_pj: DRAM_PJ_PER_BYTE,
+        static_w: BASE_STATIC_W
+            + DSP_LEAK_W * res.dsp as f64
+            + LUT_LEAK_W * res.lut as f64
+            + BRAM_LEAK_W * res.bram as f64
+            + URAM_LEAK_W * res.uram as f64,
+        freq_hz: FREQ_HZ,
+    }
+}
+
 /// Evaluate FPGA energy/power for a simulated run.
 pub fn evaluate(hw: &HwConfig, sim: &SimResult) -> EnergyResult {
-    let res = resources(hw);
-    let e_dyn_pj = sim.macs_useful as f64 * DSP_MAC_PJ
-        + (sim.compute_cycles * res.dsp) as f64 * DSP_CLK_PJ
-        + sim.sram.ip_reads as f64 * buf_pj_per_byte(hw.ip_b)
-        + sim.sram.wt_reads as f64 * buf_pj_per_byte(hw.wt_b)
-        + (sim.sram.op_writes + sim.sram.op_reads) as f64 * buf_pj_per_byte(hw.op_b)
-        + sim.sram.fills as f64 * 1.0
-        + sim.dram.total() as f64 * DRAM_PJ_PER_BYTE;
-    let p_static_w = BASE_STATIC_W
-        + DSP_LEAK_W * res.dsp as f64
-        + LUT_LEAK_W * res.lut as f64
-        + BRAM_LEAK_W * res.bram as f64
-        + URAM_LEAK_W * res.uram as f64;
-    let runtime_s = sim.cycles as f64 / FREQ_HZ;
-    EnergyResult::from_parts(e_dyn_pj * 1e-6, p_static_w * runtime_s * 1e6, sim, FREQ_HZ)
+    coeffs(hw).evaluate(sim)
 }
 
 #[cfg(test)]

@@ -3,12 +3,95 @@
 //! play in the paper. Analytical stand-ins calibrated to the paper's own
 //! published numbers: the 0.17–3.3 W ASIC power span of Fig 10 and, for the
 //! FPGA, the *exact* resource-utilization rows of Table VIII.
+//!
+//! Both platform models are linear in the [`SimResult`] counters: an
+//! evaluation is a dot product of per-access coefficients against the
+//! simulated access tallies plus a static term over the runtime. The
+//! coefficients depend only on the array shape and buffer sizes — never on
+//! the loop order — so they can be computed once per candidate
+//! configuration and reused across loop-order probes (see [`EnergyCoeffs`]
+//! and the LLM fast path in [`crate::dse::llm`]). `asic::evaluate` and
+//! `fpga::evaluate` are themselves implemented through their coefficient
+//! vectors, which makes coefficient-based evaluation bit-identical to the
+//! scalar path by construction.
 
 pub mod asic;
 pub mod cacti;
 pub mod fpga;
 
 use crate::sim::SimResult;
+
+/// Loop-order-independent per-access energy coefficients of one hardware
+/// configuration on one platform.
+///
+/// # Coefficient derivation
+///
+/// Dynamic energy (pJ) is the dot product of this vector against the
+/// [`SimResult`] counters, in this fixed term order:
+///
+/// `macs_useful·mac_pj + pe_cycles·pe_cycle_pj +
+///  (compute_cycles·compute_units)·compute_cycle_pj + sram.ip_reads·ip_pj +
+///  sram.wt_reads·wt_pj + (sram.op_writes + sram.op_reads)·op_pj +
+///  sram.fills·fill_pj + dram.total()·dram_pj`
+///
+/// The ASIC model clocks PEs (`pe_cycle_pj`, `compute_units = 0`); the
+/// FPGA model toggles DSPs (`compute_units` = DSP count, `pe_cycle_pj =
+/// 0`). `compute_units` stays an integer multiplier so the
+/// `compute_cycles · units` product is computed in u64 exactly as the
+/// pre-coefficient scalar model did — reassociating it into an f64
+/// coefficient would drift the FPGA result by an ulp. The static term
+/// `static_w` (leakage + device floor, watts) multiplies the runtime at
+/// `freq_hz`. Every field is a pure function of the array dimensions and
+/// buffer sizes, so one `EnergyCoeffs` serves every loop order of a
+/// candidate — the basis of the LLM order-selection fast path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyCoeffs {
+    /// pJ per useful MAC
+    pub mac_pj: f64,
+    /// pJ per PE-cycle clocked (ASIC clock tree; 0 on FPGA)
+    pub pe_cycle_pj: f64,
+    /// integer units toggled per compute cycle (FPGA DSP count; 0 on ASIC)
+    pub compute_units: u64,
+    /// pJ per unit-compute-cycle (FPGA DSP toggling; 0 on ASIC)
+    pub compute_cycle_pj: f64,
+    /// pJ per input-buffer byte read
+    pub ip_pj: f64,
+    /// pJ per weight-buffer byte read
+    pub wt_pj: f64,
+    /// pJ per output-buffer byte accessed (reads + writes)
+    pub op_pj: f64,
+    /// pJ per DRAM→SRAM fill byte
+    pub fill_pj: f64,
+    /// pJ per DRAM byte
+    pub dram_pj: f64,
+    /// static (leakage + floor) power, watts
+    pub static_w: f64,
+    /// platform clock the runtime is priced at
+    pub freq_hz: f64,
+}
+
+impl EnergyCoeffs {
+    /// Price a simulated run. Bit-identical to the platform's `evaluate`
+    /// for the configuration these coefficients were derived from (both
+    /// run this exact arithmetic).
+    pub fn evaluate(&self, sim: &SimResult) -> EnergyResult {
+        let e_dyn_pj = sim.macs_useful as f64 * self.mac_pj
+            + sim.pe_cycles as f64 * self.pe_cycle_pj
+            + (sim.compute_cycles * self.compute_units) as f64 * self.compute_cycle_pj
+            + sim.sram.ip_reads as f64 * self.ip_pj
+            + sim.sram.wt_reads as f64 * self.wt_pj
+            + (sim.sram.op_writes + sim.sram.op_reads) as f64 * self.op_pj
+            + sim.sram.fills as f64 * self.fill_pj
+            + sim.dram.total() as f64 * self.dram_pj;
+        let runtime_s = sim.cycles as f64 / self.freq_hz;
+        EnergyResult::from_parts(e_dyn_pj * 1e-6, self.static_w * runtime_s * 1e6, sim, self.freq_hz)
+    }
+
+    /// EDP (µJ·cycles) of a simulated run — the LLM order-selection metric.
+    pub fn edp(&self, sim: &SimResult) -> f64 {
+        self.evaluate(sim).edp
+    }
+}
 
 /// Energy evaluation of one simulated run.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,5 +123,40 @@ impl EnergyResult {
             edp: total * sim.cycles as f64,
             runtime_s,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::{HwConfig, LoopOrder};
+    use crate::sim::simulate;
+    use crate::workload::Gemm;
+
+    fn bit_eq(a: &EnergyResult, b: &EnergyResult) {
+        assert_eq!(a.e_dyn_uj.to_bits(), b.e_dyn_uj.to_bits());
+        assert_eq!(a.e_static_uj.to_bits(), b.e_static_uj.to_bits());
+        assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+        assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+        assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits());
+    }
+
+    #[test]
+    fn coeffs_evaluate_bit_identical_to_platform_evaluate() {
+        let g = Gemm::new(128, 768, 2304);
+        for order in LoopOrder::OS_ORDERS {
+            let hw = HwConfig::new_kb(32, 48, 128.0, 64.0, 32.0, 16, order);
+            let sim = simulate(&hw, &g);
+            bit_eq(&asic::coeffs(&hw).evaluate(&sim), &asic::evaluate(&hw, &sim));
+            bit_eq(&fpga::coeffs(&hw).evaluate(&sim), &fpga::evaluate(&hw, &sim));
+        }
+    }
+
+    #[test]
+    fn coeffs_ignore_loop_order() {
+        let a = HwConfig::new_kb(64, 64, 256.0, 256.0, 64.0, 8, LoopOrder::Mnk);
+        let b = HwConfig { loop_order: LoopOrder::Nmk, ..a };
+        assert_eq!(asic::coeffs(&a), asic::coeffs(&b));
+        assert_eq!(fpga::coeffs(&a), fpga::coeffs(&b));
     }
 }

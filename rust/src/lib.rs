@@ -14,9 +14,10 @@
 //! ([`models::DiffAxE`]) or any paper baseline (BO, GD, random search,
 //! fixed architectures, GANDSE, AIRCHITECT) — and come back as a ranked
 //! [`dse::SearchOutcome`]. A [`dse::Session`] owns the engine handle,
-//! dispatches strategies by name ([`dse::OptimizerKind`]), and provides
-//! the thread-parallel [`dse::evaluate_batch`] hot path every searcher
-//! shares:
+//! dispatches strategies by name ([`dse::OptimizerKind`]), and runs
+//! candidate scoring on the memoized, pooled evaluation core
+//! ([`dse::eval`]): a persistent worker pool plus a sharded
+//! `(config, workload)` memo table, bit-identical to scalar evaluation:
 //!
 //! ```no_run
 //! use diffaxe::dse::{Budget, Objective, OptimizerKind, Session};

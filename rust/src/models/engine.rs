@@ -240,12 +240,14 @@ impl DiffAxE {
         let logits = to_vec_f32(&res[0])?;
         let n_cfg = logits.len() / b;
         let row = &logits[..n_cfg];
+        // total_cmp: a NaN logit sorts below every number and degrades to a
+        // deterministic pick instead of panicking the service thread
         let best = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
-            .unwrap();
+            .ok_or_else(|| anyhow::anyhow!("airchitect-v1 logits are empty"))?;
         let grid = &self.stats.airchitect_grid;
         anyhow::ensure!(best < grid.len(), "grid index out of range");
         Ok(decode_rounded(&grid[best]))

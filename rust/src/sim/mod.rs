@@ -112,6 +112,61 @@ impl SimResult {
     pub fn is_memory_bound(&self) -> bool {
         self.mem_cycles > self.compute_cycles
     }
+
+    /// Field-wise sum of two runs (sequence accumulation): every counter
+    /// adds; `tk` keeps the max (it is a shape property, not a tally). The
+    /// single accumulation point for sequence workloads — [`simulate_seq`]
+    /// and the LLM whole-model evaluator both go through here, so adding a
+    /// counter to [`SimResult`] cannot silently drift between copies.
+    pub fn add(&self, o: &SimResult) -> SimResult {
+        SimResult {
+            cycles: self.cycles + o.cycles,
+            compute_cycles: self.compute_cycles + o.compute_cycles,
+            mem_cycles: self.mem_cycles + o.mem_cycles,
+            dram: DramTraffic {
+                a_reads: self.dram.a_reads + o.dram.a_reads,
+                b_reads: self.dram.b_reads + o.dram.b_reads,
+                out_writes: self.dram.out_writes + o.dram.out_writes,
+                out_reads: self.dram.out_reads + o.dram.out_reads,
+            },
+            sram: SramAccess {
+                ip_reads: self.sram.ip_reads + o.sram.ip_reads,
+                wt_reads: self.sram.wt_reads + o.sram.wt_reads,
+                op_writes: self.sram.op_writes + o.sram.op_writes,
+                op_reads: self.sram.op_reads + o.sram.op_reads,
+                fills: self.sram.fills + o.sram.fills,
+            },
+            macs_useful: self.macs_useful + o.macs_useful,
+            pe_cycles: self.pe_cycles + o.pe_cycles,
+            tk: self.tk.max(o.tk),
+        }
+    }
+
+    /// Scale every counter by `k` (whole-model scaling: one transformer
+    /// block repeated `k` times). `tk` is per-layer shape and stays.
+    pub fn scale(&self, k: u64) -> SimResult {
+        SimResult {
+            cycles: self.cycles * k,
+            compute_cycles: self.compute_cycles * k,
+            mem_cycles: self.mem_cycles * k,
+            dram: DramTraffic {
+                a_reads: self.dram.a_reads * k,
+                b_reads: self.dram.b_reads * k,
+                out_writes: self.dram.out_writes * k,
+                out_reads: self.dram.out_reads * k,
+            },
+            sram: SramAccess {
+                ip_reads: self.sram.ip_reads * k,
+                wt_reads: self.sram.wt_reads * k,
+                op_writes: self.sram.op_writes * k,
+                op_reads: self.sram.op_reads * k,
+                fills: self.sram.fills * k,
+            },
+            macs_useful: self.macs_useful * k,
+            pe_cycles: self.pe_cycles * k,
+            tk: self.tk,
+        }
+    }
 }
 
 /// Simulate one GEMM on one configuration (the fast analytical model).
@@ -139,7 +194,8 @@ impl SeqConfig {
     }
 }
 
-/// Simulate a GEMM sequence layer by layer, summing cycles and traffic.
+/// Simulate a GEMM sequence layer by layer, summing cycles and traffic
+/// through [`SimResult::add`].
 pub fn simulate_seq(cfg: &SeqConfig, gemms: &[Gemm]) -> SimResult {
     assert_eq!(cfg.orders.len(), gemms.len(), "one loop order per layer");
     let mut acc: Option<SimResult> = None;
@@ -147,27 +203,7 @@ pub fn simulate_seq(cfg: &SeqConfig, gemms: &[Gemm]) -> SimResult {
         let r = simulate(&cfg.layer_hw(l), g);
         acc = Some(match acc {
             None => r,
-            Some(a) => SimResult {
-                cycles: a.cycles + r.cycles,
-                compute_cycles: a.compute_cycles + r.compute_cycles,
-                mem_cycles: a.mem_cycles + r.mem_cycles,
-                dram: DramTraffic {
-                    a_reads: a.dram.a_reads + r.dram.a_reads,
-                    b_reads: a.dram.b_reads + r.dram.b_reads,
-                    out_writes: a.dram.out_writes + r.dram.out_writes,
-                    out_reads: a.dram.out_reads + r.dram.out_reads,
-                },
-                sram: SramAccess {
-                    ip_reads: a.sram.ip_reads + r.sram.ip_reads,
-                    wt_reads: a.sram.wt_reads + r.sram.wt_reads,
-                    op_writes: a.sram.op_writes + r.sram.op_writes,
-                    op_reads: a.sram.op_reads + r.sram.op_reads,
-                    fills: a.sram.fills + r.sram.fills,
-                },
-                macs_useful: a.macs_useful + r.macs_useful,
-                pe_cycles: a.pe_cycles + r.pe_cycles,
-                tk: a.tk.max(r.tk),
-            },
+            Some(a) => a.add(&r),
         });
     }
     acc.expect("non-empty GEMM sequence")
@@ -189,6 +225,34 @@ mod tests {
         assert_eq!(seq.cycles, r1.cycles + r2.cycles);
         assert_eq!(seq.macs_useful, r1.macs_useful + r2.macs_useful);
         assert_eq!(seq.dram.total(), r1.dram.total() + r2.dram.total());
+    }
+
+    #[test]
+    fn add_and_scale_cover_every_counter() {
+        let hw = HwConfig::new_kb(8, 8, 16.0, 16.0, 8.0, 4, LoopOrder::Nmk);
+        let a = simulate(&hw, &Gemm::new(96, 512, 64));
+        let b = simulate(&hw, &Gemm::new(256, 64, 256));
+        let s = a.add(&b);
+        assert_eq!(s.cycles, a.cycles + b.cycles);
+        assert_eq!(s.compute_cycles, a.compute_cycles + b.compute_cycles);
+        assert_eq!(s.mem_cycles, a.mem_cycles + b.mem_cycles);
+        assert_eq!(s.dram.a_reads, a.dram.a_reads + b.dram.a_reads);
+        assert_eq!(s.dram.b_reads, a.dram.b_reads + b.dram.b_reads);
+        assert_eq!(s.dram.out_writes, a.dram.out_writes + b.dram.out_writes);
+        assert_eq!(s.dram.out_reads, a.dram.out_reads + b.dram.out_reads);
+        assert_eq!(s.sram.ip_reads, a.sram.ip_reads + b.sram.ip_reads);
+        assert_eq!(s.sram.wt_reads, a.sram.wt_reads + b.sram.wt_reads);
+        assert_eq!(s.sram.op_writes, a.sram.op_writes + b.sram.op_writes);
+        assert_eq!(s.sram.op_reads, a.sram.op_reads + b.sram.op_reads);
+        assert_eq!(s.sram.fills, a.sram.fills + b.sram.fills);
+        assert_eq!(s.macs_useful, a.macs_useful + b.macs_useful);
+        assert_eq!(s.pe_cycles, a.pe_cycles + b.pe_cycles);
+        assert_eq!(s.tk, a.tk.max(b.tk));
+        // scale(k) == k-fold self-addition on every counter; tk unchanged
+        let k3 = a.scale(3);
+        assert_eq!(k3, a.add(&a).add(&a));
+        assert_eq!(k3.tk, a.tk);
+        assert_eq!(a.scale(1), a);
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! prefill sequence length of 128 tokens (Fig 22).
 
 use super::gemm::Gemm;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Inference stage of an LLM forward pass.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -128,6 +130,65 @@ impl LlmModel {
 /// default sequence length of 128 tokens").
 pub const DEFAULT_SEQ: u32 = 128;
 
+/// Precomputed GEMM structure of one `(model, stage, seq)` workload: the
+/// per-layer sequence, the deduplicated shape set, and the layer→shape
+/// mapping. Candidate scoring evaluates thousands of configurations against
+/// the *same* workload, so [`model_workload`] shares one immutable instance
+/// instead of re-allocating the layer list per candidate, and the shape
+/// dedup lets the evaluator simulate each distinct `(shape, loop order)`
+/// pair exactly once.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelWorkload {
+    pub model: LlmModel,
+    pub stage: Stage,
+    pub seq: u32,
+    /// per-layer GEMMs of one transformer block, in layer order
+    pub gemms: Vec<Gemm>,
+    /// distinct shapes, in first-occurrence order
+    pub unique: Vec<Gemm>,
+    /// layer index → index into `unique`
+    pub layer_to_unique: Vec<usize>,
+    /// whole-model block count ([`LlmModel::n_blocks`])
+    pub blocks: u64,
+}
+
+impl ModelWorkload {
+    pub fn new(model: LlmModel, stage: Stage, seq: u32) -> ModelWorkload {
+        let gemms = model.layer_gemms(stage, seq);
+        let mut unique: Vec<Gemm> = Vec::with_capacity(gemms.len());
+        let mut layer_to_unique = Vec::with_capacity(gemms.len());
+        for g in &gemms {
+            let idx = match unique.iter().position(|u| u == g) {
+                Some(i) => i,
+                None => {
+                    unique.push(*g);
+                    unique.len() - 1
+                }
+            };
+            layer_to_unique.push(idx);
+        }
+        let blocks = model.n_blocks() as u64;
+        ModelWorkload { model, stage, seq, gemms, unique, layer_to_unique, blocks }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.gemms.len()
+    }
+}
+
+/// Process-wide memo of [`ModelWorkload`]s. The key space is tiny (3 models
+/// × 2 stages × a handful of sequence lengths), so entries live for the
+/// process lifetime.
+pub fn model_workload(model: LlmModel, stage: Stage, seq: u32) -> Arc<ModelWorkload> {
+    static MEMO: OnceLock<Mutex<HashMap<(LlmModel, Stage, u32), Arc<ModelWorkload>>>> =
+        OnceLock::new();
+    let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut m = memo.lock().unwrap();
+    m.entry((model, stage, seq))
+        .or_insert_with(|| Arc::new(ModelWorkload::new(model, stage, seq)))
+        .clone()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +222,30 @@ mod tests {
         let gs = LlmModel::Llama2_7b.layer_gemms(Stage::Prefill, 128);
         assert_eq!(gs[4], Gemm::new(128, 4096, 2 * 11008));
         assert_eq!(gs[5], Gemm::new(128, 11008, 4096));
+    }
+
+    #[test]
+    fn workload_mapping_roundtrips_and_memo_shares() {
+        for model in LlmModel::ALL {
+            for stage in Stage::ALL {
+                let wl = model_workload(model, stage, DEFAULT_SEQ);
+                assert_eq!(wl.gemms, model.layer_gemms(stage, DEFAULT_SEQ));
+                assert_eq!(wl.layer_to_unique.len(), wl.gemms.len());
+                for (l, &u) in wl.layer_to_unique.iter().enumerate() {
+                    assert_eq!(wl.unique[u], wl.gemms[l]);
+                }
+                // unique really is a set
+                for (i, a) in wl.unique.iter().enumerate() {
+                    for b in &wl.unique[i + 1..] {
+                        assert_ne!(a, b);
+                    }
+                }
+                assert_eq!(wl.blocks, model.n_blocks() as u64);
+                // the memo hands back the same shared instance
+                let again = model_workload(model, stage, DEFAULT_SEQ);
+                assert!(Arc::ptr_eq(&wl, &again));
+            }
+        }
     }
 
     #[test]

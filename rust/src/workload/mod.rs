@@ -6,5 +6,5 @@ pub mod llm;
 pub mod suite;
 
 pub use gemm::Gemm;
-pub use llm::{LlmModel, Stage};
+pub use llm::{model_workload, LlmModel, ModelWorkload, Stage};
 pub use suite::WorkloadSuite;

@@ -1,0 +1,156 @@
+//! Bit-equivalence property suite for the memoized, pooled evaluation core
+//! (`dse::eval` + the `dse::llm` fast path). Everything here is hermetic —
+//! no AOT artifacts needed — and holds the three optimized paths to *exact*
+//! equality with their scalar references:
+//!
+//! * cached vs uncached: `Session::evaluate_batch` / `EvalCache::evaluate`
+//!   vs scalar `dse::evaluate`,
+//! * pooled vs inline: `par_map` vs a sequential map,
+//! * fast-path `eval_model` vs the retained `eval_model_reference`,
+//!   across every `LlmModel` × `Stage` × `Platform` combination.
+
+use diffaxe::design_space::{HwConfig, LoopOrder, TargetSpace};
+use diffaxe::dse::eval::{par_map, EvalCache, PAR_THRESHOLD};
+use diffaxe::dse::llm::{eval_model, eval_model_reference, Platform, SeqEval};
+use diffaxe::dse::{coarsen, Objective, Session};
+use diffaxe::util::rng::Pcg32;
+use diffaxe::workload::{Gemm, LlmModel, Stage};
+
+fn assert_seq_eval_bit_identical(a: &SeqEval, b: &SeqEval, ctx: &str) {
+    assert_eq!(a.cfg, b.cfg, "{ctx}: chosen per-layer orders differ");
+    assert_eq!(a.sim, b.sim, "{ctx}: simulation counters differ");
+    assert_eq!(a.energy.e_dyn_uj.to_bits(), b.energy.e_dyn_uj.to_bits(), "{ctx}: e_dyn");
+    assert_eq!(a.energy.e_static_uj.to_bits(), b.energy.e_static_uj.to_bits(), "{ctx}: e_static");
+    assert_eq!(a.energy.power_w.to_bits(), b.energy.power_w.to_bits(), "{ctx}: power");
+    assert_eq!(a.energy.edp.to_bits(), b.energy.edp.to_bits(), "{ctx}: edp");
+    assert_eq!(a.energy.runtime_s.to_bits(), b.energy.runtime_s.to_bits(), "{ctx}: runtime");
+}
+
+/// Fast path == reference, across every model × stage × platform, over
+/// random target-space candidates plus grid-snapped (recurring) ones.
+#[test]
+fn fast_eval_model_bit_identical_to_reference_everywhere() {
+    let mut rng = Pcg32::seeded(2024);
+    for model in LlmModel::ALL {
+        for stage in Stage::ALL {
+            for platform in [Platform::Asic32nm, Platform::FpgaVu13p] {
+                for i in 0..4 {
+                    let sampled = TargetSpace::sample(&mut rng);
+                    // odd draws exercise the coarse grid the searches revisit
+                    let hw = if i % 2 == 1 { coarsen(&sampled) } else { sampled };
+                    let seq = if i < 2 { 128 } else { 48 };
+                    let fast = eval_model(&hw, model, stage, seq, platform);
+                    let reference = eval_model_reference(&hw, model, stage, seq, platform);
+                    let ctx = format!(
+                        "{} {} seq={seq} {platform:?} hw={hw}",
+                        model.name(),
+                        stage.name()
+                    );
+                    assert_seq_eval_bit_identical(&fast, &reference, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// A second pass over identical inputs (now cache-hot) returns the same
+/// bits: memoization is invisible to results.
+#[test]
+fn warm_cache_is_invisible_to_eval_model() {
+    let mut rng = Pcg32::seeded(7);
+    let hw = coarsen(&TargetSpace::sample(&mut rng));
+    for platform in [Platform::Asic32nm, Platform::FpgaVu13p] {
+        let cold = eval_model(&hw, LlmModel::Llama2_7b, Stage::Prefill, 128, platform);
+        let warm = eval_model(&hw, LlmModel::Llama2_7b, Stage::Prefill, 128, platform);
+        assert_seq_eval_bit_identical(&cold, &warm, &format!("warm {platform:?}"));
+    }
+}
+
+/// Cached evaluation == scalar evaluation, and the second identical batch
+/// is served from the table (hits grow, misses do not).
+#[test]
+fn cached_evaluate_bit_identical_to_scalar_with_hits() {
+    let cache = EvalCache::new(8, 4096);
+    let mut rng = Pcg32::seeded(41);
+    let g = Gemm::new(128, 768, 2304);
+    let cfgs: Vec<HwConfig> = (0..96).map(|_| TargetSpace::sample(&mut rng)).collect();
+    for pass in 0..2 {
+        for hw in &cfgs {
+            let (s, e) = cache.evaluate(hw, &g);
+            let (s2, e2) = diffaxe::dse::evaluate(hw, &g);
+            assert_eq!(s, s2, "pass {pass}");
+            assert_eq!(e, e2, "pass {pass}");
+        }
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.misses, 96, "first pass misses everything");
+    assert_eq!(stats.hits, 96, "second pass hits everything");
+}
+
+/// The loop order is part of the cache key: order variants of one base must
+/// not collide.
+#[test]
+fn cache_key_distinguishes_loop_orders() {
+    let cache = EvalCache::new(4, 1024);
+    let g = Gemm::new(512, 512, 512);
+    let base = HwConfig::new_kb(32, 32, 4.0, 4.0, 4.0, 4, LoopOrder::Mnk);
+    let nmk_hw = HwConfig { loop_order: LoopOrder::Nmk, ..base };
+    let mnk = cache.evaluate(&base, &g);
+    let nmk = cache.evaluate(&nmk_hw, &g);
+    assert_eq!(cache.stats().misses, 2, "distinct orders are distinct entries");
+    assert_eq!(mnk.0, diffaxe::dse::evaluate(&base, &g).0);
+    assert_eq!(nmk.0, diffaxe::dse::evaluate(&nmk_hw, &g).0);
+}
+
+/// Pooled map == inline map, order preserved, on batches above and below
+/// the inline threshold.
+#[test]
+fn pooled_par_map_bit_identical_to_inline() {
+    let mut rng = Pcg32::seeded(5);
+    let g = Gemm::new(64, 256, 512);
+    for n in [PAR_THRESHOLD - 1, PAR_THRESHOLD, 4 * PAR_THRESHOLD + 3] {
+        let cfgs: Vec<HwConfig> = (0..n).map(|_| TargetSpace::sample(&mut rng)).collect();
+        let pooled = par_map(&cfgs, move |hw| diffaxe::dse::evaluate(hw, &g));
+        assert_eq!(pooled.len(), cfgs.len());
+        for (hw, (s, e)) in cfgs.iter().zip(&pooled) {
+            let (s2, e2) = diffaxe::dse::evaluate(hw, &g);
+            assert_eq!(*s, s2, "n={n}");
+            assert_eq!(*e, e2, "n={n}");
+        }
+    }
+}
+
+/// The full session hot path (pool + shared cache) == scalar objective
+/// evaluation, for both GEMM and LLM objectives, with heavy duplication in
+/// the batch (the many-to-one recurrence of Fig 2a).
+#[test]
+fn session_batch_and_llm_objective_match_scalar_path() {
+    let session = Session::simulator_only();
+    let mut rng = Pcg32::seeded(17);
+    let g = Gemm::new(128, 768, 768);
+    let mut cfgs: Vec<HwConfig> = (0..80).map(|_| coarsen(&TargetSpace::sample(&mut rng))).collect();
+    let dups = cfgs[..40].to_vec();
+    cfgs.extend(dups);
+    for pass in 0..2 {
+        let batch = session.evaluate_batch(&cfgs, &g);
+        for (hw, (s, e)) in cfgs.iter().zip(&batch) {
+            let (s2, e2) = diffaxe::dse::evaluate(hw, &g);
+            assert_eq!(*s, s2, "pass {pass}");
+            assert_eq!(*e, e2, "pass {pass}");
+        }
+    }
+    let obj = Objective::LlmEdp {
+        model: LlmModel::BertBase,
+        stage: Stage::Decode,
+        seq: 64,
+        platform: Platform::Asic32nm,
+    };
+    let reports = obj.evaluate_all(&cfgs);
+    for (hw, d) in cfgs.iter().zip(&reports) {
+        assert_eq!(d.hw, *hw, "order preserved");
+        let scalar = obj.evaluate(hw);
+        assert_eq!(d.cycles.to_bits(), scalar.cycles.to_bits());
+        assert_eq!(d.edp.to_bits(), scalar.edp.to_bits());
+        assert_eq!(d.power_w.to_bits(), scalar.power_w.to_bits());
+    }
+}
