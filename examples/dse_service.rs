@@ -1,7 +1,8 @@
 //! The coordinator as a *service*: start the engine thread + TCP front end,
-//! drive it over the wire with mixed concurrent requests — generic v2
-//! `search` requests, a multi-search `batch`, a deprecated v1 alias line —
-//! and print the service metrics (batch occupancy, latencies).
+//! drive it over the wire with mixed concurrent requests — generic
+//! `search` requests, a multi-search `batch`, a deprecated v1 alias line,
+//! and the v3 job lifecycle (submit → watch progress events → cancel) —
+//! and print the service metrics (batch occupancy, job gauges, latencies).
 //!
 //! ```bash
 //! cargo run --release --example dse_service            # self-driving demo
@@ -116,6 +117,32 @@ fn main() -> anyhow::Result<()> {
         r#"{"type":"generate","m":128,"k":768,"n":2304,"target_cycles":1e6,"count":4}"#,
     )? {
         println!("legacy v1 'generate' alias: {} designs", o.evals);
+    }
+
+    // v3 jobs: a slow search as a first-class job — submit returns
+    // immediately, watch streams coalesced progress, cancel keeps the
+    // partial outcome
+    let job_id = client.submit(&SearchRequest::new(
+        Objective::MinEdp { g },
+        Budget::evals(2_000_000),
+        OptimizerKind::RandomSearch,
+    ))?;
+    println!("\nsubmitted {job_id}: {:?}", client.status(&job_id)?.state);
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    client.cancel(&job_id)?;
+    let mut events = 0;
+    let terminal = client.watch(&job_id, |ev| {
+        events += 1;
+        println!("  event: evals={} elapsed={:.2}s", ev.evals, ev.elapsed_s);
+    })?;
+    if let Response::JobOutcome { outcome, .. } = terminal {
+        println!(
+            "cancelled after {} evals ({} events, stopped={}), best edp={:.3e}",
+            outcome.evals,
+            events,
+            outcome.stopped.name(),
+            outcome.best().map(|d| d.edp).unwrap_or(f64::NAN)
+        );
     }
 
     if let Response::MetricsText(m) = client.request(&Request::Metrics)? {

@@ -258,4 +258,45 @@ fn main() {
         black_box(trace::simulate(&configs[0], &small));
     });
     println!("trace-oracle simulate (64x256x64): {:.1} us/op (test-only path)", per * 1e6);
+
+    // job-registry bookkeeping cost + the coordinator's job/queue gauges
+    // (the engine-free registry is the serving path's per-search overhead:
+    // submit -> start -> publish -> finalize, with bounded GC)
+    bench_job_registry(&scale);
+}
+
+fn bench_job_registry(scale: &BenchScale) {
+    use diffaxe::coordinator::{JobRegistry, JobState, Metrics, Response, SearchRequest};
+    use diffaxe::dse::{Budget, OptimizerKind, SearchEvent, SearchOutcome, StopReason};
+    use std::sync::Arc;
+
+    let metrics = Arc::new(Metrics::new());
+    let reg = JobRegistry::new(metrics.clone());
+    let g = Gemm::new(128, 768, 2304);
+    let obj = Objective::MinEdp { g };
+    let n_jobs = scale.pick(2_000, 20_000, 200_000);
+    let timer = diffaxe::util::stats::Timer::start();
+    for i in 0..n_jobs {
+        let req = SearchRequest::new(obj, Budget::evals(8), OptimizerKind::RandomSearch);
+        let entry = reg.submit(req);
+        reg.start(&entry);
+        reg.publish(&entry, SearchEvent { evals: 8, best_score: 1.0, elapsed_s: 0.0 });
+        let outcome = SearchOutcome::from_reports("bench", &obj, Vec::new(), 0.0);
+        let (state, stopped) = if i % 8 == 0 {
+            (JobState::Cancelled, StopReason::Cancelled)
+        } else {
+            (JobState::Done, StopReason::Completed)
+        };
+        reg.finalize(&entry, state, Response::Outcome(outcome.with_stopped(stopped)));
+    }
+    let dt = timer.elapsed_s();
+    println!(
+        "job registry lifecycle (submit+start+publish+finalize): {:.2} us/job \
+         ({} jobs, {} retained after GC)",
+        dt / n_jobs as f64 * 1e6,
+        n_jobs,
+        reg.list().len()
+    );
+    // the same gauges the coordinator exports in its metrics snapshot
+    println!("job gauges: {}", metrics.snapshot());
 }

@@ -37,23 +37,33 @@ impl Default for BoOptions {
 /// Minimize `objective` over points produced by `sample_candidate`.
 ///
 /// * `sample_candidate(rng)` draws a random point in the search encoding;
-/// * `objective(x)` evaluates it (lower is better).
-pub fn minimize<S, F>(
+/// * `objective(x)` evaluates it (lower is better);
+/// * `should_stop()` is polled before every evaluation and before every
+///   (cubic-cost) GP refit — once true, the best-so-far is returned
+///   immediately. Pass `|| false` for an uninterruptible run.
+pub fn minimize<S, F, P>(
     mut sample_candidate: S,
     mut objective: F,
+    mut should_stop: P,
     opts: &BoOptions,
     rng: &mut Pcg32,
 ) -> BoResult
 where
     S: FnMut(&mut Pcg32) -> Vec<f64>,
     F: FnMut(&[f64]) -> f64,
+    P: FnMut() -> bool,
 {
     assert!(opts.n_init >= 2 && opts.budget >= opts.n_init);
-    let mut xs: Vec<Vec<f64>> = Vec::with_capacity(opts.budget);
-    let mut ys: Vec<f64> = Vec::with_capacity(opts.budget);
-    let mut history = Vec::with_capacity(opts.budget);
+    // a huge budget with an early stop must not reserve gigabytes up front
+    let cap = opts.budget.min(65_536);
+    let mut xs: Vec<Vec<f64>> = Vec::with_capacity(cap);
+    let mut ys: Vec<f64> = Vec::with_capacity(cap);
+    let mut history = Vec::with_capacity(cap);
 
     for _ in 0..opts.n_init {
+        if should_stop() {
+            break;
+        }
         let x = sample_candidate(rng);
         let y = objective(&x);
         xs.push(x);
@@ -61,7 +71,7 @@ where
         history.push(ys.iter().cloned().fold(f64::INFINITY, f64::min));
     }
 
-    while xs.len() < opts.budget {
+    while xs.len() < opts.budget && !should_stop() {
         // standardize targets for GP conditioning
         let mean = ys.iter().sum::<f64>() / ys.len() as f64;
         let std = (ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / ys.len() as f64)
@@ -92,12 +102,15 @@ where
         history.push(ys.iter().cloned().fold(f64::INFINITY, f64::min));
     }
 
-    let (bi, by) = ys
+    // stopped before the first evaluation: an empty (but well-formed) result
+    let Some((bi, by)) = ys
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, y)| (i, *y))
-        .unwrap();
+    else {
+        return BoResult { best_x: Vec::new(), best_y: f64::INFINITY, evals: 0, history };
+    };
     BoResult { best_x: xs[bi].clone(), best_y: by, evals: ys.len(), history }
 }
 
@@ -121,6 +134,7 @@ mod tests {
             let res = minimize(
                 |r: &mut Pcg32| (0..4).map(|_| r.f64()).collect(),
                 obj,
+                || false,
                 &opts,
                 &mut rng,
             );
@@ -145,6 +159,7 @@ mod tests {
         let res = minimize(
             |r: &mut Pcg32| vec![r.f64()],
             |x| (x[0] - 0.3).abs(),
+            || false,
             &BoOptions { n_init: 4, budget: 20, pool: 32, ..Default::default() },
             &mut rng,
         );
@@ -153,5 +168,39 @@ mod tests {
             assert!(w[1] <= w[0] + 1e-12);
         }
         assert_eq!(res.evals, 20);
+    }
+
+    #[test]
+    fn stop_hook_returns_best_so_far() {
+        let mut rng = Pcg32::seeded(7);
+        let evals = std::cell::Cell::new(0usize);
+        let res = minimize(
+            |r: &mut Pcg32| vec![r.f64()],
+            |x| {
+                evals.set(evals.get() + 1);
+                (x[0] - 0.5).abs()
+            },
+            || evals.get() >= 6, // stop mid-run, after the init phase
+            &BoOptions { n_init: 4, budget: 50, pool: 16, ..Default::default() },
+            &mut rng,
+        );
+        assert!(res.evals >= 6 && res.evals < 50, "evals {}", res.evals);
+        assert!(res.best_y.is_finite());
+        assert!(!res.best_x.is_empty());
+    }
+
+    #[test]
+    fn immediate_stop_yields_empty_result() {
+        let mut rng = Pcg32::seeded(8);
+        let res = minimize(
+            |r: &mut Pcg32| vec![r.f64()],
+            |_| 0.0,
+            || true,
+            &BoOptions { n_init: 2, budget: 4, pool: 4, ..Default::default() },
+            &mut rng,
+        );
+        assert_eq!(res.evals, 0);
+        assert!(res.best_x.is_empty());
+        assert_eq!(res.best_y, f64::INFINITY);
     }
 }

@@ -37,19 +37,32 @@ pub struct GdResult {
 
 /// Minimize via momentum GD from random restarts.
 ///
-/// `grad(x) -> (loss, gradient)`; `init(rng) -> x0`.
-pub fn descend<G, I>(mut grad: G, mut init: I, opts: &GdOptions, rng: &mut Pcg32) -> GdResult
+/// `grad(x) -> (loss, gradient)`; `init(rng) -> x0`. `should_stop()` is
+/// polled before every gradient evaluation — once true, the best-so-far
+/// is returned immediately (`best_x` is empty if nothing was evaluated).
+/// Pass `|| false` for an uninterruptible run.
+pub fn descend<G, I, P>(
+    mut grad: G,
+    mut init: I,
+    mut should_stop: P,
+    opts: &GdOptions,
+    rng: &mut Pcg32,
+) -> GdResult
 where
     G: FnMut(&[f64]) -> (f64, Vec<f64>),
     I: FnMut(&mut Pcg32) -> Vec<f64>,
+    P: FnMut() -> bool,
 {
     let mut best_x = Vec::new();
     let mut best_loss = f64::INFINITY;
     let mut grad_evals = 0;
-    for _ in 0..opts.restarts.max(1) {
+    'restarts: for _ in 0..opts.restarts.max(1) {
         let mut x = init(rng);
         let mut vel = vec![0.0; x.len()];
         for _ in 0..opts.steps {
+            if should_stop() {
+                break 'restarts;
+            }
             let (loss, g) = grad(&x);
             grad_evals += 1;
             if loss < best_loss {
@@ -64,6 +77,9 @@ where
                 }
             }
         }
+        if should_stop() {
+            break;
+        }
         let (loss, _) = grad(&x);
         grad_evals += 1;
         if loss < best_loss {
@@ -75,16 +91,20 @@ where
 }
 
 /// Finite-difference GD on a black-box objective (central differences).
-pub fn fd_gd<F, I>(
+/// `should_stop()` is polled between gradient evaluations (each spends
+/// `1 + 2·dim` objective calls).
+pub fn fd_gd<F, I, P>(
     mut f: F,
     mut init: I,
     h: f64,
+    should_stop: P,
     opts: &GdOptions,
     rng: &mut Pcg32,
 ) -> GdResult
 where
     F: FnMut(&[f64]) -> f64,
     I: FnMut(&mut Pcg32) -> Vec<f64>,
+    P: FnMut() -> bool,
 {
     let mut evals = 0usize;
     let mut grad = |x: &[f64]| -> (f64, Vec<f64>) {
@@ -103,7 +123,7 @@ where
         evals += 1 + 2 * x.len();
         (base, g)
     };
-    let mut res = descend(&mut grad, &mut init, opts, rng);
+    let mut res = descend(&mut grad, &mut init, should_stop, opts, rng);
     res.grad_evals = evals;
     res
 }
@@ -124,6 +144,7 @@ mod tests {
         let res = descend(
             grad,
             |r: &mut Pcg32| (0..3).map(|_| r.f64()).collect(),
+            || false,
             &GdOptions::default(),
             &mut rng,
         );
@@ -141,6 +162,7 @@ mod tests {
         let res = descend(
             grad,
             |_: &mut Pcg32| vec![0.5],
+            || false,
             &GdOptions { steps: 20, restarts: 1, ..Default::default() },
             &mut rng,
         );
@@ -155,11 +177,40 @@ mod tests {
             f,
             |r: &mut Pcg32| vec![r.f64(), r.f64()],
             1e-4,
+            || false,
             &GdOptions::default(),
             &mut rng,
         );
         assert!(res.best_loss < 1e-3);
         assert!(res.grad_evals > 0);
+    }
+
+    #[test]
+    fn stop_hook_interrupts_descent() {
+        let calls = std::cell::Cell::new(0usize);
+        let mut rng = Pcg32::seeded(9);
+        let res = descend(
+            |x: &[f64]| {
+                calls.set(calls.get() + 1);
+                (x[0] * x[0], vec![2.0 * x[0]])
+            },
+            |_: &mut Pcg32| vec![0.9],
+            || calls.get() >= 3,
+            &GdOptions { steps: 100, restarts: 10, ..Default::default() },
+            &mut rng,
+        );
+        assert_eq!(res.grad_evals, 3);
+        assert!(!res.best_x.is_empty());
+        // immediate stop: nothing evaluated, empty best
+        let res = descend(
+            |x: &[f64]| (x[0], vec![1.0]),
+            |_: &mut Pcg32| vec![0.5],
+            || true,
+            &GdOptions::default(),
+            &mut rng,
+        );
+        assert_eq!(res.grad_evals, 0);
+        assert!(res.best_x.is_empty());
     }
 
     #[test]
@@ -175,6 +226,7 @@ mod tests {
             f,
             |r: &mut Pcg32| vec![r.f64()],
             1e-4,
+            || false,
             &GdOptions { restarts: 8, ..Default::default() },
             &mut rng,
         );

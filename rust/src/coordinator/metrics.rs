@@ -1,7 +1,9 @@
 //! Service metrics: request counters, batch-occupancy and latency
-//! histograms. Shared across threads behind a mutex (contention is
-//! negligible at DSE request rates).
+//! histograms, plus job-lifecycle gauges fed by the
+//! [`crate::coordinator::service::JobRegistry`]. Shared across threads
+//! behind a mutex (contention is negligible at DSE request rates).
 
+use super::protocol::JobState;
 use crate::util::stats::LatencyHist;
 use std::sync::Mutex;
 
@@ -18,6 +20,18 @@ struct Inner {
     /// [`crate::dse::eval::EvalCache`] after each evaluation burst)
     cache_hits: u64,
     cache_misses: u64,
+    // ---- job lifecycle (registry transitions) ---------------------------
+    jobs_submitted: u64,
+    jobs_completed: u64,
+    jobs_cancelled: u64,
+    jobs_failed: u64,
+    /// gauge: jobs accepted but not yet started
+    jobs_queued: u64,
+    /// gauge: jobs currently executing on the engine thread
+    jobs_active: u64,
+    /// gauge: occupied coalesced progress-event slots (≤ 1 per live job —
+    /// the watch stream is drop-to-latest, so this is the whole queue)
+    event_queue_depth: u64,
     request_latency: LatencyHist,
     sampler_latency: LatencyHist,
 }
@@ -42,6 +56,16 @@ pub struct Snapshot {
     /// [`crate::dse::eval::EvalCache`])
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// job lifecycle: cumulative counters…
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_cancelled: u64,
+    pub jobs_failed: u64,
+    /// …and point-in-time gauges
+    pub jobs_queued: u64,
+    pub jobs_active: u64,
+    /// occupied coalesced progress-event slots (drop-to-latest queue depth)
+    pub event_queue_depth: u64,
     pub request_p50_us: f64,
     pub request_p99_us: f64,
     pub sampler_mean_us: f64,
@@ -95,6 +119,46 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// A job entered the registry (state `queued`).
+    pub fn job_submitted(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.jobs_submitted += 1;
+        m.jobs_queued += 1;
+    }
+
+    /// A job left the queue and started executing.
+    pub fn job_started(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.jobs_queued = m.jobs_queued.saturating_sub(1);
+        m.jobs_active += 1;
+    }
+
+    /// A job reached a terminal state. `was_running` distinguishes which
+    /// gauge to decrement; `had_buffered_event` frees its coalesced
+    /// progress-event slot.
+    pub fn job_finished(&self, state: JobState, was_running: bool, had_buffered_event: bool) {
+        let mut m = self.inner.lock().unwrap();
+        if was_running {
+            m.jobs_active = m.jobs_active.saturating_sub(1);
+        } else {
+            m.jobs_queued = m.jobs_queued.saturating_sub(1);
+        }
+        if had_buffered_event {
+            m.event_queue_depth = m.event_queue_depth.saturating_sub(1);
+        }
+        match state {
+            JobState::Cancelled => m.jobs_cancelled += 1,
+            JobState::Failed => m.jobs_failed += 1,
+            _ => m.jobs_completed += 1,
+        }
+    }
+
+    /// A progress event landed in a previously-empty coalescing slot
+    /// (replacing a buffered event keeps the depth unchanged).
+    pub fn event_buffered(&self) {
+        self.inner.lock().unwrap().event_queue_depth += 1;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         Snapshot {
@@ -110,6 +174,13 @@ impl Metrics {
             },
             cache_hits: m.cache_hits,
             cache_misses: m.cache_misses,
+            jobs_submitted: m.jobs_submitted,
+            jobs_completed: m.jobs_completed,
+            jobs_cancelled: m.jobs_cancelled,
+            jobs_failed: m.jobs_failed,
+            jobs_queued: m.jobs_queued,
+            jobs_active: m.jobs_active,
+            event_queue_depth: m.event_queue_depth,
             request_p50_us: m.request_latency.percentile_us(50.0),
             request_p99_us: m.request_latency.percentile_us(99.0),
             sampler_mean_us: m.sampler_latency.mean_us(),
@@ -123,6 +194,8 @@ impl std::fmt::Display for Snapshot {
             f,
             "requests={} designs={} evals={} sampler_calls={} occupancy={:.2} \
              cache_hits={} cache_misses={} cache_hit_rate={:.3} \
+             jobs_submitted={} jobs_queued={} jobs_active={} jobs_completed={} \
+             jobs_cancelled={} jobs_failed={} event_queue_depth={} \
              p50={:.0}us p99={:.0}us sampler_mean={:.0}us errors={}",
             self.requests,
             self.designs_generated,
@@ -132,6 +205,13 @@ impl std::fmt::Display for Snapshot {
             self.cache_hits,
             self.cache_misses,
             self.cache_hit_rate(),
+            self.jobs_submitted,
+            self.jobs_queued,
+            self.jobs_active,
+            self.jobs_completed,
+            self.jobs_cancelled,
+            self.jobs_failed,
+            self.event_queue_depth,
             self.request_p50_us,
             self.request_p99_us,
             self.sampler_mean_us,
@@ -174,5 +254,31 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.batch_occupancy, 0.0);
         assert_eq!(s.cache_hit_rate(), 0.0);
+        assert_eq!((s.jobs_queued, s.jobs_active, s.event_queue_depth), (0, 0, 0));
+    }
+
+    #[test]
+    fn job_lifecycle_gauges_balance() {
+        let m = Metrics::new();
+        // three jobs: one completes, one cancels mid-run, one cancels queued
+        for _ in 0..3 {
+            m.job_submitted();
+        }
+        m.job_started();
+        m.event_buffered();
+        m.job_started();
+        let s = m.snapshot();
+        assert_eq!((s.jobs_submitted, s.jobs_queued, s.jobs_active), (3, 1, 2));
+        assert_eq!(s.event_queue_depth, 1);
+        m.job_finished(JobState::Done, true, true);
+        m.job_finished(JobState::Cancelled, true, false);
+        m.job_finished(JobState::Cancelled, false, false);
+        let s = m.snapshot();
+        assert_eq!((s.jobs_queued, s.jobs_active, s.event_queue_depth), (0, 0, 0));
+        assert_eq!((s.jobs_completed, s.jobs_cancelled, s.jobs_failed), (1, 2, 0));
+        // gauges appear in the scrape line
+        let line = s.to_string();
+        assert!(line.contains("jobs_active=0"), "{line}");
+        assert!(line.contains("event_queue_depth=0"), "{line}");
     }
 }

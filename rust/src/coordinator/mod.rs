@@ -1,9 +1,37 @@
 //! L3 coordinator — the DiffAxE DSE *service*: a dedicated engine thread
 //! owning a [`crate::dse::Session`], continuous batching of
 //! runtime-generation searches into the fixed-batch diffusion sampler, a
-//! versioned newline-JSON TCP front end speaking generic
-//! objective/budget/optimizer requests (see [`protocol`]), and service
-//! metrics.
+//! job-oriented search lifecycle, a versioned newline-JSON TCP front end
+//! (see [`protocol`]), and service metrics.
+//!
+//! # Job lifecycle
+//!
+//! Every search the service accepts becomes a job in the
+//! [`service::JobRegistry`]:
+//!
+//! ```text
+//!              submit                    engine picks up
+//!   client ───────────────▶ queued ─────────────────────▶ running
+//!                             │                             │
+//!                             │ cancel                      ├─ completes / deadline /
+//!                             ▼                             │  budget ──▶ done
+//!                          cancelled ◀── cancel (partial ───┤
+//!                          (empty)        outcome kept)     └─ error ──▶ failed
+//! ```
+//!
+//! * `submit` answers a `job_id` immediately; `status` / `jobs` / `cancel`
+//!   are registry queries that never wait behind a running search.
+//! * A running search polls its cancellation flag and deadline **between
+//!   evaluation batches** (see [`crate::dse::SearchCtx`]), so `cancel`
+//!   and `Budget::wall_clock_s` stop it promptly while keeping every
+//!   design evaluated so far (`SearchOutcome::stopped` records why).
+//! * `watch` streams coalesced progress heartbeats (drop-to-latest — a
+//!   slow reader skips intermediate events, never queues them) followed
+//!   by the terminal outcome line.
+//! * Synchronous v1/v2 `search` / `batch` requests still work
+//!   byte-compatibly: they are submit-plus-wait over the same registry.
+//! * Terminal jobs are retained for late `status` queries up to
+//!   [`service::MAX_RETAINED_JOBS`], then GC'd oldest-first.
 
 pub mod metrics;
 pub mod protocol;
@@ -12,9 +40,11 @@ pub mod service;
 
 pub use metrics::Metrics;
 pub use protocol::{
-    ErrorCode, Request, Response, SearchRequest, WireError, PROTOCOL_VERSION,
+    ErrorCode, JobInfo, JobState, Request, Response, SearchRequest, WireError, PROTOCOL_VERSION,
 };
-pub use service::{Handle, Service, ServiceConfig, DEFAULT_TOP_K};
+pub use service::{
+    Handle, JobEntry, JobRegistry, Service, ServiceConfig, DEFAULT_TOP_K, MAX_RETAINED_JOBS,
+};
 
 // the wire's design unit is the DSE layer's report type
 pub use crate::dse::api::DesignReport;

@@ -32,15 +32,102 @@
 //! bad pairing answers `bad_request` up front); execution is then
 //! all-or-nothing — a mid-batch internal failure answers a single
 //! `internal` error rather than a partial outcome list.
+//!
+//! # v3 request forms — jobs
+//!
+//! v3 extends the envelope *additively*: every v1/v2 line keeps parsing
+//! and synchronous `search`/`batch` responses stay readable by v2 peers
+//! (the new `stopped` outcome field rides on the existing unknown-field
+//! tolerance). Long-running searches become first-class jobs:
+//!
+//! ```json
+//! {"v":3,"type":"submit","objective":…,"budget":…,"optimizer":"dosa-gd"}
+//! ```
+//!
+//! answers `{"status":"ok","job_id":"job-7","job_state":"queued"}`
+//! immediately. The job is then driven with:
+//!
+//! * `{"v":3,"type":"status","job_id":"job-7"}` → one [`JobInfo`] line;
+//! * `{"v":3,"type":"jobs"}` → every retained job;
+//! * `{"v":3,"type":"cancel","job_id":"job-7"}` → raises the job's
+//!   cancellation flag; the search stops at its next batch boundary and
+//!   its *partial* outcome (`"stopped":"cancelled"`) is retained;
+//! * `{"v":3,"type":"watch","job_id":"job-7"}` → **streams** NDJSON on the
+//!   same connection: `{"type":"event",…}` progress heartbeats (evals
+//!   done, current best, elapsed — coalesced drop-to-latest under
+//!   backpressure), then one terminal `{"type":"outcome","job_id":…,…}`
+//!   line, after which the connection accepts further requests.
+//!
+//! A search's `stopped` field is one of `completed | cancelled |
+//! deadline_exceeded | budget_exhausted` ([`StopReason`]); budgets may
+//! carry `wall_clock_s`, enforced server-side as a hard deadline.
 
-use crate::dse::api::{Budget, DesignReport, Objective, OptimizerKind, SearchOutcome};
+use crate::dse::api::{
+    Budget, DesignReport, Objective, OptimizerKind, SearchEvent, SearchOutcome, StopReason,
+};
 use crate::dse::llm::Platform;
 use crate::util::json::Json;
 use crate::workload::{llm::DEFAULT_SEQ, Gemm, LlmModel, Stage};
 use anyhow::{bail, Context, Result};
 
 /// Highest protocol version this build speaks.
-pub const PROTOCOL_VERSION: u32 = 2;
+pub const PROTOCOL_VERSION: u32 = 3;
+
+/// Lifecycle of a submitted search job (see
+/// [`crate::coordinator::service::JobRegistry`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, waiting for the engine thread.
+    Queued,
+    /// Executing on the engine thread.
+    Running,
+    /// Finished with an outcome (including deadline/budget-truncated ones).
+    Done,
+    /// Cancelled; a partial outcome is retained if the search had started.
+    Cancelled,
+    /// The search errored; the error response is retained.
+    Failed,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobState> {
+        [JobState::Queued, JobState::Running, JobState::Done, JobState::Cancelled, JobState::Failed]
+            .into_iter()
+            .find(|j| j.name() == s)
+    }
+
+    /// True once the job can no longer change state.
+    pub fn terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Cancelled | JobState::Failed)
+    }
+}
+
+/// Point-in-time description of a job (the `status`/`jobs` wire unit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobInfo {
+    pub id: String,
+    pub state: JobState,
+    /// Wire name of the optimizer ([`OptimizerKind::name`]).
+    pub optimizer: String,
+    /// Human-readable objective description.
+    pub objective: String,
+    /// Objective evaluations finished so far (final count once terminal).
+    pub evals: usize,
+    /// Best (lowest) score seen so far, if any evaluation completed.
+    pub best_score: Option<f64>,
+    /// Seconds since submission (frozen at the terminal transition).
+    pub elapsed_s: f64,
+}
 
 /// Structured wire-error categories.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,12 +198,22 @@ impl SearchRequest {
 /// A DSE request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// one generic search
+    /// one generic search, answered synchronously (submit + wait)
     Search(SearchRequest),
     /// several searches served in one round-trip
     Batch(Vec<SearchRequest>),
     /// service introspection
     Metrics,
+    /// v3: enqueue a search as a job, answer `job_id` immediately
+    Submit(SearchRequest),
+    /// v3: one job's current [`JobInfo`]
+    Status { job_id: String },
+    /// v3: raise a job's cancellation flag
+    Cancel { job_id: String },
+    /// v3: list every retained job
+    Jobs,
+    /// v3: stream `event` lines then the terminal `outcome` line
+    Watch { job_id: String },
 }
 
 /// A DSE response.
@@ -129,6 +226,16 @@ pub enum Response {
     /// outcomes of a `Batch` request, in request order
     Batch(Vec<SearchOutcome>),
     MetricsText(String),
+    /// v3: a job was accepted
+    Submitted { job_id: String, state: JobState },
+    /// v3: one job's status (`status` and `cancel` answer this)
+    Job(JobInfo),
+    /// v3: every retained job
+    Jobs(Vec<JobInfo>),
+    /// v3: one progress heartbeat on a `watch` stream
+    Event { job_id: String, event: SearchEvent },
+    /// v3: the terminal line of a `watch` stream
+    JobOutcome { job_id: String, outcome: SearchOutcome },
     Error { code: ErrorCode, message: String },
 }
 
@@ -271,7 +378,8 @@ fn search_to_json(s: &SearchRequest) -> Json {
 // ---------------------------------------------------------------------------
 
 impl Request {
-    /// Decode a request. Accepts the generic v2 forms and the deprecated
+    /// Decode a request. Accepts the generic v2 forms, the v3 job forms
+    /// (`submit`/`status`/`cancel`/`jobs`/`watch`), and the deprecated
     /// v1 aliases (`generate`, `edp_search`, `perf_search`, `llm_search`),
     /// which parse into the equivalent [`SearchRequest`] with the
     /// `diffaxe` optimizer.
@@ -288,8 +396,19 @@ impl Request {
             .get("type")
             .as_str()
             .ok_or_else(|| WireError::bad("request missing 'type'"))?;
+        let job_id = |j: &Json| -> Result<String, WireError> {
+            Ok(j.get("job_id")
+                .as_str()
+                .ok_or_else(|| WireError::bad("missing 'job_id'"))?
+                .to_string())
+        };
         Ok(match ty {
             "search" => Request::Search(search_from_json(j)?),
+            "submit" => Request::Submit(search_from_json(j)?),
+            "status" => Request::Status { job_id: job_id(j)? },
+            "cancel" => Request::Cancel { job_id: job_id(j)? },
+            "jobs" => Request::Jobs,
+            "watch" => Request::Watch { job_id: job_id(j)? },
             "batch" => {
                 let items = j
                     .get("requests")
@@ -356,25 +475,40 @@ impl Request {
         })
     }
 
-    /// Encode as the generic v2 wire form (v1 aliases are parse-only).
+    /// Encode as the generic current wire form (v1 aliases are parse-only).
     pub fn to_json(&self) -> Json {
         let versioned = |mut fields: Vec<(&'static str, Json)>| {
             fields.insert(0, ("v", Json::Num(PROTOCOL_VERSION as f64)));
             Json::obj(fields)
         };
-        match self {
-            Request::Search(s) => {
-                let mut j = versioned(vec![("type", Json::Str("search".into()))]);
-                if let (Json::Obj(o), Json::Obj(inner)) = (&mut j, search_to_json(s)) {
-                    o.extend(inner);
-                }
-                j
+        let search_typed = |ty: &'static str, s: &SearchRequest| {
+            let mut j = versioned(vec![("type", Json::Str(ty.into()))]);
+            if let (Json::Obj(o), Json::Obj(inner)) = (&mut j, search_to_json(s)) {
+                o.extend(inner);
             }
+            j
+        };
+        match self {
+            Request::Search(s) => search_typed("search", s),
+            Request::Submit(s) => search_typed("submit", s),
             Request::Batch(items) => versioned(vec![
                 ("type", Json::Str("batch".into())),
                 ("requests", Json::Arr(items.iter().map(search_to_json).collect())),
             ]),
             Request::Metrics => versioned(vec![("type", Json::Str("metrics".into()))]),
+            Request::Status { job_id } => versioned(vec![
+                ("type", Json::Str("status".into())),
+                ("job_id", Json::Str(job_id.clone())),
+            ]),
+            Request::Cancel { job_id } => versioned(vec![
+                ("type", Json::Str("cancel".into())),
+                ("job_id", Json::Str(job_id.clone())),
+            ]),
+            Request::Jobs => versioned(vec![("type", Json::Str("jobs".into()))]),
+            Request::Watch { job_id } => versioned(vec![
+                ("type", Json::Str("watch".into())),
+                ("job_id", Json::Str(job_id.clone())),
+            ]),
         }
     }
 }
@@ -437,6 +571,8 @@ fn outcome_fields(o: &SearchOutcome) -> Vec<(&'static str, Json)> {
         ("trace", Json::arr_f64(&o.trace)),
         ("evals", Json::Num(o.evals as f64)),
         ("search_time_s", Json::Num(o.search_time_s)),
+        // additive v3 field: v2 readers ignore it (unknown-field tolerance)
+        ("stopped", Json::Str(o.stopped.name().into())),
     ]
 }
 
@@ -453,8 +589,64 @@ fn outcome_from_json(j: &Json) -> Result<SearchOutcome> {
         optimizer: j.get("optimizer").as_str().unwrap_or("").to_string(),
         evals: j.get("evals").as_usize().unwrap_or(trace.len()),
         search_time_s: j.get("search_time_s").as_f64().unwrap_or(0.0),
+        // absent on pre-v3 peers: those searches always ran to completion
+        stopped: j
+            .get("stopped")
+            .as_str()
+            .and_then(StopReason::from_name)
+            .unwrap_or(StopReason::Completed),
         ranked,
         trace,
+    })
+}
+
+/// JSON encoding of a [`SearchEvent`]. `best_score` is omitted while no
+/// evaluation has finished (`INFINITY` is not representable in JSON).
+fn event_fields(ev: &SearchEvent) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![("evals", Json::Num(ev.evals as f64))];
+    if ev.best_score.is_finite() {
+        fields.push(("best_score", Json::Num(ev.best_score)));
+    }
+    fields.push(("elapsed_s", Json::Num(ev.elapsed_s)));
+    fields
+}
+
+fn event_from_json(j: &Json) -> Result<SearchEvent> {
+    Ok(SearchEvent {
+        evals: j.get("evals").as_usize().context("event.evals")?,
+        best_score: j.get("best_score").as_f64().unwrap_or(f64::INFINITY),
+        elapsed_s: j.get("elapsed_s").as_f64().unwrap_or(0.0),
+    })
+}
+
+fn job_info_to_json(i: &JobInfo) -> Json {
+    let mut fields = vec![
+        ("id", Json::Str(i.id.clone())),
+        ("state", Json::Str(i.state.name().into())),
+        ("optimizer", Json::Str(i.optimizer.clone())),
+        ("objective", Json::Str(i.objective.clone())),
+        ("evals", Json::Num(i.evals as f64)),
+    ];
+    if let Some(b) = i.best_score {
+        fields.push(("best_score", Json::Num(b)));
+    }
+    fields.push(("elapsed_s", Json::Num(i.elapsed_s)));
+    Json::obj(fields)
+}
+
+fn job_info_from_json(j: &Json) -> Result<JobInfo> {
+    Ok(JobInfo {
+        id: j.get("id").as_str().context("job.id")?.to_string(),
+        state: j
+            .get("state")
+            .as_str()
+            .and_then(JobState::from_name)
+            .context("job.state")?,
+        optimizer: j.get("optimizer").as_str().unwrap_or("").to_string(),
+        objective: j.get("objective").as_str().unwrap_or("").to_string(),
+        evals: j.get("evals").as_usize().unwrap_or(0),
+        best_score: j.get("best_score").as_f64(),
+        elapsed_s: j.get("elapsed_s").as_f64().unwrap_or(0.0),
     })
 }
 
@@ -483,6 +675,42 @@ impl Response {
                 ("status", Json::Str("ok".into())),
                 ("metrics", Json::Str(s.clone())),
             ]),
+            Response::Submitted { job_id, state } => Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("v", Json::Num(PROTOCOL_VERSION as f64)),
+                ("job_id", Json::Str(job_id.clone())),
+                ("job_state", Json::Str(state.name().into())),
+            ]),
+            Response::Job(info) => Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("v", Json::Num(PROTOCOL_VERSION as f64)),
+                ("job", job_info_to_json(info)),
+            ]),
+            Response::Jobs(infos) => Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("v", Json::Num(PROTOCOL_VERSION as f64)),
+                ("jobs", Json::Arr(infos.iter().map(job_info_to_json).collect())),
+            ]),
+            Response::Event { job_id, event } => {
+                let mut fields = vec![
+                    ("status", Json::Str("ok".into())),
+                    ("v", Json::Num(PROTOCOL_VERSION as f64)),
+                    ("type", Json::Str("event".into())),
+                    ("job_id", Json::Str(job_id.clone())),
+                ];
+                fields.extend(event_fields(event));
+                Json::obj(fields)
+            }
+            Response::JobOutcome { job_id, outcome } => {
+                let mut fields = vec![
+                    ("status", Json::Str("ok".into())),
+                    ("v", Json::Num(PROTOCOL_VERSION as f64)),
+                    ("type", Json::Str("outcome".into())),
+                    ("job_id", Json::Str(job_id.clone())),
+                ];
+                fields.extend(outcome_fields(outcome));
+                Json::obj(fields)
+            }
             Response::Error { code, message } => Json::obj(vec![
                 ("status", Json::Str("error".into())),
                 ("v", Json::Num(PROTOCOL_VERSION as f64)),
@@ -495,8 +723,34 @@ impl Response {
     pub fn from_json(j: &Json) -> Result<Response> {
         match j.get("status").as_str() {
             Some("ok") => {
+                // stream lines carry an explicit discriminator
+                if let Some(ty) = j.get("type").as_str() {
+                    let job_id = j.get("job_id").as_str().context("job_id")?.to_string();
+                    return match ty {
+                        "event" => Ok(Response::Event { job_id, event: event_from_json(j)? }),
+                        "outcome" => {
+                            Ok(Response::JobOutcome { job_id, outcome: outcome_from_json(j)? })
+                        }
+                        other => bail!("unknown stream line type {other:?}"),
+                    };
+                }
                 if let Some(m) = j.get("metrics").as_str() {
                     Ok(Response::MetricsText(m.to_string()))
+                } else if !matches!(j.get("job"), Json::Null) {
+                    Ok(Response::Job(job_info_from_json(j.get("job"))?))
+                } else if let Some(jobs) = j.get("jobs").as_arr() {
+                    Ok(Response::Jobs(
+                        jobs.iter().map(job_info_from_json).collect::<Result<Vec<_>>>()?,
+                    ))
+                } else if let Some(id) = j.get("job_id").as_str() {
+                    Ok(Response::Submitted {
+                        job_id: id.to_string(),
+                        state: j
+                            .get("job_state")
+                            .as_str()
+                            .and_then(JobState::from_name)
+                            .unwrap_or(JobState::Queued),
+                    })
                 } else if let Some(outs) = j.get("outcomes").as_arr() {
                     Ok(Response::Batch(
                         outs.iter().map(outcome_from_json).collect::<Result<Vec<_>>>()?,
@@ -652,7 +906,7 @@ mod tests {
 
     #[test]
     fn version_mismatch_is_a_structured_error() {
-        let err = parse(r#"{"v":3,"type":"search"}"#).unwrap_err();
+        let err = parse(r#"{"v":4,"type":"search"}"#).unwrap_err();
         assert_eq!(err.code, ErrorCode::UnsupportedVersion);
         // and it serializes into an error *response*, not a hangup
         let resp = Response::error(err.code, err.message);
@@ -660,12 +914,13 @@ mod tests {
         match Response::from_json(&j).unwrap() {
             Response::Error { code, message } => {
                 assert_eq!(code, ErrorCode::UnsupportedVersion);
-                assert!(message.contains("v3"));
+                assert!(message.contains("v4"));
             }
             other => panic!("unexpected {other:?}"),
         }
-        // a request at exactly the supported version is fine
+        // requests at or below the supported version are fine
         assert!(parse(r#"{"v":2,"type":"metrics"}"#).is_ok());
+        assert!(parse(r#"{"v":3,"type":"jobs"}"#).is_ok());
     }
 
     #[test]
@@ -701,16 +956,105 @@ mod tests {
             trace: vec![0.25],
             evals: 1,
             search_time_s: 0.5,
+            stopped: StopReason::Completed,
+        };
+        let partial = SearchOutcome { stopped: StopReason::Cancelled, ..outcome.clone() };
+        let info = JobInfo {
+            id: "job-3".into(),
+            state: JobState::Running,
+            optimizer: "dosa-gd".into(),
+            objective: "min-EDP 128x768x768".into(),
+            evals: 40,
+            best_score: Some(1.5e9),
+            elapsed_s: 0.7,
+        };
+        let info_fresh = JobInfo {
+            state: JobState::Queued,
+            evals: 0,
+            best_score: None,
+            ..info.clone()
         };
         for resp in [
             Response::Designs(vec![d]),
             Response::Outcome(outcome.clone()),
-            Response::Batch(vec![outcome.clone(), outcome]),
+            Response::Batch(vec![outcome.clone(), partial.clone()]),
             Response::MetricsText("requests=1".into()),
+            Response::Submitted { job_id: "job-1".into(), state: JobState::Queued },
+            Response::Job(info.clone()),
+            Response::Jobs(vec![info, info_fresh]),
+            Response::Event {
+                job_id: "job-2".into(),
+                event: SearchEvent { evals: 64, best_score: 0.125, elapsed_s: 1.5 },
+            },
+            // pre-first-evaluation event: infinite best is omitted on the wire
+            Response::Event {
+                job_id: "job-2".into(),
+                event: SearchEvent { evals: 0, best_score: f64::INFINITY, elapsed_s: 0.0 },
+            },
+            Response::JobOutcome { job_id: "job-2".into(), outcome: partial },
             Response::error(ErrorCode::Internal, "boom"),
         ] {
             let j = Json::parse(&resp.to_json().to_string()).unwrap();
             assert_eq!(Response::from_json(&j).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn v3_request_roundtrip() {
+        let sr = SearchRequest::new(
+            Objective::MinEdp { g: Gemm::new(4, 5, 6) },
+            Budget::evals(1000).with_wall_clock(0.25),
+            OptimizerKind::DosaGd,
+        );
+        for r in [
+            Request::Submit(sr),
+            Request::Status { job_id: "job-9".into() },
+            Request::Cancel { job_id: "job-9".into() },
+            Request::Jobs,
+            Request::Watch { job_id: "job-9".into() },
+        ] {
+            let j = Json::parse(&r.to_json().to_string()).unwrap();
+            assert_eq!(Request::from_json(&j).unwrap(), r, "{r:?}");
+        }
+        // job_id is mandatory on the job-addressed forms
+        for line in [
+            r#"{"v":3,"type":"status"}"#,
+            r#"{"v":3,"type":"cancel"}"#,
+            r#"{"v":3,"type":"watch"}"#,
+        ] {
+            let err = parse(line).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{line}");
+            assert!(err.message.contains("job_id"));
+        }
+    }
+
+    #[test]
+    fn v3_unknown_fields_are_ignored() {
+        let r = parse(
+            r#"{"v":3,"type":"submit","priority":"high",
+                "objective":{"kind":"max_perf","m":7,"k":8,"n":9},
+                "budget":{"evals":5,"wall_clock_s":0.5},"optimizer":"random"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Submit(SearchRequest::new(
+                Objective::MaxPerf { g: Gemm::new(7, 8, 9) },
+                Budget::evals(5).with_wall_clock(0.5),
+                OptimizerKind::RandomSearch,
+            ))
+        );
+        assert!(parse(r#"{"v":3,"type":"jobs","verbose":true}"#).is_ok());
+    }
+
+    #[test]
+    fn outcome_without_stopped_field_decodes_as_completed() {
+        // a pre-v3 peer's outcome line has no "stopped": tolerate it
+        let line = r#"{"status":"ok","v":2,"optimizer":"Random Search",
+            "designs":[],"trace":[],"evals":0,"search_time_s":0.1}"#;
+        match Response::from_json(&Json::parse(line).unwrap()).unwrap() {
+            Response::Outcome(o) => assert_eq!(o.stopped, StopReason::Completed),
+            other => panic!("unexpected {other:?}"),
         }
     }
 
@@ -729,6 +1073,7 @@ mod tests {
             trace: vec![5.0],
             evals: 1,
             search_time_s: 0.0,
+            stopped: StopReason::Completed,
         };
         let j = Response::Outcome(out).to_json();
         let designs = j.get("designs").as_arr().unwrap();

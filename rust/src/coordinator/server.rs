@@ -1,20 +1,66 @@
 //! Newline-delimited-JSON TCP front end over the service.
 //!
-//! One line in = one [`Request`], one line out = one [`Response`]. A thread
-//! per connection (DSE request rates are low; the engine thread is the
-//! shared resource and does the batching).
+//! One line in = one [`Request`]; most requests answer one line. The v3
+//! `watch` request instead **streams**: progress `event` lines as the job
+//! advances, then one terminal `outcome` line — after which the same
+//! connection keeps serving requests. Event delivery is backpressured by
+//! the job's single coalescing slot (drop-to-latest): a watcher stalled in
+//! a TCP write never queues unbounded events, it just skips intermediate
+//! heartbeats.
+//!
+//! A thread per connection (DSE request rates are low; the engine thread
+//! is the shared resource and does the batching), capped by a counting
+//! semaphore so a connection flood cannot spawn unboundedly — excess
+//! connections wait in the accept loop until a slot frees.
 
-use super::protocol::{ErrorCode, Request, Response};
+use super::protocol::{ErrorCode, JobInfo, Request, Response};
 use super::service::Handle;
+use crate::dse::api::SearchEvent;
 use crate::util::json::Json;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7979").
-pub fn serve(handle: Handle, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!("diffaxe: serving on {addr}");
+/// Maximum concurrently-served connections.
+pub const MAX_CONNECTIONS: usize = 256;
+
+/// Minimal counting semaphore (std has none): `acquire` blocks while no
+/// permit is free; the returned guard releases on drop.
+struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    fn new(n: usize) -> Arc<Semaphore> {
+        Arc::new(Semaphore { permits: Mutex::new(n), cv: Condvar::new() })
+    }
+
+    fn acquire(self: &Arc<Semaphore>) -> Permit {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+        Permit(self.clone())
+    }
+}
+
+struct Permit(Arc<Semaphore>);
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        *self.0.permits.lock().unwrap() += 1;
+        self.0.cv.notify_one();
+    }
+}
+
+/// The shared accept loop: one handler thread per connection, capped at
+/// [`MAX_CONNECTIONS`] by the semaphore ([`serve`] and [`serve_ephemeral`]
+/// differ only in who owns the listener thread).
+fn accept_loop(listener: TcpListener, handle: Handle) {
+    let sem = Semaphore::new(MAX_CONNECTIONS);
     for stream in listener.incoming() {
         let stream = match stream {
             Ok(s) => s,
@@ -23,29 +69,33 @@ pub fn serve(handle: Handle, addr: &str) -> Result<()> {
                 continue;
             }
         };
+        // blocks the accept loop when saturated: the flood waits in the
+        // kernel backlog instead of becoming threads
+        let permit = sem.acquire();
         let h = handle.clone();
         std::thread::spawn(move || {
+            let _permit = permit;
             if let Err(e) = handle_conn(h, stream) {
                 eprintln!("connection error: {e:#}");
             }
         });
     }
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7979").
+pub fn serve(handle: Handle, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("diffaxe: serving on {addr}");
+    accept_loop(listener, handle);
     Ok(())
 }
 
-/// Bind an ephemeral port and return (listener thread spawner, addr) — used
-/// by tests and the quickstart example.
+/// Bind an ephemeral port, serve on a background thread, return the addr —
+/// used by tests and the quickstart example.
 pub fn serve_ephemeral(handle: Handle) -> Result<std::net::SocketAddr> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
-    std::thread::spawn(move || {
-        for stream in listener.incoming().flatten() {
-            let h = handle.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(h, stream);
-            });
-        }
-    });
+    std::thread::spawn(move || accept_loop(listener, handle));
     Ok(addr)
 }
 
@@ -60,20 +110,72 @@ fn handle_conn(handle: Handle, stream: TcpStream) -> Result<()> {
         // every decode failure — bad JSON, bad request, unsupported
         // version — answers with a structured error on the same
         // connection; the stream is never dropped mid-session
-        let response = match Json::parse(&line) {
-            Ok(j) => match Request::from_json(&j) {
-                Ok(req) => handle.request(req),
-                Err(e) => Response::error(e.code, e.message),
-            },
-            Err(e) => Response::error(ErrorCode::BadRequest, format!("bad json: {e}")),
-        };
-        writeln!(writer, "{}", response.to_json())?;
-        writer.flush()?;
+        match Json::parse(&line).map_err(|e| (ErrorCode::BadRequest, format!("bad json: {e}")))
+            .and_then(|j| Request::from_json(&j).map_err(|e| (e.code, e.message)))
+        {
+            Ok(Request::Watch { job_id }) => stream_job(&handle, &mut writer, &job_id)?,
+            Ok(req) => write_line(&mut writer, &handle.request(req))?,
+            Err((code, message)) => write_line(&mut writer, &Response::error(code, message))?,
+        }
     }
     Ok(())
 }
 
-/// Minimal blocking client (examples + integration tests).
+fn write_line(writer: &mut TcpStream, resp: &Response) -> Result<()> {
+    writeln!(writer, "{}", resp.to_json())?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// Stream one job over the connection: `event` lines as the coalescing
+/// slot refreshes, then the terminal `outcome` (or stored error) line.
+/// Guarantees at least one `event` line before a successful terminal, so
+/// a watcher always observes progress shape even on instant jobs.
+fn stream_job(handle: &Handle, writer: &mut TcpStream, job_id: &str) -> Result<()> {
+    let Some(entry) = handle.registry().get(job_id) else {
+        let err = Response::error(ErrorCode::BadRequest, format!("unknown job {job_id:?}"));
+        return write_line(writer, &err);
+    };
+    let mut seq = 0u64;
+    let mut events_sent = 0usize;
+    loop {
+        let (new_seq, ev, terminal) = entry.next_event(seq);
+        seq = new_seq;
+        if let Some(event) = ev {
+            write_line(writer, &Response::Event { job_id: job_id.to_string(), event })?;
+            events_sent += 1;
+        }
+        if let Some((_state, result)) = terminal {
+            match result {
+                Response::Outcome(outcome) => {
+                    if events_sent == 0 {
+                        // instant job: synthesize the one guaranteed event
+                        let best = outcome.best_score();
+                        write_line(
+                            writer,
+                            &Response::Event {
+                                job_id: job_id.to_string(),
+                                event: SearchEvent {
+                                    evals: outcome.evals,
+                                    best_score: best,
+                                    elapsed_s: outcome.search_time_s,
+                                },
+                            },
+                        )?;
+                    }
+                    write_line(
+                        writer,
+                        &Response::JobOutcome { job_id: job_id.to_string(), outcome },
+                    )?;
+                }
+                other => write_line(writer, &other)?,
+            }
+            return Ok(());
+        }
+    }
+}
+
+/// Minimal blocking client (examples + integration tests + CLI).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -85,6 +187,17 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
+    /// Connect to a `host:port` string (CLI convenience).
+    pub fn connect_str(addr: &str) -> Result<Client> {
+        use std::net::ToSocketAddrs;
+        let resolved = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .with_context(|| format!("no address for {addr}"))?;
+        Client::connect(&resolved)
+    }
+
     pub fn request(&mut self, req: &Request) -> Result<Response> {
         self.send_line(&req.to_json().to_string())
     }
@@ -93,9 +206,65 @@ impl Client {
     pub fn send_line(&mut self, line: &str) -> Result<Response> {
         writeln!(self.writer, "{line}")?;
         self.writer.flush()?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Result<Response> {
         let mut reply = String::new();
         self.reader.read_line(&mut reply)?;
         let j = Json::parse(&reply).context("parsing response")?;
         Response::from_json(&j)
+    }
+
+    /// v3: submit a search job, returning its id.
+    pub fn submit(&mut self, sr: &super::protocol::SearchRequest) -> Result<String> {
+        match self.request(&Request::Submit(sr.clone()))? {
+            Response::Submitted { job_id, .. } => Ok(job_id),
+            Response::Error { code, message } => bail!("submit failed: {}: {message}", code.name()),
+            other => bail!("unexpected submit response {other:?}"),
+        }
+    }
+
+    /// v3: one job's status.
+    pub fn status(&mut self, job_id: &str) -> Result<JobInfo> {
+        match self.request(&Request::Status { job_id: job_id.to_string() })? {
+            Response::Job(info) => Ok(info),
+            Response::Error { code, message } => bail!("status failed: {}: {message}", code.name()),
+            other => bail!("unexpected status response {other:?}"),
+        }
+    }
+
+    /// v3: cancel a job (the post-cancel status comes back).
+    pub fn cancel(&mut self, job_id: &str) -> Result<JobInfo> {
+        match self.request(&Request::Cancel { job_id: job_id.to_string() })? {
+            Response::Job(info) => Ok(info),
+            Response::Error { code, message } => bail!("cancel failed: {}: {message}", code.name()),
+            other => bail!("unexpected cancel response {other:?}"),
+        }
+    }
+
+    /// v3: every retained job.
+    pub fn jobs(&mut self) -> Result<Vec<JobInfo>> {
+        match self.request(&Request::Jobs)? {
+            Response::Jobs(infos) => Ok(infos),
+            other => bail!("unexpected jobs response {other:?}"),
+        }
+    }
+
+    /// v3: stream a job — `on_event` sees every delivered heartbeat; the
+    /// terminal line ([`Response::JobOutcome`] or an error) is returned.
+    pub fn watch(
+        &mut self,
+        job_id: &str,
+        mut on_event: impl FnMut(&SearchEvent),
+    ) -> Result<Response> {
+        writeln!(self.writer, "{}", Request::Watch { job_id: job_id.to_string() }.to_json())?;
+        self.writer.flush()?;
+        loop {
+            match self.read_response()? {
+                Response::Event { event, .. } => on_event(&event),
+                terminal => return Ok(terminal),
+            }
+        }
     }
 }

@@ -1,6 +1,24 @@
 //! The DSE service: a dedicated engine thread owning a [`Session`] (the
 //! PJRT executables hold raw C pointers and are deliberately never shared),
-//! fed by a cloneable handle over an mpsc channel.
+//! fed by a cloneable handle over an mpsc channel, with every search
+//! tracked as a *job* in the [`JobRegistry`].
+//!
+//! # Jobs
+//!
+//! Every search — synchronous or not — enters the registry as a job:
+//! `submit` answers a `job_id` immediately and the search runs when the
+//! engine thread reaches it; the classic synchronous `search`/`batch`
+//! requests are submit-plus-wait over the same path, so their wire
+//! behaviour is unchanged. Jobs move `queued → running → done |
+//! cancelled | failed`; cancellation raises a flag the search polls
+//! between evaluation batches (see [`crate::dse::api::SearchCtx`]), so a
+//! cancelled job still retains its *partial* outcome. Progress events are
+//! published into a single coalescing slot per job (drop-to-latest): a
+//! slow watcher never queues unbounded events, it just skips intermediate
+//! heartbeats. Terminal jobs are retained for `status` queries up to
+//! [`MAX_RETAINED_JOBS`], then garbage-collected oldest-first.
+//!
+//! # Batching
 //!
 //! Runtime-generation searches with the `diffaxe` optimizer are
 //! **dynamically batched**: the engine thread drains the queue up to the
@@ -18,20 +36,27 @@
 //! are mirrored into [`Metrics`] after every evaluation burst.
 
 use super::metrics::Metrics;
-use super::protocol::{ErrorCode, Request, Response, SearchRequest};
-use crate::dse::api::{DesignReport, Objective, OptimizerKind, SearchOutcome, Session};
+use super::protocol::{ErrorCode, JobInfo, JobState, Request, Response, SearchRequest};
+use crate::dse::api::{
+    DesignReport, Objective, OptimizerKind, SearchCtx, SearchEvent, SearchOutcome, Session,
+    StopReason,
+};
 use crate::design_space::HwConfig;
 use crate::util::rng;
 use crate::workload::Gemm;
 use anyhow::Result;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Default cap on ranked designs carried in one response (requests can
 /// override with `top_k`).
 pub const DEFAULT_TOP_K: usize = 64;
+
+/// Terminal jobs retained for `status`/`jobs` queries before GC.
+pub const MAX_RETAINED_JOBS: usize = 256;
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -54,43 +79,425 @@ impl ServiceConfig {
     }
 }
 
-struct Job {
-    request: Request,
-    reply: Sender<Response>,
-    submitted: Instant,
+// ---------------------------------------------------------------------------
+// job registry
+// ---------------------------------------------------------------------------
+
+/// Mutable core of one job, guarded by its entry's mutex; the condvar
+/// wakes watchers (new event) and waiters (terminal result).
+struct JobCore {
+    state: JobState,
+    /// bumps on every observable change (event published, state change,
+    /// terminal result) — watchers resume from the last seq they saw
+    seq: u64,
+    /// the coalescing progress slot: (seq at publish, event). A newer
+    /// event *replaces* the buffered one (drop-to-latest backpressure).
+    latest: Option<(u64, SearchEvent)>,
+    /// terminal response (outcome or error); `Some` ⇔ state is terminal
+    result: Option<Response>,
+    /// wall-clock from submission to the terminal transition
+    elapsed_s: Option<f64>,
 }
 
-/// Cloneable handle to the service.
-#[derive(Clone)]
-pub struct Handle {
-    tx: Sender<Job>,
+/// One tracked search job.
+pub struct JobEntry {
+    num: u64,
+    pub id: String,
+    pub request: SearchRequest,
+    cancel: Arc<AtomicBool>,
+    submitted: Instant,
+    core: Mutex<JobCore>,
+    cv: Condvar,
+}
+
+impl JobEntry {
+    /// The shared cancellation flag the running search polls.
+    pub fn cancel_flag(&self) -> Arc<AtomicBool> {
+        self.cancel.clone()
+    }
+
+    /// Current lifecycle state.
+    pub fn state(&self) -> JobState {
+        self.core.lock().unwrap().state
+    }
+
+    /// Point-in-time description (the `status` wire unit).
+    pub fn info(&self) -> JobInfo {
+        let core = self.core.lock().unwrap();
+        let (evals, best_score) = match (&core.result, &core.latest) {
+            (Some(Response::Outcome(o)), _) => {
+                let best = o.best_score();
+                (o.evals, if best.is_finite() { Some(best) } else { None })
+            }
+            (_, Some((_, ev))) => {
+                (ev.evals, if ev.best_score.is_finite() { Some(ev.best_score) } else { None })
+            }
+            _ => (0, None),
+        };
+        JobInfo {
+            id: self.id.clone(),
+            state: core.state,
+            optimizer: self.request.optimizer.name().to_string(),
+            objective: self.request.objective.to_string(),
+            evals,
+            best_score,
+            elapsed_s: core
+                .elapsed_s
+                .unwrap_or_else(|| self.submitted.elapsed().as_secs_f64()),
+        }
+    }
+
+    /// The terminal response if the job already finished (internal error
+    /// placeholder otherwise — callers only use this on terminal jobs).
+    pub fn result_now(&self) -> Response {
+        self.core
+            .lock()
+            .unwrap()
+            .result
+            .clone()
+            .unwrap_or_else(|| Response::error(ErrorCode::Internal, "job not finished"))
+    }
+
+    /// Block until something newer than `last_seq` is observable. Returns
+    /// `(new_seq, fresh_event, terminal)` where `fresh_event` is the
+    /// coalesced latest event iff it was published after `last_seq`, and
+    /// `terminal` carries the final state + response once the job ends.
+    pub fn next_event(
+        &self,
+        last_seq: u64,
+    ) -> (u64, Option<SearchEvent>, Option<(JobState, Response)>) {
+        let mut core = self.core.lock().unwrap();
+        while core.seq <= last_seq && core.result.is_none() {
+            core = self.cv.wait(core).unwrap();
+        }
+        let ev = core.latest.as_ref().filter(|(s, _)| *s > last_seq).map(|(_, e)| *e);
+        let terminal = core.result.clone().map(|r| (core.state, r));
+        (core.seq, ev, terminal)
+    }
+}
+
+struct RegistryInner {
+    next_id: u64,
+    jobs: BTreeMap<u64, Arc<JobEntry>>,
+    /// terminal job numbers in completion order (GC queue)
+    terminal: VecDeque<u64>,
+}
+
+/// Tracks every search job the service has accepted: id allocation,
+/// lifecycle transitions (mirrored into [`Metrics`] gauges), progress
+/// publication, and bounded retention of finished jobs.
+///
+/// Lock order: `inner` may take an entry's `core`; an entry's `core` is
+/// never held while taking `inner`.
+pub struct JobRegistry {
+    inner: Mutex<RegistryInner>,
     metrics: Arc<Metrics>,
 }
 
-impl Handle {
-    /// Submit a request and block for the response.
-    pub fn request(&self, request: Request) -> Response {
-        let (reply_tx, reply_rx) = channel();
-        let job = Job { request, reply: reply_tx, submitted: Instant::now() };
-        if self.tx.send(job).is_err() {
-            return Response::error(ErrorCode::Internal, "service stopped");
+impl JobRegistry {
+    pub fn new(metrics: Arc<Metrics>) -> JobRegistry {
+        JobRegistry {
+            inner: Mutex::new(RegistryInner {
+                next_id: 0,
+                jobs: BTreeMap::new(),
+                terminal: VecDeque::new(),
+            }),
+            metrics,
         }
-        reply_rx
-            .recv()
-            .unwrap_or_else(|_| Response::error(ErrorCode::Internal, "service dropped request"))
+    }
+
+    /// Accept a search as a new queued job.
+    pub fn submit(&self, request: SearchRequest) -> Arc<JobEntry> {
+        let entry = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.next_id += 1;
+            let num = inner.next_id;
+            let entry = Arc::new(JobEntry {
+                num,
+                id: format!("job-{num}"),
+                request,
+                cancel: Arc::new(AtomicBool::new(false)),
+                submitted: Instant::now(),
+                core: Mutex::new(JobCore {
+                    state: JobState::Queued,
+                    seq: 0,
+                    latest: None,
+                    result: None,
+                    elapsed_s: None,
+                }),
+                cv: Condvar::new(),
+            });
+            inner.jobs.insert(num, entry.clone());
+            Self::gc(&mut inner);
+            entry
+        };
+        self.metrics.job_submitted();
+        entry
+    }
+
+    /// Look a job up by its wire id.
+    pub fn get(&self, id: &str) -> Option<Arc<JobEntry>> {
+        self.inner.lock().unwrap().jobs.values().find(|e| e.id == id).cloned()
+    }
+
+    /// Every retained job, oldest first.
+    pub fn list(&self) -> Vec<JobInfo> {
+        self.inner.lock().unwrap().jobs.values().map(|e| e.info()).collect()
+    }
+
+    /// Transition a queued job to running. False if the job was cancelled
+    /// (or otherwise finished) before the engine reached it.
+    pub fn start(&self, entry: &JobEntry) -> bool {
+        {
+            let mut core = entry.core.lock().unwrap();
+            if core.state != JobState::Queued || core.result.is_some() {
+                return false;
+            }
+            core.state = JobState::Running;
+            core.seq += 1;
+            entry.cv.notify_all();
+        }
+        self.metrics.job_started();
+        true
+    }
+
+    /// Publish a progress event into the job's coalescing slot
+    /// (drop-to-latest: a buffered event is *replaced*, never queued).
+    pub fn publish(&self, entry: &JobEntry, ev: SearchEvent) {
+        let was_empty = {
+            let mut core = entry.core.lock().unwrap();
+            if core.result.is_some() {
+                return;
+            }
+            let was_empty = core.latest.is_none();
+            core.seq += 1;
+            core.latest = Some((core.seq, ev));
+            entry.cv.notify_all();
+            was_empty
+        };
+        if was_empty {
+            self.metrics.event_buffered();
+        }
+    }
+
+    /// Record a job's terminal state + response. Idempotent: the first
+    /// finalization wins (a cancel racing a completion keeps the earlier
+    /// result).
+    pub fn finalize(&self, entry: &Arc<JobEntry>, state: JobState, result: Response) {
+        debug_assert!(state.terminal());
+        let (was_running, had_event);
+        {
+            let mut core = entry.core.lock().unwrap();
+            if core.result.is_some() {
+                return;
+            }
+            was_running = core.state == JobState::Running;
+            had_event = core.latest.is_some();
+            core.state = state;
+            core.result = Some(result);
+            core.elapsed_s = Some(entry.submitted.elapsed().as_secs_f64());
+            core.seq += 1;
+            entry.cv.notify_all();
+        }
+        self.metrics.job_finished(state, was_running, had_event);
+        let mut inner = self.inner.lock().unwrap();
+        inner.terminal.push_back(entry.num);
+        Self::gc(&mut inner);
+    }
+
+    /// Raise a job's cancellation flag. A still-queued job becomes
+    /// terminal immediately (it never ran, so its outcome is empty); a
+    /// running job stops at its next batch boundary and retains the
+    /// partial outcome. Returns the post-cancel [`JobInfo`].
+    pub fn cancel(&self, id: &str) -> Option<JobInfo> {
+        let entry = self.get(id)?;
+        entry.cancel.store(true, Ordering::SeqCst);
+        let became_terminal = {
+            let mut core = entry.core.lock().unwrap();
+            if core.state == JobState::Queued && core.result.is_none() {
+                let outcome = SearchOutcome {
+                    optimizer: entry.request.optimizer.name().to_string(),
+                    ranked: Vec::new(),
+                    trace: Vec::new(),
+                    evals: 0,
+                    search_time_s: entry.submitted.elapsed().as_secs_f64(),
+                    stopped: StopReason::Cancelled,
+                };
+                core.state = JobState::Cancelled;
+                core.result = Some(Response::Outcome(outcome));
+                core.elapsed_s = Some(entry.submitted.elapsed().as_secs_f64());
+                core.seq += 1;
+                entry.cv.notify_all();
+                true
+            } else {
+                false
+            }
+        };
+        if became_terminal {
+            self.metrics.job_finished(JobState::Cancelled, false, false);
+            let mut inner = self.inner.lock().unwrap();
+            inner.terminal.push_back(entry.num);
+            Self::gc(&mut inner);
+        }
+        Some(entry.info())
+    }
+
+    fn gc(inner: &mut RegistryInner) {
+        while inner.terminal.len() > MAX_RETAINED_JOBS {
+            if let Some(num) = inner.terminal.pop_front() {
+                inner.jobs.remove(&num);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// handle + service
+// ---------------------------------------------------------------------------
+
+/// One unit of engine-thread work: run a registered job, optionally
+/// delivering the terminal response to a synchronous waiter.
+enum Msg {
+    Run { entry: Arc<JobEntry>, reply: Option<Sender<Response>> },
+}
+
+/// Cloneable handle to the service. Registry queries (`status`, `cancel`,
+/// `jobs`, `metrics`) answer directly — they never queue behind a running
+/// search on the engine thread.
+#[derive(Clone)]
+pub struct Handle {
+    tx: Sender<Msg>,
+    metrics: Arc<Metrics>,
+    registry: Arc<JobRegistry>,
+}
+
+impl Handle {
+    /// Submit a request and block for the response. Synchronous `search`
+    /// and `batch` are submit-plus-wait over the job registry.
+    pub fn request(&self, request: Request) -> Response {
+        let start = Instant::now();
+        match request {
+            Request::Metrics => {
+                let r = Response::MetricsText(self.metrics.snapshot().to_string());
+                self.metrics.record_request(start.elapsed().as_secs_f64() * 1e6, 0);
+                r
+            }
+            Request::Jobs => Response::Jobs(self.registry.list()),
+            // a watch reaching the blocking path degrades to a status
+            // probe; the streaming server intercepts it before this point
+            Request::Status { job_id } | Request::Watch { job_id } => {
+                match self.registry.get(&job_id) {
+                    Some(e) => Response::Job(e.info()),
+                    None => unknown_job(&job_id),
+                }
+            }
+            Request::Cancel { job_id } => match self.registry.cancel(&job_id) {
+                Some(info) => Response::Job(info),
+                None => unknown_job(&job_id),
+            },
+            Request::Submit(sr) => {
+                if let Err(msg) = validate(&sr) {
+                    return Response::error(ErrorCode::BadRequest, msg);
+                }
+                let entry = self.enqueue(sr, None);
+                Response::Submitted { job_id: entry.id.clone(), state: entry.state() }
+            }
+            Request::Search(sr) => {
+                if let Err(msg) = validate(&sr) {
+                    return Response::error(ErrorCode::BadRequest, msg);
+                }
+                let (tx, rx) = channel();
+                self.enqueue(sr, Some(tx));
+                rx.recv()
+                    .unwrap_or_else(|_| Response::error(ErrorCode::Internal, "service stopped"))
+            }
+            Request::Batch(items) => {
+                // validate the whole batch before running any item, so a bad
+                // pairing cannot discard minutes of completed sibling searches
+                for (i, sr) in items.iter().enumerate() {
+                    if let Err(msg) = validate(sr) {
+                        return Response::error(
+                            ErrorCode::BadRequest,
+                            format!("batch item {i}: {msg}"),
+                        );
+                    }
+                }
+                let rxs: Vec<Receiver<Response>> = items
+                    .iter()
+                    .map(|sr| {
+                        let (tx, rx) = channel();
+                        self.enqueue(sr.clone(), Some(tx));
+                        rx
+                    })
+                    .collect();
+                let mut outs = Vec::with_capacity(items.len());
+                let mut first_err: Option<Response> = None;
+                for (i, (sr, rx)) in items.iter().zip(rxs).enumerate() {
+                    let resp = rx.recv().unwrap_or_else(|_| {
+                        Response::error(ErrorCode::Internal, "service stopped")
+                    });
+                    match resp {
+                        Response::Outcome(o) => outs.push(o),
+                        Response::Error { code, message } if first_err.is_none() => {
+                            // all-or-nothing by protocol contract (see the
+                            // `batch` docs in protocol.rs)
+                            first_err = Some(Response::error(
+                                code,
+                                format!("batch item {i} ({}): {message}", sr.optimizer.name()),
+                            ));
+                        }
+                        _ => {}
+                    }
+                }
+                first_err.unwrap_or(Response::Batch(outs))
+            }
+        }
     }
 
     /// Submit without waiting; the receiver yields the response.
     pub fn submit(&self, request: Request) -> Receiver<Response> {
-        let (reply_tx, reply_rx) = channel();
-        let job = Job { request, reply: reply_tx, submitted: Instant::now() };
-        let _ = self.tx.send(job);
-        reply_rx
+        match request {
+            Request::Search(sr) => {
+                let (tx, rx) = channel();
+                if let Err(msg) = validate(&sr) {
+                    let _ = tx.send(Response::error(ErrorCode::BadRequest, msg));
+                } else {
+                    self.enqueue(sr, Some(tx));
+                }
+                rx
+            }
+            other => {
+                let (tx, rx) = channel();
+                let _ = tx.send(self.request(other));
+                rx
+            }
+        }
+    }
+
+    /// Register a job and hand it to the engine thread.
+    fn enqueue(&self, sr: SearchRequest, reply: Option<Sender<Response>>) -> Arc<JobEntry> {
+        let entry = self.registry.submit(sr);
+        if self.tx.send(Msg::Run { entry: entry.clone(), reply }).is_err() {
+            self.registry.finalize(
+                &entry,
+                JobState::Failed,
+                Response::error(ErrorCode::Internal, "service stopped"),
+            );
+        }
+        entry
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
     }
+
+    pub fn registry(&self) -> Arc<JobRegistry> {
+        self.registry.clone()
+    }
+}
+
+fn unknown_job(job_id: &str) -> Response {
+    Response::error(ErrorCode::BadRequest, format!("unknown job {job_id:?}"))
 }
 
 /// Running service (engine thread + handle).
@@ -104,12 +511,14 @@ impl Service {
     /// Start the engine thread. Blocks until the artifacts are compiled (or
     /// fail to), so a returned `Service` is ready to serve.
     pub fn start(cfg: ServiceConfig) -> Result<Service> {
-        let (tx, rx) = channel::<Job>();
+        let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
+        let registry = Arc::new(JobRegistry::new(metrics.clone()));
         let stop = Arc::new(AtomicBool::new(false));
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let thread = {
             let metrics = metrics.clone();
+            let registry = registry.clone();
             let stop = stop.clone();
             std::thread::Builder::new()
                 .name("diffaxe-engine".into())
@@ -126,11 +535,11 @@ impl Service {
                             return;
                         }
                     };
-                    engine_loop(session, cfg, rx, metrics, stop);
+                    engine_loop(session, cfg, rx, registry, metrics, stop);
                 })?
         };
         ready_rx.recv()??;
-        Ok(Service { handle: Handle { tx, metrics }, stop, thread: Some(thread) })
+        Ok(Service { handle: Handle { tx, metrics, registry }, stop, thread: Some(thread) })
     }
 
     pub fn handle(&self) -> Handle {
@@ -151,6 +560,10 @@ impl Drop for Service {
     }
 }
 
+// ---------------------------------------------------------------------------
+// engine loop
+// ---------------------------------------------------------------------------
+
 /// A runtime-generation search waiting in the batcher. `acc` collects
 /// designs across sampler calls when the request spans batches.
 struct PendingGen {
@@ -160,14 +573,25 @@ struct PendingGen {
     top_k: usize,
     objective: Objective,
     acc: Vec<DesignReport>,
-    reply: Sender<Response>,
-    submitted: Instant,
+    /// running best score over `acc` (heartbeats stay O(1) per burst)
+    best: f64,
+    entry: Arc<JobEntry>,
+    reply: Option<Sender<Response>>,
+}
+
+/// Whether a search joins the continuous diffusion batcher (wall-clock-
+/// capped requests run the direct path, which enforces the deadline).
+fn batchable(sr: &SearchRequest) -> bool {
+    sr.optimizer == OptimizerKind::DiffAxE
+        && matches!(sr.objective, Objective::Runtime { .. })
+        && sr.budget.wall_clock_s.is_none()
 }
 
 fn engine_loop(
     mut session: Session,
     cfg: ServiceConfig,
-    rx: Receiver<Job>,
+    rx: Receiver<Msg>,
+    registry: Arc<JobRegistry>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) {
@@ -179,62 +603,53 @@ fn engine_loop(
             return;
         }
         // wait for work (or flush deadline if a batch is forming)
-        let job = if pending.is_empty() {
+        let msg = if pending.is_empty() {
             match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(j) => Some(j),
+                Ok(m) => Some(m),
                 Err(RecvTimeoutError::Timeout) => None,
                 Err(RecvTimeoutError::Disconnected) => return,
             }
         } else {
             match rx.recv_timeout(cfg.batch_window) {
-                Ok(j) => Some(j),
+                Ok(m) => Some(m),
                 Err(RecvTimeoutError::Timeout) => None,
                 Err(RecvTimeoutError::Disconnected) => {
-                    flush_gen_batch(&session, &mut pending, cfg.seed, &mut stream, &metrics);
+                    flush_gen_batch(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
                     return;
                 }
             }
         };
 
-        if let Some(job) = job {
-            match job.request {
+        if let Some(Msg::Run { entry, reply }) = msg {
+            if batchable(&entry.request) {
                 // runtime-conditioned diffusion joins the continuous batcher
-                // (wall-clock-capped requests go through the direct path,
-                // which honours Budget::wall_clock_s)
-                Request::Search(sr)
-                    if sr.optimizer == OptimizerKind::DiffAxE
-                        && matches!(sr.objective, Objective::Runtime { .. })
-                        && sr.budget.wall_clock_s.is_none() =>
-                {
-                    let Objective::Runtime { g, target_cycles } = sr.objective else {
-                        unreachable!("guard matched Runtime")
+                if registry.start(&entry) {
+                    let Objective::Runtime { g, target_cycles } = entry.request.objective else {
+                        unreachable!("batchable() matched Runtime")
                     };
                     let engine = session.engine().expect("engine");
                     pending.push(PendingGen {
                         g,
                         p_norm: engine.stats.stats_for(&g).norm_runtime(target_cycles),
-                        n: sr.budget.evals.max(1),
-                        top_k: sr.top_k.unwrap_or(DEFAULT_TOP_K),
-                        objective: sr.objective,
+                        n: entry.request.budget.evals.max(1),
+                        top_k: entry.request.top_k.unwrap_or(DEFAULT_TOP_K),
+                        objective: entry.request.objective,
                         acc: Vec::new(),
-                        reply: job.reply,
-                        submitted: job.submitted,
+                        best: f64::INFINITY,
+                        entry: entry.clone(),
+                        reply,
                     });
+                } else if let Some(reply) = reply {
+                    // cancelled while queued: deliver the stored result
+                    let _ = reply.send(entry.result_now());
                 }
-                other => {
-                    // non-batchable requests flush the batch first (ordering)
-                    flush_gen_batch(&session, &mut pending, cfg.seed, &mut stream, &metrics);
-                    let resp =
-                        handle_direct(&mut session, &other, cfg.seed, &mut stream, &metrics);
-                    metrics.record_request(
-                        job.submitted.elapsed().as_secs_f64() * 1e6,
-                        match &resp {
-                            Response::Outcome(o) => o.ranked.len(),
-                            Response::Batch(outs) => outs.iter().map(|o| o.ranked.len()).sum(),
-                            _ => 0,
-                        },
-                    );
-                    let _ = job.reply.send(resp);
+            } else {
+                // non-batchable jobs flush the batch first (ordering)
+                flush_gen_batch(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
+                if registry.start(&entry) {
+                    run_job(&mut session, &registry, &entry, reply, cfg.seed, &mut stream, &metrics);
+                } else if let Some(reply) = reply {
+                    let _ = reply.send(entry.result_now());
                 }
             }
         }
@@ -243,20 +658,98 @@ fn engine_loop(
         let slots: usize = pending.iter().map(|p| p.n.saturating_sub(p.acc.len())).sum();
         let window_expired = pending
             .iter()
-            .map(|p| p.submitted.elapsed())
+            .map(|p| p.entry.submitted.elapsed())
             .max()
             .map(|d| d >= cfg.batch_window)
             .unwrap_or(false);
         if slots >= gen_batch || (window_expired && !pending.is_empty()) {
-            flush_gen_batch(&session, &mut pending, cfg.seed, &mut stream, &metrics);
+            flush_gen_batch(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
         }
     }
 }
 
+/// Execute one non-batchable job directly on the session, under a ctx
+/// carrying the job's cancellation flag and a progress sink into the
+/// registry's coalescing event slot.
+fn run_job(
+    session: &mut Session,
+    registry: &Arc<JobRegistry>,
+    entry: &Arc<JobEntry>,
+    reply: Option<Sender<Response>>,
+    seed: u64,
+    stream: &mut u64,
+    metrics: &Arc<Metrics>,
+) {
+    *stream += 1;
+    let sr = &entry.request;
+    let ctx = {
+        let registry = registry.clone();
+        let sink_entry = entry.clone();
+        SearchCtx::background()
+            .with_cancel_flag(entry.cancel_flag())
+            .with_progress(move |ev: &SearchEvent| registry.publish(&sink_entry, *ev))
+    };
+    let resp = match session.search_ctx(
+        sr.optimizer,
+        &ctx,
+        &sr.objective,
+        &sr.budget,
+        rng::derive(seed, *stream),
+    ) {
+        Ok(out) => {
+            metrics.record_evaluations(out.evals);
+            let cs = session.cache_stats();
+            metrics.record_cache(cs.hits, cs.misses);
+            Response::Outcome(out.truncated(sr.top_k.unwrap_or(DEFAULT_TOP_K)))
+        }
+        Err(e) => {
+            metrics.record_error();
+            Response::error(ErrorCode::Internal, format!("{e:#}"))
+        }
+    };
+    let state = match &resp {
+        Response::Outcome(o) if o.stopped == StopReason::Cancelled => JobState::Cancelled,
+        Response::Outcome(_) => JobState::Done,
+        _ => JobState::Failed,
+    };
+    let designs = match &resp {
+        Response::Outcome(o) => o.ranked.len(),
+        _ => 0,
+    };
+    metrics.record_request(entry.submitted.elapsed().as_secs_f64() * 1e6, designs);
+    registry.finalize(entry, state, resp.clone());
+    if let Some(reply) = reply {
+        let _ = reply.send(resp);
+    }
+}
+
+/// Retire one batcher request with whatever it accumulated.
+fn finish_pending(
+    registry: &Arc<JobRegistry>,
+    metrics: &Arc<Metrics>,
+    p: PendingGen,
+    stopped: StopReason,
+) {
+    let latency_s = p.entry.submitted.elapsed().as_secs_f64();
+    metrics.record_request(latency_s * 1e6, p.acc.len());
+    let outcome = SearchOutcome::from_reports("DiffAxE", &p.objective, p.acc, latency_s)
+        .with_stopped(stopped)
+        .truncated(p.top_k);
+    let state =
+        if stopped == StopReason::Cancelled { JobState::Cancelled } else { JobState::Done };
+    let resp = Response::Outcome(outcome);
+    registry.finalize(&p.entry, state, resp.clone());
+    if let Some(reply) = p.reply {
+        let _ = reply.send(resp);
+    }
+}
+
 /// Pack pending generation requests into sampler batches, batch-evaluate
-/// the designs, and reply with ranked outcomes.
+/// the designs, publish per-request progress, and retire each request with
+/// a ranked outcome — early (partial) if its cancellation flag is up.
 fn flush_gen_batch(
     session: &Session,
+    registry: &Arc<JobRegistry>,
     pending: &mut Vec<PendingGen>,
     seed: u64,
     stream: &mut u64,
@@ -264,6 +757,16 @@ fn flush_gen_batch(
 ) {
     let Some(engine) = session.engine() else { return };
     while !pending.is_empty() {
+        // cancelled batcher jobs retire immediately with their partial acc
+        for idx in (0..pending.len()).rev() {
+            if pending[idx].entry.cancel.load(Ordering::SeqCst) {
+                let p = pending.remove(idx);
+                finish_pending(registry, metrics, p, StopReason::Cancelled);
+            }
+        }
+        if pending.is_empty() {
+            return;
+        }
         let b = engine.stats.gen_batch;
         // take whole requests while they fit; split oversized ones
         let mut slots: Vec<(f32, [f32; 3])> = Vec::with_capacity(b);
@@ -299,9 +802,22 @@ fn flush_gen_batch(
                     // memoized + pooled hot path: recurring rounded designs
                     // across requests become cache hits
                     for (hw, (s, e)) in cfgs.iter().zip(session.evaluate_batch(cfgs, &g)) {
-                        pending[idx].acc.push(DesignReport::from_sim(*hw, &s, &e));
+                        let d = DesignReport::from_sim(*hw, &s, &e);
+                        let score = pending[idx].objective.score_report(&d);
+                        pending[idx].best = pending[idx].best.min(score);
+                        pending[idx].acc.push(d);
                     }
                     evaluated += cfgs.len();
+                    // heartbeat into the job's coalescing event slot
+                    let p = &pending[idx];
+                    registry.publish(
+                        &p.entry,
+                        SearchEvent {
+                            evals: p.acc.len(),
+                            best_score: p.best,
+                            elapsed_s: p.entry.submitted.elapsed().as_secs_f64(),
+                        },
+                    );
                 }
                 metrics.record_evaluations(evaluated);
                 let cs = session.cache_stats();
@@ -310,42 +826,25 @@ fn flush_gen_batch(
                 for idx in (0..pending.len()).rev() {
                     if pending[idx].acc.len() >= pending[idx].n {
                         let p = pending.remove(idx);
-                        let latency_s = p.submitted.elapsed().as_secs_f64();
-                        metrics.record_request(latency_s * 1e6, p.acc.len());
-                        let outcome = SearchOutcome::from_reports(
-                            "DiffAxE",
-                            &p.objective,
-                            p.acc,
-                            latency_s,
-                        )
-                        .truncated(p.top_k);
-                        let _ = p.reply.send(Response::Outcome(outcome));
+                        finish_pending(registry, metrics, p, StopReason::Completed);
                     }
                 }
             }
             Err(e) => {
                 metrics.record_error();
                 for p in pending.drain(..) {
-                    let _ = p.reply.send(Response::error(
+                    let resp = Response::error(
                         ErrorCode::Internal,
                         format!("sampler failed: {e:#}"),
-                    ));
+                    );
+                    registry.finalize(&p.entry, JobState::Failed, resp.clone());
+                    if let Some(reply) = p.reply {
+                        let _ = reply.send(resp);
+                    }
                 }
             }
         }
     }
-}
-
-/// Run one search on the session with a derived per-request seed.
-fn run_search(
-    session: &mut Session,
-    sr: &SearchRequest,
-    seed: u64,
-    stream: &mut u64,
-) -> Result<SearchOutcome> {
-    *stream += 1;
-    let out = session.search(sr.optimizer, &sr.objective, &sr.budget, rng::derive(seed, *stream))?;
-    Ok(out.truncated(sr.top_k.unwrap_or(DEFAULT_TOP_K)))
 }
 
 /// Reject detectably-invalid (objective, optimizer) pairings up front —
@@ -358,61 +857,113 @@ fn validate(sr: &SearchRequest) -> Result<(), String> {
     }
 }
 
-fn handle_direct(
-    session: &mut Session,
-    req: &Request,
-    seed: u64,
-    stream: &mut u64,
-    metrics: &Arc<Metrics>,
-) -> Response {
-    match req {
-        Request::Metrics => Response::MetricsText(metrics.snapshot().to_string()),
-        Request::Search(sr) => {
-            if let Err(msg) = validate(sr) {
-                return Response::error(ErrorCode::BadRequest, msg);
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::api::Budget;
+
+    fn request() -> SearchRequest {
+        SearchRequest::new(
+            Objective::MinEdp { g: Gemm::new(8, 8, 8) },
+            Budget::evals(4),
+            OptimizerKind::RandomSearch,
+        )
+    }
+
+    fn done_outcome(evals: usize) -> Response {
+        Response::Outcome(SearchOutcome {
+            optimizer: "random".into(),
+            ranked: Vec::new(),
+            trace: Vec::new(),
+            evals,
+            search_time_s: 0.0,
+            stopped: StopReason::Completed,
+        })
+    }
+
+    #[test]
+    fn registry_lifecycle_and_gauges() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = JobRegistry::new(metrics.clone());
+        let e = reg.submit(request());
+        assert_eq!(e.id, "job-1");
+        assert_eq!(e.state(), JobState::Queued);
+        assert_eq!(metrics.snapshot().jobs_queued, 1);
+
+        assert!(reg.start(&e));
+        assert!(!reg.start(&e), "double start must be rejected");
+        assert_eq!(e.state(), JobState::Running);
+        reg.publish(&e, SearchEvent { evals: 2, best_score: 1.0, elapsed_s: 0.0 });
+        let s = metrics.snapshot();
+        assert_eq!((s.jobs_active, s.event_queue_depth), (1, 1));
+
+        reg.finalize(&e, JobState::Done, done_outcome(4));
+        // idempotent: a late cancel cannot overwrite the result
+        reg.finalize(&e, JobState::Cancelled, done_outcome(0));
+        assert_eq!(e.state(), JobState::Done);
+        let info = reg.get("job-1").unwrap().info();
+        assert_eq!(info.state, JobState::Done);
+        assert_eq!(info.evals, 4);
+        let s = metrics.snapshot();
+        assert_eq!((s.jobs_active, s.event_queue_depth), (0, 0));
+        assert_eq!((s.jobs_completed, s.jobs_cancelled), (1, 0));
+    }
+
+    #[test]
+    fn queued_cancel_is_immediately_terminal() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = JobRegistry::new(metrics.clone());
+        let e = reg.submit(request());
+        let info = reg.cancel(&e.id).unwrap();
+        assert_eq!(info.state, JobState::Cancelled);
+        assert_eq!(info.evals, 0);
+        // the engine later refuses to start it
+        assert!(!reg.start(&e));
+        match e.result_now() {
+            Response::Outcome(o) => {
+                assert_eq!(o.stopped, StopReason::Cancelled);
+                assert!(o.ranked.is_empty());
             }
-            match run_search(session, sr, seed, stream) {
-                Ok(out) => {
-                    metrics.record_evaluations(out.evals);
-                    let cs = session.cache_stats();
-                    metrics.record_cache(cs.hits, cs.misses);
-                    Response::Outcome(out)
-                }
-                Err(e) => {
-                    metrics.record_error();
-                    Response::error(ErrorCode::Internal, format!("{e:#}"))
-                }
-            }
+            other => panic!("unexpected {other:?}"),
         }
-        Request::Batch(items) => {
-            // validate the whole batch before running any item, so a bad
-            // pairing cannot discard minutes of completed sibling searches
-            for (i, sr) in items.iter().enumerate() {
-                if let Err(msg) = validate(sr) {
-                    return Response::error(ErrorCode::BadRequest, format!("batch item {i}: {msg}"));
-                }
-            }
-            let mut outs = Vec::with_capacity(items.len());
-            for (i, sr) in items.iter().enumerate() {
-                match run_search(session, sr, seed, stream) {
-                    Ok(out) => {
-                        metrics.record_evaluations(out.evals);
-                        let cs = session.cache_stats();
-                        metrics.record_cache(cs.hits, cs.misses);
-                        outs.push(out);
-                    }
-                    Err(e) => {
-                        // all-or-nothing by protocol contract (see the
-                        // `batch` docs in protocol.rs)
-                        metrics.record_error();
-                        return Response::error(
-                            ErrorCode::Internal,
-                            format!("batch item {i} ({}): {e:#}", sr.optimizer.name()),
-                        );
-                    }
-                }
-            }
-            Response::Batch(outs)
+        assert_eq!(metrics.snapshot().jobs_cancelled, 1);
+        assert!(reg.cancel("job-99").is_none());
+    }
+
+    #[test]
+    fn watcher_sees_coalesced_events_then_terminal() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = JobRegistry::new(metrics);
+        let e = reg.submit(request());
+        reg.start(&e);
+        // two events land before the watcher polls: drop-to-latest keeps
+        // only the newer one
+        reg.publish(&e, SearchEvent { evals: 1, best_score: 5.0, elapsed_s: 0.1 });
+        reg.publish(&e, SearchEvent { evals: 2, best_score: 3.0, elapsed_s: 0.2 });
+        let (seq, ev, terminal) = e.next_event(0);
+        assert_eq!(ev.unwrap().evals, 2);
+        assert!(terminal.is_none());
+        reg.finalize(&e, JobState::Done, done_outcome(2));
+        let (_seq, ev, terminal) = e.next_event(seq);
+        assert!(ev.is_none(), "stale event must not repeat");
+        let (state, resp) = terminal.unwrap();
+        assert_eq!(state, JobState::Done);
+        assert!(matches!(resp, Response::Outcome(_)));
+    }
+
+    #[test]
+    fn gc_bounds_terminal_retention() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = JobRegistry::new(metrics);
+        for _ in 0..(MAX_RETAINED_JOBS + 10) {
+            let e = reg.submit(request());
+            reg.start(&e);
+            reg.finalize(&e, JobState::Done, done_outcome(1));
         }
+        let jobs = reg.list();
+        assert!(jobs.len() <= MAX_RETAINED_JOBS + 1, "retained {}", jobs.len());
+        // the oldest jobs were collected, the newest survive
+        assert!(reg.get("job-1").is_none());
+        assert!(reg.get(&format!("job-{}", MAX_RETAINED_JOBS + 10)).is_some());
     }
 }

@@ -20,8 +20,18 @@
 //! `1 + 2·dim` evaluations per step) stays within `Budget::evals`, and
 //! report their true cost in [`SearchOutcome::evals`]. `Budget::per_class`
 //! overrides the per-class (or per-layer) generation count for
-//! class-conditioned searches; `Budget::wall_clock_s` is a best-effort cap
-//! checked between sampler / evaluation chunks.
+//! class-conditioned searches.
+//!
+//! # Interruption
+//!
+//! Every search takes a [`SearchCtx`]: a cancellation flag, an optional
+//! wall-clock deadline, and an optional [`ProgressSink`] that receives
+//! per-batch [`SearchEvent`]s. Strategies poll the ctx between sampler /
+//! evaluation batches (never mid-batch) and return a *partial*
+//! [`SearchOutcome`] whose [`SearchOutcome::stopped`] records why the
+//! search ended ([`StopReason`]). `Budget::wall_clock_s` is enforced
+//! through the same mechanism: [`SearchRun`] folds it into the effective
+//! deadline, so a budget cap and a ctx deadline behave identically.
 //!
 //! # Determinism
 //!
@@ -37,10 +47,12 @@ use crate::energy::EnergyResult;
 use crate::models::{ClassMode, DiffAxE};
 use crate::sim::SimResult;
 use crate::util::rng::{self, Pcg32};
-use crate::util::stats::Timer;
 use crate::workload::{Gemm, LlmModel, Stage};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 pub use super::llm::Platform;
 
@@ -160,6 +172,249 @@ impl std::fmt::Display for Objective {
     }
 }
 
+// ---------------------------------------------------------------------------
+// interruptible search context
+// ---------------------------------------------------------------------------
+
+/// Why a search returned. Anything but [`StopReason::Completed`] means the
+/// [`SearchOutcome`] is *partial*: every design evaluated so far is still
+/// ranked and reported, the strategy just did not run its full schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The strategy ran its planned schedule to the end.
+    Completed,
+    /// The [`SearchCtx`] cancellation flag was raised.
+    Cancelled,
+    /// The effective deadline (ctx deadline or `Budget::wall_clock_s`)
+    /// passed.
+    DeadlineExceeded,
+    /// `Budget::evals` cut the strategy's configured schedule short.
+    BudgetExhausted,
+}
+
+impl StopReason {
+    /// Stable wire name (see [`crate::coordinator::protocol`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopReason::Completed => "completed",
+            StopReason::Cancelled => "cancelled",
+            StopReason::DeadlineExceeded => "deadline_exceeded",
+            StopReason::BudgetExhausted => "budget_exhausted",
+        }
+    }
+
+    /// Parse a wire name (inverse of [`StopReason::name`]).
+    pub fn from_name(s: &str) -> Option<StopReason> {
+        [
+            StopReason::Completed,
+            StopReason::Cancelled,
+            StopReason::DeadlineExceeded,
+            StopReason::BudgetExhausted,
+        ]
+        .into_iter()
+        .find(|r| r.name() == s)
+    }
+
+    /// True when the outcome is partial (the search was interrupted).
+    pub fn is_partial(&self) -> bool {
+        !matches!(self, StopReason::Completed)
+    }
+}
+
+/// One progress heartbeat, emitted between evaluation batches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchEvent {
+    /// Objective evaluations finished so far.
+    pub evals: usize,
+    /// Best (lowest) score seen so far; `f64::INFINITY` before the first
+    /// evaluation completes.
+    pub best_score: f64,
+    /// Seconds since the search started.
+    pub elapsed_s: f64,
+}
+
+/// Receives [`SearchEvent`]s. Implemented for any
+/// `Fn(&SearchEvent) + Send + Sync` closure.
+pub trait ProgressSink: Send + Sync {
+    fn on_event(&self, ev: &SearchEvent);
+}
+
+impl<F: Fn(&SearchEvent) + Send + Sync> ProgressSink for F {
+    fn on_event(&self, ev: &SearchEvent) {
+        self(ev)
+    }
+}
+
+/// The interruption context every [`Optimizer::search`] runs under:
+/// a shared cancellation flag, an optional wall-clock deadline, and an
+/// optional progress sink. [`SearchCtx::background`] is the inert default
+/// (never cancels, never expires, drops events) used by batch experiments.
+#[derive(Clone, Default)]
+pub struct SearchCtx {
+    cancel: Option<Arc<AtomicBool>>,
+    deadline: Option<Instant>,
+    sink: Option<Arc<dyn ProgressSink>>,
+}
+
+impl SearchCtx {
+    /// A context that never cancels, never expires and drops progress.
+    pub fn background() -> SearchCtx {
+        SearchCtx::default()
+    }
+
+    /// Builder: attach a shared cancellation flag (store `true` to stop
+    /// the search at its next poll point).
+    pub fn with_cancel_flag(mut self, flag: Arc<AtomicBool>) -> SearchCtx {
+        self.cancel = Some(flag);
+        self
+    }
+
+    /// Builder: set an absolute wall-clock deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> SearchCtx {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Builder: set a deadline `seconds` from now.
+    pub fn with_deadline_in(self, seconds: f64) -> SearchCtx {
+        self.with_deadline(Instant::now() + Duration::from_secs_f64(seconds.max(0.0)))
+    }
+
+    /// Builder: attach a progress sink.
+    pub fn with_sink(mut self, sink: Arc<dyn ProgressSink>) -> SearchCtx {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Builder: attach a progress closure.
+    pub fn with_progress(self, f: impl Fn(&SearchEvent) + Send + Sync + 'static) -> SearchCtx {
+        self.with_sink(Arc::new(f))
+    }
+
+    /// True once the cancellation flag has been raised.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.as_ref().map(|c| c.load(Ordering::Relaxed)).unwrap_or(false)
+    }
+
+    /// The ctx-level deadline, if any (the per-search effective deadline
+    /// also folds in `Budget::wall_clock_s` — see [`SearchRun`]).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Deliver one progress event to the sink (no-op without a sink).
+    pub fn emit(&self, ev: SearchEvent) {
+        if let Some(s) = &self.sink {
+            s.on_event(&ev);
+        }
+    }
+}
+
+/// Cap on eager `Vec` preallocation for eval-count-sized buffers: a huge
+/// `Budget::evals` plus an early deadline must not reserve gigabytes.
+const MAX_PREALLOC: usize = 65_536;
+
+/// Per-search driver over a [`SearchCtx`]: merges the ctx deadline with
+/// `Budget::wall_clock_s`, owns the search timer, and records the first
+/// stop cause. Strategies call [`SearchRun::should_stop`] between batches
+/// and stamp [`SearchRun::stop_reason`] into their outcome.
+pub struct SearchRun<'c> {
+    ctx: &'c SearchCtx,
+    start: Instant,
+    deadline: Option<Instant>,
+    stopped: StopReason,
+}
+
+impl<'c> SearchRun<'c> {
+    /// Start the run clock; the effective deadline is the earlier of the
+    /// ctx deadline and `now + budget.wall_clock_s`.
+    pub fn start(ctx: &'c SearchCtx, budget: &Budget) -> SearchRun<'c> {
+        let now = Instant::now();
+        let wall = budget
+            .wall_clock_s
+            .map(|s| now + Duration::from_secs_f64(s.max(0.0)));
+        let deadline = match (ctx.deadline, wall) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        SearchRun { ctx, start: now, deadline, stopped: StopReason::Completed }
+    }
+
+    /// Poll the ctx: true once the search must wind down. The first
+    /// triggering cause is latched (cancellation wins over the deadline).
+    pub fn should_stop(&mut self) -> bool {
+        if self.stopped == StopReason::Cancelled
+            || self.stopped == StopReason::DeadlineExceeded
+        {
+            return true;
+        }
+        if self.ctx.cancelled() {
+            self.stopped = StopReason::Cancelled;
+            return true;
+        }
+        if self.deadline.map(|d| Instant::now() >= d).unwrap_or(false) {
+            self.stopped = StopReason::DeadlineExceeded;
+            return true;
+        }
+        false
+    }
+
+    /// Record that `Budget::evals` truncated the strategy's configured
+    /// schedule (weakest stop cause: never overrides cancel/deadline).
+    pub fn exhausted(&mut self) {
+        if self.stopped == StopReason::Completed {
+            self.stopped = StopReason::BudgetExhausted;
+        }
+    }
+
+    /// Why the search ended (so far).
+    pub fn stop_reason(&self) -> StopReason {
+        self.stopped
+    }
+
+    /// True when any interruption cause has latched.
+    pub fn interrupted(&self) -> bool {
+        self.stopped.is_partial()
+    }
+
+    /// Seconds since [`SearchRun::start`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Emit one progress heartbeat through the ctx sink.
+    pub fn progress(&self, evals: usize, best_score: f64) {
+        self.ctx.emit(SearchEvent { evals, best_score, elapsed_s: self.elapsed_s() });
+    }
+
+    /// Evaluate candidates in deadline-pollable chunks through
+    /// [`Objective::evaluate_all`], emitting a progress event per chunk.
+    /// Order-preserving and bit-identical to one monolithic batch; an
+    /// interruption returns the prefix evaluated so far.
+    pub fn evaluate_chunked(&mut self, obj: &Objective, cfgs: &[HwConfig]) -> Vec<DesignReport> {
+        // LLM candidates run a whole-model evaluation each; keep chunks
+        // small so the deadline poll granularity stays sub-batch-second
+        let chunk = match obj {
+            Objective::LlmEdp { .. } => 16,
+            _ => 512,
+        };
+        let mut out = Vec::with_capacity(cfgs.len());
+        let mut best = f64::INFINITY;
+        for c in cfgs.chunks(chunk) {
+            if self.should_stop() {
+                break;
+            }
+            let start = out.len();
+            out.extend(obj.evaluate_all(c));
+            for d in &out[start..] {
+                best = best.min(obj.score_report(d));
+            }
+            self.progress(out.len(), best);
+        }
+        out
+    }
+}
+
 /// How much a search may spend.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Budget {
@@ -168,7 +423,8 @@ pub struct Budget {
     /// Per-class (EDP classes) or per-layer (LLM) generation count for the
     /// class-conditioned searches; derived from `evals` when `None`.
     pub per_class: Option<usize>,
-    /// Best-effort wall-clock cap in seconds, checked between chunks.
+    /// Wall-clock cap in seconds, enforced uniformly through the
+    /// [`SearchCtx`]/[`SearchRun`] deadline (polled between batches).
     pub wall_clock_s: Option<f64>,
 }
 
@@ -199,11 +455,6 @@ impl Budget {
     /// Per-class count for a search over `n_classes` classes.
     pub fn class_count(&self, n_classes: usize) -> usize {
         self.per_class.unwrap_or_else(|| (self.evals / n_classes.max(1)).max(1))
-    }
-
-    /// True once the wall-clock cap (if any) has been reached.
-    pub fn expired(&self, timer: &Timer) -> bool {
-        self.wall_clock_s.map(|cap| timer.elapsed_s() >= cap).unwrap_or(false)
     }
 }
 
@@ -238,6 +489,9 @@ pub struct SearchOutcome {
     pub evals: usize,
     /// Wall-clock cost in seconds.
     pub search_time_s: f64,
+    /// Why the search returned; anything but [`StopReason::Completed`]
+    /// marks this outcome as partial (still ranked, still well-formed).
+    pub stopped: StopReason,
 }
 
 impl SearchOutcome {
@@ -260,7 +514,15 @@ impl SearchOutcome {
             ranked,
             trace,
             search_time_s,
+            stopped: StopReason::Completed,
         }
+    }
+
+    /// Builder: record why the search returned (strategies stamp their
+    /// [`SearchRun::stop_reason`] here).
+    pub fn with_stopped(mut self, stopped: StopReason) -> SearchOutcome {
+        self.stopped = stopped;
+        self
     }
 
     /// Best design found (lowest score), if any evaluation happened.
@@ -310,13 +572,21 @@ pub fn evaluate_batch(cfgs: &[HwConfig], g: &Gemm) -> Vec<(SimResult, EnergyResu
 // ---------------------------------------------------------------------------
 
 /// A search strategy: anything that can spend a [`Budget`] chasing an
-/// [`Objective`] from a seed.
+/// [`Objective`] from a seed, polling a [`SearchCtx`] between batches.
 pub trait Optimizer {
     /// Display name (used in tables and wire responses).
     fn name(&self) -> &'static str;
 
-    /// Run the search. Deterministic in `(objective, budget, seed)`.
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome>;
+    /// Run the search. Deterministic in `(objective, budget, seed)` under
+    /// an inert ctx; an interrupting ctx yields a partial outcome whose
+    /// [`SearchOutcome::stopped`] records the cause.
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome>;
 }
 
 impl<T: Optimizer + ?Sized> Optimizer for &mut T {
@@ -324,8 +594,14 @@ impl<T: Optimizer + ?Sized> Optimizer for &mut T {
         (**self).name()
     }
 
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
-        (**self).search(obj, budget, seed)
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        (**self).search(ctx, obj, budget, seed)
     }
 }
 
@@ -412,18 +688,18 @@ impl OptimizerKind {
 }
 
 /// Chunked conditional generation: draw up to `n` configurations in
-/// sampler-batch-sized chunks, stopping early at the wall-clock cap. The
+/// sampler-batch-sized chunks, polling the [`SearchRun`] between sampler
+/// calls (cancel / deadline stop generation at a chunk boundary). The
 /// closure gets `(chunk_index, take)` and performs one sampler call.
 fn sample_chunked(
     n: usize,
     gen_batch: usize,
-    budget: &Budget,
-    timer: &Timer,
+    run: &mut SearchRun<'_>,
     mut sample: impl FnMut(u64, usize) -> Result<Vec<HwConfig>>,
 ) -> Result<Vec<HwConfig>> {
-    let mut cfgs = Vec::with_capacity(n);
+    let mut cfgs = Vec::with_capacity(n.min(MAX_PREALLOC));
     let mut chunk = 0u64;
-    while cfgs.len() < n && !budget.expired(timer) {
+    while cfgs.len() < n && !run.should_stop() {
         let take = (n - cfgs.len()).min(gen_batch);
         cfgs.extend(sample(chunk, take)?);
         chunk += 1;
@@ -440,13 +716,19 @@ impl Optimizer for DiffAxE {
         "DiffAxE"
     }
 
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
-        let timer = Timer::start();
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        let mut run = SearchRun::start(ctx, budget);
         let b = self.stats.gen_batch;
         let cfgs = match obj {
             Objective::Runtime { g, target_cycles } => {
                 let p = self.stats.stats_for(g).norm_runtime(*target_cycles);
-                sample_chunked(budget.evals.max(1), b, budget, &timer, |chunk, take| {
+                sample_chunked(budget.evals.max(1), b, &mut run, |chunk, take| {
                     let conds: Vec<(f32, [f32; 3])> = vec![(p, g.norm_vec()); take];
                     self.sample_runtime(rng::derive_u32(seed, chunk), &conds)
                 })?
@@ -454,12 +736,12 @@ impl Optimizer for DiffAxE {
             Objective::MinEdp { g } => {
                 let n_classes = self.stats.n_power * self.stats.n_perf;
                 let per_class = budget.class_count(n_classes);
-                let mut cfgs = Vec::with_capacity(n_classes * per_class);
+                let mut cfgs = Vec::with_capacity((n_classes * per_class).min(MAX_PREALLOC));
                 for class in 0..n_classes {
-                    if budget.expired(&timer) {
+                    if run.should_stop() {
                         break;
                     }
-                    cfgs.extend(sample_chunked(per_class, b, budget, &timer, |chunk, take| {
+                    cfgs.extend(sample_chunked(per_class, b, &mut run, |chunk, take| {
                         let conds: Vec<(i32, [f32; 3])> =
                             vec![(class as i32, g.norm_vec()); take];
                         let s = rng::derive_u32(seed, ((class as u64) << 24) | chunk);
@@ -470,7 +752,7 @@ impl Optimizer for DiffAxE {
             }
             Objective::MaxPerf { g } => {
                 // condition on class 0: the lowest-EDP percentile (§III-E)
-                sample_chunked(budget.evals.max(1), b, budget, &timer, |chunk, take| {
+                sample_chunked(budget.evals.max(1), b, &mut run, |chunk, take| {
                     let conds: Vec<(i32, [f32; 3])> = vec![(0, g.norm_vec()); take];
                     self.sample_class(ClassMode::PerfOpt, rng::derive_u32(seed, chunk), &conds)
                 })?
@@ -481,12 +763,12 @@ impl Optimizer for DiffAxE {
                 // whole-model evaluation
                 let gemms = model.layer_gemms(*stage, *seq);
                 let per_layer = budget.class_count(gemms.len());
-                let mut cfgs = Vec::with_capacity(gemms.len() * per_layer);
+                let mut cfgs = Vec::with_capacity((gemms.len() * per_layer).min(MAX_PREALLOC));
                 for (li, g) in gemms.iter().enumerate() {
-                    if budget.expired(&timer) {
+                    if run.should_stop() {
                         break;
                     }
-                    cfgs.extend(sample_chunked(per_layer, b, budget, &timer, |chunk, take| {
+                    cfgs.extend(sample_chunked(per_layer, b, &mut run, |chunk, take| {
                         let conds: Vec<(i32, [f32; 3])> = vec![(0, g.norm_vec()); take];
                         let s = rng::derive_u32(seed, ((li as u64) << 24) | chunk);
                         self.sample_class(ClassMode::Edp, s, &conds)
@@ -497,9 +779,16 @@ impl Optimizer for DiffAxE {
                 cfgs
             }
         };
-        anyhow::ensure!(!cfgs.is_empty(), "generation produced no candidates");
-        let reports = obj.evaluate_all(&cfgs);
-        Ok(SearchOutcome::from_reports("DiffAxE", obj, reports, timer.elapsed_s()))
+        if cfgs.is_empty() {
+            // interrupted before the first sampler chunk finished: a clean
+            // (empty) partial outcome, not an error
+            anyhow::ensure!(run.interrupted(), "generation produced no candidates");
+            return Ok(SearchOutcome::from_reports("DiffAxE", obj, Vec::new(), run.elapsed_s())
+                .with_stopped(run.stop_reason()));
+        }
+        let reports = run.evaluate_chunked(obj, &cfgs);
+        Ok(SearchOutcome::from_reports("DiffAxE", obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -513,19 +802,26 @@ impl Optimizer for GanDse<'_> {
         "GANDSE"
     }
 
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
         let Objective::Runtime { g, target_cycles } = obj else {
             bail!("GANDSE is runtime-conditioned only; objective {obj} unsupported");
         };
-        let timer = Timer::start();
+        let mut run = SearchRun::start(ctx, budget);
         let b = self.engine.stats.gen_batch;
         let p = self.engine.stats.stats_for(g).norm_runtime(*target_cycles);
-        let cfgs = sample_chunked(budget.evals.max(1), b, budget, &timer, |chunk, take| {
+        let cfgs = sample_chunked(budget.evals.max(1), b, &mut run, |chunk, take| {
             let conds: Vec<(f32, [f32; 3])> = vec![(p, g.norm_vec()); take];
             self.engine.gandse_generate(rng::derive_u32(seed, chunk), &conds)
         })?;
-        let reports = obj.evaluate_all(&cfgs);
-        Ok(SearchOutcome::from_reports("GANDSE", obj, reports, timer.elapsed_s()))
+        let reports = run.evaluate_chunked(obj, &cfgs);
+        Ok(SearchOutcome::from_reports("GANDSE", obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -541,15 +837,31 @@ impl Optimizer for Airchitect<'_> {
         if self.v2 { "AIRCHITECT v2" } else { "AIRCHITECT" }
     }
 
-    fn search(&mut self, obj: &Objective, _budget: &Budget, _seed: u64) -> Result<SearchOutcome> {
-        let timer = Timer::start();
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        _seed: u64,
+    ) -> Result<SearchOutcome> {
+        let mut run = SearchRun::start(ctx, budget);
         let g = obj
             .gemm()
             .with_context(|| format!("AIRCHITECT recommends per-GEMM; objective {obj} unsupported"))?;
-        let hw =
-            if self.v2 { self.engine.airchitect_v2(&g)? } else { self.engine.airchitect_v1(&g)? };
-        let reports = vec![obj.evaluate(&hw)];
-        Ok(SearchOutcome::from_reports(self.name(), obj, reports, timer.elapsed_s()))
+        let reports = if run.should_stop() {
+            Vec::new()
+        } else {
+            let hw = if self.v2 {
+                self.engine.airchitect_v2(&g)?
+            } else {
+                self.engine.airchitect_v1(&g)?
+            };
+            let d = obj.evaluate(&hw);
+            run.progress(1, obj.score_report(&d));
+            vec![d]
+        };
+        Ok(SearchOutcome::from_reports(self.name(), obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -564,23 +876,28 @@ pub struct VanillaBo {
 }
 
 /// Clamp BO options so `bo::minimize`'s invariants hold under any budget.
-fn bo_opts_for(opts: &BoOptions, budget: &Budget) -> BoOptions {
+/// The second return is true when `budget.evals` cut the configured BO
+/// schedule short (reported as [`StopReason::BudgetExhausted`]).
+fn bo_opts_for(opts: &BoOptions, budget: &Budget) -> (BoOptions, bool) {
     let mut o = opts.clone();
     o.budget = budget.evals.max(2);
     o.n_init = o.n_init.clamp(2, o.budget);
-    o
+    let clamped = o.budget < opts.budget;
+    (o, clamped)
 }
 
 /// Cap a GD schedule so its implied evaluation count stays within
 /// `budget.evals`. `evals_per_step` is 1 for analytic gradients and
 /// `1 + 2·dim` for central finite differences; each restart spends
-/// `steps + 1` gradient evaluations.
-fn gd_opts_for(opts: &GdOptions, budget: &Budget, evals_per_step: usize) -> GdOptions {
+/// `steps + 1` gradient evaluations. The second return is true when the
+/// configured schedule was truncated to fit the budget.
+fn gd_opts_for(opts: &GdOptions, budget: &Budget, evals_per_step: usize) -> (GdOptions, bool) {
     let mut o = opts.clone();
     let unit = evals_per_step.max(1);
     o.restarts = o.restarts.max(1).min((budget.evals / (2 * unit)).max(1));
     o.steps = o.steps.max(1).min((budget.evals / (o.restarts * unit)).max(2) - 1);
-    o
+    let clamped = o.restarts < opts.restarts.max(1) || o.steps < opts.steps.max(1);
+    (o, clamped)
 }
 
 impl Optimizer for VanillaBo {
@@ -588,11 +905,20 @@ impl Optimizer for VanillaBo {
         "Vanilla BO"
     }
 
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
-        let timer = Timer::start();
-        let o = bo_opts_for(&self.opts, budget);
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        let (o, clamped) = bo_opts_for(&self.opts, budget);
+        // the objective closure (progress) and the stop closure (polling)
+        // both need the run; RefCell arbitrates the disjoint borrows
+        let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
         let mut rng = rng::split(seed, 10);
-        let mut reports = Vec::with_capacity(o.budget);
+        let mut reports = Vec::with_capacity(o.budget.min(MAX_PREALLOC));
+        let mut best = f64::INFINITY;
         bo::minimize(
             |r: &mut Pcg32| {
                 encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect()
@@ -602,12 +928,20 @@ impl Optimizer for VanillaBo {
                 let d = obj.evaluate(&decode_rounded(&v));
                 let s = obj.score_report(&d);
                 reports.push(d);
+                best = best.min(s);
+                run.borrow().progress(reports.len(), best);
                 s
             },
+            || run.borrow_mut().should_stop(),
             &o,
             &mut rng,
         );
-        Ok(SearchOutcome::from_reports("Vanilla BO", obj, reports, timer.elapsed_s()))
+        let mut run = run.into_inner();
+        if clamped {
+            run.exhausted();
+        }
+        Ok(SearchOutcome::from_reports("Vanilla BO", obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -623,17 +957,26 @@ impl Optimizer for LatentBo<'_> {
         "Latent BO (VAESA)"
     }
 
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
-        let timer = Timer::start();
-        let o = bo_opts_for(&self.opts, budget);
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        let (o, clamped) = bo_opts_for(&self.opts, budget);
+        let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
         let mut rng = rng::split(seed, 11);
         // candidate generator: latents of random target-space configs
-        let pool: Vec<Vec<f32>> = (0..(o.budget * 2).max(4))
+        // (pool capped so a huge eval budget cannot stall the search in
+        // this un-pollable encode prelude)
+        let pool: Vec<Vec<f32>> = (0..(o.budget * 2).clamp(4, 1024))
             .map(|_| encode_norm(&TargetSpace::sample(&mut rng)).to_vec())
             .collect();
         let latents = self.engine.encode(&pool)?;
         let mut pool_iter = 0usize;
-        let mut reports = Vec::with_capacity(o.budget);
+        let mut reports = Vec::with_capacity(o.budget.min(MAX_PREALLOC));
+        let mut best = f64::INFINITY;
         let engine = self.engine;
         bo::minimize(
             |_r: &mut Pcg32| {
@@ -648,16 +991,27 @@ impl Optimizer for LatentBo<'_> {
                         let d = obj.evaluate(&cfgs[0]);
                         let s = obj.score_report(&d);
                         reports.push(d);
+                        best = best.min(s);
+                        run.borrow().progress(reports.len(), best);
                         s
                     }
                     Err(_) => f64::INFINITY,
                 }
             },
+            || run.borrow_mut().should_stop(),
             &o,
             &mut rng,
         );
-        anyhow::ensure!(!reports.is_empty(), "latent decode failed for every BO iterate");
-        Ok(SearchOutcome::from_reports("Latent BO (VAESA)", obj, reports, timer.elapsed_s()))
+        let mut run = run.into_inner();
+        if clamped {
+            run.exhausted();
+        }
+        anyhow::ensure!(
+            !reports.is_empty() || run.interrupted(),
+            "latent decode failed for every BO iterate"
+        );
+        Ok(SearchOutcome::from_reports("Latent BO (VAESA)", obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -674,12 +1028,20 @@ impl Optimizer for VanillaGd<'_> {
         "Vanilla GD"
     }
 
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
-        let timer = Timer::start();
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
         let mut rng = rng::split(seed, 12);
+        let mut clamped = false;
         let reports = match (obj, self.engine) {
             (Objective::Runtime { g, target_cycles }, Some(engine)) => {
-                let opts = gd_opts_for(&self.opts, budget, 1);
+                let opts;
+                (opts, clamped) = gd_opts_for(&self.opts, budget, 1);
                 let p = engine.stats.stats_for(g).norm_runtime(*target_cycles);
                 let res = gd::descend(
                     |x: &[f64]| {
@@ -691,37 +1053,54 @@ impl Optimizer for VanillaGd<'_> {
                     |r: &mut Pcg32| {
                         encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect()
                     },
+                    || run.borrow_mut().should_stop(),
                     &opts,
                     &mut rng,
                 );
-                let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
-                // the surrogate was trained on the coarse grid: snap to it
-                vec![obj.evaluate(&coarsen(&decode_rounded(&v)))]
+                if res.best_x.is_empty() {
+                    Vec::new() // stopped before the first gradient step
+                } else {
+                    let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+                    // the surrogate was trained on the coarse grid: snap to it
+                    vec![obj.evaluate(&coarsen(&decode_rounded(&v)))]
+                }
             }
             _ => {
-                let opts = gd_opts_for(&self.opts, budget, 1 + 2 * NORM_DIM);
+                let opts;
+                (opts, clamped) = gd_opts_for(&self.opts, budget, 1 + 2 * NORM_DIM);
                 let mut reports = Vec::new();
+                let mut best = f64::INFINITY;
                 let res = gd::fd_gd(
                     |x: &[f64]| {
                         let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
                         let d = obj.evaluate(&decode_rounded(&v));
                         let s = obj.score_report(&d);
                         reports.push(d);
+                        best = best.min(s);
+                        run.borrow().progress(reports.len(), best);
                         obj.gd_loss(s)
                     },
                     |r: &mut Pcg32| {
                         encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect()
                     },
                     0.05,
+                    || run.borrow_mut().should_stop(),
                     &opts,
                     &mut rng,
                 );
-                let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
-                reports.push(obj.evaluate(&decode_rounded(&v)));
+                if !res.best_x.is_empty() {
+                    let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+                    reports.push(obj.evaluate(&decode_rounded(&v)));
+                }
                 reports
             }
         };
-        Ok(SearchOutcome::from_reports("Vanilla GD", obj, reports, timer.elapsed_s()))
+        let mut run = run.into_inner();
+        if clamped {
+            run.exhausted();
+        }
+        Ok(SearchOutcome::from_reports("Vanilla GD", obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -737,29 +1116,46 @@ impl Optimizer for DosaGd {
         "DOSA (coarse GD)"
     }
 
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
-        let timer = Timer::start();
-        let opts = gd_opts_for(&self.opts, budget, 1 + 2 * NORM_DIM);
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        let (opts, clamped) = gd_opts_for(&self.opts, budget, 1 + 2 * NORM_DIM);
+        let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
         let mut rng = rng::split(seed, 13);
         let mut reports = Vec::new();
+        let mut best = f64::INFINITY;
         let res = gd::fd_gd(
             |x: &[f64]| {
                 let v: Vec<f32> = x.iter().map(|&v| v as f32).collect();
                 let d = obj.evaluate(&coarsen(&decode_rounded(&v)));
                 let s = obj.score_report(&d);
                 reports.push(d);
+                best = best.min(s);
+                run.borrow().progress(reports.len(), best);
                 obj.gd_loss(s)
             },
             |r: &mut Pcg32| {
                 encode_norm(&TargetSpace::sample(r)).iter().map(|&x| x as f64).collect()
             },
             0.05,
+            || run.borrow_mut().should_stop(),
             &opts,
             &mut rng,
         );
-        let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
-        reports.push(obj.evaluate(&coarsen(&decode_rounded(&v))));
-        Ok(SearchOutcome::from_reports("DOSA (coarse GD)", obj, reports, timer.elapsed_s()))
+        if !res.best_x.is_empty() {
+            let v: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+            reports.push(obj.evaluate(&coarsen(&decode_rounded(&v))));
+        }
+        let mut run = run.into_inner();
+        if clamped {
+            run.exhausted();
+        }
+        Ok(SearchOutcome::from_reports("DOSA (coarse GD)", obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -776,13 +1172,22 @@ impl Optimizer for Polaris<'_> {
         "Polaris (latent GD)"
     }
 
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
-        let timer = Timer::start();
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
         let mut rng = rng::split(seed, 14);
+        let mut clamped = false;
         let engine = self.engine;
         let reports = match obj {
             Objective::Runtime { g, target_cycles } => {
                 let p = engine.stats.stats_for(g).norm_runtime(*target_cycles);
+                let opts;
+                (opts, clamped) = gd_opts_for(&self.opts, budget, 1);
                 // the latent space has no box bounds: clamp off
                 let res = gd::descend(
                     |x: &[f64]| {
@@ -798,11 +1203,16 @@ impl Optimizer for Polaris<'_> {
                             .map(|&x| x as f64)
                             .collect()
                     },
-                    &GdOptions { clamp: false, ..gd_opts_for(&self.opts, budget, 1) },
+                    || run.borrow_mut().should_stop(),
+                    &GdOptions { clamp: false, ..opts },
                     &mut rng,
                 );
-                let lat: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
-                vec![obj.evaluate(&engine.decode_rounded(&[lat])?[0])]
+                if res.best_x.is_empty() {
+                    Vec::new()
+                } else {
+                    let lat: Vec<f32> = res.best_x.iter().map(|&x| x as f32).collect();
+                    vec![obj.evaluate(&engine.decode_rounded(&[lat])?[0])]
+                }
             }
             _ => {
                 // FD over the full latent dim is expensive; descend a random
@@ -828,27 +1238,41 @@ impl Optimizer for Polaris<'_> {
                     }
                     l
                 };
+                let opts;
+                (opts, clamped) = gd_opts_for(&self.opts, budget, 1 + 2 * 8);
                 let mut reports = Vec::new();
+                let mut best = f64::INFINITY;
                 gd::fd_gd(
                     |x: &[f64]| match engine.decode_rounded(&[to_latent(x)]) {
                         Ok(cfgs) => {
                             let d = obj.evaluate(&coarsen(&cfgs[0]));
                             let s = obj.score_report(&d);
                             reports.push(d);
+                            best = best.min(s);
+                            run.borrow().progress(reports.len(), best);
                             obj.gd_loss(s)
                         }
                         Err(_) => f64::INFINITY,
                     },
                     |r: &mut Pcg32| (0..8).map(|_| r.f64()).collect(),
                     0.05,
-                    &gd_opts_for(&self.opts, budget, 1 + 2 * 8),
+                    || run.borrow_mut().should_stop(),
+                    &opts,
                     &mut rng,
                 );
-                anyhow::ensure!(!reports.is_empty(), "latent decode failed for every iterate");
+                anyhow::ensure!(
+                    !reports.is_empty() || run.borrow().interrupted(),
+                    "latent decode failed for every iterate"
+                );
                 reports
             }
         };
-        Ok(SearchOutcome::from_reports("Polaris (latent GD)", obj, reports, timer.elapsed_s()))
+        let mut run = run.into_inner();
+        if clamped {
+            run.exhausted();
+        }
+        Ok(SearchOutcome::from_reports("Polaris (latent GD)", obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -861,17 +1285,30 @@ impl Optimizer for RandomSearch {
         "Random Search"
     }
 
-    fn search(&mut self, obj: &Objective, budget: &Budget, seed: u64) -> Result<SearchOutcome> {
-        let timer = Timer::start();
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        let mut run = SearchRun::start(ctx, budget);
         let mut rng = rng::split(seed, 15);
         let n = budget.evals.max(1);
-        let mut reports = Vec::with_capacity(n);
-        while reports.len() < n && !budget.expired(&timer) {
+        let mut reports = Vec::with_capacity(n.min(MAX_PREALLOC));
+        let mut best = f64::INFINITY;
+        while reports.len() < n && !run.should_stop() {
             let take = (n - reports.len()).min(1024);
             let cfgs: Vec<HwConfig> = (0..take).map(|_| TargetSpace::sample(&mut rng)).collect();
+            let start = reports.len();
             reports.extend(obj.evaluate_all(&cfgs));
+            for d in &reports[start..] {
+                best = best.min(obj.score_report(d));
+            }
+            run.progress(reports.len(), best);
         }
-        Ok(SearchOutcome::from_reports("Random Search", obj, reports, timer.elapsed_s()))
+        Ok(SearchOutcome::from_reports("Random Search", obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -880,12 +1317,25 @@ impl Optimizer for FixedArch {
         FixedArch::name(self)
     }
 
-    fn search(&mut self, obj: &Objective, _budget: &Budget, _seed: u64) -> Result<SearchOutcome> {
-        let timer = Timer::start();
+    fn search(
+        &mut self,
+        ctx: &SearchCtx,
+        obj: &Objective,
+        budget: &Budget,
+        _seed: u64,
+    ) -> Result<SearchOutcome> {
+        let mut run = SearchRun::start(ctx, budget);
         // one candidate: the fixed silicon (LLM objectives still grant it
         // per-layer loop-order choice — charitable, see FixedArch::config)
-        let reports = vec![obj.evaluate(&self.config())];
-        Ok(SearchOutcome::from_reports(FixedArch::name(self), obj, reports, timer.elapsed_s()))
+        let reports = if run.should_stop() {
+            Vec::new()
+        } else {
+            let d = obj.evaluate(&self.config());
+            run.progress(1, obj.score_report(&d));
+            vec![d]
+        };
+        Ok(SearchOutcome::from_reports(FixedArch::name(self), obj, reports, run.elapsed_s())
+            .with_stopped(run.stop_reason()))
     }
 }
 
@@ -952,10 +1402,25 @@ impl Session {
         EvalCache::global().stats()
     }
 
-    /// Run one search with the named strategy.
+    /// Run one search with the named strategy under the inert background
+    /// ctx (convenience for batch experiments and benches).
     pub fn search(
         &mut self,
         kind: OptimizerKind,
+        obj: &Objective,
+        budget: &Budget,
+        seed: u64,
+    ) -> Result<SearchOutcome> {
+        self.search_ctx(kind, &SearchCtx::background(), obj, budget, seed)
+    }
+
+    /// Run one search with the named strategy under an interruption ctx:
+    /// the coordinator's job path (cancellation, deadlines, progress
+    /// streaming) enters here.
+    pub fn search_ctx(
+        &mut self,
+        kind: OptimizerKind,
+        ctx: &SearchCtx,
         obj: &Objective,
         budget: &Budget,
         seed: u64,
@@ -965,41 +1430,40 @@ impl Session {
                 .engine
                 .as_mut()
                 .context("optimizer \"diffaxe\" requires the generative engine")?
-                .search(obj, budget, seed),
+                .search(ctx, obj, budget, seed),
             OptimizerKind::VanillaBo => {
-                VanillaBo { opts: self.bo_opts.clone() }.search(obj, budget, seed)
+                VanillaBo { opts: self.bo_opts.clone() }.search(ctx, obj, budget, seed)
             }
             OptimizerKind::LatentBo => {
                 LatentBo { engine: self.engine_required(kind)?, opts: self.bo_opts.clone() }
-                    .search(obj, budget, seed)
+                    .search(ctx, obj, budget, seed)
             }
             OptimizerKind::VanillaGd => {
                 VanillaGd { engine: self.engine.as_ref(), opts: self.gd_opts.clone() }
-                    .search(obj, budget, seed)
+                    .search(ctx, obj, budget, seed)
             }
             OptimizerKind::DosaGd => {
-                DosaGd { opts: self.gd_opts.clone() }.search(obj, budget, seed)
+                DosaGd { opts: self.gd_opts.clone() }.search(ctx, obj, budget, seed)
             }
             OptimizerKind::Polaris => {
                 Polaris { engine: self.engine_required(kind)?, opts: self.gd_opts.clone() }
-                    .search(obj, budget, seed)
+                    .search(ctx, obj, budget, seed)
             }
-            OptimizerKind::RandomSearch => RandomSearch.search(obj, budget, seed),
-            OptimizerKind::Fixed(mut arch) => arch.search(obj, budget, seed),
+            OptimizerKind::RandomSearch => RandomSearch.search(ctx, obj, budget, seed),
+            OptimizerKind::Fixed(mut arch) => arch.search(ctx, obj, budget, seed),
             OptimizerKind::GanDse => {
-                GanDse { engine: self.engine_required(kind)? }.search(obj, budget, seed)
+                GanDse { engine: self.engine_required(kind)? }.search(ctx, obj, budget, seed)
             }
             OptimizerKind::AirchitectV1 => {
                 Airchitect { engine: self.engine_required(kind)?, v2: false }
-                    .search(obj, budget, seed)
+                    .search(ctx, obj, budget, seed)
             }
             OptimizerKind::AirchitectV2 => {
                 Airchitect { engine: self.engine_required(kind)?, v2: true }
-                    .search(obj, budget, seed)
+                    .search(ctx, obj, budget, seed)
             }
         }
     }
-
 }
 
 #[cfg(test)]
@@ -1059,13 +1523,17 @@ mod tests {
         }
     }
 
+    fn bg() -> SearchCtx {
+        SearchCtx::background()
+    }
+
     fn engine_free_outcomes(obj: &Objective, budget: &Budget, seed: u64) -> Vec<SearchOutcome> {
         vec![
-            RandomSearch.search(obj, budget, seed).unwrap(),
-            VanillaBo { opts: small_bo() }.search(obj, budget, seed).unwrap(),
-            VanillaGd { engine: None, opts: small_gd() }.search(obj, budget, seed).unwrap(),
-            DosaGd { opts: small_gd() }.search(obj, budget, seed).unwrap(),
-            FixedArch::Eyeriss.search(obj, budget, seed).unwrap(),
+            RandomSearch.search(&bg(), obj, budget, seed).unwrap(),
+            VanillaBo { opts: small_bo() }.search(&bg(), obj, budget, seed).unwrap(),
+            VanillaGd { engine: None, opts: small_gd() }.search(&bg(), obj, budget, seed).unwrap(),
+            DosaGd { opts: small_gd() }.search(&bg(), obj, budget, seed).unwrap(),
+            FixedArch::Eyeriss.search(&bg(), obj, budget, seed).unwrap(),
         ]
     }
 
@@ -1084,6 +1552,7 @@ mod tests {
                 assert_eq!(x.ranked, y.ranked, "{} not deterministic", x.optimizer);
                 assert_eq!(x.trace, y.trace, "{} trace not deterministic", x.optimizer);
                 assert_eq!(x.evals, y.evals);
+                assert_eq!(x.stopped, y.stopped);
             }
         }
     }
@@ -1091,7 +1560,7 @@ mod tests {
     #[test]
     fn ranked_is_sorted_and_consistent_with_trace() {
         let obj = Objective::MinEdp { g: Gemm::new(128, 512, 512) };
-        let out = RandomSearch.search(&obj, &Budget::evals(64), 3).unwrap();
+        let out = RandomSearch.search(&bg(), &obj, &Budget::evals(64), 3).unwrap();
         assert_eq!(out.evals, 64);
         assert_eq!(out.trace.len(), 64);
         assert_eq!(out.ranked.len(), 64);
@@ -1104,9 +1573,11 @@ mod tests {
     #[test]
     fn budget_is_honoured_by_count_driven_searchers() {
         let obj = Objective::MaxPerf { g: Gemm::new(64, 256, 512) };
-        let out = RandomSearch.search(&obj, &Budget::evals(33), 1).unwrap();
+        let out = RandomSearch.search(&bg(), &obj, &Budget::evals(33), 1).unwrap();
         assert_eq!(out.evals, 33);
-        let out = VanillaBo { opts: small_bo() }.search(&obj, &Budget::evals(12), 1).unwrap();
+        assert_eq!(out.stopped, StopReason::Completed);
+        let out =
+            VanillaBo { opts: small_bo() }.search(&bg(), &obj, &Budget::evals(12), 1).unwrap();
         assert_eq!(out.evals, 12);
     }
 
@@ -1114,18 +1585,94 @@ mod tests {
     fn gd_respects_eval_budget_cap() {
         let obj = Objective::MinEdp { g: Gemm::new(64, 256, 512) };
         let out = DosaGd { opts: GdOptions::default() }
-            .search(&obj, &Budget::evals(40), 5)
+            .search(&bg(), &obj, &Budget::evals(40), 5)
             .unwrap();
         // one final evaluation of the best iterate may exceed the cap
         assert!(out.evals <= 41, "evals {} exceed budget", out.evals);
+        // the default 80x4 schedule was truncated to fit 40 evaluations
+        assert_eq!(out.stopped, StopReason::BudgetExhausted);
     }
 
     #[test]
     fn fixed_arch_reports_its_own_config() {
         let obj = Objective::MinEdp { g: Gemm::new(128, 768, 2304) };
-        let out = FixedArch::Nvdla.search(&obj, &Budget::default(), 0).unwrap();
+        let out = FixedArch::Nvdla.search(&bg(), &obj, &Budget::default(), 0).unwrap();
         assert_eq!(out.evals, 1);
         assert_eq!(out.best().unwrap().hw, FixedArch::Nvdla.config());
+        assert_eq!(out.stopped, StopReason::Completed);
+    }
+
+    #[test]
+    fn stop_reason_names_roundtrip() {
+        for r in [
+            StopReason::Completed,
+            StopReason::Cancelled,
+            StopReason::DeadlineExceeded,
+            StopReason::BudgetExhausted,
+        ] {
+            assert_eq!(StopReason::from_name(r.name()), Some(r), "{r:?}");
+        }
+        assert_eq!(StopReason::from_name("nope"), None);
+        assert!(!StopReason::Completed.is_partial());
+        assert!(StopReason::Cancelled.is_partial());
+    }
+
+    #[test]
+    fn pre_cancelled_ctx_returns_empty_partial_outcome() {
+        let flag = Arc::new(AtomicBool::new(true));
+        let ctx = SearchCtx::background().with_cancel_flag(flag);
+        let obj = Objective::MinEdp { g: Gemm::new(64, 256, 512) };
+        let out = RandomSearch.search(&ctx, &obj, &Budget::evals(10_000), 1).unwrap();
+        assert_eq!(out.stopped, StopReason::Cancelled);
+        assert!(out.ranked.is_empty());
+        assert_eq!(out.evals, 0);
+    }
+
+    #[test]
+    fn cancel_flag_stops_mid_search_with_partial_results() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let seen = Arc::new(std::sync::Mutex::new(Vec::<SearchEvent>::new()));
+        let ctx = {
+            let flag = flag.clone();
+            let seen = seen.clone();
+            SearchCtx::background().with_cancel_flag(flag.clone()).with_progress(
+                move |ev: &SearchEvent| {
+                    seen.lock().unwrap().push(*ev);
+                    // cancel as soon as the first batch lands
+                    flag.store(true, Ordering::Relaxed);
+                },
+            )
+        };
+        let obj = Objective::MinEdp { g: Gemm::new(64, 256, 512) };
+        let out = RandomSearch.search(&ctx, &obj, &Budget::evals(1_000_000), 2).unwrap();
+        assert_eq!(out.stopped, StopReason::Cancelled);
+        assert!(!out.ranked.is_empty(), "partial ranked designs expected");
+        assert!(out.evals < 1_000_000);
+        let evs = seen.lock().unwrap();
+        assert!(!evs.is_empty());
+        assert!(evs[0].evals >= 1 && evs[0].best_score.is_finite());
+    }
+
+    #[test]
+    fn budget_wall_clock_routes_through_ctx_deadline() {
+        let obj = Objective::MinEdp { g: Gemm::new(64, 256, 512) };
+        let out = RandomSearch
+            .search(&bg(), &obj, &Budget::evals(100_000_000).with_wall_clock(0.02), 3)
+            .unwrap();
+        assert_eq!(out.stopped, StopReason::DeadlineExceeded);
+        assert!(out.evals < 100_000_000);
+    }
+
+    #[test]
+    fn search_run_merges_earliest_deadline() {
+        // ctx deadline earlier than the budget wall clock wins
+        let ctx = SearchCtx::background().with_deadline_in(0.0);
+        let mut run = SearchRun::start(&ctx, &Budget::evals(4).with_wall_clock(60.0));
+        assert!(run.should_stop());
+        assert_eq!(run.stop_reason(), StopReason::DeadlineExceeded);
+        // and exhausted() never overrides a latched deadline
+        run.exhausted();
+        assert_eq!(run.stop_reason(), StopReason::DeadlineExceeded);
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //!
 //! Every search setting is an [`api::Objective`] (workload + metric) and
 //! every strategy — the diffusion engine and each paper baseline — is an
-//! [`api::Optimizer`]: `optimizer.search(&objective, &budget, seed)` yields
-//! a ranked [`api::SearchOutcome`]. An [`api::Session`] owns the engine
+//! [`api::Optimizer`]: `optimizer.search(&ctx, &objective, &budget, seed)`
+//! yields a ranked [`api::SearchOutcome`] whose `stopped` field records
+//! whether the [`api::SearchCtx`] interrupted it (cancellation, deadline)
+//! or it ran to completion. An [`api::Session`] owns the engine
 //! handle, dispatches strategies by [`api::OptimizerKind`], and provides
 //! the batched evaluation hot path [`api::evaluate_batch`] all searchers
 //! share — backed by the memoized, pooled evaluation core in [`eval`]
@@ -33,8 +35,8 @@ pub mod perfgen;
 pub mod perfopt;
 
 pub use api::{
-    evaluate_batch, Budget, DesignReport, Objective, Optimizer, OptimizerKind, SearchOutcome,
-    Session,
+    evaluate_batch, Budget, DesignReport, Objective, Optimizer, OptimizerKind, ProgressSink,
+    SearchCtx, SearchEvent, SearchOutcome, SearchRun, Session, StopReason,
 };
 pub use eval::{par_map, CacheStats, EvalCache};
 

@@ -3,7 +3,7 @@
 //! [`Optimizer`] and [`evaluate_method`] drives it over a query set, so the
 //! (method × task) matrix collapses to one loop.
 
-use super::api::{Budget, Objective, Optimizer};
+use super::api::{Budget, Objective, Optimizer, SearchCtx};
 use crate::models::DiffAxE;
 use crate::util::rng;
 use crate::workload::Gemm;
@@ -72,8 +72,9 @@ pub fn evaluate_method(
 ) -> Result<MethodResult> {
     let mut errs = Vec::with_capacity(queries.len());
     let mut time_s = 0.0;
+    let ctx = SearchCtx::background();
     for (qi, q) in queries.iter().enumerate() {
-        let out = opt.search(&q.objective(), budget, rng::derive(seed, qi as u64))?;
+        let out = opt.search(&ctx, &q.objective(), budget, rng::derive(seed, qi as u64))?;
         errs.push(match stat {
             ErrorStat::MeanOfGenerated => out.mean_score(),
             ErrorStat::BestFound => out.best_score(),

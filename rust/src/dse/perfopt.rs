@@ -40,13 +40,14 @@ mod tests {
 
     #[test]
     fn maxperf_objective_improves_with_budget() {
-        use crate::dse::api::{Budget, Optimizer, RandomSearch};
+        use crate::dse::api::{Budget, Optimizer, RandomSearch, SearchCtx};
         let g = Gemm::new(64, 256, 512);
         let obj = crate::dse::Objective::MaxPerf { g };
+        let ctx = SearchCtx::background();
         // same seed => the 512-eval sample sequence extends the 64-eval one,
         // so the best can only improve
-        let few = RandomSearch.search(&obj, &Budget::evals(64), 11).unwrap();
-        let many = RandomSearch.search(&obj, &Budget::evals(512), 11).unwrap();
+        let few = RandomSearch.search(&ctx, &obj, &Budget::evals(64), 11).unwrap();
+        let many = RandomSearch.search(&ctx, &obj, &Budget::evals(512), 11).unwrap();
         assert!(many.best_score() <= few.best_score());
         assert!(few.best_score() > 0.0);
     }

@@ -33,9 +33,17 @@
 //! # }
 //! ```
 //!
+//! Long-running searches are interruptible: every `Optimizer::search`
+//! takes a [`dse::SearchCtx`] (cancellation flag, wall-clock deadline,
+//! progress sink) polled between evaluation batches, and the outcome's
+//! [`dse::StopReason`] records whether it completed or returned partial
+//! results.
+//!
 //! The [`coordinator`] serves the same types over a versioned
 //! newline-JSON TCP protocol (generic `search` + multi-search `batch`
-//! requests; see [`coordinator::protocol`]).
+//! requests, plus v3 job forms: `submit`/`status`/`cancel`/`jobs` and a
+//! streaming `watch`; see [`coordinator::protocol`] and the job lifecycle
+//! in [`coordinator`]).
 
 pub mod baselines;
 pub mod cli;

@@ -16,8 +16,18 @@ subcommands:
   search        run one DSE search through the unified Optimizer API
                 (--objective runtime|min-edp|max-perf --m --k --n
                 [--target-cycles T] --optimizer NAME --evals N [--per-class N]
-                [--seed S] [--top N] [--artifacts DIR]; engine-backed
-                optimizers need the AOT artifacts, the rest run standalone)
+                [--wall-clock S] [--seed S] [--top N] [--artifacts DIR];
+                engine-backed optimizers need the AOT artifacts, the rest
+                run standalone)
+  serve         start the DSE service + TCP front end
+                (--artifacts DIR --addr 127.0.0.1:7979 --seed S)
+  submit        submit a search job to a running server, print its job id
+                (search options plus --addr; add --watch to stream it)
+  watch         stream a job's progress events until its terminal outcome
+                (--addr --job ID)
+  cancel        cancel a job; a started search keeps its partial outcome
+                (--addr --job ID)
+  jobs          list the server's retained jobs (--addr)
 ";
 
 fn main() -> Result<()> {
@@ -26,6 +36,11 @@ fn main() -> Result<()> {
         Some("gen-dataset") => cmd_gen_dataset(&args),
         Some("sim") => cmd_sim(&args),
         Some("search") => cmd_search(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("watch") => cmd_watch(&args),
+        Some("cancel") => cmd_cancel(&args),
+        Some("jobs") => cmd_jobs(&args),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -33,9 +48,11 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_search(args: &Args) -> Result<()> {
-    use diffaxe::dse::{Budget, Objective, OptimizerKind, Session};
-    use diffaxe::models::DiffAxE;
+/// Build the (objective, budget, optimizer) triple shared by the local
+/// `search` runner and the remote `submit` client.
+fn parse_search_request(args: &Args) -> Result<diffaxe::coordinator::SearchRequest> {
+    use diffaxe::coordinator::SearchRequest;
+    use diffaxe::dse::{Budget, Objective, OptimizerKind};
     use diffaxe::workload::Gemm;
     let g = Gemm::new(
         args.get_u64("m", 128)? as u32,
@@ -43,26 +60,142 @@ fn cmd_search(args: &Args) -> Result<()> {
         args.get_u64("n", 2304)? as u32,
     );
     let objective = match args.get_str("objective", "min-edp") {
-        "runtime" => Objective::Runtime {
-            g,
-            target_cycles: args.get_f64("target-cycles", 1e6)?,
-        },
+        "runtime" => {
+            Objective::Runtime { g, target_cycles: args.get_f64("target-cycles", 1e6)? }
+        }
         "min-edp" => Objective::MinEdp { g },
         "max-perf" => Objective::MaxPerf { g },
         other => anyhow::bail!("unknown objective {other:?} (runtime|min-edp|max-perf)"),
     };
     let name = args.get_str("optimizer", "random");
-    let kind = OptimizerKind::parse(name)
+    let optimizer = OptimizerKind::parse(name)
         .ok_or_else(|| anyhow::anyhow!("unknown optimizer {name:?}"))?;
     let mut budget = Budget::evals(args.get_usize("evals", 256)?);
     if let Some(pc) = args.get("per-class") {
         budget = budget.with_per_class(pc.parse()?);
     }
+    if let Some(w) = args.get("wall-clock") {
+        budget = budget.with_wall_clock(w.parse()?);
+    }
+    let mut sr = SearchRequest::new(objective, budget, optimizer);
+    if let Some(k) = args.get("top-k") {
+        sr.top_k = Some(k.parse()?);
+    }
+    Ok(sr)
+}
+
+fn client(args: &Args) -> Result<diffaxe::coordinator::server::Client> {
+    diffaxe::coordinator::server::Client::connect_str(args.get_str("addr", "127.0.0.1:7979"))
+}
+
+fn print_job(info: &diffaxe::coordinator::JobInfo) {
+    println!(
+        "{:<10} {:<10} {:<16} {:<28} evals={:<8} best={} t={:.2}s",
+        info.id,
+        info.state.name(),
+        info.optimizer,
+        info.objective,
+        info.evals,
+        info.best_score.map(|b| format!("{b:.4e}")).unwrap_or_else(|| "-".into()),
+        info.elapsed_s
+    );
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use diffaxe::coordinator::{server, Service, ServiceConfig};
+    use diffaxe::models::DiffAxE;
+    let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    anyhow::ensure!(
+        DiffAxE::artifacts_present(&dir),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let mut cfg = ServiceConfig::new(dir);
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let svc = Service::start(cfg)?;
+    server::serve(svc.handle(), args.get_str("addr", "127.0.0.1:7979"))
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let sr = parse_search_request(args)?;
+    let mut c = client(args)?;
+    let job_id = c.submit(&sr)?;
+    println!("{job_id}");
+    if args.flag("watch") {
+        watch_and_print(&mut c, &job_id)?;
+    }
+    Ok(())
+}
+
+fn cmd_watch(args: &Args) -> Result<()> {
+    let job_id = args
+        .get("job")
+        .map(str::to_string)
+        .or_else(|| args.positional().first().cloned())
+        .ok_or_else(|| anyhow::anyhow!("watch needs --job ID"))?;
+    let mut c = client(args)?;
+    watch_and_print(&mut c, &job_id)
+}
+
+fn watch_and_print(c: &mut diffaxe::coordinator::server::Client, job_id: &str) -> Result<()> {
+    use diffaxe::coordinator::Response;
+    let terminal = c.watch(job_id, |ev| {
+        let best = if ev.best_score.is_finite() {
+            format!("{:.4e}", ev.best_score)
+        } else {
+            "-".into()
+        };
+        println!("event: evals={} best={} t={:.2}s", ev.evals, best, ev.elapsed_s);
+    })?;
+    match terminal {
+        Response::JobOutcome { job_id, outcome } => {
+            println!(
+                "{job_id} {}: {} evals in {:.2}s ({})",
+                outcome.optimizer,
+                outcome.evals,
+                outcome.search_time_s,
+                outcome.stopped.name()
+            );
+            if let Some(d) = outcome.best() {
+                println!(
+                    "best: {} cycles={:.3e} power={:.2}W edp={:.3e}",
+                    d.hw, d.cycles, d.power_w, d.edp
+                );
+            }
+        }
+        other => println!("terminal: {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    let job_id = args
+        .get("job")
+        .map(str::to_string)
+        .or_else(|| args.positional().first().cloned())
+        .ok_or_else(|| anyhow::anyhow!("cancel needs --job ID"))?;
+    let info = client(args)?.cancel(&job_id)?;
+    print_job(&info);
+    Ok(())
+}
+
+fn cmd_jobs(args: &Args) -> Result<()> {
+    for info in client(args)?.jobs()? {
+        print_job(&info);
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    use diffaxe::dse::{Session, StopReason};
+    use diffaxe::models::DiffAxE;
+    let sr = parse_search_request(args)?;
+    let (kind, objective, budget) = (sr.optimizer, sr.objective, sr.budget);
     let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
     let mut session = if kind.needs_engine() {
         anyhow::ensure!(
             DiffAxE::artifacts_present(&dir),
-            "optimizer {name:?} needs the AOT artifacts — run `make artifacts`"
+            "optimizer {:?} needs the AOT artifacts — run `make artifacts`",
+            kind.name()
         );
         Session::load(&dir)?
     } else if DiffAxE::artifacts_present(&dir) {
@@ -72,8 +205,15 @@ fn cmd_search(args: &Args) -> Result<()> {
     };
     let out = session.search(kind, &objective, &budget, args.get_u64("seed", 1)?)?;
     println!(
-        "{}: {} evaluations in {:.2}s on {objective}",
-        out.optimizer, out.evals, out.search_time_s
+        "{}: {} evaluations in {:.2}s on {objective}{}",
+        out.optimizer,
+        out.evals,
+        out.search_time_s,
+        if out.stopped == StopReason::Completed {
+            String::new()
+        } else {
+            format!(" [{}]", out.stopped.name())
+        }
     );
     for (i, d) in out.ranked.iter().take(args.get_usize("top", 5)?).enumerate() {
         println!(

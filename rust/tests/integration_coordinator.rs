@@ -3,9 +3,9 @@
 
 use diffaxe::baselines::FixedArch;
 use diffaxe::coordinator::{
-    server, ErrorCode, Request, Response, SearchRequest, Service, ServiceConfig,
+    server, ErrorCode, JobState, Request, Response, SearchRequest, Service, ServiceConfig,
 };
-use diffaxe::dse::{Budget, Objective, OptimizerKind};
+use diffaxe::dse::{Budget, Objective, OptimizerKind, StopReason};
 use diffaxe::models::DiffAxE;
 use diffaxe::workload::{Gemm, LlmModel, Stage};
 use std::path::Path;
@@ -306,4 +306,172 @@ fn service_survives_unknown_workloads() {
         Response::Outcome(o) => assert_eq!(o.ranked.len(), 4),
         other => panic!("unexpected {other:?}"),
     }
+}
+
+// ---------------------------------------------------------------------------
+// v3: jobs, streaming, cancellation, deadlines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v3_submit_watch_streams_events_then_outcome() {
+    let Some(svc) = service() else { return };
+    let addr = server::serve_ephemeral(svc.handle()).unwrap();
+    let mut client = server::Client::connect(&addr).unwrap();
+    let job_id = client
+        .submit(&SearchRequest::new(
+            Objective::Runtime { g: some_workload(), target_cycles: 1e6 },
+            Budget::evals(16),
+            OptimizerKind::DiffAxE,
+        ))
+        .unwrap();
+    assert!(job_id.starts_with("job-"), "{job_id}");
+    let mut events = 0usize;
+    let mut last_evals = 0usize;
+    let terminal = client
+        .watch(&job_id, |ev| {
+            events += 1;
+            assert!(ev.evals >= last_evals, "progress went backwards");
+            last_evals = ev.evals;
+        })
+        .unwrap();
+    // acceptance: ≥1 progress event precedes the terminal outcome line
+    assert!(events >= 1, "watch delivered no progress events");
+    match terminal {
+        Response::JobOutcome { job_id: id, outcome } => {
+            assert_eq!(id, job_id);
+            assert_eq!(outcome.stopped, StopReason::Completed);
+            assert_eq!(outcome.evals, 16);
+        }
+        other => panic!("unexpected terminal {other:?}"),
+    }
+    // the registry retains the finished job for status queries
+    let info = client.status(&job_id).unwrap();
+    assert_eq!(info.state, JobState::Done);
+    assert_eq!(info.evals, 16);
+    // and it shows up in the listing with job gauges exported
+    assert!(client.jobs().unwrap().iter().any(|j| j.id == job_id));
+    let snap = svc.handle().metrics().snapshot();
+    assert!(snap.jobs_submitted >= 1);
+}
+
+#[test]
+fn v3_cancel_stops_a_running_search_with_partial_outcome() {
+    let Some(svc) = service() else { return };
+    let addr = server::serve_ephemeral(svc.handle()).unwrap();
+    let mut client = server::Client::connect(&addr).unwrap();
+    // a search far too large to finish quickly (the acceptance scenario:
+    // an optimization baseline grinding a huge budget)
+    for kind in [OptimizerKind::RandomSearch, OptimizerKind::VanillaBo] {
+        let job_id = client
+            .submit(&SearchRequest::new(
+                Objective::MinEdp { g: some_workload() },
+                Budget::evals(50_000_000),
+                kind,
+            ))
+            .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        let info = client.cancel(&job_id).unwrap();
+        assert!(
+            matches!(info.state, JobState::Running | JobState::Cancelled),
+            "{kind:?}: {:?}",
+            info.state
+        );
+        // watch after cancel: the stream still ends with the terminal line
+        let terminal = client.watch(&job_id, |_| {}).unwrap();
+        match terminal {
+            Response::JobOutcome { outcome, .. } => {
+                assert_eq!(outcome.stopped, StopReason::Cancelled, "{kind:?}");
+                assert!(!outcome.ranked.is_empty(), "{kind:?} lost its partial designs");
+                assert!(outcome.evals < 50_000_000);
+            }
+            other => panic!("{kind:?}: unexpected terminal {other:?}"),
+        }
+        assert_eq!(client.status(&job_id).unwrap().state, JobState::Cancelled);
+    }
+}
+
+#[test]
+fn v3_queued_job_cancels_without_running() {
+    let Some(svc) = service() else { return };
+    let addr = server::serve_ephemeral(svc.handle()).unwrap();
+    let mut client = server::Client::connect(&addr).unwrap();
+    // occupy the engine, then queue a second job behind it
+    let blocker = client
+        .submit(&SearchRequest::new(
+            Objective::MinEdp { g: some_workload() },
+            Budget::evals(50_000_000),
+            OptimizerKind::RandomSearch,
+        ))
+        .unwrap();
+    let queued = client
+        .submit(&SearchRequest::new(
+            Objective::MinEdp { g: some_workload() },
+            Budget::evals(1000),
+            OptimizerKind::RandomSearch,
+        ))
+        .unwrap();
+    let info = client.cancel(&queued).unwrap();
+    assert_eq!(info.state, JobState::Cancelled);
+    assert_eq!(info.evals, 0, "a never-started job has an empty outcome");
+    // the cancelled-while-queued job streams its synthetic event + outcome
+    match client.watch(&queued, |_| {}).unwrap() {
+        Response::JobOutcome { outcome, .. } => {
+            assert_eq!(outcome.stopped, StopReason::Cancelled);
+            assert!(outcome.ranked.is_empty());
+        }
+        other => panic!("unexpected terminal {other:?}"),
+    }
+    // clean up the blocker so later tests aren't queued behind it
+    client.cancel(&blocker).unwrap();
+    match client.watch(&blocker, |_| {}).unwrap() {
+        Response::JobOutcome { outcome, .. } => {
+            assert_eq!(outcome.stopped, StopReason::Cancelled)
+        }
+        other => panic!("unexpected terminal {other:?}"),
+    }
+}
+
+#[test]
+fn v3_wall_clock_deadline_over_the_wire() {
+    let Some(svc) = service() else { return };
+    let addr = server::serve_ephemeral(svc.handle()).unwrap();
+    let mut client = server::Client::connect(&addr).unwrap();
+    let job_id = client
+        .submit(&SearchRequest::new(
+            Objective::MinEdp { g: some_workload() },
+            Budget::evals(50_000_000).with_wall_clock(0.05),
+            OptimizerKind::RandomSearch,
+        ))
+        .unwrap();
+    match client.watch(&job_id, |_| {}).unwrap() {
+        Response::JobOutcome { outcome, .. } => {
+            assert_eq!(outcome.stopped, StopReason::DeadlineExceeded);
+            assert!(outcome.evals < 50_000_000);
+            assert!(!outcome.ranked.is_empty());
+        }
+        other => panic!("unexpected terminal {other:?}"),
+    }
+    assert_eq!(client.status(&job_id).unwrap().state, JobState::Done);
+}
+
+#[test]
+fn v3_unknown_job_is_a_bad_request_everywhere() {
+    let Some(svc) = service() else { return };
+    let addr = server::serve_ephemeral(svc.handle()).unwrap();
+    let mut client = server::Client::connect(&addr).unwrap();
+    for line in [
+        r#"{"v":3,"type":"status","job_id":"job-999999"}"#,
+        r#"{"v":3,"type":"cancel","job_id":"job-999999"}"#,
+        r#"{"v":3,"type":"watch","job_id":"job-999999"}"#,
+    ] {
+        match client.send_line(line).unwrap() {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRequest, "{line}");
+                assert!(message.contains("job-999999"), "{message}");
+            }
+            other => panic!("{line}: unexpected {other:?}"),
+        }
+    }
+    // the connection still serves ordinary requests afterwards
+    assert!(matches!(client.request(&Request::Metrics).unwrap(), Response::MetricsText(_)));
 }

@@ -6,7 +6,9 @@
 //! this binary runs all checks sequentially against ONE session instance
 //! (artifact compilation is the expensive part).
 
-use diffaxe::dse::{Budget, Objective, OptimizerKind, SearchOutcome, Session};
+use diffaxe::dse::{
+    Budget, Objective, OptimizerKind, SearchCtx, SearchOutcome, Session, StopReason,
+};
 use diffaxe::models::DiffAxE;
 use diffaxe::workload::Gemm;
 use std::path::Path;
@@ -23,6 +25,8 @@ fn session_integration_suite() {
     runtime_objective_deterministic_for_generative_methods(&mut s);
     diffaxe_honours_eval_budget(&mut s);
     batch_evaluation_matches_scalar_path(&s);
+    every_optimizer_kind_honours_a_deadline(&mut s);
+    cancellation_stops_engine_backed_searches(&mut s);
 }
 
 fn assert_same(a: &SearchOutcome, b: &SearchOutcome) {
@@ -67,6 +71,58 @@ fn diffaxe_honours_eval_budget(session: &mut Session) {
         assert_eq!(out.evals, n);
         assert_eq!(out.trace.len(), n);
     }
+}
+
+/// Every kind — engine-backed included — must come back promptly under a
+/// 50 ms deadline. Simulator-backed kinds poll between cheap evaluation
+/// chunks (~2x is plenty); the generative kinds may straddle one diffusion
+/// sampler call / encode prelude, so they get one-batch slack on top.
+fn every_optimizer_kind_honours_a_deadline(session: &mut Session) {
+    let g = Gemm::new(128, 768, 2304);
+    for kind in OptimizerKind::ALL {
+        let obj = match kind {
+            OptimizerKind::GanDse => Objective::Runtime { g, target_cycles: 1e6 },
+            _ => Objective::MinEdp { g },
+        };
+        let ctx = SearchCtx::background().with_deadline_in(0.05);
+        let t = std::time::Instant::now();
+        let out = session.search_ctx(kind, &ctx, &obj, &Budget::evals(1_000_000), 21).unwrap();
+        let elapsed = t.elapsed().as_secs_f64();
+        let one_shot = matches!(
+            kind,
+            OptimizerKind::Fixed(_) | OptimizerKind::AirchitectV1 | OptimizerKind::AirchitectV2
+        );
+        if one_shot {
+            assert_eq!(out.stopped, StopReason::Completed, "{kind:?}");
+        } else {
+            assert_eq!(out.stopped, StopReason::DeadlineExceeded, "{kind:?}");
+            assert!(out.evals < 1_000_000, "{kind:?}");
+        }
+        let bound = if kind.needs_engine() { 2.0 } else { 0.2 };
+        assert!(elapsed < bound, "{kind:?} took {elapsed:.3}s against a 0.05s deadline");
+    }
+}
+
+fn cancellation_stops_engine_backed_searches(session: &mut Session) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    let g = Gemm::new(128, 768, 2304);
+    let obj = Objective::MinEdp { g };
+    let flag = Arc::new(AtomicBool::new(false));
+    let canceller = {
+        let flag = flag.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            flag.store(true, Ordering::SeqCst);
+        })
+    };
+    let ctx = SearchCtx::background().with_cancel_flag(flag);
+    let out = session
+        .search_ctx(OptimizerKind::DiffAxE, &ctx, &obj, &Budget::evals(1_000_000), 23)
+        .unwrap();
+    canceller.join().unwrap();
+    assert_eq!(out.stopped, StopReason::Cancelled);
+    assert!(out.evals < 1_000_000);
 }
 
 fn batch_evaluation_matches_scalar_path(session: &Session) {

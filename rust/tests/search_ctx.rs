@@ -1,0 +1,151 @@
+//! Hermetic (no-artifact) tests for the interruptible search API: every
+//! engine-free `OptimizerKind` must honour a `SearchCtx` deadline within
+//! ~2x, stop promptly on cancellation with a well-formed *partial*
+//! outcome, and stream monotonic progress events. The engine-backed kinds
+//! run the same checks in `integration_session.rs` (artifact-gated).
+
+use diffaxe::baselines::{BoOptions, FixedArch, GdOptions};
+use diffaxe::dse::{
+    Budget, Objective, OptimizerKind, SearchCtx, SearchEvent, Session, StopReason,
+};
+use diffaxe::workload::Gemm;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+const DEADLINE_S: f64 = 0.05;
+// ~2x the deadline: one in-flight evaluation batch may straddle the poll
+// point, plus CI scheduler slack
+const RETURN_BOUND_S: f64 = 0.2;
+
+fn obj() -> Objective {
+    Objective::MinEdp { g: Gemm::new(64, 256, 512) }
+}
+
+/// A session whose BO/GD schedules are far too large to finish in 50 ms,
+/// so a deadline (not schedule completion) is what ends each search.
+fn slow_session() -> Session {
+    let mut s = Session::simulator_only();
+    s.bo_opts = BoOptions { n_init: 8, budget: 1_000_000, pool: 64, ..Default::default() };
+    s.gd_opts = GdOptions { steps: 100_000, restarts: 100, ..Default::default() };
+    s
+}
+
+fn engine_free_kinds() -> Vec<OptimizerKind> {
+    vec![
+        OptimizerKind::RandomSearch,
+        OptimizerKind::VanillaBo,
+        OptimizerKind::VanillaGd,
+        OptimizerKind::DosaGd,
+        OptimizerKind::Fixed(FixedArch::Eyeriss),
+        OptimizerKind::Fixed(FixedArch::ShiDianNao),
+        OptimizerKind::Fixed(FixedArch::Nvdla),
+    ]
+}
+
+#[test]
+fn every_engine_free_kind_returns_within_2x_of_a_50ms_deadline() {
+    let mut session = slow_session();
+    for kind in engine_free_kinds() {
+        let ctx = SearchCtx::background().with_deadline_in(DEADLINE_S);
+        let budget = Budget::evals(2_000_000);
+        let t = Instant::now();
+        let out = session.search_ctx(kind, &ctx, &obj(), &budget, 7).unwrap();
+        let elapsed = t.elapsed().as_secs_f64();
+        assert!(
+            elapsed < RETURN_BOUND_S,
+            "{kind:?} took {elapsed:.3}s against a {DEADLINE_S}s deadline"
+        );
+        match kind {
+            // one-shot recommenders finish long before the deadline
+            OptimizerKind::Fixed(_) => {
+                assert_eq!(out.stopped, StopReason::Completed, "{kind:?}");
+                assert_eq!(out.evals, 1);
+            }
+            _ => {
+                assert_eq!(out.stopped, StopReason::DeadlineExceeded, "{kind:?}");
+                assert!(out.evals < 2_000_000, "{kind:?} claims a full run");
+                // partial outcomes stay well-formed: ranked ⊆ trace order
+                assert_eq!(out.trace.len(), out.evals, "{kind:?}");
+                assert_eq!(out.ranked.len(), out.evals, "{kind:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn budget_wall_clock_behaves_like_a_ctx_deadline_for_every_kind() {
+    // Budget::wall_clock_s routes through the same SearchRun deadline, so
+    // the behaviour must match the ctx-deadline test above
+    let mut session = slow_session();
+    for kind in [OptimizerKind::RandomSearch, OptimizerKind::VanillaBo, OptimizerKind::DosaGd] {
+        let budget = Budget::evals(2_000_000).with_wall_clock(DEADLINE_S);
+        let t = Instant::now();
+        let out =
+            session.search_ctx(kind, &SearchCtx::background(), &obj(), &budget, 7).unwrap();
+        let elapsed = t.elapsed().as_secs_f64();
+        assert!(elapsed < RETURN_BOUND_S, "{kind:?} took {elapsed:.3}s");
+        assert_eq!(out.stopped, StopReason::DeadlineExceeded, "{kind:?}");
+    }
+}
+
+#[test]
+fn cancellation_yields_prompt_partial_outcomes() {
+    let mut session = slow_session();
+    for kind in [OptimizerKind::RandomSearch, OptimizerKind::VanillaBo, OptimizerKind::DosaGd] {
+        let flag = Arc::new(AtomicBool::new(false));
+        let canceller = {
+            let flag = flag.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                flag.store(true, Ordering::SeqCst);
+            })
+        };
+        let ctx = SearchCtx::background().with_cancel_flag(flag);
+        let t = Instant::now();
+        let out = session.search_ctx(kind, &ctx, &obj(), &Budget::evals(2_000_000), 3).unwrap();
+        let elapsed = t.elapsed().as_secs_f64();
+        canceller.join().unwrap();
+        assert_eq!(out.stopped, StopReason::Cancelled, "{kind:?}");
+        assert!(elapsed < 1.0, "{kind:?} took {elapsed:.3}s to notice the cancel");
+        assert!(!out.ranked.is_empty(), "{kind:?} lost its partial results");
+        assert!(out.best_score().is_finite(), "{kind:?}");
+    }
+}
+
+#[test]
+fn progress_events_are_monotonic_and_scored() {
+    let events = Arc::new(Mutex::new(Vec::<SearchEvent>::new()));
+    let ctx = {
+        let events = events.clone();
+        SearchCtx::background().with_progress(move |ev: &SearchEvent| {
+            events.lock().unwrap().push(*ev);
+        })
+    };
+    let out = Session::simulator_only()
+        .search_ctx(OptimizerKind::RandomSearch, &ctx, &obj(), &Budget::evals(5000), 11)
+        .unwrap();
+    assert_eq!(out.stopped, StopReason::Completed);
+    let evs = events.lock().unwrap();
+    assert!(!evs.is_empty(), "no progress events emitted");
+    for w in evs.windows(2) {
+        assert!(w[1].evals >= w[0].evals, "evals went backwards");
+        assert!(w[1].best_score <= w[0].best_score, "best-so-far worsened");
+        assert!(w[1].elapsed_s >= w[0].elapsed_s, "time went backwards");
+    }
+    assert_eq!(evs.last().unwrap().evals, 5000);
+    assert!((evs.last().unwrap().best_score - out.best_score()).abs() < 1e-12);
+}
+
+#[test]
+fn budget_exhaustion_is_reported_not_silently_completed() {
+    // a 40-eval budget truncates the default 80-step x 4-restart DOSA
+    // schedule: the outcome must say so
+    let mut session = Session::simulator_only();
+    session.gd_opts = GdOptions::default();
+    let out = session
+        .search_ctx(OptimizerKind::DosaGd, &SearchCtx::background(), &obj(), &Budget::evals(40), 5)
+        .unwrap();
+    assert_eq!(out.stopped, StopReason::BudgetExhausted);
+    assert!(!out.ranked.is_empty());
+}
