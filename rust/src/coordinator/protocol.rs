@@ -61,11 +61,32 @@
 //! A search's `stopped` field is one of `completed | cancelled |
 //! deadline_exceeded | budget_exhausted` ([`StopReason`]); budgets may
 //! carry `wall_clock_s`, enforced server-side as a hard deadline.
+//!
+//! # Structured DSE (additive, v3 stays byte-compatible)
+//!
+//! Two objective kinds expose the §V structured search:
+//!
+//! ```json
+//! {"kind":"structured_edp","model":"bert-base","stage":"prefill","seq":128,
+//!  "platform":"asic-32nm","segments":3,
+//!  "budget":{"pe":4096,"buf_kb":768,"bw":16}}
+//! ```
+//!
+//! (`structured_perf` minimizes cycles instead of EDP; `budget` fields
+//! default to the unconstrained envelope when absent.) Structured
+//! outcomes carry an additive per-design `"segments"` array — the
+//! per-segment sub-configurations next to the provisioned-envelope design
+//! — which non-structured responses omit entirely, so every pre-existing
+//! v1/v2/v3 line serializes byte-identically (guarded by the golden
+//! fixture corpus in `tests/wire_fixtures.rs`).
 
+use crate::design_space::structured::SharedBudget;
+use crate::design_space::{HwConfig, LoopOrder};
 use crate::dse::api::{
     Budget, DesignReport, Objective, OptimizerKind, SearchEvent, SearchOutcome, StopReason,
 };
 use crate::dse::llm::Platform;
+use crate::dse::structured::StructuredSpec;
 use crate::util::json::Json;
 use crate::workload::{llm::DEFAULT_SEQ, Gemm, LlmModel, Stage};
 use anyhow::{bail, Context, Result};
@@ -293,7 +314,73 @@ fn objective_to_json(o: &Objective) -> Json {
             ("seq", Json::Num(*seq as f64)),
             ("platform", Json::Str(platform.name().into())),
         ]),
+        Objective::StructuredEdp { spec } => structured_to_json("structured_edp", spec),
+        Objective::StructuredPerf { spec } => structured_to_json("structured_perf", spec),
     }
+}
+
+/// Additive v3 objective form for §V structured DSE. `budget` carries the
+/// shared accelerator envelope; absent fields fall back to the
+/// unconstrained default, so minimal requests stay short.
+fn structured_to_json(kind: &'static str, spec: &StructuredSpec) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str(kind.into())),
+        ("model", Json::Str(spec.model.wire_name().into())),
+        ("stage", Json::Str(spec.stage.name().into())),
+        ("seq", Json::Num(spec.seq as f64)),
+        ("platform", Json::Str(spec.platform.name().into())),
+        ("segments", Json::Num(spec.segments as f64)),
+        (
+            "budget",
+            Json::obj(vec![
+                ("pe", Json::Num(spec.budget.pe as f64)),
+                ("buf_kb", Json::Num(spec.budget.buf_b as f64 / 1024.0)),
+                ("bw", Json::Num(spec.budget.bw as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Range-checked u32 wire field: a value that does not fit is a client
+/// error, never a silent `as` wrap that would bypass spec validation.
+fn wire_u32(j: &Json, key: &str, default: u32) -> Result<u32, WireError> {
+    match j.get(key).as_usize() {
+        None => Ok(default),
+        Some(v) => u32::try_from(v)
+            .map_err(|_| WireError::bad(format!("'{key}' out of range: {v}"))),
+    }
+}
+
+fn structured_from_json(j: &Json, edp: bool) -> Result<Objective, WireError> {
+    let model_name = j.get("model").as_str().unwrap_or("");
+    let model = LlmModel::from_name(model_name)
+        .ok_or_else(|| WireError::bad(format!("unknown model {model_name:?}")))?;
+    let stage_name = j.get("stage").as_str().unwrap_or("prefill");
+    let stage = Stage::from_name(stage_name)
+        .ok_or_else(|| WireError::bad(format!("unknown stage {stage_name:?}")))?;
+    let platform_name = j.get("platform").as_str().unwrap_or("asic-32nm");
+    let platform = Platform::from_name(platform_name)
+        .ok_or_else(|| WireError::bad(format!("unknown platform {platform_name:?}")))?;
+    let seq = wire_u32(j, "seq", DEFAULT_SEQ)?;
+    let segments = wire_u32(j, "segments", 3)?;
+    let bj = j.get("budget");
+    let defaults = SharedBudget::default();
+    let budget = SharedBudget {
+        pe: wire_u32(bj, "pe", defaults.pe)?,
+        buf_b: bj
+            .get("buf_kb")
+            .as_f64()
+            .map(|kb| (kb * 1024.0).round() as u64)
+            .unwrap_or(defaults.buf_b),
+        bw: wire_u32(bj, "bw", defaults.bw)?,
+    };
+    let spec = StructuredSpec { model, stage, seq, platform, segments, budget };
+    spec.validate().map_err(WireError::bad)?;
+    Ok(if edp {
+        Objective::StructuredEdp { spec }
+    } else {
+        Objective::StructuredPerf { spec }
+    })
 }
 
 fn objective_from_json(j: &Json) -> Result<Objective, WireError> {
@@ -324,6 +411,8 @@ fn objective_from_json(j: &Json) -> Result<Objective, WireError> {
             let seq = j.get("seq").as_usize().unwrap_or(DEFAULT_SEQ as usize) as u32;
             Objective::LlmEdp { model, stage, seq, platform }
         }
+        "structured_edp" => structured_from_json(j, true)?,
+        "structured_perf" => structured_from_json(j, false)?,
         other => return Err(WireError::bad(format!("unknown objective kind {other:?}"))),
     })
 }
@@ -517,28 +606,25 @@ impl Request {
 // designs / outcomes / responses
 // ---------------------------------------------------------------------------
 
-/// JSON encoding of a [`DesignReport`] (implemented here so the DSE layer
-/// stays transport-free).
-pub fn design_to_json(d: &DesignReport) -> Json {
-    Json::obj(vec![
-        ("r", Json::Num(d.hw.r as f64)),
-        ("c", Json::Num(d.hw.c as f64)),
-        ("ip_kb", Json::Num(d.hw.ip_kb())),
-        ("wt_kb", Json::Num(d.hw.wt_kb())),
-        ("op_kb", Json::Num(d.hw.op_kb())),
-        ("bw", Json::Num(d.hw.bw as f64)),
-        ("loop_order", Json::Str(d.hw.loop_order.name().into())),
-        ("cycles", Json::Num(d.cycles)),
-        ("power_w", Json::Num(d.power_w)),
-        ("edp", Json::Num(d.edp)),
-    ])
+/// The seven configuration fields of one [`HwConfig`] (shared between the
+/// design encoding and the per-segment sub-config encoding).
+fn hw_fields(hw: &HwConfig) -> Vec<(&'static str, Json)> {
+    vec![
+        ("r", Json::Num(hw.r as f64)),
+        ("c", Json::Num(hw.c as f64)),
+        ("ip_kb", Json::Num(hw.ip_kb())),
+        ("wt_kb", Json::Num(hw.wt_kb())),
+        ("op_kb", Json::Num(hw.op_kb())),
+        ("bw", Json::Num(hw.bw as f64)),
+        ("loop_order", Json::Str(hw.loop_order.name().into())),
+    ]
 }
 
-/// Decode a [`DesignReport`], validating the configuration against the
-/// target-space parameter ranges (Table II) so malformed peers cannot
-/// smuggle nonsense dimensions into downstream consumers.
-pub fn design_from_json(j: &Json) -> Result<DesignReport> {
-    use crate::design_space::{params, HwConfig, LoopOrder};
+/// Decode one configuration, validating against the target-space
+/// parameter ranges (Table II) so malformed peers cannot smuggle nonsense
+/// dimensions into downstream consumers.
+fn hw_from_json(j: &Json) -> Result<HwConfig> {
+    use crate::design_space::params;
     let num = |k: &str| j.get(k).as_f64().with_context(|| format!("design.{k}"));
     let hw = HwConfig {
         r: num("r")? as u32,
@@ -561,13 +647,60 @@ pub fn design_from_json(j: &Json) -> Result<DesignReport> {
             && (params::BW_MIN..=params::BW_MAX).contains(&hw.bw),
         "design outside target-space parameter ranges: {hw}"
     );
-    Ok(DesignReport { hw, cycles: num("cycles")?, power_w: num("power_w")?, edp: num("edp")? })
+    Ok(hw)
+}
+
+/// JSON encoding of a [`DesignReport`] (implemented here so the DSE layer
+/// stays transport-free).
+pub fn design_to_json(d: &DesignReport) -> Json {
+    let mut fields = hw_fields(&d.hw);
+    fields.push(("cycles", Json::Num(d.cycles)));
+    fields.push(("power_w", Json::Num(d.power_w)));
+    fields.push(("edp", Json::Num(d.edp)));
+    Json::obj(fields)
+}
+
+/// [`design_to_json`] plus the additive `"segments"` array of a
+/// structured design's per-segment sub-configurations (omitted for
+/// single-config designs, so pre-structured readers see unchanged bytes).
+fn design_to_json_with_segments(d: &DesignReport, segments: Option<&[HwConfig]>) -> Json {
+    let mut fields = hw_fields(&d.hw);
+    fields.push(("cycles", Json::Num(d.cycles)));
+    fields.push(("power_w", Json::Num(d.power_w)));
+    fields.push(("edp", Json::Num(d.edp)));
+    if let Some(segs) = segments {
+        if !segs.is_empty() {
+            fields.push((
+                "segments",
+                Json::Arr(segs.iter().map(|h| Json::obj(hw_fields(h))).collect()),
+            ));
+        }
+    }
+    Json::obj(fields)
+}
+
+/// Decode a [`DesignReport`] (the `"segments"` field, if any, is decoded
+/// at the outcome level).
+pub fn design_from_json(j: &Json) -> Result<DesignReport> {
+    let num = |k: &str| j.get(k).as_f64().with_context(|| format!("design.{k}"));
+    Ok(DesignReport {
+        hw: hw_from_json(j)?,
+        cycles: num("cycles")?,
+        power_w: num("power_w")?,
+        edp: num("edp")?,
+    })
 }
 
 fn outcome_fields(o: &SearchOutcome) -> Vec<(&'static str, Json)> {
+    let designs = o
+        .ranked
+        .iter()
+        .enumerate()
+        .map(|(i, d)| design_to_json_with_segments(d, o.segments.get(i).map(|s| s.as_slice())))
+        .collect();
     vec![
         ("optimizer", Json::Str(o.optimizer.clone())),
-        ("designs", Json::Arr(o.ranked.iter().map(design_to_json).collect())),
+        ("designs", Json::Arr(designs)),
         ("trace", Json::arr_f64(&o.trace)),
         ("evals", Json::Num(o.evals as f64)),
         ("search_time_s", Json::Num(o.search_time_s)),
@@ -577,13 +710,22 @@ fn outcome_fields(o: &SearchOutcome) -> Vec<(&'static str, Json)> {
 }
 
 fn outcome_from_json(j: &Json) -> Result<SearchOutcome> {
-    let ranked = j
-        .get("designs")
-        .as_arr()
-        .context("outcome.designs")?
-        .iter()
-        .map(design_from_json)
-        .collect::<Result<Vec<_>>>()?;
+    let design_objs = j.get("designs").as_arr().context("outcome.designs")?;
+    let ranked =
+        design_objs.iter().map(design_from_json).collect::<Result<Vec<_>>>()?;
+    // additive structured field: per-design segment lists; all-absent
+    // normalizes to the empty (non-structured) form
+    let mut segments: Vec<Vec<HwConfig>> = Vec::with_capacity(design_objs.len());
+    let mut any_segments = false;
+    for dj in design_objs {
+        match dj.get("segments").as_arr() {
+            Some(segs) => {
+                any_segments = true;
+                segments.push(segs.iter().map(hw_from_json).collect::<Result<Vec<_>>>()?);
+            }
+            None => segments.push(Vec::new()),
+        }
+    }
     let trace = j.get("trace").as_f64_vec().context("outcome.trace")?;
     Ok(SearchOutcome {
         optimizer: j.get("optimizer").as_str().unwrap_or("").to_string(),
@@ -595,6 +737,7 @@ fn outcome_from_json(j: &Json) -> Result<SearchOutcome> {
             .as_str()
             .and_then(StopReason::from_name)
             .unwrap_or(StopReason::Completed),
+        segments: if any_segments { segments } else { Vec::new() },
         ranked,
         trace,
     })
@@ -956,6 +1099,7 @@ mod tests {
             trace: vec![0.25],
             evals: 1,
             search_time_s: 0.5,
+            segments: Vec::new(),
             stopped: StopReason::Completed,
         };
         let partial = SearchOutcome { stopped: StopReason::Cancelled, ..outcome.clone() };
@@ -1048,6 +1192,107 @@ mod tests {
     }
 
     #[test]
+    fn structured_objective_roundtrip_and_validation() {
+        use crate::dse::structured::StructuredSpec;
+        let spec = StructuredSpec {
+            model: LlmModel::BertBase,
+            stage: Stage::Prefill,
+            seq: 128,
+            platform: Platform::Asic32nm,
+            segments: 3,
+            budget: SharedBudget { pe: 4096, buf_b: 768 * 1024, bw: 16 },
+        };
+        for obj in [Objective::StructuredEdp { spec }, Objective::StructuredPerf { spec }] {
+            let r = Request::Search(SearchRequest::new(
+                obj,
+                Budget::evals(32),
+                OptimizerKind::DosaGd,
+            ));
+            let j = Json::parse(&r.to_json().to_string()).unwrap();
+            assert_eq!(Request::from_json(&j).unwrap(), r, "{obj}");
+        }
+        // absent budget/segments fall back to defaults
+        let r = parse(
+            r#"{"v":3,"type":"search","optimizer":"random",
+                "objective":{"kind":"structured_edp","model":"bert-base"}}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Search(SearchRequest {
+                objective: Objective::StructuredEdp { spec }, ..
+            }) => {
+                assert_eq!(spec.segments, 3);
+                assert_eq!(spec.budget, SharedBudget::default());
+                assert_eq!(spec.seq, DEFAULT_SEQ);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // an impossible budget is a bad request, not a server panic
+        let err = parse(
+            r#"{"type":"search","objective":{"kind":"structured_edp",
+                "model":"bert-base","budget":{"pe":1}},"optimizer":"random"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        // and so is a zero segment count
+        let err = parse(
+            r#"{"type":"search","objective":{"kind":"structured_perf",
+                "model":"bert-base","segments":0},"optimizer":"random"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        // an over-u32 value is rejected, never silently wrapped into a
+        // valid-looking spec
+        let err = parse(
+            r#"{"type":"search","objective":{"kind":"structured_edp",
+                "model":"bert-base","segments":4294967299},"optimizer":"random"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("segments"), "{}", err.message);
+    }
+
+    #[test]
+    fn structured_outcome_roundtrip_carries_segments() {
+        let seg_a = HwConfig::new_kb(64, 64, 256.0, 128.0, 32.0, 16, LoopOrder::Mnk);
+        let seg_b = HwConfig::new_kb(16, 128, 64.0, 512.0, 16.0, 16, LoopOrder::Nmk);
+        let d = DesignReport {
+            hw: HwConfig::new_kb(64, 128, 256.0, 512.0, 32.0, 16, LoopOrder::Mnk),
+            cycles: 1024.0,
+            power_w: 2.5,
+            edp: 4096.0,
+        };
+        let outcome = SearchOutcome {
+            optimizer: "DiffAxE".into(),
+            ranked: vec![d],
+            trace: vec![4096.0],
+            evals: 1,
+            search_time_s: 0.5,
+            segments: vec![vec![seg_a, seg_b]],
+            stopped: StopReason::Completed,
+        };
+        for resp in [
+            Response::Outcome(outcome.clone()),
+            Response::JobOutcome { job_id: "job-7".into(), outcome },
+        ] {
+            let j = Json::parse(&resp.to_json().to_string()).unwrap();
+            assert_eq!(Response::from_json(&j).unwrap(), resp);
+        }
+        // a non-structured outcome's designs carry no "segments" key at all
+        let plain = SearchOutcome {
+            optimizer: "Random Search".into(),
+            ranked: vec![d],
+            trace: vec![4096.0],
+            evals: 1,
+            search_time_s: 0.0,
+            segments: Vec::new(),
+            stopped: StopReason::Completed,
+        };
+        let j = Response::Outcome(plain).to_json();
+        assert!(matches!(j.get("designs").as_arr().unwrap()[0].get("segments"), Json::Null));
+    }
+
+    #[test]
     fn outcome_without_stopped_field_decodes_as_completed() {
         // a pre-v3 peer's outcome line has no "stopped": tolerate it
         let line = r#"{"status":"ok","v":2,"optimizer":"Random Search",
@@ -1073,6 +1318,7 @@ mod tests {
             trace: vec![5.0],
             evals: 1,
             search_time_s: 0.0,
+            segments: Vec::new(),
             stopped: StopReason::Completed,
         };
         let j = Response::Outcome(out).to_json();

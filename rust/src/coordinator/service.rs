@@ -67,6 +67,9 @@ pub struct ServiceConfig {
     /// root seed; per-sampler-call and per-search seeds derive from it via
     /// [`rng::derive`]
     pub seed: u64,
+    /// serve the hermetic mock engine instead of compiling artifacts
+    /// ([`crate::models::DiffAxE::mock`]) — CI and artifact-free hosts
+    pub use_mock_engine: bool,
 }
 
 impl ServiceConfig {
@@ -75,7 +78,14 @@ impl ServiceConfig {
             artifacts_dir: artifacts_dir.into(),
             batch_window: Duration::from_millis(4),
             seed: 1,
+            use_mock_engine: false,
         }
+    }
+
+    /// A config serving the artifact-free mock engine (engine-kind wire
+    /// paths run hermetically; results are deterministic in `seed`).
+    pub fn mock() -> Self {
+        ServiceConfig { use_mock_engine: true, ..ServiceConfig::new("") }
     }
 }
 
@@ -316,12 +326,11 @@ impl JobRegistry {
             let mut core = entry.core.lock().unwrap();
             if core.state == JobState::Queued && core.result.is_none() {
                 let outcome = SearchOutcome {
-                    optimizer: entry.request.optimizer.name().to_string(),
-                    ranked: Vec::new(),
-                    trace: Vec::new(),
-                    evals: 0,
                     search_time_s: entry.submitted.elapsed().as_secs_f64(),
-                    stopped: StopReason::Cancelled,
+                    ..SearchOutcome::empty(
+                        entry.request.optimizer.name(),
+                        StopReason::Cancelled,
+                    )
                 };
                 core.state = JobState::Cancelled;
                 core.result = Some(Response::Outcome(outcome));
@@ -524,8 +533,14 @@ impl Service {
                 .name("diffaxe-engine".into())
                 .spawn(move || {
                     // the session must be constructed on this thread: PJRT
-                    // handles are !Send
-                    let session = match Session::load(&cfg.artifacts_dir) {
+                    // handles are !Send (the mock backend rides the same
+                    // engine type, so it follows the same rule)
+                    let session = if cfg.use_mock_engine {
+                        Ok(Session::mock())
+                    } else {
+                        Session::load(&cfg.artifacts_dir)
+                    };
+                    let session = match session {
                         Ok(s) => {
                             let _ = ready_tx.send(Ok(()));
                             s
@@ -872,12 +887,8 @@ mod tests {
 
     fn done_outcome(evals: usize) -> Response {
         Response::Outcome(SearchOutcome {
-            optimizer: "random".into(),
-            ranked: Vec::new(),
-            trace: Vec::new(),
             evals,
-            search_time_s: 0.0,
-            stopped: StopReason::Completed,
+            ..SearchOutcome::empty("random", StopReason::Completed)
         })
     }
 

@@ -15,7 +15,9 @@
 pub mod encode;
 pub mod params;
 pub mod round;
+pub mod structured;
 
 pub use encode::{decode_rounded, encode_norm, NORM_DIM};
 pub use params::{HwConfig, LoopOrder, TargetSpace, TrainingSpace};
 pub use round::round_to_target;
+pub use structured::{SharedBudget, StructuredConfig};

@@ -41,6 +41,7 @@
 
 use super::coarsen;
 use super::eval::{par_map, CacheStats, EvalCache};
+use super::structured::{self, StructuredSpec};
 use crate::baselines::{bo, gd, BoOptions, FixedArch, GdOptions};
 use crate::design_space::{decode_rounded, encode_norm, HwConfig, TargetSpace, NORM_DIM};
 use crate::energy::EnergyResult;
@@ -72,6 +73,13 @@ pub enum Objective {
     /// §VI: minimize whole-model EDP for an LLM inference stage (per-layer
     /// loop orders chosen optimally for every candidate base config).
     LlmEdp { model: LlmModel, stage: Stage, seq: u32, platform: Platform },
+    /// §V: structured DSE — minimize whole-model EDP with an independent
+    /// per-segment sub-configuration under a shared accelerator budget
+    /// (the O(10^17) heterogeneous setting; see [`crate::dse::structured`]).
+    StructuredEdp { spec: StructuredSpec },
+    /// §V: structured DSE for performance — minimize whole-model cycles
+    /// over the same per-segment space.
+    StructuredPerf { spec: StructuredSpec },
 }
 
 impl Objective {
@@ -81,7 +89,17 @@ impl Objective {
             Objective::Runtime { g, .. }
             | Objective::MinEdp { g }
             | Objective::MaxPerf { g } => Some(*g),
-            Objective::LlmEdp { .. } => None,
+            Objective::LlmEdp { .. }
+            | Objective::StructuredEdp { .. }
+            | Objective::StructuredPerf { .. } => None,
+        }
+    }
+
+    /// The structured-DSE spec, if this is a structured objective.
+    pub fn structured(&self) -> Option<StructuredSpec> {
+        match self {
+            Objective::StructuredEdp { spec } | Objective::StructuredPerf { spec } => Some(*spec),
+            _ => None,
         }
     }
 
@@ -91,8 +109,10 @@ impl Objective {
             Objective::Runtime { target_cycles, .. } => {
                 ((d.cycles - target_cycles) / target_cycles).abs()
             }
-            Objective::MinEdp { .. } | Objective::LlmEdp { .. } => d.edp,
-            Objective::MaxPerf { .. } => d.cycles,
+            Objective::MinEdp { .. }
+            | Objective::LlmEdp { .. }
+            | Objective::StructuredEdp { .. } => d.edp,
+            Objective::MaxPerf { .. } | Objective::StructuredPerf { .. } => d.cycles,
         }
     }
 
@@ -111,6 +131,12 @@ impl Objective {
             Objective::LlmEdp { model, stage, seq, platform } => {
                 let ev = super::llm::eval_model(hw, *model, *stage, *seq, *platform);
                 DesignReport::from_sim(*hw, &ev.sim, &ev.energy)
+            }
+            // single-config view of the structured space: `hw` replicated
+            // uniformly across segments (the heterogeneous searches go
+            // through dse::structured, not through here)
+            Objective::StructuredEdp { spec } | Objective::StructuredPerf { spec } => {
+                structured::eval_uniform(spec, hw)
             }
         }
     }
@@ -143,13 +169,17 @@ impl Objective {
                     DesignReport::from_sim(*hw, &ev.sim, &ev.energy)
                 })
             }
+            Objective::StructuredEdp { spec } | Objective::StructuredPerf { spec } => {
+                let spec = *spec;
+                par_map(cfgs, move |hw| structured::eval_uniform(&spec, hw))
+            }
         }
     }
 
     /// Loss transform for gradient descent: log-compress the wide-dynamic-
     /// range metrics (EDP spans decades); relative runtime error is already
     /// well-scaled.
-    fn gd_loss(&self, score: f64) -> f64 {
+    pub(crate) fn gd_loss(&self, score: f64) -> f64 {
         match self {
             Objective::Runtime { .. } => score,
             _ => score.max(f64::MIN_POSITIVE).ln(),
@@ -168,6 +198,8 @@ impl std::fmt::Display for Objective {
             Objective::LlmEdp { model, stage, seq, platform } => {
                 write!(f, "LLM-EDP {} {} seq={seq} {platform:?}", model.name(), stage.name())
             }
+            Objective::StructuredEdp { spec } => write!(f, "structured-EDP {spec}"),
+            Objective::StructuredPerf { spec } => write!(f, "structured-perf {spec}"),
         }
     }
 }
@@ -312,7 +344,7 @@ impl SearchCtx {
 
 /// Cap on eager `Vec` preallocation for eval-count-sized buffers: a huge
 /// `Budget::evals` plus an early deadline must not reserve gigabytes.
-const MAX_PREALLOC: usize = 65_536;
+pub(crate) const MAX_PREALLOC: usize = 65_536;
 
 /// Per-search driver over a [`SearchCtx`]: merges the ctx deadline with
 /// `Budget::wall_clock_s`, owns the search timer, and records the first
@@ -392,10 +424,12 @@ impl<'c> SearchRun<'c> {
     /// Order-preserving and bit-identical to one monolithic batch; an
     /// interruption returns the prefix evaluated so far.
     pub fn evaluate_chunked(&mut self, obj: &Objective, cfgs: &[HwConfig]) -> Vec<DesignReport> {
-        // LLM candidates run a whole-model evaluation each; keep chunks
-        // small so the deadline poll granularity stays sub-batch-second
+        // LLM/structured candidates run a whole-model evaluation each; keep
+        // chunks small so the deadline poll granularity stays sub-second
         let chunk = match obj {
-            Objective::LlmEdp { .. } => 16,
+            Objective::LlmEdp { .. }
+            | Objective::StructuredEdp { .. }
+            | Objective::StructuredPerf { .. } => 16,
             _ => 512,
         };
         let mut out = Vec::with_capacity(cfgs.len());
@@ -489,6 +523,11 @@ pub struct SearchOutcome {
     pub evals: usize,
     /// Wall-clock cost in seconds.
     pub search_time_s: f64,
+    /// Per-segment configurations of structured-DSE designs, parallel to
+    /// `ranked` (`ranked[i].hw` is then the provisioned envelope and
+    /// `segments[i]` its per-segment sub-configurations). Empty for
+    /// single-config objectives.
+    pub segments: Vec<Vec<HwConfig>>,
     /// Why the search returned; anything but [`StopReason::Completed`]
     /// marks this outcome as partial (still ranked, still well-formed).
     pub stopped: StopReason,
@@ -502,19 +541,56 @@ impl SearchOutcome {
         reports: Vec<DesignReport>,
         search_time_s: f64,
     ) -> SearchOutcome {
+        Self::from_reports_with_segments(optimizer, objective, reports, Vec::new(), search_time_s)
+    }
+
+    /// [`SearchOutcome::from_reports`] carrying per-design segment lists
+    /// (the structured-DSE constructor): `segments` is parallel to
+    /// `reports` (or empty) and is ranked in lockstep with them.
+    pub fn from_reports_with_segments(
+        optimizer: &str,
+        objective: &Objective,
+        reports: Vec<DesignReport>,
+        segments: Vec<Vec<HwConfig>>,
+        search_time_s: f64,
+    ) -> SearchOutcome {
+        debug_assert!(
+            segments.is_empty() || segments.len() == reports.len(),
+            "segments must be parallel to reports"
+        );
         let trace: Vec<f64> = reports.iter().map(|d| objective.score_report(d)).collect();
         let mut order: Vec<usize> = (0..reports.len()).collect();
         order.sort_by(|&a, &b| {
             trace[a].partial_cmp(&trace[b]).unwrap_or(std::cmp::Ordering::Equal)
         });
-        let ranked: Vec<DesignReport> = order.into_iter().map(|i| reports[i]).collect();
+        let ranked: Vec<DesignReport> = order.iter().map(|&i| reports[i]).collect();
+        let segments = if segments.is_empty() {
+            Vec::new()
+        } else {
+            order.iter().map(|&i| segments[i].clone()).collect()
+        };
         SearchOutcome {
             optimizer: optimizer.to_string(),
             evals: reports.len(),
             ranked,
             trace,
             search_time_s,
+            segments,
             stopped: StopReason::Completed,
+        }
+    }
+
+    /// An empty (zero-evaluation) outcome — the well-formed answer to a
+    /// drained budget or a pre-cancelled search.
+    pub fn empty(optimizer: &str, stopped: StopReason) -> SearchOutcome {
+        SearchOutcome {
+            optimizer: optimizer.to_string(),
+            ranked: Vec::new(),
+            trace: Vec::new(),
+            evals: 0,
+            search_time_s: 0.0,
+            segments: Vec::new(),
+            stopped,
         }
     }
 
@@ -548,6 +624,7 @@ impl SearchOutcome {
     /// Keep only the top-`k` ranked designs (trace and accounting intact).
     pub fn truncated(mut self, k: usize) -> SearchOutcome {
         self.ranked.truncate(k);
+        self.segments.truncate(k);
         self
     }
 }
@@ -565,6 +642,14 @@ impl SearchOutcome {
 pub fn evaluate_batch(cfgs: &[HwConfig], g: &Gemm) -> Vec<(SimResult, EnergyResult)> {
     let g = *g;
     par_map(cfgs, move |hw| EvalCache::global().evaluate(hw, &g))
+}
+
+/// A `Budget::evals(0)` search is answered immediately with a well-formed
+/// empty outcome (`stopped: BudgetExhausted`) rather than spending a
+/// forced minimum evaluation (or dividing by zero in a schedule
+/// derivation). Every strategy checks this before starting its run.
+pub(crate) fn drained(name: &str, budget: &Budget) -> Option<SearchOutcome> {
+    (budget.evals == 0).then(|| SearchOutcome::empty(name, StopReason::BudgetExhausted))
 }
 
 // ---------------------------------------------------------------------------
@@ -679,6 +764,20 @@ impl OptimizerKind {
     /// Whether this strategy can serve the given objective (lets callers
     /// reject an unsupported pairing before any budget is spent).
     pub fn supports(&self, obj: &Objective) -> bool {
+        if obj.structured().is_some() {
+            // §V structured DSE: the diffusion engine (per-segment
+            // conditioning) plus the generic-encoding baselines
+            return matches!(
+                self,
+                OptimizerKind::DiffAxE
+                    | OptimizerKind::VanillaBo
+                    | OptimizerKind::VanillaGd
+                    | OptimizerKind::DosaGd
+                    | OptimizerKind::Polaris
+                    | OptimizerKind::RandomSearch
+                    | OptimizerKind::Fixed(_)
+            );
+        }
         match self {
             OptimizerKind::GanDse => matches!(obj, Objective::Runtime { .. }),
             OptimizerKind::AirchitectV1 | OptimizerKind::AirchitectV2 => obj.gemm().is_some(),
@@ -723,6 +822,12 @@ impl Optimizer for DiffAxE {
         budget: &Budget,
         seed: u64,
     ) -> Result<SearchOutcome> {
+        if let Some(out) = drained(self.name(), budget) {
+            return Ok(out);
+        }
+        if let Some(spec) = obj.structured() {
+            return structured::search_engine(self, ctx, obj, &spec, budget, seed);
+        }
         let mut run = SearchRun::start(ctx, budget);
         let b = self.stats.gen_batch;
         let cfgs = match obj {
@@ -778,6 +883,9 @@ impl Optimizer for DiffAxE {
                 cfgs.dedup();
                 cfgs
             }
+            Objective::StructuredEdp { .. } | Objective::StructuredPerf { .. } => {
+                unreachable!("structured objectives dispatch to dse::structured above")
+            }
         };
         if cfgs.is_empty() {
             // interrupted before the first sampler chunk finished: a clean
@@ -812,6 +920,9 @@ impl Optimizer for GanDse<'_> {
         let Objective::Runtime { g, target_cycles } = obj else {
             bail!("GANDSE is runtime-conditioned only; objective {obj} unsupported");
         };
+        if let Some(out) = drained(self.name(), budget) {
+            return Ok(out);
+        }
         let mut run = SearchRun::start(ctx, budget);
         let b = self.engine.stats.gen_batch;
         let p = self.engine.stats.stats_for(g).norm_runtime(*target_cycles);
@@ -844,10 +955,13 @@ impl Optimizer for Airchitect<'_> {
         budget: &Budget,
         _seed: u64,
     ) -> Result<SearchOutcome> {
-        let mut run = SearchRun::start(ctx, budget);
         let g = obj
             .gemm()
             .with_context(|| format!("AIRCHITECT recommends per-GEMM; objective {obj} unsupported"))?;
+        if let Some(out) = drained(self.name(), budget) {
+            return Ok(out);
+        }
+        let mut run = SearchRun::start(ctx, budget);
         let reports = if run.should_stop() {
             Vec::new()
         } else {
@@ -878,7 +992,7 @@ pub struct VanillaBo {
 /// Clamp BO options so `bo::minimize`'s invariants hold under any budget.
 /// The second return is true when `budget.evals` cut the configured BO
 /// schedule short (reported as [`StopReason::BudgetExhausted`]).
-fn bo_opts_for(opts: &BoOptions, budget: &Budget) -> (BoOptions, bool) {
+pub(crate) fn bo_opts_for(opts: &BoOptions, budget: &Budget) -> (BoOptions, bool) {
     let mut o = opts.clone();
     o.budget = budget.evals.max(2);
     o.n_init = o.n_init.clamp(2, o.budget);
@@ -891,7 +1005,11 @@ fn bo_opts_for(opts: &BoOptions, budget: &Budget) -> (BoOptions, bool) {
 /// `1 + 2·dim` for central finite differences; each restart spends
 /// `steps + 1` gradient evaluations. The second return is true when the
 /// configured schedule was truncated to fit the budget.
-fn gd_opts_for(opts: &GdOptions, budget: &Budget, evals_per_step: usize) -> (GdOptions, bool) {
+pub(crate) fn gd_opts_for(
+    opts: &GdOptions,
+    budget: &Budget,
+    evals_per_step: usize,
+) -> (GdOptions, bool) {
     let mut o = opts.clone();
     let unit = evals_per_step.max(1);
     o.restarts = o.restarts.max(1).min((budget.evals / (2 * unit)).max(1));
@@ -912,6 +1030,12 @@ impl Optimizer for VanillaBo {
         budget: &Budget,
         seed: u64,
     ) -> Result<SearchOutcome> {
+        if let Some(out) = drained(self.name(), budget) {
+            return Ok(out);
+        }
+        if let Some(spec) = obj.structured() {
+            return structured::search_bo(&self.opts, ctx, obj, &spec, budget, seed);
+        }
         let (o, clamped) = bo_opts_for(&self.opts, budget);
         // the objective closure (progress) and the stop closure (polling)
         // both need the run; RefCell arbitrates the disjoint borrows
@@ -964,6 +1088,13 @@ impl Optimizer for LatentBo<'_> {
         budget: &Budget,
         seed: u64,
     ) -> Result<SearchOutcome> {
+        anyhow::ensure!(
+            obj.structured().is_none(),
+            "latent BO does not serve structured objectives; objective {obj} unsupported"
+        );
+        if let Some(out) = drained(self.name(), budget) {
+            return Ok(out);
+        }
         let (o, clamped) = bo_opts_for(&self.opts, budget);
         let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
         let mut rng = rng::split(seed, 11);
@@ -1035,6 +1166,22 @@ impl Optimizer for VanillaGd<'_> {
         budget: &Budget,
         seed: u64,
     ) -> Result<SearchOutcome> {
+        if let Some(out) = drained(self.name(), budget) {
+            return Ok(out);
+        }
+        if let Some(spec) = obj.structured() {
+            // fine-grid FD over the concatenated per-segment encoding
+            return structured::search_fd(
+                "Vanilla GD",
+                false,
+                &self.opts,
+                ctx,
+                obj,
+                &spec,
+                budget,
+                seed,
+            );
+        }
         let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
         let mut rng = rng::split(seed, 12);
         let mut clamped = false;
@@ -1123,6 +1270,22 @@ impl Optimizer for DosaGd {
         budget: &Budget,
         seed: u64,
     ) -> Result<SearchOutcome> {
+        if let Some(out) = drained(self.name(), budget) {
+            return Ok(out);
+        }
+        if let Some(spec) = obj.structured() {
+            // DOSA stays on the coarse grid, per segment (Table IV note)
+            return structured::search_fd(
+                "DOSA (coarse GD)",
+                true,
+                &self.opts,
+                ctx,
+                obj,
+                &spec,
+                budget,
+                seed,
+            );
+        }
         let (opts, clamped) = gd_opts_for(&self.opts, budget, 1 + 2 * NORM_DIM);
         let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
         let mut rng = rng::split(seed, 13);
@@ -1179,6 +1342,20 @@ impl Optimizer for Polaris<'_> {
         budget: &Budget,
         seed: u64,
     ) -> Result<SearchOutcome> {
+        if let Some(out) = drained(self.name(), budget) {
+            return Ok(out);
+        }
+        if let Some(spec) = obj.structured() {
+            return structured::search_polaris(
+                self.engine,
+                &self.opts,
+                ctx,
+                obj,
+                &spec,
+                budget,
+                seed,
+            );
+        }
         let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
         let mut rng = rng::split(seed, 14);
         let mut clamped = false;
@@ -1292,6 +1469,12 @@ impl Optimizer for RandomSearch {
         budget: &Budget,
         seed: u64,
     ) -> Result<SearchOutcome> {
+        if let Some(out) = drained(self.name(), budget) {
+            return Ok(out);
+        }
+        if let Some(spec) = obj.structured() {
+            return structured::search_random(ctx, obj, &spec, budget, seed);
+        }
         let mut run = SearchRun::start(ctx, budget);
         let mut rng = rng::split(seed, 15);
         let n = budget.evals.max(1);
@@ -1324,6 +1507,13 @@ impl Optimizer for FixedArch {
         budget: &Budget,
         _seed: u64,
     ) -> Result<SearchOutcome> {
+        if let Some(out) = drained(FixedArch::name(self), budget) {
+            return Ok(out);
+        }
+        if let Some(spec) = obj.structured() {
+            // the fixed silicon replicated uniformly across segments
+            return structured::search_fixed(*self, ctx, obj, &spec, budget);
+        }
         let mut run = SearchRun::start(ctx, budget);
         // one candidate: the fixed silicon (LLM objectives still grant it
         // per-layer loop-order choice — charitable, see FixedArch::config)
@@ -1367,6 +1557,13 @@ impl Session {
     /// Load the AOT artifacts in `dir` and wrap them in a session.
     pub fn load(dir: &Path) -> Result<Session> {
         Ok(Session::new(DiffAxE::load(dir)?))
+    }
+
+    /// A session around the hermetic mock engine ([`DiffAxE::mock`]):
+    /// every engine-backed strategy works, deterministically, without
+    /// artifacts. CI runs the engine-kind suites through this.
+    pub fn mock() -> Session {
+        Session::new(DiffAxE::mock())
     }
 
     /// A session without the generative engine: only the simulator-backed

@@ -110,7 +110,26 @@ pub fn eval_model(
 
 /// [`eval_model`] over an already-shared [`ModelWorkload`] (the objective
 /// hot loop holds one and skips the memo lookup entirely).
+///
+/// An **empty** workload (zero GEMMs) evaluates to the zero cost point —
+/// a well-formed [`SeqEval`] with zero cycles/energy — instead of
+/// panicking; searches over such degenerate objectives return empty
+/// outcomes (see `Budget`/`SearchOutcome` edge-case handling in
+/// [`crate::dse::api`]).
 pub fn eval_workload(base: &HwConfig, wl: &ModelWorkload, platform: Platform) -> SeqEval {
+    if wl.gemms.is_empty() {
+        return SeqEval {
+            cfg: SeqConfig { base: *base, orders: Vec::new() },
+            sim: SimResult::zero(),
+            energy: EnergyResult {
+                e_dyn_uj: 0.0,
+                e_static_uj: 0.0,
+                power_w: 0.0,
+                edp: 0.0,
+                runtime_s: 0.0,
+            },
+        };
+    }
     let cache = EvalCache::global();
     let coeffs = platform.coeffs(base);
     // one cached simulation per (distinct shape, order); order selection by

@@ -24,6 +24,10 @@
 //! * `Objective::LlmEdp` — §VI / Figs 22-24 / Tables VII-VIII: LLM
 //!   inference co-design on ASIC + FPGA ([`llm`] holds the whole-model
 //!   sequence evaluator).
+//! * `Objective::StructuredEdp` / `Objective::StructuredPerf` — §V:
+//!   structured DSE with per-layer-segment heterogeneous sub-configs over
+//!   a shared accelerator budget, an O(10^17) joint space ([`structured`]
+//!   holds the spec, the segment evaluator and the per-strategy searches).
 //!
 //! The coordinator serves the same types over the wire
 //! ([`crate::coordinator::protocol`]).
@@ -33,12 +37,14 @@ pub mod eval;
 pub mod llm;
 pub mod perfgen;
 pub mod perfopt;
+pub mod structured;
 
 pub use api::{
     evaluate_batch, Budget, DesignReport, Objective, Optimizer, OptimizerKind, ProgressSink,
     SearchCtx, SearchEvent, SearchOutcome, SearchRun, Session, StopReason,
 };
 pub use eval::{par_map, CacheStats, EvalCache};
+pub use structured::{StructuredDesign, StructuredSpec};
 
 use crate::design_space::HwConfig;
 use crate::energy::{asic, EnergyResult};

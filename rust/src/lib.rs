@@ -39,6 +39,14 @@
 //! [`dse::StopReason`] records whether it completed or returned partial
 //! results.
 //!
+//! Structured DSE (§V) rides the same trait: a [`dse::StructuredSpec`]
+//! partitions a DNN/LLM workload into layer segments, each with its own
+//! sub-configuration under a shared accelerator budget — an O(10^17)
+//! joint space searched via `Objective::StructuredEdp` /
+//! `Objective::StructuredPerf` (see [`dse::structured`]). Without AOT
+//! artifacts, [`models::DiffAxE::mock`] provides a deterministic hermetic
+//! engine so every engine-backed strategy still runs.
+//!
 //! The [`coordinator`] serves the same types over a versioned
 //! newline-JSON TCP protocol (generic `search` + multi-search `batch`
 //! requests, plus v3 job forms: `submit`/`status`/`cancel`/`jobs` and a

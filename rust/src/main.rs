@@ -19,6 +19,13 @@ subcommands:
                 [--wall-clock S] [--seed S] [--top N] [--artifacts DIR];
                 engine-backed optimizers need the AOT artifacts, the rest
                 run standalone)
+  structured    run a structured DSE search: per-layer-segment heterogeneous
+                sub-configs over a shared accelerator budget (O(10^17) space)
+                (--model bert-base|opt-350m|llama-2-7b --stage prefill|decode
+                --seq N --platform asic|fpga --segments S --objective edp|perf
+                [--pe N] [--buf-kb K] [--bw B] --optimizer NAME --evals N
+                [--seed S] [--top N] [--artifacts DIR] [--mock]; without
+                artifacts the engine kinds run on the hermetic mock engine)
   serve         start the DSE service + TCP front end
                 (--artifacts DIR --addr 127.0.0.1:7979 --seed S)
   submit        submit a search job to a running server, print its job id
@@ -36,6 +43,7 @@ fn main() -> Result<()> {
         Some("gen-dataset") => cmd_gen_dataset(&args),
         Some("sim") => cmd_sim(&args),
         Some("search") => cmd_search(&args),
+        Some("structured") => cmd_structured(&args),
         Some("serve") => cmd_serve(&args),
         Some("submit") => cmd_submit(&args),
         Some("watch") => cmd_watch(&args),
@@ -225,6 +233,101 @@ fn cmd_search(args: &Args) -> Result<()> {
             d.edp,
             objective.score_report(d)
         );
+    }
+    Ok(())
+}
+
+fn cmd_structured(args: &Args) -> Result<()> {
+    use diffaxe::design_space::SharedBudget;
+    use diffaxe::dse::llm::Platform;
+    use diffaxe::dse::{Budget, Objective, OptimizerKind, Session, StopReason, StructuredSpec};
+    use diffaxe::models::DiffAxE;
+    use diffaxe::workload::{llm::DEFAULT_SEQ, LlmModel, Stage};
+    let model_name = args.get_str("model", "bert-base");
+    let model = LlmModel::from_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name:?}"))?;
+    let stage_name = args.get_str("stage", "prefill");
+    let stage = Stage::from_name(stage_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown stage {stage_name:?}"))?;
+    let platform_name = args.get_str("platform", "asic");
+    let platform = Platform::from_name(platform_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown platform {platform_name:?}"))?;
+    let u32_arg = |name: &str, default: u32| -> Result<u32> {
+        u32::try_from(args.get_u64(name, default as u64)?)
+            .map_err(|_| anyhow::anyhow!("--{name} out of range"))
+    };
+    let defaults = SharedBudget::default();
+    let budget = SharedBudget {
+        pe: u32_arg("pe", defaults.pe)?,
+        buf_b: match args.get("buf-kb") {
+            Some(kb) => (kb.parse::<f64>()? * 1024.0).round() as u64,
+            None => defaults.buf_b,
+        },
+        bw: u32_arg("bw", defaults.bw)?,
+    };
+    let spec = StructuredSpec {
+        model,
+        stage,
+        seq: u32_arg("seq", DEFAULT_SEQ)?,
+        platform,
+        segments: u32_arg("segments", 3)?,
+        budget,
+    };
+    spec.validate().map_err(|e| anyhow::anyhow!("invalid spec: {e}"))?;
+    let objective = match args.get_str("objective", "edp") {
+        "edp" => Objective::StructuredEdp { spec },
+        "perf" => Objective::StructuredPerf { spec },
+        other => anyhow::bail!("unknown structured objective {other:?} (edp|perf)"),
+    };
+    let name = args.get_str("optimizer", "random");
+    let kind = OptimizerKind::parse(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown optimizer {name:?}"))?;
+    anyhow::ensure!(
+        kind.supports(&objective),
+        "optimizer {:?} does not serve structured objectives",
+        kind.name()
+    );
+    let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let mut session = if !args.flag("mock") && DiffAxE::artifacts_present(&dir) {
+        Session::load(&dir)?
+    } else {
+        Session::mock()
+    };
+    if kind.needs_engine() && session.engine().is_some_and(|e| e.is_mock()) {
+        eprintln!("note: running on the hermetic mock engine (no artifacts)");
+    }
+    let out = session.search(
+        kind,
+        &objective,
+        &Budget::evals(args.get_usize("evals", 256)?),
+        args.get_u64("seed", 1)?,
+    )?;
+    println!(
+        "{}: {} evaluations in {:.2}s on {objective} (space ~{:.2e} points){}",
+        out.optimizer,
+        out.evals,
+        out.search_time_s,
+        spec.cardinality(),
+        if out.stopped == StopReason::Completed {
+            String::new()
+        } else {
+            format!(" [{}]", out.stopped.name())
+        }
+    );
+    for (i, d) in out.ranked.iter().take(args.get_usize("top", 3)?).enumerate() {
+        println!(
+            "#{:<2} envelope {}  cycles={:.3e} power={:.2}W edp={:.3e}",
+            i + 1,
+            d.hw,
+            d.cycles,
+            d.power_w,
+            d.edp
+        );
+        if let Some(segs) = out.segments.get(i) {
+            for (si, s) in segs.iter().enumerate() {
+                println!("    segment {si}: {s}");
+            }
+        }
     }
     Ok(())
 }

@@ -1,7 +1,20 @@
 //! The DiffAxE model engine: every AOT artifact compiled and wrapped behind
 //! typed batch APIs. This is the only place that knows artifact file names
 //! and executable input layouts.
+//!
+//! The engine surface is backed by one of two interchangeable backends:
+//!
+//! * **Compiled** — the PJRT executables loaded from `artifacts/` (the
+//!   real diffusion/AE/PP/surrogate models), and
+//! * **Mock** — the hermetic, deterministic, artifact-free stand-in
+//!   ([`crate::models::mock::MockEngine`]) CI runs the engine-kind code
+//!   paths against.
+//!
+//! Shared contract invariants (batch caps, non-empty requests, row widths)
+//! are enforced *here*, before dispatch, so both backends are held to the
+//! same wire-visible behaviour.
 
+use super::mock::MockEngine;
 use super::norm::NormStats;
 use crate::design_space::{decode_rounded, HwConfig};
 use crate::runtime::{mat_f32, scalar_u32, to_vec_f32, vec_i32, HloExec, Runtime};
@@ -18,9 +31,8 @@ pub enum ClassMode {
     PerfOpt,
 }
 
-/// All compiled executables + the normalization contract.
-pub struct DiffAxE {
-    pub stats: NormStats,
+/// All compiled executables of the artifact set.
+struct Compiled {
     sampler_runtime: HloExec,
     sampler_edp: HloExec,
     sampler_perfopt: HloExec,
@@ -35,14 +47,26 @@ pub struct DiffAxE {
     airchitect2: HloExec,
 }
 
+enum Backend {
+    /// PJRT executables (raw C pointers — deliberately `!Send`).
+    Compiled(Box<Compiled>),
+    /// Hermetic deterministic stand-in (no artifacts, no files).
+    Mock(MockEngine),
+}
+
+/// The engine: normalization contract + one backend.
+pub struct DiffAxE {
+    pub stats: NormStats,
+    backend: Backend,
+}
+
 impl DiffAxE {
     /// Compile every artifact in `dir` (one-time service-start cost).
     pub fn load(dir: &Path) -> Result<DiffAxE> {
         let stats = NormStats::load(&dir.join("norm_stats.json"))?;
         let rt = Runtime::cpu()?;
         let load = |name: &str| rt.load_hlo(&dir.join(name));
-        Ok(DiffAxE {
-            stats,
+        let compiled = Compiled {
             sampler_runtime: load("sampler_runtime.hlo.txt")?,
             sampler_edp: load("sampler_edp.hlo.txt")?,
             sampler_perfopt: load("sampler_perfopt.hlo.txt")?,
@@ -55,7 +79,20 @@ impl DiffAxE {
             gandse: load("gandse.hlo.txt")?,
             airchitect1: load("airchitect1.hlo.txt")?,
             airchitect2: load("airchitect2.hlo.txt")?,
-        })
+        };
+        Ok(DiffAxE { stats, backend: Backend::Compiled(Box::new(compiled)) })
+    }
+
+    /// The hermetic engine: a synthetic normalization contract plus the
+    /// deterministic [`MockEngine`] backend. No files are touched; every
+    /// engine-kind search path runs, seeded and reproducible.
+    pub fn mock() -> DiffAxE {
+        DiffAxE { stats: NormStats::synthetic(), backend: Backend::Mock(MockEngine) }
+    }
+
+    /// True when this engine runs the artifact-free mock backend.
+    pub fn is_mock(&self) -> bool {
+        matches!(self.backend, Backend::Mock(_))
     }
 
     /// True if `dir` holds a complete artifact set.
@@ -69,13 +106,27 @@ impl DiffAxE {
         self.stats.hw_dim
     }
 
+    /// Shared sampler-request invariants, enforced for both backends.
+    fn check_sampler_request(&self, n: usize) -> Result<()> {
+        let b = self.stats.gen_batch;
+        anyhow::ensure!(n > 0, "empty generation request");
+        anyhow::ensure!(n <= b, "request {n} exceeds sampler batch {b}; chunk upstream");
+        Ok(())
+    }
+
     // ---- diffusion samplers ------------------------------------------------
 
     /// Runtime-conditioned generation (§III-C): one request per batch slot
     /// `(p_norm, w_norm)`. Pads to the executable's fixed batch and truncates
     /// the result, so any `conds.len() <= gen_batch` works.
     pub fn sample_runtime(&self, seed: u32, conds: &[(f32, [f32; 3])]) -> Result<Vec<HwConfig>> {
-        self.run_sampler(&self.sampler_runtime, seed, SamplerCond::Float(conds))
+        self.check_sampler_request(conds.len())?;
+        match &self.backend {
+            Backend::Compiled(c) => {
+                c.run_sampler(&c.sampler_runtime, &self.stats, seed, SamplerCond::Float(conds))
+            }
+            Backend::Mock(m) => Ok(m.sample_runtime(&self.stats, seed, conds)),
+        }
     }
 
     /// Class-conditioned generation (§III-D/E).
@@ -85,18 +136,139 @@ impl DiffAxE {
         seed: u32,
         conds: &[(i32, [f32; 3])],
     ) -> Result<Vec<HwConfig>> {
-        let exe = match mode {
-            ClassMode::Edp => &self.sampler_edp,
-            ClassMode::PerfOpt => &self.sampler_perfopt,
-        };
-        self.run_sampler(exe, seed, SamplerCond::Class(conds))
+        self.check_sampler_request(conds.len())?;
+        match &self.backend {
+            Backend::Compiled(c) => {
+                let exe = match mode {
+                    ClassMode::Edp => &c.sampler_edp,
+                    ClassMode::PerfOpt => &c.sampler_perfopt,
+                };
+                c.run_sampler(exe, &self.stats, seed, SamplerCond::Class(conds))
+            }
+            Backend::Mock(m) => Ok(m.sample_class(&self.stats, mode, seed, conds)),
+        }
     }
 
-    fn run_sampler(&self, exe: &HloExec, seed: u32, conds: SamplerCond) -> Result<Vec<HwConfig>> {
-        let b = self.stats.gen_batch;
+    // ---- latent-space plumbing (for latent-GD/BO baselines) ---------------
+
+    /// Encode normalized hardware vectors into the Phase-1 latent space.
+    pub fn encode(&self, hw_rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        match &self.backend {
+            Backend::Compiled(c) => c.batched_map(
+                &c.encoder,
+                &self.stats,
+                hw_rows,
+                self.hw_dim(),
+                self.stats.latent_dim,
+            ),
+            Backend::Mock(m) => m.encode(&self.stats, hw_rows),
+        }
+    }
+
+    /// Decode latents back to normalized hardware vectors.
+    pub fn decode(&self, latents: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        match &self.backend {
+            Backend::Compiled(c) => c.batched_map(
+                &c.decoder,
+                &self.stats,
+                latents,
+                self.stats.latent_dim,
+                self.hw_dim(),
+            ),
+            Backend::Mock(m) => m.decode(&self.stats, latents),
+        }
+    }
+
+    /// Decode latents and round into the target design space.
+    pub fn decode_rounded(&self, latents: &[Vec<f32>]) -> Result<Vec<HwConfig>> {
+        Ok(self.decode(latents)?.iter().map(|v| decode_rounded(v)).collect())
+    }
+
+    /// PP prediction for (latent, workload) pairs → normalized metric.
+    pub fn pp_predict(&self, latents: &[Vec<f32>], w: &Gemm) -> Result<Vec<f32>> {
+        match &self.backend {
+            Backend::Compiled(c) => c.pp_predict(&self.stats, latents, w),
+            Backend::Mock(m) => m.pp_predict(&self.stats, latents, w),
+        }
+    }
+
+    /// PP loss + gradient wrt latent, for latent-space gradient descent.
+    /// Returns (losses, grads).
+    #[allow(clippy::type_complexity)]
+    pub fn pp_grad(
+        &self,
+        latents: &[Vec<f32>],
+        w: &Gemm,
+        targets: &[f32],
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        anyhow::ensure!(latents.len() == targets.len());
+        match &self.backend {
+            Backend::Compiled(c) => c.pp_grad(&self.stats, latents, w, targets),
+            Backend::Mock(m) => m.pp_grad(&self.stats, latents, w, targets),
+        }
+    }
+
+    /// Differentiable surrogate prediction in hardware space (vanilla GD).
+    pub fn surrogate_predict(&self, hw_rows: &[Vec<f32>], w: &Gemm) -> Result<Vec<f32>> {
+        match &self.backend {
+            Backend::Compiled(c) => c.surrogate_predict(&self.stats, hw_rows, w),
+            Backend::Mock(m) => m.surrogate_predict(hw_rows, w),
+        }
+    }
+
+    /// Surrogate loss + gradient wrt hw (vanilla GD step).
+    #[allow(clippy::type_complexity)]
+    pub fn surrogate_grad(
+        &self,
+        hw_rows: &[Vec<f32>],
+        w: &Gemm,
+        targets: &[f32],
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        anyhow::ensure!(hw_rows.len() == targets.len());
+        match &self.backend {
+            Backend::Compiled(c) => c.surrogate_grad(&self.stats, hw_rows, w, targets),
+            Backend::Mock(m) => m.surrogate_grad(hw_rows, w, targets),
+        }
+    }
+
+    /// GANDSE one-shot generation.
+    pub fn gandse_generate(&self, seed: u32, conds: &[(f32, [f32; 3])]) -> Result<Vec<HwConfig>> {
+        self.check_sampler_request(conds.len())?;
+        match &self.backend {
+            Backend::Compiled(c) => {
+                c.run_sampler(&c.gandse, &self.stats, seed, SamplerCond::Float(conds))
+            }
+            Backend::Mock(m) => Ok(m.gandse_generate(&self.stats, seed, conds)),
+        }
+    }
+
+    /// AIRCHITECT v1 recommendation: argmax over the fixed grid.
+    pub fn airchitect_v1(&self, w: &Gemm) -> Result<HwConfig> {
+        match &self.backend {
+            Backend::Compiled(c) => c.airchitect_v1(&self.stats, w),
+            Backend::Mock(m) => m.airchitect_v1(&self.stats, w),
+        }
+    }
+
+    /// AIRCHITECT v2 recommendation: direct regression.
+    pub fn airchitect_v2(&self, w: &Gemm) -> Result<HwConfig> {
+        match &self.backend {
+            Backend::Compiled(c) => c.airchitect_v2(&self.stats, w),
+            Backend::Mock(m) => m.airchitect_v2(&self.stats, w),
+        }
+    }
+}
+
+impl Compiled {
+    fn run_sampler(
+        &self,
+        exe: &HloExec,
+        stats: &NormStats,
+        seed: u32,
+        conds: SamplerCond,
+    ) -> Result<Vec<HwConfig>> {
+        let b = stats.gen_batch;
         let n = conds.len();
-        anyhow::ensure!(n > 0, "empty generation request");
-        anyhow::ensure!(n <= b, "request {n} exceeds sampler batch {b}; chunk upstream");
         let mut w_flat = Vec::with_capacity(b * 3);
         let cond_lit = match conds {
             SamplerCond::Float(cs) => {
@@ -121,32 +293,14 @@ impl DiffAxE {
         let w_lit = mat_f32(&w_flat, b, 3)?;
         let out = exe.run(&[scalar_u32(seed), cond_lit, w_lit])?;
         let hw = to_vec_f32(&out[0])?;
-        let d = self.hw_dim();
+        let d = stats.hw_dim;
         anyhow::ensure!(hw.len() == b * d, "sampler output shape mismatch");
         Ok(hw.chunks(d).take(n).map(decode_rounded).collect())
     }
 
-    // ---- latent-space plumbing (for latent-GD/BO baselines) ---------------
-
-    /// Encode normalized hardware vectors into the Phase-1 latent space.
-    pub fn encode(&self, hw_rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        self.batched_map(&self.encoder, hw_rows, self.hw_dim(), self.stats.latent_dim, &[])
-    }
-
-    /// Decode latents back to normalized hardware vectors.
-    pub fn decode(&self, latents: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        self.batched_map(&self.decoder, latents, self.stats.latent_dim, self.hw_dim(), &[])
-    }
-
-    /// Decode latents and round into the target design space.
-    pub fn decode_rounded(&self, latents: &[Vec<f32>]) -> Result<Vec<HwConfig>> {
-        Ok(self.decode(latents)?.iter().map(|v| decode_rounded(v)).collect())
-    }
-
-    /// PP prediction for (latent, workload) pairs → normalized metric.
-    pub fn pp_predict(&self, latents: &[Vec<f32>], w: &Gemm) -> Result<Vec<f32>> {
-        let b = self.stats.pp_batch;
-        let d = self.stats.latent_dim;
+    fn pp_predict(&self, stats: &NormStats, latents: &[Vec<f32>], w: &Gemm) -> Result<Vec<f32>> {
+        let b = stats.pp_batch;
+        let d = stats.latent_dim;
         let mut out = Vec::with_capacity(latents.len());
         for chunk in latents.chunks(b) {
             let (v_lit, n) = pad_rows(chunk, d, b)?;
@@ -158,18 +312,16 @@ impl DiffAxE {
         Ok(out)
     }
 
-    /// PP loss + gradient wrt latent, for latent-space gradient descent.
-    /// Returns (losses, grads).
     #[allow(clippy::type_complexity)]
-    pub fn pp_grad(
+    fn pp_grad(
         &self,
+        stats: &NormStats,
         latents: &[Vec<f32>],
         w: &Gemm,
         targets: &[f32],
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        anyhow::ensure!(latents.len() == targets.len());
-        let b = self.stats.pp_batch;
-        let d = self.stats.latent_dim;
+        let b = stats.pp_batch;
+        let d = stats.latent_dim;
         let mut losses = Vec::new();
         let mut grads = Vec::new();
         for (vchunk, tchunk) in latents.chunks(b).zip(targets.chunks(b)) {
@@ -186,10 +338,14 @@ impl DiffAxE {
         Ok((losses, grads))
     }
 
-    /// Differentiable surrogate prediction in hardware space (vanilla GD).
-    pub fn surrogate_predict(&self, hw_rows: &[Vec<f32>], w: &Gemm) -> Result<Vec<f32>> {
-        let b = self.stats.pp_batch;
-        let d = self.hw_dim();
+    fn surrogate_predict(
+        &self,
+        stats: &NormStats,
+        hw_rows: &[Vec<f32>],
+        w: &Gemm,
+    ) -> Result<Vec<f32>> {
+        let b = stats.pp_batch;
+        let d = stats.hw_dim;
         let mut out = Vec::new();
         for chunk in hw_rows.chunks(b) {
             let (h_lit, n) = pad_rows(chunk, d, b)?;
@@ -200,17 +356,16 @@ impl DiffAxE {
         Ok(out)
     }
 
-    /// Surrogate loss + gradient wrt hw (vanilla GD step).
     #[allow(clippy::type_complexity)]
-    pub fn surrogate_grad(
+    fn surrogate_grad(
         &self,
+        stats: &NormStats,
         hw_rows: &[Vec<f32>],
         w: &Gemm,
         targets: &[f32],
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        anyhow::ensure!(hw_rows.len() == targets.len());
-        let b = self.stats.pp_batch;
-        let d = self.hw_dim();
+        let b = stats.pp_batch;
+        let d = stats.hw_dim;
         let mut losses = Vec::new();
         let mut grads = Vec::new();
         for (hchunk, tchunk) in hw_rows.chunks(b).zip(targets.chunks(b)) {
@@ -227,14 +382,8 @@ impl DiffAxE {
         Ok((losses, grads))
     }
 
-    /// GANDSE one-shot generation.
-    pub fn gandse_generate(&self, seed: u32, conds: &[(f32, [f32; 3])]) -> Result<Vec<HwConfig>> {
-        self.run_sampler(&self.gandse, seed, SamplerCond::Float(conds))
-    }
-
-    /// AIRCHITECT v1 recommendation: argmax over the fixed grid.
-    pub fn airchitect_v1(&self, w: &Gemm) -> Result<HwConfig> {
-        let b = self.stats.pp_batch;
+    fn airchitect_v1(&self, stats: &NormStats, w: &Gemm) -> Result<HwConfig> {
+        let b = stats.pp_batch;
         let w_lit = broadcast_w(w, b)?;
         let res = self.airchitect1.run(&[w_lit])?;
         let logits = to_vec_f32(&res[0])?;
@@ -248,29 +397,28 @@ impl DiffAxE {
             .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .ok_or_else(|| anyhow::anyhow!("airchitect-v1 logits are empty"))?;
-        let grid = &self.stats.airchitect_grid;
+        let grid = &stats.airchitect_grid;
         anyhow::ensure!(best < grid.len(), "grid index out of range");
         Ok(decode_rounded(&grid[best]))
     }
 
-    /// AIRCHITECT v2 recommendation: direct regression.
-    pub fn airchitect_v2(&self, w: &Gemm) -> Result<HwConfig> {
-        let b = self.stats.pp_batch;
+    fn airchitect_v2(&self, stats: &NormStats, w: &Gemm) -> Result<HwConfig> {
+        let b = stats.pp_batch;
         let w_lit = broadcast_w(w, b)?;
         let res = self.airchitect2.run(&[w_lit])?;
         let hw = to_vec_f32(&res[0])?;
-        Ok(decode_rounded(&hw[..self.hw_dim()]))
+        Ok(decode_rounded(&hw[..stats.hw_dim]))
     }
 
     fn batched_map(
         &self,
         exe: &HloExec,
+        stats: &NormStats,
         rows: &[Vec<f32>],
         in_dim: usize,
         out_dim: usize,
-        _extra: &[xla::Literal],
     ) -> Result<Vec<Vec<f32>>> {
-        let b = self.stats.pp_batch;
+        let b = stats.pp_batch;
         let mut out = Vec::with_capacity(rows.len());
         for chunk in rows.chunks(b) {
             let (lit, n) = pad_rows(chunk, in_dim, b)?;

@@ -1,8 +1,11 @@
 //! Typed wrappers over the AOT artifacts: the normalization contract
-//! ([`norm`]) and the compiled model engine ([`engine`]).
+//! ([`norm`]), the compiled model engine ([`engine`]), and the hermetic
+//! deterministic stand-in backend ([`mock`]) used when no artifacts exist.
 
 pub mod engine;
+pub mod mock;
 pub mod norm;
 
 pub use engine::{ClassMode, DiffAxE};
+pub use mock::MockEngine;
 pub use norm::{NormStats, WorkloadStats};

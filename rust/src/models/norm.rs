@@ -135,6 +135,67 @@ impl NormStats {
         })
     }
 
+    /// A self-consistent synthetic contract for the hermetic
+    /// [`crate::models::DiffAxE::mock`] engine: no artifacts, no files.
+    /// Label ranges are derived from each workload's MAC count against the
+    /// Table II array extremes, so `norm_runtime`/`denorm_runtime` span the
+    /// cycle counts the analytical simulator actually produces; the
+    /// AIRCHITECT grid is a spread of training-space encodings.
+    pub fn synthetic() -> NormStats {
+        use crate::design_space::{encode_norm, TrainingSpace};
+        let gemms = [
+            Gemm::new(128, 768, 2304),
+            Gemm::new(128, 768, 768),
+            Gemm::new(64, 256, 512),
+            Gemm::new(32, 128, 256),
+        ];
+        let mut workloads = Vec::new();
+        let mut by_mkn = HashMap::new();
+        for (i, g) in gemms.iter().enumerate() {
+            by_mkn.insert((g.m, g.k, g.n), i);
+            // fastest plausible: full 128x128 array; slowest: 4x4 plus a
+            // generous memory-bound margin
+            let macs = g.macs() as f64;
+            let rt_min = (macs / 16_384.0).max(64.0);
+            let rt_max = (macs / 4.0).max(rt_min * 16.0);
+            let edges = |lo: f64, hi: f64| -> Vec<f64> {
+                (0..=3).map(|k| lo + (hi - lo) * k as f64 / 3.0).collect()
+            };
+            workloads.push(WorkloadStats {
+                gemm: *g,
+                log_rt_min: rt_min.ln(),
+                log_rt_max: rt_max.ln(),
+                power_min: 0.1,
+                power_max: 3.3,
+                log_edp_min: (rt_min * rt_min * 0.1).ln(),
+                log_edp_max: (rt_max * rt_max * 10.0).ln(),
+                power_edges: edges(0.1, 3.3),
+                rt_edges: edges(rt_min, rt_max),
+                edp_edges: edges(rt_min * rt_min * 0.1, rt_max * rt_max * 10.0),
+            });
+        }
+        // 32 spread training-grid points as the recommendation grid
+        let step = TrainingSpace::len() / 32;
+        let airchitect_grid = (0..32)
+            .map(|i| encode_norm(&TrainingSpace::nth(i * step)).to_vec())
+            .collect();
+        NormStats {
+            scale: "mock".to_string(),
+            t_steps: 4,
+            gen_batch: 16,
+            pp_batch: 32,
+            latent_dim: 16,
+            hw_dim: crate::design_space::NORM_DIM,
+            n_power: 3,
+            n_perf: 3,
+            n_edp: 10,
+            param_counts: HashMap::new(),
+            airchitect_grid,
+            workloads,
+            by_mkn,
+        }
+    }
+
     /// Stats for a workload: exact match, or nearest training workload in
     /// normalized (M,K,N) space for unseen shapes.
     pub fn stats_for(&self, g: &Gemm) -> &WorkloadStats {

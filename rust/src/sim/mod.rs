@@ -100,6 +100,21 @@ pub struct SimResult {
 }
 
 impl SimResult {
+    /// The all-zero result: the identity of [`SimResult::add`], used for
+    /// empty workloads (zero GEMMs simulate to zero cost, not a panic).
+    pub fn zero() -> SimResult {
+        SimResult {
+            cycles: 0,
+            compute_cycles: 0,
+            mem_cycles: 0,
+            dram: DramTraffic::default(),
+            sram: SramAccess::default(),
+            macs_useful: 0,
+            pe_cycles: 0,
+            tk: 0,
+        }
+    }
+
     /// Fraction of clocked PE-cycles doing useful MACs.
     pub fn utilization(&self) -> f64 {
         if self.pe_cycles == 0 {

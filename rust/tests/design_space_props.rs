@@ -1,0 +1,123 @@
+//! Property suite for the design-space encoding and rounding contract
+//! (`design_space::{encode, round}`): randomized encode → decode → round
+//! trips always land on valid in-space configurations, rounding is
+//! idempotent, and the structured projection preserves both properties.
+//! Hermetic — pure functions of seeded randomness.
+
+use diffaxe::design_space::encode::RawConfig;
+use diffaxe::design_space::params::{BUF_MAX_B, BUF_MIN_B, BUF_STEP_B, DIM_MAX, DIM_MIN};
+use diffaxe::design_space::structured::{
+    constrain, decode_structured, encode_structured, sample_structured, SharedBudget,
+};
+use diffaxe::design_space::{
+    decode_rounded, encode_norm, round_to_target, LoopOrder, TargetSpace, NORM_DIM,
+};
+use diffaxe::util::rng::Pcg32;
+
+const TRIALS: usize = 2000;
+
+/// encode → decode is the identity on every target-space configuration.
+#[test]
+fn encode_decode_roundtrip_identity_on_target_space() {
+    let mut rng = Pcg32::seeded(1001);
+    for _ in 0..TRIALS {
+        let hw = TargetSpace::sample(&mut rng);
+        let v = encode_norm(&hw);
+        assert!(v.iter().all(|x| (0.0..=1.0).contains(x)), "{hw}: encoding out of unit box");
+        assert_eq!(decode_rounded(&v), hw, "roundtrip moved {hw}");
+    }
+}
+
+/// Arbitrary (wildly out-of-range) continuous vectors decode onto valid
+/// in-space configurations, and decoding is idempotent through a second
+/// encode → decode trip.
+#[test]
+fn arbitrary_vectors_decode_into_space_idempotently() {
+    let mut rng = Pcg32::seeded(1002);
+    for _ in 0..TRIALS {
+        let v: Vec<f32> = (0..NORM_DIM).map(|_| (rng.f64() * 8.0 - 4.0) as f32).collect();
+        let hw = decode_rounded(&v);
+        assert!(hw.in_target_space(), "decode left the space: {hw}");
+        let again = decode_rounded(&encode_norm(&hw));
+        assert_eq!(again, hw, "decode not idempotent for {v:?}");
+    }
+}
+
+/// `round_to_target` lands in-space and is idempotent for arbitrary raw
+/// (continuous, out-of-range) configurations.
+#[test]
+fn rounding_is_idempotent_and_in_space() {
+    let mut rng = Pcg32::seeded(1003);
+    for _ in 0..TRIALS {
+        let raw = RawConfig {
+            r: rng.range_f64(-100.0, 500.0),
+            c: rng.range_f64(-100.0, 500.0),
+            ip_b: rng.range_f64(-2e6, 4e6),
+            wt_b: rng.range_f64(-2e6, 4e6),
+            op_b: rng.range_f64(-2e6, 4e6),
+            bw: rng.range_f64(-20.0, 200.0),
+            loop_order: *rng.choose(&LoopOrder::OS_ORDERS),
+        };
+        let hw = round_to_target(&raw);
+        assert!(hw.in_target_space(), "{hw}");
+        let again = round_to_target(&RawConfig {
+            r: hw.r as f64,
+            c: hw.c as f64,
+            ip_b: hw.ip_b as f64,
+            wt_b: hw.wt_b as f64,
+            op_b: hw.op_b as f64,
+            bw: hw.bw as f64,
+            loop_order: hw.loop_order,
+        });
+        assert_eq!(hw, again, "rounding not idempotent");
+    }
+}
+
+/// Rounding picks the *nearest* grid point on each axis (within half a
+/// grid step for in-range inputs).
+#[test]
+fn rounding_is_nearest_on_each_axis() {
+    let mut rng = Pcg32::seeded(1004);
+    for _ in 0..TRIALS {
+        let b = rng.range_f64(BUF_MIN_B as f64, BUF_MAX_B as f64);
+        let raw = RawConfig {
+            r: rng.range_f64(DIM_MIN as f64, DIM_MAX as f64),
+            c: rng.range_f64(DIM_MIN as f64, DIM_MAX as f64),
+            ip_b: b,
+            wt_b: b,
+            op_b: b,
+            bw: 8.0,
+            loop_order: LoopOrder::Mnk,
+        };
+        let hw = round_to_target(&raw);
+        assert!((hw.r as f64 - raw.r).abs() <= 0.5);
+        assert!((hw.c as f64 - raw.c).abs() <= 0.5);
+        assert!((hw.ip_b as f64 - b).abs() <= BUF_STEP_B as f64 / 2.0);
+    }
+}
+
+/// The structured projection inherits the contract: encode → decode is
+/// the identity on constrained configurations, and constraining is
+/// idempotent, across a spread of budgets and segment counts.
+#[test]
+fn structured_encode_decode_and_constrain_properties() {
+    let budgets = [
+        SharedBudget::unconstrained(),
+        SharedBudget { pe: 2048, buf_b: 256 * 1024, bw: 12 },
+        SharedBudget { pe: 64, buf_b: 3 * BUF_MIN_B, bw: 2 },
+    ];
+    let mut rng = Pcg32::seeded(1005);
+    for budget in budgets {
+        budget.validate().unwrap();
+        for segments in [1usize, 2, 4] {
+            for _ in 0..200 {
+                let cfg = sample_structured(&mut rng, &budget, segments);
+                assert!(cfg.in_budget(&budget), "{cfg:?} vs {budget:?}");
+                let v = encode_structured(&cfg);
+                assert_eq!(decode_structured(&v, &budget, segments), cfg);
+                let again = constrain(&budget, cfg.segments.clone());
+                assert_eq!(again, cfg, "constrain not idempotent");
+            }
+        }
+    }
+}

@@ -1,11 +1,15 @@
-//! Integration tests over the coordinator service + TCP server (skip
-//! vacuously without artifacts, like integration_runtime).
+//! Integration tests over the coordinator service + TCP server.
+//!
+//! **Hermetic**: without `artifacts/` the service runs the deterministic
+//! mock engine (`ServiceConfig::mock()`), so every engine-kind wire path
+//! executes in CI instead of SKIPping; with artifacts present the real
+//! engine serves the same suite (the opt-in superset).
 
 use diffaxe::baselines::FixedArch;
 use diffaxe::coordinator::{
     server, ErrorCode, JobState, Request, Response, SearchRequest, Service, ServiceConfig,
 };
-use diffaxe::dse::{Budget, Objective, OptimizerKind, StopReason};
+use diffaxe::dse::{llm::Platform, Budget, Objective, OptimizerKind, StopReason, StructuredSpec};
 use diffaxe::models::DiffAxE;
 use diffaxe::workload::{Gemm, LlmModel, Stage};
 use std::path::Path;
@@ -17,11 +21,16 @@ use std::sync::{Mutex, OnceLock};
 fn service() -> Option<std::sync::MutexGuard<'static, Service>> {
     static SVC: OnceLock<Option<Mutex<Service>>> = OnceLock::new();
     SVC.get_or_init(|| {
-        if !DiffAxE::artifacts_present(Path::new("artifacts")) {
-            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
-            return None;
-        }
-        Some(Mutex::new(Service::start(ServiceConfig::new("artifacts")).expect("service start")))
+        let cfg = if DiffAxE::artifacts_present(Path::new("artifacts")) {
+            eprintln!("integration_coordinator: running against real artifacts/");
+            ServiceConfig::new("artifacts")
+        } else {
+            eprintln!(
+                "integration_coordinator: artifacts/ missing — serving the hermetic mock engine"
+            );
+            ServiceConfig::mock()
+        };
+        Some(Mutex::new(Service::start(cfg).expect("service start")))
     })
     .as_ref()
     .map(|m| m.lock().unwrap())
@@ -304,6 +313,52 @@ fn service_survives_unknown_workloads() {
     let g = Gemm::new(333, 777, 1234);
     match svc.handle().request(generate(g, 1e6, 4)) {
         Response::Outcome(o) => assert_eq!(o.ranked.len(), 4),
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn structured_search_over_the_wire() {
+    let Some(svc) = service() else { return };
+    let spec = StructuredSpec::new(LlmModel::BertBase, Stage::Prefill, 64, Platform::Asic32nm, 3);
+    for kind in [
+        OptimizerKind::DiffAxE,
+        OptimizerKind::DosaGd,
+        OptimizerKind::RandomSearch,
+        OptimizerKind::VanillaBo,
+    ] {
+        let req = Request::Search(SearchRequest::new(
+            Objective::StructuredEdp { spec },
+            Budget::evals(24),
+            kind,
+        ));
+        match svc.handle().request(req) {
+            Response::Outcome(o) => {
+                assert!(!o.ranked.is_empty(), "{kind:?} produced nothing");
+                assert_eq!(o.segments.len(), o.ranked.len(), "{kind:?}");
+                for (d, segs) in o.ranked.iter().zip(&o.segments) {
+                    assert_eq!(segs.len(), 3, "{kind:?}");
+                    let bw = segs[0].bw;
+                    for s in segs {
+                        assert!(s.in_target_space(), "{kind:?}: {s}");
+                        assert!(spec.budget.admits(s), "{kind:?}: {s}");
+                        assert_eq!(s.bw, bw, "{kind:?}: segments must share one DRAM link");
+                    }
+                    assert!(d.edp > 0.0 && d.cycles > 0.0, "{kind:?}");
+                }
+            }
+            other => panic!("{kind:?}: unexpected {other:?}"),
+        }
+    }
+    // a structured objective with a non-structured-capable optimizer is a
+    // client error rejected before any budget is spent
+    let req = Request::Search(SearchRequest::new(
+        Objective::StructuredEdp { spec },
+        Budget::evals(8),
+        OptimizerKind::GanDse,
+    ));
+    match svc.handle().request(req) {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadRequest),
         other => panic!("unexpected {other:?}"),
     }
 }

@@ -1,0 +1,258 @@
+//! Hermetic acceptance suite for the structured-DSE subsystem (§V):
+//! every supporting `OptimizerKind` searches `Objective::StructuredEdp`
+//! deterministically through the unified API (DiffAxE runs on the mock
+//! engine — no artifacts needed), the quality ordering the paper reports
+//! holds (engine + DOSA beat random search on the same budget), segment
+//! evaluation is bit-identical between the cached/pooled hot path and the
+//! scalar reference, and the drained-budget / empty-workload edge cases
+//! return well-formed empty outcomes.
+
+use diffaxe::baselines::{FixedArch, GdOptions};
+use diffaxe::design_space::{SharedBudget, StructuredConfig};
+use diffaxe::dse::llm::{eval_workload, Platform};
+use diffaxe::dse::structured::{
+    eval_structured, eval_structured_batch, eval_structured_scalar, partition,
+};
+use diffaxe::dse::{
+    Budget, Objective, OptimizerKind, SearchOutcome, Session, StopReason, StructuredSpec,
+};
+use diffaxe::util::rng::Pcg32;
+use diffaxe::workload::{LlmModel, ModelWorkload, Stage};
+
+fn spec() -> StructuredSpec {
+    StructuredSpec::new(LlmModel::BertBase, Stage::Prefill, 64, Platform::Asic32nm, 3)
+}
+
+fn structured_kinds() -> Vec<OptimizerKind> {
+    vec![
+        OptimizerKind::DiffAxE,
+        OptimizerKind::DosaGd,
+        OptimizerKind::VanillaGd,
+        OptimizerKind::VanillaBo,
+        OptimizerKind::Polaris,
+        OptimizerKind::RandomSearch,
+        OptimizerKind::Fixed(FixedArch::Eyeriss),
+    ]
+}
+
+fn assert_well_formed(out: &SearchOutcome, spec: &StructuredSpec, kind: OptimizerKind) {
+    assert!(!out.ranked.is_empty(), "{kind:?} produced nothing");
+    assert_eq!(out.segments.len(), out.ranked.len(), "{kind:?}: segments not parallel");
+    for segs in &out.segments {
+        assert_eq!(segs.len(), spec.n_segments(), "{kind:?}");
+        let bw = segs[0].bw;
+        for s in segs {
+            assert!(s.in_target_space(), "{kind:?}: {s} off-grid");
+            assert!(spec.budget.admits(s), "{kind:?}: {s} exceeds the shared budget");
+            assert_eq!(s.bw, bw, "{kind:?}: segments must share one DRAM link");
+        }
+    }
+    // ranked is best-first under the structured score
+    for w in out.ranked.windows(2) {
+        assert!(w[0].edp <= w[1].edp, "{kind:?}: ranking out of order");
+    }
+}
+
+/// Acceptance: `Objective::StructuredEdp` is searchable through ≥ 4
+/// `OptimizerKind`s, each deterministic in its seed, on the mock engine.
+#[test]
+fn structured_edp_searchable_and_deterministic_across_kinds() {
+    let sp = spec();
+    let obj = Objective::StructuredEdp { spec: sp };
+    let mut session = Session::mock();
+    session.gd_opts = GdOptions { steps: 4, restarts: 1, ..Default::default() };
+    let kinds = structured_kinds();
+    assert!(kinds.len() >= 4);
+    for kind in kinds {
+        assert!(kind.supports(&obj), "{kind:?} must serve structured objectives");
+        let budget = Budget::evals(24);
+        let a = session.search(kind, &obj, &budget, 77).unwrap();
+        let b = session.search(kind, &obj, &budget, 77).unwrap();
+        assert_eq!(a.optimizer, b.optimizer);
+        assert_eq!(a.ranked, b.ranked, "{kind:?} not deterministic");
+        assert_eq!(a.trace, b.trace, "{kind:?} trace not deterministic");
+        assert_eq!(a.segments, b.segments, "{kind:?} segments not deterministic");
+        assert_well_formed(&a, &sp, kind);
+    }
+    // the non-structured kinds reject the pairing up front
+    for kind in [OptimizerKind::GanDse, OptimizerKind::AirchitectV1, OptimizerKind::LatentBo] {
+        assert!(!kind.supports(&obj), "{kind:?}");
+        assert!(session.search(kind, &obj, &Budget::evals(4), 1).is_err(), "{kind:?}");
+    }
+}
+
+/// Acceptance: the structured-perf objective ranks by cycles.
+#[test]
+fn structured_perf_ranks_by_cycles() {
+    let sp = spec();
+    let obj = Objective::StructuredPerf { spec: sp };
+    let out = Session::mock()
+        .search(OptimizerKind::RandomSearch, &obj, &Budget::evals(32), 5)
+        .unwrap();
+    assert_eq!(out.ranked.len(), 32);
+    for w in out.ranked.windows(2) {
+        assert!(w[0].cycles <= w[1].cycles);
+    }
+}
+
+/// Acceptance: on the same evaluation budget and seed, the DiffAxE engine
+/// (mock, per-segment conditioning) and the DOSA coarse-GD baseline both
+/// find lower structured EDP than uniform random search — the paper's §V
+/// quality ordering, held deterministically.
+#[test]
+fn engine_and_dosa_beat_random_on_the_same_budget() {
+    let sp = spec();
+    let obj = Objective::StructuredEdp { spec: sp };
+    let seed = 7;
+    let mut session = Session::mock();
+
+    // per-segment conditioned generation vs the same number of uniform
+    // joint draws: 64 candidates each
+    let engine_out =
+        session.search(OptimizerKind::DiffAxE, &obj, &Budget::evals(64), seed).unwrap();
+    let random_small =
+        session.search(OptimizerKind::RandomSearch, &obj, &Budget::evals(64), seed).unwrap();
+    assert!(
+        engine_out.best_score() < random_small.best_score(),
+        "DiffAxE (mock) {:.4e} must beat random {:.4e} at 64 evals",
+        engine_out.best_score(),
+        random_small.best_score()
+    );
+
+    // coarse GD with a real step schedule vs the same larger budget
+    session.gd_opts = GdOptions { steps: 12, restarts: 1, ..Default::default() };
+    let dosa_out = session.search(OptimizerKind::DosaGd, &obj, &Budget::evals(700), seed).unwrap();
+    let random_big =
+        session.search(OptimizerKind::RandomSearch, &obj, &Budget::evals(700), seed).unwrap();
+    assert!(
+        dosa_out.best_score() < random_big.best_score(),
+        "DOSA {:.4e} must beat random {:.4e} at 700 evals",
+        dosa_out.best_score(),
+        random_big.best_score()
+    );
+}
+
+/// Acceptance: per-segment evaluation is bit-identical between the
+/// memoized/pooled hot path and the scalar reference, on both platforms.
+#[test]
+fn structured_eval_bit_identical_cached_pooled_scalar() {
+    for platform in [Platform::Asic32nm, Platform::FpgaVu13p] {
+        let sp = StructuredSpec {
+            platform,
+            budget: SharedBudget { pe: 4096, buf_b: 768 * 1024, bw: 16 },
+            ..spec()
+        };
+        let mut rng = Pcg32::seeded(97);
+        let mut cfgs: Vec<StructuredConfig> = (0..40)
+            .map(|_| {
+                diffaxe::design_space::structured::sample_structured(
+                    &mut rng,
+                    &sp.budget,
+                    sp.n_segments(),
+                )
+            })
+            .collect();
+        // recurring candidates: the memo's bread and butter
+        let dups = cfgs[..10].to_vec();
+        cfgs.extend(dups);
+        for pass in 0..2 {
+            let batch = eval_structured_batch(&sp, &cfgs);
+            for (cfg, b) in cfgs.iter().zip(&batch) {
+                let cached = eval_structured(&sp, cfg);
+                let scalar = eval_structured_scalar(&sp, cfg);
+                for d in [&cached, b] {
+                    assert_eq!(d.config, scalar.config, "{platform:?} pass {pass}");
+                    assert_eq!(
+                        d.cycles.to_bits(),
+                        scalar.cycles.to_bits(),
+                        "{platform:?} pass {pass}"
+                    );
+                    assert_eq!(
+                        d.power_w.to_bits(),
+                        scalar.power_w.to_bits(),
+                        "{platform:?} pass {pass}"
+                    );
+                    assert_eq!(d.edp.to_bits(), scalar.edp.to_bits(), "{platform:?} pass {pass}");
+                }
+            }
+        }
+    }
+}
+
+/// Heterogeneity is real: the best heterogeneous candidate over a search
+/// is at least as good as the best uniform-replication candidate drawn
+/// from the same seeds (the structured space strictly contains the
+/// uniform diagonal).
+#[test]
+fn structured_space_contains_the_uniform_diagonal() {
+    let sp = spec();
+    let obj = Objective::StructuredEdp { spec: sp };
+    // uniform diagonal: Objective::evaluate replicates one HwConfig
+    let mut rng = Pcg32::seeded(13);
+    let hw = diffaxe::design_space::TargetSpace::sample(&mut rng);
+    let uniform = obj.evaluate(&hw);
+    assert!(uniform.edp > 0.0 && uniform.cycles > 0.0);
+    // and the explicit structured evaluation of that diagonal agrees
+    let cfg = diffaxe::design_space::structured::constrain(
+        &sp.budget,
+        vec![hw; sp.n_segments()],
+    );
+    let d = eval_structured(&sp, &cfg);
+    assert_eq!(d.edp.to_bits(), uniform.edp.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// drained-budget / empty-workload regressions
+// ---------------------------------------------------------------------------
+
+/// `Budget::evals(0)` returns a well-formed empty outcome
+/// (`stopped: BudgetExhausted`) from every strategy — no forced minimum
+/// evaluation, no divide-by-zero schedule, no panic.
+#[test]
+fn zero_eval_budget_returns_empty_budget_exhausted_outcome() {
+    let g = diffaxe::workload::Gemm::new(64, 256, 512);
+    let mut session = Session::mock();
+    for kind in OptimizerKind::ALL {
+        let obj = match kind {
+            OptimizerKind::GanDse => Objective::Runtime { g, target_cycles: 1e6 },
+            _ => Objective::MinEdp { g },
+        };
+        let out = session.search(kind, &obj, &Budget::evals(0), 3).unwrap();
+        assert_eq!(out.evals, 0, "{kind:?}");
+        assert!(out.ranked.is_empty(), "{kind:?}");
+        assert!(out.trace.is_empty(), "{kind:?}");
+        assert_eq!(out.stopped, StopReason::BudgetExhausted, "{kind:?}");
+    }
+    // the structured objective honours the same contract
+    let obj = Objective::StructuredEdp { spec: spec() };
+    for kind in structured_kinds() {
+        let out = session.search(kind, &obj, &Budget::evals(0), 3).unwrap();
+        assert_eq!(out.evals, 0, "{kind:?}");
+        assert_eq!(out.stopped, StopReason::BudgetExhausted, "{kind:?}");
+        assert!(out.segments.is_empty(), "{kind:?}");
+    }
+}
+
+/// An empty workload (zero GEMMs) evaluates to the zero cost point
+/// instead of panicking, and partitioning it yields no segments.
+#[test]
+fn empty_workload_is_well_formed_not_a_panic() {
+    let empty = ModelWorkload {
+        model: LlmModel::BertBase,
+        stage: Stage::Prefill,
+        seq: 1,
+        gemms: Vec::new(),
+        unique: Vec::new(),
+        layer_to_unique: Vec::new(),
+        blocks: 12,
+    };
+    let hw = FixedArch::Eyeriss.config();
+    for platform in [Platform::Asic32nm, Platform::FpgaVu13p] {
+        let ev = eval_workload(&hw, &empty, platform);
+        assert_eq!(ev.sim.cycles, 0, "{platform:?}");
+        assert_eq!(ev.energy.edp, 0.0, "{platform:?}");
+        assert_eq!(ev.energy.power_w, 0.0, "{platform:?}");
+        assert!(ev.cfg.orders.is_empty(), "{platform:?}");
+    }
+    assert!(partition(0, 0).is_empty());
+}

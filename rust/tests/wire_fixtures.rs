@@ -1,0 +1,135 @@
+//! Golden wire-fixture corpus: literal v1/v2/v3 request and response
+//! lines checked into `tests/fixtures/` that must keep parsing — and,
+//! for the canonical files, keep *serializing byte-identically* — across
+//! protocol evolution. Additive protocol changes (new objective kinds,
+//! new outcome fields) must leave every line here untouched; a diff in
+//! this suite means a wire break, not a refactor.
+
+use diffaxe::coordinator::{Request, Response, SearchRequest};
+use diffaxe::dse::{Budget, Objective, OptimizerKind};
+use diffaxe::util::json::Json;
+use diffaxe::workload::Gemm;
+
+/// Load one fixture file: non-empty lines, `#` comments stripped.
+fn fixture_lines(name: &str) -> Vec<String> {
+    let path = format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+/// Every compat line (legacy aliases, v2/v3 forms, structured additions)
+/// parses, and survives a serialize → parse trip semantically unchanged.
+#[test]
+fn compat_request_corpus_keeps_parsing() {
+    let lines = fixture_lines("wire_requests_compat.jsonl");
+    assert!(lines.len() >= 15, "corpus shrank to {} lines", lines.len());
+    for line in &lines {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad fixture json {line}: {e}"));
+        let req = Request::from_json(&j).unwrap_or_else(|e| panic!("{line}: {e}"));
+        let rejoined = Request::from_json(&Json::parse(&req.to_json().to_string()).unwrap())
+            .unwrap_or_else(|e| panic!("re-serialized form of {line} broke: {e}"));
+        assert_eq!(rejoined, req, "serialize/parse drifted for {line}");
+    }
+}
+
+/// Spot-check that specific legacy lines decode to the exact semantics
+/// the v1 protocol promised (budgets, top_k pinning, default optimizer).
+#[test]
+fn legacy_lines_decode_to_pinned_semantics() {
+    let parse = |s: &str| Request::from_json(&Json::parse(s).unwrap()).unwrap();
+    let lines = fixture_lines("wire_requests_compat.jsonl");
+    let generate = parse(&lines[0]);
+    assert_eq!(
+        generate,
+        Request::Search(SearchRequest {
+            objective: Objective::Runtime { g: Gemm::new(128, 768, 2304), target_cycles: 1e6 },
+            budget: Budget::evals(8),
+            optimizer: OptimizerKind::DiffAxE,
+            top_k: Some(8),
+        })
+    );
+    let edp = parse(&lines[1]);
+    assert_eq!(
+        edp,
+        Request::Search(SearchRequest {
+            objective: Objective::MinEdp { g: Gemm::new(1, 2, 3) },
+            budget: Budget::default().with_per_class(5),
+            optimizer: OptimizerKind::DiffAxE,
+            top_k: Some(1),
+        })
+    );
+    // the structured line at the end of the corpus decodes with defaults
+    let structured = parse(lines.last().unwrap());
+    match structured {
+        Request::Search(SearchRequest {
+            objective: Objective::StructuredPerf { spec }, ..
+        }) => {
+            assert_eq!(spec.segments, 2);
+            assert_eq!(spec.budget, diffaxe::design_space::SharedBudget::default());
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+/// Canonical request lines are byte-stable: parse → to_json reproduces
+/// the line exactly (key order, number formatting, field set).
+#[test]
+fn canonical_request_corpus_is_byte_stable() {
+    let lines = fixture_lines("wire_requests_canonical.jsonl");
+    assert!(lines.len() >= 10, "corpus shrank to {} lines", lines.len());
+    for line in &lines {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad fixture json {line}: {e}"));
+        let req = Request::from_json(&j).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(req.to_json().to_string(), *line, "request wire bytes drifted");
+    }
+}
+
+/// Canonical response lines are byte-stable: parse → to_json reproduces
+/// the line exactly. This is the guard that additive evolution (e.g. the
+/// structured `segments` field) never perturbs pre-existing lines.
+#[test]
+fn canonical_response_corpus_is_byte_stable() {
+    let lines = fixture_lines("wire_responses.jsonl");
+    assert!(lines.len() >= 12, "corpus shrank to {} lines", lines.len());
+    for line in &lines {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad fixture json {line}: {e}"));
+        let resp = Response::from_json(&j).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(resp.to_json().to_string(), *line, "response wire bytes drifted");
+    }
+}
+
+/// The structured-outcome fixture really decodes its per-segment configs
+/// (not just echoes bytes), and plain designs carry no `segments` key.
+#[test]
+fn structured_outcome_fixture_decodes_segments() {
+    let lines = fixture_lines("wire_responses.jsonl");
+    let structured = lines
+        .iter()
+        .find(|l| l.contains("\"segments\""))
+        .expect("corpus holds a structured outcome line");
+    match Response::from_json(&Json::parse(structured).unwrap()).unwrap() {
+        Response::Outcome(o) => {
+            assert_eq!(o.ranked.len(), 1);
+            assert_eq!(o.segments.len(), 1);
+            assert_eq!(o.segments[0].len(), 2);
+            assert_eq!(o.segments[0][0].r, 64);
+            assert_eq!(o.segments[0][1].c, 128);
+            // envelope carries the per-resource maxima of its segments
+            assert_eq!(o.ranked[0].hw.r, 64);
+            assert_eq!(o.ranked[0].hw.c, 128);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    let plain = lines
+        .iter()
+        .find(|l| l.contains("Random Search"))
+        .expect("corpus holds a plain outcome line");
+    match Response::from_json(&Json::parse(plain).unwrap()).unwrap() {
+        Response::Outcome(o) => assert!(o.segments.is_empty()),
+        other => panic!("unexpected {other:?}"),
+    }
+}
