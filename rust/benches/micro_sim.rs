@@ -1,17 +1,21 @@
 //! Micro-benchmarks of the L3 hot path pieces: simulator throughput,
-//! energy evaluation, encoding/rounding, the batched-vs-scalar evaluation
-//! hot path, the memoized/pooled evaluation core (pooled-vs-spawn,
-//! cache hit rate, LlmEdp candidate throughput vs the pre-memoization
-//! path), and the trace oracle for comparison. These drive the §Perf
-//! iteration in EXPERIMENTS.md; the eval-core sections also emit
-//! `BENCH_eval_core.json` so the perf trajectory is machine-readable.
+//! energy evaluation, encoding/rounding, the SoA batch simulator vs the
+//! scalar loop (`sim_scalar/sim_batch_candidates_per_s`,
+//! `sim_batch_speedup`), the batched-vs-scalar evaluation hot path, the
+//! memoized/pooled evaluation core (pooled-vs-spawn, cache hit rate,
+//! LlmEdp candidate throughput vs the pre-memoization path), and the
+//! trace oracle for comparison. These drive the §Perf iteration in
+//! EXPERIMENTS.md; the eval-core sections also emit
+//! `BENCH_eval_core.json` so the perf trajectory is machine-readable
+//! (`tools/bench-history` accumulates the per-commit stream and gates CI
+//! on regressions).
 
 use diffaxe::design_space::{decode_rounded, encode_norm, HwConfig, TargetSpace};
 use diffaxe::dse::eval::{par_map, EvalCache};
 use diffaxe::dse::llm::{eval_model_reference, Platform};
 use diffaxe::dse::{coarsen, Objective};
 use diffaxe::energy::{asic, fpga};
-use diffaxe::sim::{simulate, trace};
+use diffaxe::sim::{simulate, simulate_batch, trace};
 use diffaxe::util::bench::{banner, time_mean, BenchScale};
 use diffaxe::util::json::Json;
 use diffaxe::util::rng::Pcg32;
@@ -128,6 +132,34 @@ fn main() {
     );
 
     let mut json = BTreeMap::new();
+
+    // --- SoA batch simulator vs the scalar loop (sim/batch.rs) -----------
+    // Raw single-thread simulator throughput, no cache and no pool: the
+    // structure-of-arrays layout + per-LoopOrder branch hoisting is the
+    // whole difference (bit-identical results by the scalar-oracle
+    // guarantee, enforced in tests/sim_batch_props.rs).
+    let soa_g = gemms[0];
+    let soa_reps = scale.pick(5, 20, 50);
+    let t_sim_scalar = time_mean(soa_reps, || {
+        for hw in &configs {
+            black_box(simulate(hw, &soa_g));
+        }
+    });
+    let t_sim_batch = time_mean(soa_reps, || {
+        black_box(simulate_batch(&configs, &soa_g));
+    });
+    let sim_n = configs.len() as f64;
+    let (sim_scalar_cps, sim_batch_cps) = (sim_n / t_sim_scalar, sim_n / t_sim_batch);
+    println!(
+        "SoA batch simulate ({} cfgs, 1 thread): scalar {:.0}/s, batch {:.0}/s => {:.2}x",
+        configs.len(),
+        sim_scalar_cps,
+        sim_batch_cps,
+        sim_batch_cps / sim_scalar_cps
+    );
+    json.insert("sim_scalar_candidates_per_s".into(), Json::Num(sim_scalar_cps));
+    json.insert("sim_batch_candidates_per_s".into(), Json::Num(sim_batch_cps));
+    json.insert("sim_batch_speedup".into(), Json::Num(sim_batch_cps / sim_scalar_cps));
 
     // --- pooled vs spawn: many small batches, the coordinator's shape ----
     // The continuous batcher serves a stream of modest batches; the win of

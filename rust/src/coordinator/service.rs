@@ -591,6 +591,12 @@ struct PendingGen {
     /// running best score over `acc` (heartbeats stay O(1) per burst)
     best: f64,
     entry: Arc<JobEntry>,
+    /// when the request joined `pending` — the batch-window clock. Queue
+    /// wait behind non-batchable jobs must not count against the window,
+    /// or a request that sat queued "expires" on arrival and flushes a
+    /// batch of one (`entry.submitted` keeps measuring end-to-end
+    /// latency).
+    joined: Instant,
     reply: Option<Sender<Response>>,
 }
 
@@ -643,17 +649,28 @@ fn engine_loop(
                         unreachable!("batchable() matched Runtime")
                     };
                     let engine = session.engine().expect("engine");
-                    pending.push(PendingGen {
+                    let p = PendingGen {
                         g,
                         p_norm: engine.stats.stats_for(&g).norm_runtime(target_cycles),
-                        n: entry.request.budget.evals.max(1),
+                        n: entry.request.budget.evals,
                         top_k: entry.request.top_k.unwrap_or(DEFAULT_TOP_K),
                         objective: entry.request.objective,
                         acc: Vec::new(),
                         best: f64::INFINITY,
                         entry: entry.clone(),
+                        joined: Instant::now(),
                         reply,
-                    });
+                    };
+                    if p.n == 0 {
+                        // `Budget::evals(0)` answers immediately with the
+                        // empty budget-exhausted outcome — the same
+                        // contract every direct-path strategy honors
+                        // (`dse::api::drained`) — instead of a forced
+                        // minimum generation
+                        finish_pending(&registry, &metrics, p, StopReason::BudgetExhausted);
+                    } else {
+                        pending.push(p);
+                    }
                 } else if let Some(reply) = reply {
                     // cancelled while queued: deliver the stored result
                     let _ = reply.send(entry.result_now());
@@ -669,11 +686,14 @@ fn engine_loop(
             }
         }
 
-        // flush when full or when the window expired with waiters
+        // flush when full or when the window expired with waiters (the
+        // window clock starts when a request joins `pending`, not at
+        // submission — queue wait behind non-batchable jobs must not
+        // expire the window)
         let slots: usize = pending.iter().map(|p| p.n.saturating_sub(p.acc.len())).sum();
         let window_expired = pending
             .iter()
-            .map(|p| p.entry.submitted.elapsed())
+            .map(|p| p.joined.elapsed())
             .max()
             .map(|d| d >= cfg.batch_window)
             .unwrap_or(false);

@@ -40,7 +40,7 @@
 //! seed)` triple yields the same `SearchOutcome` (modulo `search_time_s`).
 
 use super::coarsen;
-use super::eval::{par_map, CacheStats, EvalCache};
+use super::eval::{par_map, par_map_chunks, CacheStats, EvalCache};
 use super::structured::{self, StructuredSpec};
 use crate::baselines::{bo, gd, BoOptions, FixedArch, GdOptions};
 use crate::design_space::{decode_rounded, encode_norm, HwConfig, TargetSpace, NORM_DIM};
@@ -635,13 +635,17 @@ impl SearchOutcome {
 
 /// Simulate + ASIC-evaluate a batch of configurations on one workload,
 /// memoized through the shared [`EvalCache`] and partitioned over the
-/// persistent [`crate::dse::eval::WorkerPool`]. Order-preserving and
-/// bit-identical to calling [`super::evaluate`] per element — the hot path
-/// is pure, so the cache only short-circuits recomputation and threads
-/// only split the index range.
+/// persistent [`crate::dse::eval::WorkerPool`]. Each worker receives a
+/// contiguous chunk and computes its cache misses as one SoA batch
+/// through [`crate::sim::batch`] ([`EvalCache::evaluate_many`]).
+/// Order-preserving and bit-identical to calling [`super::evaluate`] per
+/// element — the hot path is pure, so the cache only short-circuits
+/// recomputation, threads only split the index range, and the batch
+/// simulator is bit-identical to the scalar one by the scalar-oracle
+/// guarantee.
 pub fn evaluate_batch(cfgs: &[HwConfig], g: &Gemm) -> Vec<(SimResult, EnergyResult)> {
     let g = *g;
-    par_map(cfgs, move |hw| EvalCache::global().evaluate(hw, &g))
+    par_map_chunks(cfgs, move |chunk| EvalCache::global().evaluate_many(chunk, &g))
 }
 
 /// A `Budget::evals(0)` search is answered immediately with a well-formed

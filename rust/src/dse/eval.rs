@@ -19,13 +19,30 @@
 //!
 //! # Cache keying
 //!
-//! [`EvalCache`] maps `(HwConfig, Gemm)` → `(SimResult, EnergyResult)`,
-//! where the energy half is the 32 nm ASIC evaluation (the
-//! [`crate::dse::evaluate`] pair). The key includes the loop order (it is a
-//! field of `HwConfig`), so the LLM fast path's per-`(layer, order)` probes
-//! are individually cached. FPGA consumers reuse the cached `SimResult` and
-//! re-price energy through [`crate::energy::EnergyCoeffs`] — a dot product,
-//! cheap enough to never be worth caching per platform.
+//! [`EvalCache`] maps `(HwConfig, Gemm)` → `(SimResult,
+//! Option<EnergyResult>)`, where the energy half is the 32 nm ASIC
+//! evaluation (the [`crate::dse::evaluate`] pair) filled *lazily*:
+//! sim-only consumers ([`EvalCache::simulate`] /
+//! [`EvalCache::simulate_pairs`] — the LLM probe loop, the structured
+//! evaluator) cache `(sim, None)` and skip the energy dot product
+//! entirely; the first energy consumer of the same key fills the `Some`
+//! in place. `asic::evaluate` is a pure function of `(HwConfig,
+//! SimResult)`, so the late fill is bit-identical to the eager one. The
+//! key includes the loop order (it is a field of `HwConfig`), so the LLM
+//! fast path's per-`(layer, order)` probes are individually cached. FPGA
+//! consumers reuse the cached `SimResult` and re-price energy through
+//! [`crate::energy::EnergyCoeffs`] — a dot product, cheap enough to never
+//! be worth caching per platform.
+//!
+//! # Batched misses
+//!
+//! The batch entry points ([`EvalCache::simulate_pairs`],
+//! [`EvalCache::evaluate_many`]) probe every key first, then compute all
+//! misses as **one SoA batch** through [`crate::sim::batch`] instead of
+//! per-key scalar calls — the loop-order dispatch is hoisted once per
+//! batch rather than paid per candidate. [`par_map_chunks`] is the pool
+//! bridge: it hands each worker a contiguous *slice* of the batch so the
+//! worker can make a single batched call over its chunk.
 //!
 //! The table is **lock-striped**: the key hash picks one of
 //! [`EvalCache::DEFAULT_SHARDS`] independently-locked shards, so concurrent
@@ -147,13 +164,31 @@ where
     R: Send + 'static,
     F: Fn(&T) -> R + Send + Sync + 'static,
 {
+    par_map_chunks(items, move |chunk| chunk.iter().map(|t| f(t)).collect())
+}
+
+/// Chunk-at-a-time variant of [`par_map`]: the closure receives each
+/// worker's contiguous *slice* of the batch and returns one result per
+/// item, letting callers amortize per-call work across the chunk (the
+/// batched evaluators make a single SoA simulation call per chunk).
+/// Order-preserving and bit-identical to `f(items)` run inline — which is
+/// exactly what happens below [`PAR_THRESHOLD`], on single-core machines,
+/// or from a pool worker (nested parallelism guard). Panics in `f` are
+/// forwarded after the batch drains; a chunk result of the wrong length
+/// is a caller bug and panics on reassembly.
+pub fn par_map_chunks<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Clone + Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(&[T]) -> Vec<R> + Send + Sync + 'static,
+{
     let nested = std::thread::current().name().is_some_and(|n| n.starts_with(WORKER_NAME));
     if nested || items.len() < PAR_THRESHOLD {
-        return items.iter().map(|t| f(t)).collect();
+        return f(items);
     }
     let pool = WorkerPool::global();
     if pool.workers() <= 1 {
-        return items.iter().map(|t| f(t)).collect();
+        return f(items);
     }
     // From<&[T]> clones straight into the Arc allocation: one copy, not two
     let shared: Arc<[T]> = Arc::from(items);
@@ -168,9 +203,7 @@ where
         let f = f.clone();
         let tx = tx.clone();
         pool.submit(Box::new(move || {
-            let out = catch_unwind(AssertUnwindSafe(|| {
-                shared[lo..hi].iter().map(|t| f(t)).collect::<Vec<R>>()
-            }));
+            let out = catch_unwind(AssertUnwindSafe(|| f(&shared[lo..hi])));
             let _ = tx.send((ci, out));
         }));
     }
@@ -191,6 +224,7 @@ where
     for s in slots {
         out.extend(s.expect("every chunk reported exactly once"));
     }
+    assert_eq!(out.len(), shared.len(), "chunk closure must return one result per item");
     out
 }
 
@@ -236,9 +270,13 @@ impl std::fmt::Display for CacheStats {
 
 /// Memo key: the configuration (loop order included) and the workload.
 type EvalKey = (HwConfig, Gemm);
-/// Memo value: the simulation and its 32 nm ASIC energy evaluation.
+/// What [`EvalCache::evaluate`] returns: the simulation and its 32 nm
+/// ASIC energy evaluation.
 type EvalValue = (SimResult, EnergyResult);
-type Shard = Mutex<HashMap<EvalKey, EvalValue>>;
+/// What a shard stores: the energy half is `None` until an energy
+/// consumer first touches the key (sim-only paths never pay for it).
+type CachedValue = (SimResult, Option<EnergyResult>);
+type Shard = Mutex<HashMap<EvalKey, CachedValue>>;
 
 /// Lock-striped memo table for the pure evaluation function — see the
 /// module docs for keying, sharding and eviction policy.
@@ -286,32 +324,130 @@ impl EvalCache {
         (h.finish() as usize) % self.shards.len()
     }
 
+    /// Insert (or refresh) one entry, clearing the shard wholesale when it
+    /// is at capacity.
+    fn insert(&self, key: &EvalKey, v: CachedValue) {
+        let mut m = self.shards[self.shard_of(key)].lock().unwrap();
+        if m.len() >= self.cap_per_shard {
+            m.clear();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        m.insert(*key, v);
+    }
+
     /// Simulate + ASIC-evaluate through the memo table. Bit-identical to
     /// [`crate::dse::evaluate`] (the function is pure; the table only
     /// short-circuits recomputation).
     pub fn evaluate(&self, hw: &HwConfig, g: &Gemm) -> EvalValue {
         let key = (*hw, *g);
         let si = self.shard_of(&key);
-        if let Some(v) = self.shards[si].lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return *v;
+        let cached = self.shards[si].lock().unwrap().get(&key).copied();
+        match cached {
+            Some((s, Some(e))) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                (s, e)
+            }
+            Some((s, None)) => {
+                // sim cached by a sim-only path: fill the energy half in
+                // place — asic::evaluate is pure in (hw, sim), so the late
+                // fill is bit-identical to the eager one
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                let e = crate::energy::asic::evaluate(hw, &s);
+                self.insert(&key, (s, Some(e)));
+                (s, e)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                // compute outside the lock: misses must not serialize on
+                // the shard
+                let v = crate::dse::evaluate(hw, g);
+                self.insert(&key, (v.0, Some(v.1)));
+                v
+            }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        // compute outside the lock: misses must not serialize on the shard
-        let v = crate::dse::evaluate(hw, g);
-        let mut m = self.shards[si].lock().unwrap();
-        if m.len() >= self.cap_per_shard {
-            m.clear();
-            self.evictions.fetch_add(1, Ordering::Relaxed);
-        }
-        m.insert(key, v);
-        v
     }
 
     /// Cached simulation only (the LLM fast path re-prices energy itself
-    /// through [`crate::energy::EnergyCoeffs`]).
+    /// through [`crate::energy::EnergyCoeffs`]). Misses cache `(sim,
+    /// None)` — the energy half stays unpaid until an energy consumer
+    /// touches the key.
     pub fn simulate(&self, hw: &HwConfig, g: &Gemm) -> SimResult {
-        self.evaluate(hw, g).0
+        let key = (*hw, *g);
+        let si = self.shard_of(&key);
+        if let Some(v) = self.shards[si].lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v.0;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let s = crate::sim::simulate(hw, g);
+        self.insert(&key, (s, None));
+        s
+    }
+
+    /// Cached simulation of per-candidate `(configuration, GEMM)` pairs:
+    /// probe every key, then compute all misses as one SoA batch through
+    /// [`crate::sim::batch::simulate_pairs`]. Bit-identical to calling
+    /// [`EvalCache::simulate`] per pair (the batch simulator's scalar
+    /// oracle guarantee), in input order; duplicates within the batch are
+    /// simulated per occurrence but cache to the same key.
+    pub fn simulate_pairs(&self, pairs: &[(HwConfig, Gemm)]) -> Vec<SimResult> {
+        let mut out: Vec<Option<SimResult>> = vec![None; pairs.len()];
+        let mut miss_idx: Vec<usize> = Vec::new();
+        for (i, key) in pairs.iter().enumerate() {
+            let si = self.shard_of(key);
+            match self.shards[si].lock().unwrap().get(key) {
+                Some(v) => out[i] = Some(v.0),
+                None => miss_idx.push(i),
+            }
+        }
+        self.hits.fetch_add((pairs.len() - miss_idx.len()) as u64, Ordering::Relaxed);
+        self.misses.fetch_add(miss_idx.len() as u64, Ordering::Relaxed);
+        if !miss_idx.is_empty() {
+            let miss_pairs: Vec<(HwConfig, Gemm)> = miss_idx.iter().map(|&i| pairs[i]).collect();
+            let sims = crate::sim::batch::simulate_pairs(&miss_pairs);
+            for (&i, sim) in miss_idx.iter().zip(&sims) {
+                self.insert(&pairs[i], (*sim, None));
+                out[i] = Some(*sim);
+            }
+        }
+        out.into_iter().map(|o| o.expect("every lane filled")).collect()
+    }
+
+    /// Cached simulate + ASIC-evaluate of a configuration batch on one
+    /// GEMM: probe every key, compute sim misses as one SoA batch through
+    /// [`crate::sim::batch::simulate_batch`], and fill any outstanding
+    /// lazy energies. Bit-identical to calling [`EvalCache::evaluate`]
+    /// per configuration, in input order.
+    pub fn evaluate_many(&self, cfgs: &[HwConfig], g: &Gemm) -> Vec<EvalValue> {
+        let mut out: Vec<Option<EvalValue>> = vec![None; cfgs.len()];
+        let mut sim_only: Vec<(usize, SimResult)> = Vec::new();
+        let mut miss_idx: Vec<usize> = Vec::new();
+        for (i, hw) in cfgs.iter().enumerate() {
+            let key = (*hw, *g);
+            let si = self.shard_of(&key);
+            match self.shards[si].lock().unwrap().get(&key) {
+                Some(&(s, Some(e))) => out[i] = Some((s, e)),
+                Some(&(s, None)) => sim_only.push((i, s)),
+                None => miss_idx.push(i),
+            }
+        }
+        self.hits.fetch_add((cfgs.len() - miss_idx.len()) as u64, Ordering::Relaxed);
+        self.misses.fetch_add(miss_idx.len() as u64, Ordering::Relaxed);
+        for (i, s) in sim_only {
+            let e = crate::energy::asic::evaluate(&cfgs[i], &s);
+            self.insert(&(cfgs[i], *g), (s, Some(e)));
+            out[i] = Some((s, e));
+        }
+        if !miss_idx.is_empty() {
+            let miss_cfgs: Vec<HwConfig> = miss_idx.iter().map(|&i| cfgs[i]).collect();
+            let sims = crate::sim::batch::simulate_batch(&miss_cfgs, g);
+            for (&i, sim) in miss_idx.iter().zip(&sims) {
+                let e = crate::energy::asic::evaluate(&cfgs[i], sim);
+                self.insert(&(cfgs[i], *g), (*sim, Some(e)));
+                out[i] = Some((*sim, e));
+            }
+        }
+        out.into_iter().map(|o| o.expect("every lane filled")).collect()
     }
 
     /// Current counters.
@@ -390,6 +526,79 @@ mod tests {
         let small: Vec<u64> = (0..5).collect();
         assert_eq!(par_map(&small, |&x| x + 7), vec![7, 8, 9, 10, 11]);
         assert_eq!(par_map(&[] as &[u64], |&x| x), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn simulate_pairs_matches_scalar_cold_and_warm() {
+        let cache = EvalCache::new(4, 1024);
+        let mut rng = Pcg32::seeded(17);
+        let shapes = [Gemm::new(1, 4096, 12288), Gemm::new(128, 768, 768), Gemm::new(5, 7, 3)];
+        let pairs: Vec<(HwConfig, Gemm)> = (0..30)
+            .map(|i| (TargetSpace::sample(&mut rng), shapes[i % shapes.len()]))
+            .collect();
+        let cold = cache.simulate_pairs(&pairs);
+        for ((hw, g), s) in pairs.iter().zip(&cold) {
+            assert_eq!(*s, crate::sim::simulate(hw, g));
+        }
+        assert_eq!(cache.stats().misses, 30);
+        // warm pass: all hits, same bits
+        let warm = cache.simulate_pairs(&pairs);
+        assert_eq!(warm, cold);
+        assert_eq!(cache.stats().hits, 30);
+    }
+
+    #[test]
+    fn evaluate_many_matches_per_key_evaluate() {
+        let cache = EvalCache::new(4, 1024);
+        let mut rng = Pcg32::seeded(29);
+        let g = Gemm::new(96, 512, 320);
+        let cfgs: Vec<HwConfig> = (0..24).map(|_| TargetSpace::sample(&mut rng)).collect();
+        let many = cache.evaluate_many(&cfgs, &g);
+        for (hw, (s, e)) in cfgs.iter().zip(&many) {
+            let (s2, e2) = crate::dse::evaluate(hw, &g);
+            assert_eq!(*s, s2);
+            assert_eq!(*e, e2);
+        }
+        assert_eq!(cache.stats().misses, 24);
+        // warm: full hits including the stored energy half
+        let warm = cache.evaluate_many(&cfgs, &g);
+        assert_eq!(warm, many);
+        assert_eq!(cache.stats().hits, 24);
+    }
+
+    #[test]
+    fn lazy_energy_fill_is_bit_identical() {
+        let cache = EvalCache::new(2, 256);
+        let mut rng = Pcg32::seeded(41);
+        let g = Gemm::new(64, 256, 64);
+        let hw = TargetSpace::sample(&mut rng);
+        // sim-only first: caches (sim, None) without paying for energy
+        let s = cache.simulate(&hw, &g);
+        assert_eq!(cache.stats().misses, 1);
+        // energy consumer fills the Some in place — counts as a hit
+        let (s2, e) = cache.evaluate(&hw, &g);
+        assert_eq!(s2, s);
+        assert_eq!((s2, e), crate::dse::evaluate(&hw, &g));
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        // evaluate_many sees the filled entry as a plain hit
+        let many = cache.evaluate_many(&[hw], &g);
+        assert_eq!(many, vec![(s2, e)]);
+        assert_eq!(cache.stats().hits, 2);
+    }
+
+    #[test]
+    fn par_map_chunks_matches_inline() {
+        let items: Vec<u64> = (0..(PAR_THRESHOLD as u64 * 3)).collect();
+        let out = par_map_chunks(&items, |chunk| chunk.iter().map(|&x| x * 3).collect());
+        let expect: Vec<u64> = items.iter().map(|&x| x * 3).collect();
+        assert_eq!(out, expect);
+        let small: Vec<u64> = (0..7).collect();
+        assert_eq!(
+            par_map_chunks(&small, |c| c.iter().map(|&x| x + 1).collect()),
+            (1..8).collect::<Vec<u64>>()
+        );
+        assert_eq!(par_map_chunks(&[] as &[u64], |c| c.to_vec()), Vec::<u64>::new());
     }
 
     #[test]

@@ -132,25 +132,33 @@ pub fn eval_workload(base: &HwConfig, wl: &ModelWorkload, platform: Platform) ->
     }
     let cache = EvalCache::global();
     let coeffs = platform.coeffs(base);
-    // one cached simulation per (distinct shape, order); order selection by
-    // coefficient dot product. First-minimal tie-break and NaN-safe
-    // comparison (total_cmp: a NaN EDP loses to any number) match the
-    // reference `min_by` exactly.
-    let best: Vec<(LoopOrder, SimResult)> = wl
+    // one cached simulation per (distinct shape, order), all probes batched
+    // into a single SoA call (misses simulate as one grouped batch); order
+    // selection by coefficient dot product. First-minimal tie-break and
+    // NaN-safe comparison (total_cmp: a NaN EDP loses to any number) match
+    // the reference `min_by` exactly.
+    let n_orders = LoopOrder::OS_ORDERS.len();
+    let probes: Vec<(HwConfig, Gemm)> = wl
         .unique
         .iter()
-        .map(|g| {
-            let mut probes = LoopOrder::OS_ORDERS.iter().copied();
-            let first = probes.next().expect("OS_ORDERS is non-empty");
-            let mut best_order = first;
-            let mut best_sim = cache.simulate(&HwConfig { loop_order: first, ..*base }, g);
+        .flat_map(|g| {
+            LoopOrder::OS_ORDERS
+                .iter()
+                .map(move |&order| (HwConfig { loop_order: order, ..*base }, *g))
+        })
+        .collect();
+    let sims = cache.simulate_pairs(&probes);
+    let best: Vec<(LoopOrder, SimResult)> = sims
+        .chunks_exact(n_orders)
+        .map(|shape_sims| {
+            let mut best_order = LoopOrder::OS_ORDERS[0];
+            let mut best_sim = shape_sims[0];
             let mut best_edp = coeffs.edp(&best_sim);
-            for order in probes {
-                let sim = cache.simulate(&HwConfig { loop_order: order, ..*base }, g);
-                let edp = coeffs.edp(&sim);
+            for (order, sim) in LoopOrder::OS_ORDERS.iter().zip(shape_sims).skip(1) {
+                let edp = coeffs.edp(sim);
                 if edp.total_cmp(&best_edp) == Ordering::Less {
-                    best_order = order;
-                    best_sim = sim;
+                    best_order = *order;
+                    best_sim = *sim;
                     best_edp = edp;
                 }
             }

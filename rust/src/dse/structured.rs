@@ -224,10 +224,37 @@ fn eval_with(
     }
 }
 
+/// Memoized evaluation with every layer simulation batched: build the
+/// `(segment hw, layer GEMM)` pairs in the exact segment-major order
+/// [`eval_with`] consumes them, pre-simulate through
+/// [`EvalCache::simulate_pairs`] (cache misses become one SoA batch via
+/// [`crate::sim::batch`]), then replay the results through the shared
+/// arithmetic. Bit-identical to per-call cached simulation: same
+/// traversal order, same accumulation, and the batch simulator carries
+/// the scalar-oracle guarantee.
+fn eval_structured_cached(
+    spec: &StructuredSpec,
+    wl: &ModelWorkload,
+    cfg: &StructuredConfig,
+) -> StructuredDesign {
+    let parts = partition(wl.gemms.len(), cfg.segments.len());
+    let pairs: Vec<(HwConfig, Gemm)> = cfg
+        .segments
+        .iter()
+        .zip(&parts)
+        .flat_map(|(seg_hw, range)| range.clone().map(move |li| (*seg_hw, wl.gemms[li])))
+        .collect();
+    let sims = EvalCache::global().simulate_pairs(&pairs);
+    let mut next = sims.into_iter();
+    eval_with(spec, wl, cfg, move |_, _| {
+        next.next().expect("one pre-simulated result per layer visit")
+    })
+}
+
 /// Evaluate one structured candidate through the shared [`EvalCache`].
 pub fn eval_structured(spec: &StructuredSpec, cfg: &StructuredConfig) -> StructuredDesign {
     let wl = spec.workload();
-    eval_with(spec, &wl, cfg, |hw, g| EvalCache::global().simulate(hw, g))
+    eval_structured_cached(spec, &wl, cfg)
 }
 
 /// The scalar (uncached) reference: identical arithmetic on the raw
@@ -246,9 +273,7 @@ pub fn eval_structured_batch(
 ) -> Vec<StructuredDesign> {
     let spec = *spec;
     let wl = spec.workload();
-    par_map(cfgs, move |cfg| {
-        eval_with(&spec, &wl, cfg, |hw, g| EvalCache::global().simulate(hw, g))
-    })
+    par_map(cfgs, move |cfg| eval_structured_cached(&spec, &wl, cfg))
 }
 
 /// Single-config view of the structured space: `hw` replicated uniformly
@@ -370,10 +395,22 @@ pub fn search_random(
     Ok(finish(NAME, obj, acc.reports, acc.segs, &run))
 }
 
+/// Drop repeated joint candidates, keeping first-occurrence order.
+/// Generation and rounding are many-to-one (paper Fig 2a), so zipped
+/// per-segment draws can collide after [`constrain`] snaps them onto the
+/// budgeted grid — and a duplicate burns search budget on a repeat
+/// evaluation (the eval cache hides the compute cost but not the
+/// accounting). Never turns a non-empty list empty.
+fn dedup_configs(cfgs: Vec<StructuredConfig>) -> Vec<StructuredConfig> {
+    let mut seen = std::collections::HashSet::new();
+    cfgs.into_iter().filter(|cfg| seen.insert(cfg.clone())).collect()
+}
+
 /// DiffAxE per-segment conditioning: for every segment, draw low-EDP
 /// class samples conditioned on the segment's dominant (max-MACs) layer
 /// shape; candidate `k` zips the `k`-th draw of every segment into one
-/// joint configuration, projected into the shared budget.
+/// joint configuration, projected into the shared budget ([`constrain`])
+/// and deduplicated ([`dedup_configs`]) before evaluation.
 pub fn search_engine(
     engine: &DiffAxE,
     ctx: &SearchCtx,
@@ -425,9 +462,11 @@ pub fn search_engine(
     } else {
         0
     };
-    let cfgs: Vec<StructuredConfig> = (0..n_joint)
-        .map(|k| constrain(&spec.budget, pools.iter().map(|p| p[k]).collect()))
-        .collect();
+    let cfgs = dedup_configs(
+        (0..n_joint)
+            .map(|k| constrain(&spec.budget, pools.iter().map(|p| p[k]).collect()))
+            .collect(),
+    );
     if cfgs.is_empty() {
         anyhow::ensure!(run.interrupted(), "per-segment generation produced no candidates");
         return Ok(finish(NAME, obj, Vec::new(), Vec::new(), &run));
@@ -724,6 +763,21 @@ mod tests {
                 assert_eq!(d.edp.to_bits(), scalar.edp.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn dedup_keeps_first_occurrence_order_and_never_empties() {
+        let sp = spec();
+        let mut rng = Pcg32::seeded(71);
+        let a = sample_structured(&mut rng, &sp.budget, sp.n_segments());
+        let b = sample_structured(&mut rng, &sp.budget, sp.n_segments());
+        let c = sample_structured(&mut rng, &sp.budget, sp.n_segments());
+        let deduped =
+            dedup_configs(vec![a.clone(), b.clone(), a.clone(), c.clone(), b.clone(), a.clone()]);
+        assert_eq!(deduped, vec![a.clone(), b, c]);
+        // all-duplicates collapses to one, never to zero
+        assert_eq!(dedup_configs(vec![a.clone(), a.clone()]), vec![a]);
+        assert!(dedup_configs(Vec::new()).is_empty());
     }
 
     #[test]

@@ -35,6 +35,13 @@ subcommands:
   cancel        cancel a job; a started search keeps its partial outcome
                 (--addr --job ID)
   jobs          list the server's retained jobs (--addr)
+  bench-history accumulate per-commit throughput points from bench snapshot
+                JSONs into a committed history stream and gate CI on
+                regressions (--history benchmarks/history.json
+                [--eval-core BENCH_eval_core.json]
+                [--structured BENCH_structured.json]
+                [--check] [--append] [--tolerance 0.15]
+                [--commit SHA] [--message MSG] [--timestamp TS])
 ";
 
 fn main() -> Result<()> {
@@ -49,6 +56,7 @@ fn main() -> Result<()> {
         Some("watch") => cmd_watch(&args),
         Some("cancel") => cmd_cancel(&args),
         Some("jobs") => cmd_jobs(&args),
+        Some("bench-history") => cmd_bench_history(&args),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -350,6 +358,85 @@ fn cmd_gen_dataset(args: &Args) -> Result<()> {
         out.display(),
         t.elapsed_s()
     );
+    Ok(())
+}
+
+/// Accumulate bench-snapshot throughput points into the committed history
+/// stream and/or gate on regressions against its last entry — the CI
+/// enforcement of "`candidates/sec` only goes up" (ROADMAP item 3).
+fn cmd_bench_history(args: &Args) -> Result<()> {
+    use diffaxe::util::bench_history as hist;
+    use diffaxe::util::json::Json;
+    use std::path::Path;
+
+    let history_path = args.get_str("history", "benchmarks/history.json").to_string();
+    let tolerance = args.get_f64("tolerance", 0.15)?;
+    let do_check = args.flag("check");
+    let do_append = args.flag("append");
+    anyhow::ensure!(do_check || do_append, "nothing to do: pass --check and/or --append");
+
+    // collect the current run's points from whichever snapshots exist
+    let mut points = Vec::new();
+    for (source, flag, default) in [
+        ("eval_core", "eval-core", "BENCH_eval_core.json"),
+        ("structured", "structured", "BENCH_structured.json"),
+    ] {
+        let p = args.get_str(flag, default);
+        match std::fs::read_to_string(p) {
+            Ok(text) => {
+                let snap = Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("parse bench snapshot {p}: {e:?}"))?;
+                points.extend(hist::points_from_snapshot(source, &snap));
+            }
+            Err(_) => eprintln!("bench-history: snapshot {p} missing, skipping"),
+        }
+    }
+    anyhow::ensure!(!points.is_empty(), "no bench snapshots found — nothing to record");
+
+    let entries = hist::load(Path::new(&history_path)).map_err(|e| anyhow::anyhow!(e))?;
+    if do_check {
+        match entries.last() {
+            None => println!("bench-history: empty history, nothing to gate against"),
+            Some(last) => {
+                let bad = hist::regressions(last, &points, tolerance);
+                if bad.is_empty() {
+                    println!(
+                        "bench-history: {} throughput metrics within {:.0}% of the last entry",
+                        points
+                            .iter()
+                            .filter(|p| p.unit == "candidates/sec")
+                            .count(),
+                        tolerance * 100.0
+                    );
+                } else {
+                    for line in &bad {
+                        eprintln!("bench-history REGRESSION: {line}");
+                    }
+                    anyhow::bail!("{} throughput regression(s) past tolerance", bad.len());
+                }
+            }
+        }
+    }
+    if do_append {
+        let now_s = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let commit = hist::CommitInfo {
+            id: args.get_str("commit", "unknown").to_string(),
+            message: args.get_str("message", "").to_string(),
+            timestamp: args.get_str("timestamp", &now_s.to_string()).to_string(),
+        };
+        let mut entries = entries;
+        entries.push(hist::make_entry(&commit, now_s, &points));
+        hist::store(Path::new(&history_path), &entries, now_s).map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "bench-history: appended entry {} ({} points) -> {history_path} ({} total)",
+            commit.id,
+            points.len(),
+            entries.len()
+        );
+    }
     Ok(())
 }
 

@@ -15,8 +15,10 @@ use crate::workload::Gemm;
 use crate::design_space::LoopOrder;
 
 /// Position of the reuse-breaker loop relative to an operand's own loops.
+/// Shared with [`super::batch`], which hoists the dispatch on it out of the
+/// per-candidate inner loop (the position depends only on the loop order).
 #[derive(Debug, Clone, Copy, PartialEq)]
-enum BreakerPos {
+pub(super) enum BreakerPos {
     /// breaker is the innermost loop — each granule visited once
     Inner,
     /// breaker sits between the operand's own loops — per-slice reuse
@@ -29,7 +31,7 @@ enum BreakerPos {
     Outer,
 }
 
-fn breaker_pos(nest: [char; 3], tile_dim: char, breaker: char) -> BreakerPos {
+pub(super) fn breaker_pos(nest: [char; 3], tile_dim: char, breaker: char) -> BreakerPos {
     let pos = |c: char| nest.iter().position(|&x| x == c).unwrap();
     let pb = pos(breaker);
     let (pt, pk) = (pos(tile_dim), pos('k'));
@@ -43,11 +45,18 @@ fn breaker_pos(nest: [char; 3], tile_dim: char, breaker: char) -> BreakerPos {
 }
 
 /// K-chunk size when `k` is *not* the innermost loop: bounded by what the
-/// input and weight buffers can hold per array row/column.
+/// input and weight buffers can hold per array row/column. The raw-field
+/// form serves the SoA lanes of [`super::batch`]; both paths run this one
+/// expression, so the chunking can never drift between them.
+pub(super) fn k_chunk_parts(r: u64, c: u64, ip_b: u64, wt_b: u64, k: u64) -> u64 {
+    let by_ip = ip_b / r;
+    let by_wt = wt_b / c;
+    by_ip.min(by_wt).clamp(1, k)
+}
+
+/// [`k_chunk_parts`] over a whole configuration.
 pub(super) fn k_chunk(hw: &HwConfig, k: u32) -> u64 {
-    let by_ip = hw.ip_b / hw.r as u64;
-    let by_wt = hw.wt_b / hw.c as u64;
-    by_ip.min(by_wt).clamp(1, k as u64)
+    k_chunk_parts(hw.r as u64, hw.c as u64, hw.ip_b, hw.wt_b, k as u64)
 }
 
 /// DRAM traffic for one streamed operand (A with its m-tiling / IPSz, or B

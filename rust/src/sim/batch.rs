@@ -1,0 +1,348 @@
+//! Structure-of-arrays batch simulator — the vectorized form of
+//! [`super::analytical::simulate`] for candidate *batches* (ROADMAP
+//! item 2).
+//!
+//! Every optimizer funnels through batched evaluation
+//! ([`crate::dse::evaluate_batch`], the LLM probe loop, the structured
+//! per-segment evaluator), yet the analytical model scored one
+//! `(HwConfig, Gemm)` pair at a time: each call re-derived the loop-nest
+//! character positions, re-dispatched on the reuse-breaker position, and
+//! touched a fresh `HwConfig` struct — branchy, allocation-adjacent code
+//! the compiler cannot vectorize across candidates.
+//!
+//! This module restructures the inner loop:
+//!
+//! * **Grouping by [`LoopOrder`]** — the breaker positions
+//!   ([`BreakerPos`]), k-innermost flag and the output-traffic
+//!   `(m_inner, n_inner)` case are pure functions of the loop order, so
+//!   candidates are bucketed into (at most six) order groups and every
+//!   such dispatch is hoisted *out* of the per-candidate loop. Inside a
+//!   group the remaining branches are cheap data-dependent compares
+//!   (buffer-residency short circuits).
+//! * **SoA lanes** — per-candidate fields (`r`, `c`, `ip_b`, `wt_b`,
+//!   `op_b`, `bw`, and the workload's `m`/`n`/`k`) are laid out in
+//!   parallel `u64` arrays ([`Lanes`]); each pass (tilings, compute
+//!   cycles, per-operand DRAM traffic, output traffic, SRAM/runtime
+//!   assembly) streams straight-line integer arithmetic over those
+//!   arrays, which the backend autovectorizes where profitable.
+//!
+//! # Scalar-oracle guarantee
+//!
+//! The arithmetic is transcribed term-for-term from the scalar model and
+//! shares its helpers ([`Tiling`], [`breaker_pos`],
+//! [`super::analytical::k_chunk_parts`]); every counter is `u64`, so
+//! there is no floating-point reassociation to drift. [`simulate_batch`]
+//! is therefore **bit-identical** to mapping the scalar
+//! [`super::simulate`] over the batch — `tests/sim_batch_props.rs`
+//! enforces this across a `TrainingSpace` sample × `LoopOrder::ALL` ×
+//! edge GEMMs (M=1 decode shapes, K=1, partial tiles). The scalar path
+//! stays the oracle, exactly as [`super::trace`] is the oracle for the
+//! scalar path.
+
+use super::analytical::{breaker_pos, k_chunk_parts, BreakerPos};
+use super::tiles::Tiling;
+use super::{DramTraffic, SimResult, SramAccess};
+use crate::design_space::{HwConfig, LoopOrder};
+use crate::workload::Gemm;
+
+/// Per-candidate scalar fields of one loop-order group as parallel
+/// arrays, plus each candidate's position in the caller's batch.
+#[derive(Default)]
+struct Lanes {
+    idx: Vec<usize>,
+    r: Vec<u64>,
+    c: Vec<u64>,
+    ip_b: Vec<u64>,
+    wt_b: Vec<u64>,
+    op_b: Vec<u64>,
+    bw: Vec<u64>,
+    m: Vec<u64>,
+    n: Vec<u64>,
+    k: Vec<u64>,
+}
+
+impl Lanes {
+    fn push(&mut self, i: usize, hw: &HwConfig, g: &Gemm) {
+        self.idx.push(i);
+        self.r.push(hw.r as u64);
+        self.c.push(hw.c as u64);
+        self.ip_b.push(hw.ip_b);
+        self.wt_b.push(hw.wt_b);
+        self.op_b.push(hw.op_b);
+        self.bw.push(hw.bw as u64);
+        self.m.push(g.m as u64);
+        self.n.push(g.n as u64);
+        self.k.push(g.k as u64);
+    }
+}
+
+/// Simulate a batch of configurations on one GEMM. Bit-identical to
+/// mapping the scalar [`super::simulate`] over `cfgs` — the win is
+/// layout and branch hoisting, never semantics.
+pub fn simulate_batch(cfgs: &[HwConfig], g: &Gemm) -> Vec<SimResult> {
+    simulate_lanes(cfgs.len(), |i| &cfgs[i], |_| g)
+}
+
+/// Simulate per-candidate `(configuration, GEMM)` pairs — the LLM
+/// shape×order probe loop and the structured per-segment evaluator batch
+/// across workloads as well as configurations.
+pub fn simulate_pairs(pairs: &[(HwConfig, Gemm)]) -> Vec<SimResult> {
+    simulate_lanes(pairs.len(), |i| &pairs[i].0, |i| &pairs[i].1)
+}
+
+/// Gather the batch into per-loop-order SoA groups and run each group
+/// through the hoisted-branch passes.
+fn simulate_lanes<'a>(
+    n: usize,
+    hw: impl Fn(usize) -> &'a HwConfig,
+    g: impl Fn(usize) -> &'a Gemm,
+) -> Vec<SimResult> {
+    let mut out = vec![SimResult::zero(); n];
+    let mut groups: [Lanes; LoopOrder::ALL.len()] = Default::default();
+    for i in 0..n {
+        let h = hw(i);
+        let gi = LoopOrder::ALL
+            .iter()
+            .position(|&o| o == h.loop_order)
+            .expect("LoopOrder::ALL is total");
+        groups[gi].push(i, h, g(i));
+    }
+    for (gi, lanes) in groups.iter().enumerate() {
+        if !lanes.idx.is_empty() {
+            simulate_group(LoopOrder::ALL[gi], lanes, &mut out);
+        }
+    }
+    out
+}
+
+/// One operand's DRAM traffic across the group — the [`BreakerPos`]
+/// dispatch hoisted out of the candidate loop (it is a group constant);
+/// only the buffer-residency compares remain per candidate.
+fn operand_lane(
+    pos: BreakerPos,
+    tile: &[Tiling],
+    chunks: &[Tiling],
+    cap: &[u64],
+    trips: &[u64],
+    out: &mut [u64],
+) {
+    match pos {
+        BreakerPos::Inner => {
+            // each granule visited once: the residency short circuit and
+            // the miss case coincide at `total`
+            for i in 0..out.len() {
+                out[i] = tile[i].total() * chunks[i].total();
+            }
+        }
+        BreakerPos::Outer => {
+            for i in 0..out.len() {
+                let total = tile[i].total() * chunks[i].total();
+                out[i] = if total <= cap[i] { total } else { total * trips[i] };
+            }
+        }
+        BreakerPos::Middle { k_outer: false } => {
+            // slice = one tile row/col across all of K
+            for i in 0..out.len() {
+                let k_total = chunks[i].total();
+                let total = tile[i].total() * k_total;
+                out[i] = if total <= cap[i] {
+                    total
+                } else {
+                    let (c, t) = (cap[i], trips[i]);
+                    k_total * tile[i].sum_sized(|rows| if rows * k_total <= c { 1 } else { t })
+                };
+            }
+        }
+        BreakerPos::Middle { k_outer: true } => {
+            // slice = one K-chunk across the whole non-shared extent
+            for i in 0..out.len() {
+                let extent = tile[i].total();
+                let total = extent * chunks[i].total();
+                out[i] = if total <= cap[i] {
+                    total
+                } else {
+                    let (c, t) = (cap[i], trips[i]);
+                    extent * chunks[i].sum_sized(|kd| if extent * kd <= c { 1 } else { t })
+                };
+            }
+        }
+    }
+}
+
+/// Output DRAM traffic `(writes, partial_reads)` for one slice-revisit
+/// arm (the `add_slices` body of the scalar model).
+fn slice_arm(slices: &Tiling, other: u64, cap: u64, tk: u64) -> (u64, u64) {
+    let writes = other * slices.sum_sized(|s| if s * other <= cap { 1 } else { tk });
+    let reads = other * slices.sum_sized(|s| if s * other <= cap { 0 } else { tk - 1 });
+    (writes, reads)
+}
+
+/// Run one loop-order group through the SoA passes and scatter results
+/// into `out` at each candidate's original batch position.
+fn simulate_group(order: LoopOrder, lanes: &Lanes, out: &mut [SimResult]) {
+    let nc = lanes.idx.len();
+    let nest = order.nest();
+    // ---- group constants: everything the loop order determines --------
+    let k_innermost = nest[2] == 'k';
+    let pos_a = breaker_pos(nest, 'm', 'n');
+    let pos_b = breaker_pos(nest, 'n', 'm');
+    let posn = |ch: char| nest.iter().position(|&x| x == ch).unwrap();
+    let pk = posn('k');
+    let m_inner = posn('m') > pk;
+    let n_inner = posn('n') > pk;
+
+    // ---- tilings -------------------------------------------------------
+    let mut tm = Vec::with_capacity(nc);
+    let mut tn = Vec::with_capacity(nc);
+    let mut chunks = Vec::with_capacity(nc);
+    for i in 0..nc {
+        tm.push(Tiling::new(lanes.m[i], lanes.r[i]));
+        tn.push(Tiling::new(lanes.n[i], lanes.c[i]));
+        chunks.push(if k_innermost {
+            Tiling::new(lanes.k[i], lanes.k[i])
+        } else {
+            let kc =
+                k_chunk_parts(lanes.r[i], lanes.c[i], lanes.ip_b[i], lanes.wt_b[i], lanes.k[i]);
+            Tiling::new(lanes.k[i], kc)
+        });
+    }
+
+    // ---- compute cycles ------------------------------------------------
+    let mut compute = vec![0u64; nc];
+    for i in 0..nc {
+        let fold_overhead = 2 * lanes.r[i] + lanes.c[i] - 2;
+        compute[i] = tm[i].tiles * tn[i].tiles * (chunks[i].tiles * fold_overhead + lanes.k[i]);
+    }
+
+    // ---- operand DRAM traffic (breaker dispatch hoisted) ---------------
+    let trips_a: Vec<u64> = tn.iter().map(|t| t.tiles).collect();
+    let trips_b: Vec<u64> = tm.iter().map(|t| t.tiles).collect();
+    let mut a_reads = vec![0u64; nc];
+    let mut b_reads = vec![0u64; nc];
+    operand_lane(pos_a, &tm, &chunks, &lanes.ip_b, &trips_a, &mut a_reads);
+    operand_lane(pos_b, &tn, &chunks, &lanes.wt_b, &trips_b, &mut b_reads);
+
+    // ---- output DRAM traffic ((m_inner, n_inner) dispatch hoisted) -----
+    // the per-candidate `tk == 1` short circuit stays: K can fit one
+    // chunk even when k is not the innermost loop
+    let mut out_writes = vec![0u64; nc];
+    let mut out_reads = vec![0u64; nc];
+    if k_innermost {
+        for i in 0..out_writes.len() {
+            out_writes[i] = lanes.m[i] * lanes.n[i];
+        }
+    } else {
+        match (m_inner, n_inner) {
+            (true, true) => {
+                for i in 0..out_writes.len() {
+                    let mn = lanes.m[i] * lanes.n[i];
+                    let tk = chunks[i].tiles;
+                    if tk == 1 || mn <= lanes.op_b[i] {
+                        out_writes[i] = mn;
+                    } else {
+                        out_writes[i] = mn * tk;
+                        out_reads[i] = mn * (tk - 1);
+                    }
+                }
+            }
+            (true, false) => {
+                for i in 0..out_writes.len() {
+                    let tk = chunks[i].tiles;
+                    if tk == 1 {
+                        out_writes[i] = lanes.m[i] * lanes.n[i];
+                    } else {
+                        (out_writes[i], out_reads[i]) =
+                            slice_arm(&tn[i], lanes.m[i], lanes.op_b[i], tk);
+                    }
+                }
+            }
+            (false, true) => {
+                for i in 0..out_writes.len() {
+                    let tk = chunks[i].tiles;
+                    if tk == 1 {
+                        out_writes[i] = lanes.m[i] * lanes.n[i];
+                    } else {
+                        (out_writes[i], out_reads[i]) =
+                            slice_arm(&tm[i], lanes.n[i], lanes.op_b[i], tk);
+                    }
+                }
+            }
+            (false, false) => unreachable!("k not innermost implies m or n is inner to k"),
+        }
+    }
+
+    // ---- SRAM accesses, runtime, scatter -------------------------------
+    for i in 0..nc {
+        let dram = DramTraffic {
+            a_reads: a_reads[i],
+            b_reads: b_reads[i],
+            out_writes: out_writes[i],
+            out_reads: out_reads[i],
+        };
+        let sram = SramAccess {
+            ip_reads: tn[i].tiles * lanes.m[i] * lanes.k[i],
+            wt_reads: tm[i].tiles * lanes.k[i] * lanes.n[i],
+            op_writes: lanes.m[i] * lanes.n[i] + dram.out_reads,
+            op_reads: dram.out_writes,
+            fills: dram.a_reads + dram.b_reads,
+        };
+        let mem_cycles = dram.total().div_ceil(lanes.bw[i]);
+        out[lanes.idx[i]] = SimResult {
+            cycles: compute[i].max(mem_cycles),
+            compute_cycles: compute[i],
+            mem_cycles,
+            dram,
+            sram,
+            macs_useful: lanes.m[i] * lanes.k[i] * lanes.n[i],
+            pe_cycles: compute[i] * lanes.r[i] * lanes.c[i],
+            tk: chunks[i].tiles,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::params::TrainingSpace;
+    use crate::sim::simulate;
+
+    #[test]
+    fn batch_matches_scalar_mixed_orders() {
+        // the exhaustive sweep lives in tests/sim_batch_props.rs; this
+        // guards the module in isolation across all six order groups
+        let g = Gemm::new(96, 768, 320);
+        let mut cfgs: Vec<HwConfig> = Vec::new();
+        for (i, lo) in LoopOrder::ALL.iter().cycle().take(48).enumerate() {
+            let base = TrainingSpace::nth(i * 97 % TrainingSpace::len());
+            cfgs.push(HwConfig { loop_order: *lo, ..base });
+        }
+        let batch = simulate_batch(&cfgs, &g);
+        for (hw, b) in cfgs.iter().zip(&batch) {
+            assert_eq!(*b, simulate(hw, &g), "{hw:?}");
+        }
+    }
+
+    #[test]
+    fn pairs_match_scalar_and_preserve_order() {
+        let shapes = [Gemm::new(1, 4096, 12288), Gemm::new(128, 768, 2304), Gemm::new(5, 7, 3)];
+        let pairs: Vec<(HwConfig, Gemm)> = LoopOrder::ALL
+            .iter()
+            .enumerate()
+            .flat_map(|(i, &lo)| {
+                let base = TrainingSpace::nth(i * 131 % TrainingSpace::len());
+                shapes.iter().map(move |g| (HwConfig { loop_order: lo, ..base }, *g))
+            })
+            .collect();
+        let batch = simulate_pairs(&pairs);
+        assert_eq!(batch.len(), pairs.len());
+        for ((hw, g), b) in pairs.iter().zip(&batch) {
+            assert_eq!(*b, simulate(hw, g), "{hw:?} {g:?}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        assert!(simulate_batch(&[], &Gemm::new(8, 8, 8)).is_empty());
+        assert!(simulate_pairs(&[]).is_empty());
+    }
+}

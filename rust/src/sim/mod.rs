@@ -2,10 +2,18 @@
 //! paper: cycle counts and memory-access tallies for a GEMM on a systolic
 //! array under output-stationary (OS) dataflow.
 //!
-//! Two implementations of the same model:
+//! Three implementations of the same model:
 //!
 //! * [`analytical`] — closed-form (used everywhere: dataset generation,
 //!   candidate evaluation, benchmarks). O(1) per (hardware, workload) pair.
+//! * [`batch`] — the same closed-form model restructured as
+//!   structure-of-arrays over a *batch* of candidates
+//!   ([`batch::simulate_batch`] / [`batch::simulate_pairs`]): candidates are
+//!   grouped by [`LoopOrder`] so the reuse-breaker dispatch is hoisted out of
+//!   the per-candidate loops and the all-integer tiling/traffic arithmetic
+//!   runs over parallel arrays. The scalar [`simulate`] is its bit-identity
+//!   oracle — the property suite asserts exact `SimResult` equality, so the
+//!   batch path is a pure throughput optimization, never a second model.
 //! * [`trace`] — a literal tile-loop-nest simulator with explicit buffer
 //!   residency tracking. O(Tm·Tn·Tk) per pair; the *oracle* the analytical
 //!   formulas are property-tested against.
@@ -37,8 +45,11 @@
 //! model's global approximation under double buffering.
 
 pub mod analytical;
+pub mod batch;
 pub mod tiles;
 pub mod trace;
+
+pub use batch::{simulate_batch, simulate_pairs};
 
 use crate::design_space::{HwConfig, LoopOrder};
 use crate::workload::Gemm;

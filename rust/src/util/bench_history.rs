@@ -1,0 +1,259 @@
+//! Per-commit benchmark history and the CI regression gate (ROADMAP
+//! item 3).
+//!
+//! Each CI run emits machine-readable bench snapshots
+//! (`BENCH_eval_core.json`, `BENCH_structured.json`). This module
+//! accumulates the **throughput** points from those snapshots into a
+//! committed history file (`benchmarks/history.json`) shaped after the
+//! flowistry `window.BENCHMARK_DATA` stream — an `entries` array of
+//! `{commit{id, message, timestamp}, date, benches[{name, value, unit}]}`
+//! records — and fails CI when the current run regresses more than a
+//! tolerance against the last recorded entry. That turns every landed
+//! speedup into an enforced floor instead of a one-off bragging number.
+//!
+//! Only *throughput* keys (higher is better) participate in the gate:
+//! `*_candidates_per_s` from the eval-core stream and `structured_cps_*`
+//! from the structured stream. Ratios (speedups) and hit rates ride along
+//! in the history for plotting but are too noisy to gate on — a cache
+//! speedup can legitimately halve when the baseline it divides by gets
+//! faster.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One named measurement in an entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchPoint {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+/// Whether a bench key is a throughput metric the regression gate covers
+/// (higher is strictly better).
+pub fn is_throughput_key(name: &str) -> bool {
+    name.ends_with("_candidates_per_s") || name.starts_with("structured_cps_")
+}
+
+/// Flatten one bench-snapshot JSON object (`{key: number, ...}`) into
+/// named points; the `source` prefixes each name so the two streams never
+/// collide (`eval_core/llm_cold_candidates_per_s`). Non-numeric values
+/// are skipped.
+pub fn points_from_snapshot(source: &str, snapshot: &Json) -> Vec<BenchPoint> {
+    let Some(obj) = snapshot.as_obj() else { return Vec::new() };
+    obj.iter()
+        .filter_map(|(k, v)| {
+            v.as_f64().map(|value| BenchPoint {
+                name: format!("{source}/{k}"),
+                value,
+                unit: if is_throughput_key(k) { "candidates/sec" } else { "ratio" }.to_string(),
+            })
+        })
+        .collect()
+}
+
+/// The commit identity stamped on one history entry.
+#[derive(Debug, Clone, Default)]
+pub struct CommitInfo {
+    pub id: String,
+    pub message: String,
+    /// ISO-8601 or epoch seconds — recorded verbatim, never parsed.
+    pub timestamp: String,
+}
+
+/// Parse `benchmarks/history.json`; a missing file is an empty history.
+pub fn load(path: &Path) -> Result<Vec<Json>, String> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    let root = Json::parse(&text).map_err(|e| format!("parse {path:?}: {e:?}"))?;
+    match root.get("entries").as_arr() {
+        Some(entries) => Ok(entries.to_vec()),
+        None => Err(format!("{path:?}: missing entries array")),
+    }
+}
+
+/// The throughput points of one history entry, keyed by name.
+pub fn entry_throughputs(entry: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    if let Some(benches) = entry.get("benches").as_arr() {
+        for b in benches {
+            if let (Some(name), Some(value)) = (b.get("name").as_str(), b.get("value").as_f64()) {
+                // names are prefixed "source/key"; gate on the key part
+                let key = name.rsplit('/').next().unwrap_or(name);
+                if is_throughput_key(key) {
+                    out.insert(name.to_string(), value);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Compare the current run's points against the last history entry.
+/// Returns one line per throughput metric that fell below
+/// `(1 - tolerance) ×` its previous value. Metrics absent on either side
+/// are skipped (new benches enter the stream ungated; retired ones leave
+/// it silently).
+pub fn regressions(last: &Json, current: &[BenchPoint], tolerance: f64) -> Vec<String> {
+    let prev = entry_throughputs(last);
+    let mut out = Vec::new();
+    for p in current {
+        let key = p.name.rsplit('/').next().unwrap_or(&p.name);
+        if !is_throughput_key(key) {
+            continue;
+        }
+        if let Some(&was) = prev.get(&p.name) {
+            let floor = was * (1.0 - tolerance);
+            if was > 0.0 && p.value < floor {
+                out.push(format!(
+                    "{}: {:.0} -> {:.0} ({:+.1}% < -{:.0}% tolerance)",
+                    p.name,
+                    was,
+                    p.value,
+                    (p.value / was - 1.0) * 100.0,
+                    tolerance * 100.0
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Serialize one new entry in the flowistry `BENCHMARK_DATA` entry shape.
+pub fn make_entry(commit: &CommitInfo, date_epoch_s: u64, points: &[BenchPoint]) -> Json {
+    let benches: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("name", Json::Str(p.name.clone())),
+                ("value", Json::Num(p.value)),
+                ("unit", Json::Str(p.unit.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        (
+            "commit",
+            Json::obj(vec![
+                ("id", Json::Str(commit.id.clone())),
+                ("message", Json::Str(commit.message.clone())),
+                ("timestamp", Json::Str(commit.timestamp.clone())),
+            ]),
+        ),
+        ("date", Json::Num(date_epoch_s as f64)),
+        ("tool", Json::Str("cargo".to_string())),
+        ("benches", Json::Arr(benches)),
+    ])
+}
+
+/// Rewrite the history file with `entries` (creating parent directories),
+/// wrapped in the `{lastUpdate, entries: [...]}` envelope.
+pub fn store(path: &Path, entries: &[Json], last_update_epoch_s: u64) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {dir:?}: {e}"))?;
+        }
+    }
+    let root = Json::obj(vec![
+        ("lastUpdate", Json::Num(last_update_epoch_s as f64)),
+        ("entries", Json::Arr(entries.to_vec())),
+    ]);
+    std::fs::write(path, root.to_string()).map_err(|e| format!("write {path:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(name: &str, value: f64) -> BenchPoint {
+        BenchPoint { name: name.to_string(), value, unit: "candidates/sec".to_string() }
+    }
+
+    fn entry_with(points: &[BenchPoint]) -> Json {
+        make_entry(
+            &CommitInfo { id: "abc".into(), message: "m".into(), timestamp: "t".into() },
+            1,
+            points,
+        )
+    }
+
+    #[test]
+    fn throughput_keys_gate_ratios_do_not() {
+        assert!(is_throughput_key("llm_cold_candidates_per_s"));
+        assert!(is_throughput_key("sim_batch_candidates_per_s"));
+        assert!(is_throughput_key("structured_cps_diffaxe"));
+        assert!(!is_throughput_key("cache_hit_rate"));
+        assert!(!is_throughput_key("llm_speedup_cold"));
+        assert!(!is_throughput_key("structured_sp_random"));
+    }
+
+    #[test]
+    fn regression_detected_only_past_tolerance() {
+        let last = entry_with(&[
+            pt("eval_core/llm_cold_candidates_per_s", 1000.0),
+            pt("structured/structured_cps_diffaxe", 500.0),
+        ]);
+        // 10% down: inside the 15% tolerance
+        let ok = regressions(&last, &[pt("eval_core/llm_cold_candidates_per_s", 900.0)], 0.15);
+        assert!(ok.is_empty(), "{ok:?}");
+        // 20% down: gated
+        let bad = regressions(&last, &[pt("eval_core/llm_cold_candidates_per_s", 800.0)], 0.15);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("llm_cold_candidates_per_s"), "{bad:?}");
+        // improvements and new metrics never fail
+        let up = regressions(
+            &last,
+            &[
+                pt("eval_core/llm_cold_candidates_per_s", 5000.0),
+                pt("eval_core/brand_new_candidates_per_s", 1.0),
+            ],
+            0.15,
+        );
+        assert!(up.is_empty(), "{up:?}");
+        // non-throughput keys are ignored even when lower
+        let ratios = regressions(
+            &last,
+            &[BenchPoint { name: "eval_core/hit_rate".into(), value: 0.0, unit: "ratio".into() }],
+            0.15,
+        );
+        assert!(ratios.is_empty(), "{ratios:?}");
+    }
+
+    #[test]
+    fn snapshot_flattening_prefixes_and_filters() {
+        let snap = Json::obj(vec![
+            ("llm_cold_candidates_per_s", Json::Num(42.0)),
+            ("cache_hit_rate", Json::Num(0.5)),
+            ("label", Json::Str("not a number".into())),
+        ]);
+        let pts = points_from_snapshot("eval_core", &snap);
+        assert_eq!(pts.len(), 2);
+        assert!(pts.iter().any(
+            |p| p.name == "eval_core/llm_cold_candidates_per_s" && p.unit == "candidates/sec"
+        ));
+        assert!(pts.iter().any(|p| p.name == "eval_core/cache_hit_rate" && p.unit == "ratio"));
+    }
+
+    #[test]
+    fn history_roundtrip_appends_and_reloads() {
+        let dir = std::env::temp_dir().join(format!("diffaxe_bench_hist_{}", std::process::id()));
+        let path = dir.join("history.json");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(load(&path).unwrap().is_empty(), "missing file is an empty history");
+        let mut entries = load(&path).unwrap();
+        entries.push(entry_with(&[pt("eval_core/sim_batch_candidates_per_s", 123.0)]));
+        store(&path, &entries, 7).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        let tp = entry_throughputs(&back[0]);
+        assert_eq!(tp.get("eval_core/sim_batch_candidates_per_s"), Some(&123.0));
+        // append a second entry and confirm ordering survives
+        entries.push(entry_with(&[pt("eval_core/sim_batch_candidates_per_s", 150.0)]));
+        store(&path, &entries, 8).unwrap();
+        assert_eq!(load(&path).unwrap().len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -4,6 +4,7 @@
 //! / criterion), so the library provides its own implementations.
 
 pub mod bench;
+pub mod bench_history;
 pub mod json;
 pub mod linalg;
 pub mod pca;

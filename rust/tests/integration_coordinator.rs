@@ -363,6 +363,60 @@ fn structured_search_over_the_wire() {
     }
 }
 
+#[test]
+fn zero_budget_batched_request_returns_empty_outcome() {
+    // PR-4 contract: Budget::evals(0) is answered with a well-formed empty
+    // outcome from *every* path — including the continuous batcher, which
+    // used to force a minimum of one generated design
+    let Some(svc) = service() else { return };
+    match svc.handle().request(generate(some_workload(), 1e6, 0)) {
+        Response::Outcome(o) => {
+            assert_eq!(o.evals, 0);
+            assert!(o.ranked.is_empty());
+            assert!(o.trace.is_empty());
+            assert_eq!(o.stopped, StopReason::BudgetExhausted);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn batch_window_excludes_registry_queue_wait() {
+    // batchable requests that sat queued behind a long non-batchable job
+    // must still get a full batch window to coalesce — the window clock
+    // starts when a request joins the batcher, not at submission. With
+    // the old clock, each request "expired" the moment the blocker
+    // finished and flushed alone (two sampler calls instead of one).
+    let mut cfg = if DiffAxE::artifacts_present(Path::new("artifacts")) {
+        ServiceConfig::new("artifacts")
+    } else {
+        ServiceConfig::mock()
+    };
+    cfg.batch_window = std::time::Duration::from_millis(200);
+    let svc = Service::start(cfg).expect("service start");
+    // occupy the engine loop well past the batch window
+    let blocker = svc.handle().submit(Request::Search(SearchRequest::new(
+        Objective::MinEdp { g: some_workload() },
+        Budget::evals(50_000_000).with_wall_clock(0.4),
+        OptimizerKind::RandomSearch,
+    )));
+    // two batchable requests queue behind it (~400 ms > the 200 ms window)
+    let a = svc.handle().submit(generate(some_workload(), 1e6, 4));
+    let b = svc.handle().submit(generate(some_workload(), 2e6, 4));
+    blocker.recv().unwrap();
+    for rx in [a, b] {
+        match rx.recv().unwrap() {
+            Response::Outcome(o) => assert_eq!(o.ranked.len(), 4),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let snap = svc.handle().metrics().snapshot();
+    assert_eq!(
+        snap.sampler_calls, 1,
+        "queued batchable requests must coalesce into one sampler call"
+    );
+}
+
 // ---------------------------------------------------------------------------
 // v3: jobs, streaming, cancellation, deadlines
 // ---------------------------------------------------------------------------

@@ -1,0 +1,104 @@
+//! Property suite for the SoA batch simulator's scalar-oracle guarantee:
+//! `sim::batch::{simulate_batch, simulate_pairs}` must be **bit-identical**
+//! to mapping the scalar `sim::simulate` over the batch — across the
+//! training grid, every loop order, random target-space samples, and the
+//! edge GEMMs (M=1 decode shapes, K=1, partial tiles) where tiling
+//! remainders and chunk clamps exercise every arm of the model. All-integer
+//! arithmetic: equality is exact, not approximate. Hermetic — pure
+//! functions of seeded randomness.
+
+use diffaxe::design_space::{HwConfig, LoopOrder, TargetSpace, TrainingSpace};
+use diffaxe::sim::{simulate, simulate_batch, simulate_pairs};
+use diffaxe::util::rng::Pcg32;
+use diffaxe::workload::Gemm;
+
+/// The adversarial shape set: decode-style skinny GEMMs, degenerate K,
+/// partial tiles against every array dimension, and a large LLM layer.
+fn edge_gemms() -> Vec<Gemm> {
+    vec![
+        Gemm::new(1, 4096, 12288), // M=1 decode (GPT-3-ish FFN)
+        Gemm::new(1, 64, 1),       // single output column, skinny K
+        Gemm::new(1, 1, 1),        // fully degenerate
+        Gemm::new(128, 1, 128),    // K=1: one chunk regardless of order
+        Gemm::new(5, 7, 3),        // partial tiles in every dimension
+        Gemm::new(33, 129, 65),    // off-by-one past pow2 tile edges
+        Gemm::new(512, 4096, 512), // square-ish large layer
+        Gemm::new(100, 768, 3072), // BERT FFN with a partial M tile
+    ]
+}
+
+/// TrainingSpace sample × `LoopOrder::ALL` × edge GEMMs: exact equality
+/// of every `SimResult` counter, per shape.
+#[test]
+fn batch_bit_identical_on_training_grid_times_orders_times_edges() {
+    // a deterministic stride through the training grid (covers every
+    // parameter level; the full grid is ~40k points — too many per shape)
+    let stride = TrainingSpace::len() / 97;
+    let bases: Vec<HwConfig> =
+        (0..97).map(|i| TrainingSpace::nth((i * stride + i) % TrainingSpace::len())).collect();
+    for g in edge_gemms() {
+        let cfgs: Vec<HwConfig> = bases
+            .iter()
+            .flat_map(|b| LoopOrder::ALL.iter().map(move |&lo| HwConfig { loop_order: lo, ..*b }))
+            .collect();
+        let batch = simulate_batch(&cfgs, &g);
+        assert_eq!(batch.len(), cfgs.len());
+        for (hw, got) in cfgs.iter().zip(&batch) {
+            assert_eq!(*got, simulate(hw, &g), "{hw} on {g:?}");
+        }
+    }
+}
+
+/// Random target-space batches (mixed orders in one call) stay exact.
+#[test]
+fn batch_bit_identical_on_random_target_space() {
+    let mut rng = Pcg32::seeded(2001);
+    for trial in 0..20 {
+        let g = Gemm::new(
+            rng.int_range(1, 600) as u32,
+            rng.int_range(1, 4096) as u32,
+            rng.int_range(1, 600) as u32,
+        );
+        let cfgs: Vec<HwConfig> = (0..200).map(|_| TargetSpace::sample(&mut rng)).collect();
+        let batch = simulate_batch(&cfgs, &g);
+        for (hw, got) in cfgs.iter().zip(&batch) {
+            assert_eq!(*got, simulate(hw, &g), "trial {trial}: {hw} on {g:?}");
+        }
+    }
+}
+
+/// `simulate_pairs` preserves input order across interleaved shapes and
+/// orders, with duplicates allowed.
+#[test]
+fn pairs_bit_identical_in_input_order_with_duplicates() {
+    let mut rng = Pcg32::seeded(2002);
+    let shapes = edge_gemms();
+    let mut pairs: Vec<(HwConfig, Gemm)> = Vec::new();
+    for i in 0..300 {
+        let hw = TargetSpace::sample(&mut rng);
+        pairs.push((hw, shapes[i % shapes.len()]));
+        if i % 7 == 0 {
+            // exact duplicate of the previous pair
+            pairs.push((hw, shapes[i % shapes.len()]));
+        }
+    }
+    let batch = simulate_pairs(&pairs);
+    assert_eq!(batch.len(), pairs.len());
+    for ((hw, g), got) in pairs.iter().zip(&batch) {
+        assert_eq!(*got, simulate(hw, g), "{hw} on {g:?}");
+    }
+}
+
+/// Single-element and empty batches degenerate correctly.
+#[test]
+fn tiny_batches_degenerate_to_scalar() {
+    let g = Gemm::new(64, 256, 64);
+    assert!(simulate_batch(&[], &g).is_empty());
+    assert!(simulate_pairs(&[]).is_empty());
+    let mut rng = Pcg32::seeded(2003);
+    for _ in 0..50 {
+        let hw = TargetSpace::sample(&mut rng);
+        assert_eq!(simulate_batch(&[hw], &g), vec![simulate(&hw, &g)]);
+        assert_eq!(simulate_pairs(&[(hw, g)]), vec![simulate(&hw, &g)]);
+    }
+}
