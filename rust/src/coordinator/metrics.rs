@@ -5,7 +5,7 @@
 
 use super::protocol::JobState;
 use crate::util::stats::LatencyHist;
-use std::sync::Mutex;
+use crate::util::sync::{rank, TrackedMutex};
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -36,10 +36,19 @@ struct Inner {
     sampler_latency: LatencyHist,
 }
 
-/// Thread-safe metrics sink.
-#[derive(Debug, Default)]
+/// Thread-safe metrics sink. Its lock is the highest-ranked in the
+/// registry/service cluster ([`rank::METRICS`]) — but by convention every
+/// caller records *after* releasing registry/job locks, so it behaves as
+/// a leaf (see the lock-rank table in `docs/INVARIANTS.md`).
+#[derive(Debug)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    inner: TrackedMutex<Inner>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics { inner: TrackedMutex::new("metrics.inner", rank::METRICS, Inner::default()) }
+    }
 }
 
 /// Point-in-time snapshot for reporting.
@@ -89,14 +98,14 @@ impl Metrics {
     }
 
     pub fn record_request(&self, latency_us: f64, designs: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock();
         m.requests += 1;
         m.designs_generated += designs as u64;
         m.request_latency.record_us(latency_us);
     }
 
     pub fn record_sampler_call(&self, latency_us: f64, slots_used: usize, slots_total: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock();
         m.sampler_calls += 1;
         m.batch_slots_used += slots_used as u64;
         m.batch_slots_total += slots_total as u64;
@@ -104,31 +113,31 @@ impl Metrics {
     }
 
     pub fn record_evaluations(&self, n: usize) {
-        self.inner.lock().unwrap().designs_evaluated += n as u64;
+        self.inner.lock().designs_evaluated += n as u64;
     }
 
     /// Mirror the eval-cache counters (absolute cumulative values; the
     /// cache is the source of truth, this just makes them scrapeable).
     pub fn record_cache(&self, hits: u64, misses: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock();
         m.cache_hits = hits;
         m.cache_misses = misses;
     }
 
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        self.inner.lock().errors += 1;
     }
 
     /// A job entered the registry (state `queued`).
     pub fn job_submitted(&self) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock();
         m.jobs_submitted += 1;
         m.jobs_queued += 1;
     }
 
     /// A job left the queue and started executing.
     pub fn job_started(&self) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock();
         m.jobs_queued = m.jobs_queued.saturating_sub(1);
         m.jobs_active += 1;
     }
@@ -137,7 +146,7 @@ impl Metrics {
     /// gauge to decrement; `had_buffered_event` frees its coalesced
     /// progress-event slot.
     pub fn job_finished(&self, state: JobState, was_running: bool, had_buffered_event: bool) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock();
         if was_running {
             m.jobs_active = m.jobs_active.saturating_sub(1);
         } else {
@@ -156,11 +165,11 @@ impl Metrics {
     /// A progress event landed in a previously-empty coalescing slot
     /// (replacing a buffered event keeps the depth unchanged).
     pub fn event_buffered(&self) {
-        self.inner.lock().unwrap().event_queue_depth += 1;
+        self.inner.lock().event_queue_depth += 1;
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let m = self.inner.lock().unwrap();
+        let m = self.inner.lock();
         Snapshot {
             requests: m.requests,
             designs_generated: m.designs_generated,

@@ -32,6 +32,14 @@
 //!   byte-compatibly: they are submit-plus-wait over the same registry.
 //! * Terminal jobs are retained for late `status` queries up to
 //!   [`service::MAX_RETAINED_JOBS`], then GC'd oldest-first.
+//!
+//! # Locking
+//!
+//! Every lock in this module is a [`crate::util::sync::TrackedMutex`]
+//! with a static rank (registry → job core → connection semaphore →
+//! metrics); debug builds assert the acquisition order, and
+//! `diffaxe lint` forbids raw `std::sync` locks outside the facade. The
+//! lock-rank table and the rules live in `docs/INVARIANTS.md`.
 
 pub mod metrics;
 pub mod protocol;

@@ -17,10 +17,11 @@ use super::protocol::{ErrorCode, JobInfo, Request, Response};
 use super::service::Handle;
 use crate::dse::api::SearchEvent;
 use crate::util::json::Json;
+use crate::util::sync::{rank, TrackedMutex};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 
 /// Maximum concurrently-served connections.
 pub const MAX_CONNECTIONS: usize = 256;
@@ -28,19 +29,22 @@ pub const MAX_CONNECTIONS: usize = 256;
 /// Minimal counting semaphore (std has none): `acquire` blocks while no
 /// permit is free; the returned guard releases on drop.
 struct Semaphore {
-    permits: Mutex<usize>,
+    permits: TrackedMutex<usize>,
     cv: Condvar,
 }
 
 impl Semaphore {
     fn new(n: usize) -> Arc<Semaphore> {
-        Arc::new(Semaphore { permits: Mutex::new(n), cv: Condvar::new() })
+        Arc::new(Semaphore {
+            permits: TrackedMutex::new("server.semaphore", rank::CONN_SEMAPHORE, n),
+            cv: Condvar::new(),
+        })
     }
 
     fn acquire(self: &Arc<Semaphore>) -> Permit {
-        let mut p = self.permits.lock().unwrap();
+        let mut p = self.permits.lock();
         while *p == 0 {
-            p = self.cv.wait(p).unwrap();
+            p = p.wait(&self.cv);
         }
         *p -= 1;
         Permit(self.clone())
@@ -51,7 +55,7 @@ struct Permit(Arc<Semaphore>);
 
 impl Drop for Permit {
     fn drop(&mut self) {
-        *self.0.permits.lock().unwrap() += 1;
+        *self.0.permits.lock() += 1;
         self.0.cv.notify_one();
     }
 }

@@ -43,12 +43,13 @@ use crate::dse::api::{
 };
 use crate::design_space::HwConfig;
 use crate::util::rng;
+use crate::util::sync::{rank, TrackedMutex};
 use crate::workload::Gemm;
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 /// Default cap on ranked designs carried in one response (requests can
@@ -116,7 +117,7 @@ pub struct JobEntry {
     pub request: SearchRequest,
     cancel: Arc<AtomicBool>,
     submitted: Instant,
-    core: Mutex<JobCore>,
+    core: TrackedMutex<JobCore>,
     cv: Condvar,
 }
 
@@ -128,12 +129,12 @@ impl JobEntry {
 
     /// Current lifecycle state.
     pub fn state(&self) -> JobState {
-        self.core.lock().unwrap().state
+        self.core.lock().state
     }
 
     /// Point-in-time description (the `status` wire unit).
     pub fn info(&self) -> JobInfo {
-        let core = self.core.lock().unwrap();
+        let core = self.core.lock();
         let (evals, best_score) = match (&core.result, &core.latest) {
             (Some(Response::Outcome(o)), _) => {
                 let best = o.best_score();
@@ -162,7 +163,6 @@ impl JobEntry {
     pub fn result_now(&self) -> Response {
         self.core
             .lock()
-            .unwrap()
             .result
             .clone()
             .unwrap_or_else(|| Response::error(ErrorCode::Internal, "job not finished"))
@@ -176,9 +176,9 @@ impl JobEntry {
         &self,
         last_seq: u64,
     ) -> (u64, Option<SearchEvent>, Option<(JobState, Response)>) {
-        let mut core = self.core.lock().unwrap();
+        let mut core = self.core.lock();
         while core.seq <= last_seq && core.result.is_none() {
-            core = self.cv.wait(core).unwrap();
+            core = core.wait(&self.cv);
         }
         let ev = core.latest.as_ref().filter(|(s, _)| *s > last_seq).map(|(_, e)| *e);
         let terminal = core.result.clone().map(|r| (core.state, r));
@@ -198,20 +198,22 @@ struct RegistryInner {
 /// publication, and bounded retention of finished jobs.
 ///
 /// Lock order: `inner` may take an entry's `core`; an entry's `core` is
-/// never held while taking `inner`.
+/// never held while taking `inner`. The ranks ([`rank::REGISTRY`] <
+/// [`rank::JOB_CORE`]) make debug builds assert exactly that — see the
+/// lock-rank table in `docs/INVARIANTS.md`.
 pub struct JobRegistry {
-    inner: Mutex<RegistryInner>,
+    inner: TrackedMutex<RegistryInner>,
     metrics: Arc<Metrics>,
 }
 
 impl JobRegistry {
     pub fn new(metrics: Arc<Metrics>) -> JobRegistry {
         JobRegistry {
-            inner: Mutex::new(RegistryInner {
-                next_id: 0,
-                jobs: BTreeMap::new(),
-                terminal: VecDeque::new(),
-            }),
+            inner: TrackedMutex::new(
+                "registry.inner",
+                rank::REGISTRY,
+                RegistryInner { next_id: 0, jobs: BTreeMap::new(), terminal: VecDeque::new() },
+            ),
             metrics,
         }
     }
@@ -219,7 +221,7 @@ impl JobRegistry {
     /// Accept a search as a new queued job.
     pub fn submit(&self, request: SearchRequest) -> Arc<JobEntry> {
         let entry = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock();
             inner.next_id += 1;
             let num = inner.next_id;
             let entry = Arc::new(JobEntry {
@@ -228,13 +230,17 @@ impl JobRegistry {
                 request,
                 cancel: Arc::new(AtomicBool::new(false)),
                 submitted: Instant::now(),
-                core: Mutex::new(JobCore {
-                    state: JobState::Queued,
-                    seq: 0,
-                    latest: None,
-                    result: None,
-                    elapsed_s: None,
-                }),
+                core: TrackedMutex::new(
+                    "job.core",
+                    rank::JOB_CORE,
+                    JobCore {
+                        state: JobState::Queued,
+                        seq: 0,
+                        latest: None,
+                        result: None,
+                        elapsed_s: None,
+                    },
+                ),
                 cv: Condvar::new(),
             });
             inner.jobs.insert(num, entry.clone());
@@ -247,19 +253,19 @@ impl JobRegistry {
 
     /// Look a job up by its wire id.
     pub fn get(&self, id: &str) -> Option<Arc<JobEntry>> {
-        self.inner.lock().unwrap().jobs.values().find(|e| e.id == id).cloned()
+        self.inner.lock().jobs.values().find(|e| e.id == id).cloned()
     }
 
     /// Every retained job, oldest first.
     pub fn list(&self) -> Vec<JobInfo> {
-        self.inner.lock().unwrap().jobs.values().map(|e| e.info()).collect()
+        self.inner.lock().jobs.values().map(|e| e.info()).collect()
     }
 
     /// Transition a queued job to running. False if the job was cancelled
     /// (or otherwise finished) before the engine reached it.
     pub fn start(&self, entry: &JobEntry) -> bool {
         {
-            let mut core = entry.core.lock().unwrap();
+            let mut core = entry.core.lock();
             if core.state != JobState::Queued || core.result.is_some() {
                 return false;
             }
@@ -275,7 +281,7 @@ impl JobRegistry {
     /// (drop-to-latest: a buffered event is *replaced*, never queued).
     pub fn publish(&self, entry: &JobEntry, ev: SearchEvent) {
         let was_empty = {
-            let mut core = entry.core.lock().unwrap();
+            let mut core = entry.core.lock();
             if core.result.is_some() {
                 return;
             }
@@ -297,7 +303,7 @@ impl JobRegistry {
         debug_assert!(state.terminal());
         let (was_running, had_event);
         {
-            let mut core = entry.core.lock().unwrap();
+            let mut core = entry.core.lock();
             if core.result.is_some() {
                 return;
             }
@@ -310,7 +316,7 @@ impl JobRegistry {
             entry.cv.notify_all();
         }
         self.metrics.job_finished(state, was_running, had_event);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.terminal.push_back(entry.num);
         Self::gc(&mut inner);
     }
@@ -323,7 +329,7 @@ impl JobRegistry {
         let entry = self.get(id)?;
         entry.cancel.store(true, Ordering::SeqCst);
         let became_terminal = {
-            let mut core = entry.core.lock().unwrap();
+            let mut core = entry.core.lock();
             if core.state == JobState::Queued && core.result.is_none() {
                 let outcome = SearchOutcome {
                     search_time_s: entry.submitted.elapsed().as_secs_f64(),
@@ -344,7 +350,7 @@ impl JobRegistry {
         };
         if became_terminal {
             self.metrics.job_finished(JobState::Cancelled, false, false);
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock();
             inner.terminal.push_back(entry.num);
             Self::gc(&mut inner);
         }

@@ -98,6 +98,7 @@ impl Dataset {
         let n_cfg = cfg.n_configs_per_workload.min(full);
         let mut rows = Vec::with_capacity(cfg.n_workloads * n_cfg * ROW_WIDTH);
         let mut spans = Vec::with_capacity(cfg.n_workloads);
+        // lint:allow(rng-construct) stream 4242 pins the sampled config subsets across releases
         let mut rng = Pcg32::new(cfg.seed, 4242);
         for g in &suite.workloads {
             let offset = rows.len() / ROW_WIDTH;

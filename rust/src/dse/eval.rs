@@ -79,6 +79,7 @@
 use crate::design_space::HwConfig;
 use crate::energy::EnergyResult;
 use crate::sim::SimResult;
+use crate::util::sync::{rank, TrackedMutex};
 use crate::workload::Gemm;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -86,7 +87,7 @@ use std::hash::{Hash, Hasher};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 /// Below this batch size threading overhead beats the win; run inline.
 pub const PAR_THRESHOLD: usize = 64;
@@ -105,7 +106,7 @@ const WORKER_NAME: &str = "eval-worker";
 /// not in the offline registry). One process-wide instance, spawned lazily
 /// by [`WorkerPool::global`]; see the module docs for the lifecycle.
 pub struct WorkerPool {
-    tx: Mutex<Sender<Job>>,
+    tx: TrackedMutex<Sender<Job>>,
     workers: usize,
 }
 
@@ -122,7 +123,7 @@ impl WorkerPool {
 
     fn with_workers(n: usize) -> WorkerPool {
         let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let rx = Arc::new(TrackedMutex::new("eval.pool.rx", rank::POOL_RECEIVER, rx));
         for i in 0..n {
             let rx = rx.clone();
             std::thread::Builder::new()
@@ -130,7 +131,7 @@ impl WorkerPool {
                 .spawn(move || loop {
                     // take the next job while holding the queue lock, run it
                     // after releasing; exit when every sender is gone
-                    let job = { rx.lock().unwrap().recv() };
+                    let job = { rx.lock().recv() };
                     match job {
                         Ok(job) => job(),
                         Err(_) => return,
@@ -138,7 +139,7 @@ impl WorkerPool {
                 })
                 .expect("spawn eval-worker thread");
         }
-        WorkerPool { tx: Mutex::new(tx), workers: n }
+        WorkerPool { tx: TrackedMutex::new("eval.pool.tx", rank::POOL_SENDER, tx), workers: n }
     }
 
     /// Number of worker threads.
@@ -147,7 +148,7 @@ impl WorkerPool {
     }
 
     fn submit(&self, job: Job) {
-        self.tx.lock().unwrap().send(job).expect("eval-worker queue closed");
+        self.tx.lock().send(job).expect("eval-worker queue closed");
     }
 }
 
@@ -276,7 +277,10 @@ type EvalValue = (SimResult, EnergyResult);
 /// What a shard stores: the energy half is `None` until an energy
 /// consumer first touches the key (sim-only paths never pay for it).
 type CachedValue = (SimResult, Option<EnergyResult>);
-type Shard = Mutex<HashMap<EvalKey, CachedValue>>;
+/// All shards share one rank ([`rank::EVAL_SHARD`]): probes and inserts
+/// take exactly one shard at a time, never two — the debug assertions
+/// enforce that too (same-rank nesting panics).
+type Shard = TrackedMutex<HashMap<EvalKey, CachedValue>>;
 
 /// Lock-striped memo table for the pure evaluation function — see the
 /// module docs for keying, sharding and eviction policy.
@@ -302,7 +306,9 @@ impl EvalCache {
     /// A cache with explicit geometry (benches and tests).
     pub fn new(shards: usize, cap_per_shard: usize) -> EvalCache {
         EvalCache {
-            shards: (0..shards.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..shards.max(1))
+                .map(|_| TrackedMutex::new("eval.cache.shard", rank::EVAL_SHARD, HashMap::new()))
+                .collect(),
             cap_per_shard: cap_per_shard.max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -327,7 +333,7 @@ impl EvalCache {
     /// Insert (or refresh) one entry, clearing the shard wholesale when it
     /// is at capacity.
     fn insert(&self, key: &EvalKey, v: CachedValue) {
-        let mut m = self.shards[self.shard_of(key)].lock().unwrap();
+        let mut m = self.shards[self.shard_of(key)].lock();
         if m.len() >= self.cap_per_shard {
             m.clear();
             self.evictions.fetch_add(1, Ordering::Relaxed);
@@ -341,7 +347,7 @@ impl EvalCache {
     pub fn evaluate(&self, hw: &HwConfig, g: &Gemm) -> EvalValue {
         let key = (*hw, *g);
         let si = self.shard_of(&key);
-        let cached = self.shards[si].lock().unwrap().get(&key).copied();
+        let cached = self.shards[si].lock().get(&key).copied();
         match cached {
             Some((s, Some(e))) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -374,7 +380,7 @@ impl EvalCache {
     pub fn simulate(&self, hw: &HwConfig, g: &Gemm) -> SimResult {
         let key = (*hw, *g);
         let si = self.shard_of(&key);
-        if let Some(v) = self.shards[si].lock().unwrap().get(&key) {
+        if let Some(v) = self.shards[si].lock().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return v.0;
         }
@@ -395,7 +401,7 @@ impl EvalCache {
         let mut miss_idx: Vec<usize> = Vec::new();
         for (i, key) in pairs.iter().enumerate() {
             let si = self.shard_of(key);
-            match self.shards[si].lock().unwrap().get(key) {
+            match self.shards[si].lock().get(key) {
                 Some(v) => out[i] = Some(v.0),
                 None => miss_idx.push(i),
             }
@@ -425,7 +431,7 @@ impl EvalCache {
         for (i, hw) in cfgs.iter().enumerate() {
             let key = (*hw, *g);
             let si = self.shard_of(&key);
-            match self.shards[si].lock().unwrap().get(&key) {
+            match self.shards[si].lock().get(&key) {
                 Some(&(s, Some(e))) => out[i] = Some((s, e)),
                 Some(&(s, None)) => sim_only.push((i, s)),
                 None => miss_idx.push(i),
@@ -455,7 +461,7 @@ impl EvalCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.shards.iter().map(|s| s.lock().unwrap().len() as u64).sum(),
+            entries: self.shards.iter().map(|s| s.lock().len() as u64).sum(),
             evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
@@ -464,7 +470,7 @@ impl EvalCache {
     /// measure cold-path cost.
     pub fn clear(&self) {
         for s in &self.shards {
-            s.lock().unwrap().clear();
+            s.lock().clear();
         }
     }
 }

@@ -31,6 +31,12 @@
 //!
 //! The coordinator serves the same types over the wire
 //! ([`crate::coordinator::protocol`]).
+//!
+//! Strategies are reproducible by contract: deadlines come from
+//! [`api::SearchCtx`] (never a raw clock), RNG streams derive from the
+//! call seed via [`crate::util::rng`], and the eval core's locks carry
+//! static ranks via [`crate::util::sync`]. `diffaxe lint` enforces all
+//! three — see `docs/INVARIANTS.md` for the rules and the lock-rank table.
 
 pub mod api;
 pub mod eval;

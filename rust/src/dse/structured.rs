@@ -478,7 +478,7 @@ pub fn search_engine(
 /// Finite-difference GD over the concatenated per-segment encoding.
 /// `coarse` snaps every segment onto the training grid first (the DOSA
 /// stand-in); the fine-grid variant serves `VanillaGd`.
-#[allow(clippy::too_many_arguments)]
+#[allow(clippy::too_many_arguments)] // free function mirrors the paper's search knobs 1:1
 pub fn search_fd(
     name: &'static str,
     coarse: bool,
@@ -600,7 +600,7 @@ pub fn search_bo(
 /// engine, an 8-d random subspace over the concatenated latents descended
 /// by finite differences, every iterate decoded per segment and projected
 /// into the shared budget.
-#[allow(clippy::too_many_arguments)]
+#[allow(clippy::too_many_arguments)] // free function mirrors the paper's search knobs 1:1
 pub fn search_polaris(
     engine: &DiffAxE,
     opts: &GdOptions,

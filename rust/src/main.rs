@@ -42,6 +42,9 @@ subcommands:
                 [--structured BENCH_structured.json]
                 [--check] [--append] [--tolerance 0.15]
                 [--commit SHA] [--message MSG] [--timestamp TS])
+  lint          check the source tree against the repo's concurrency and
+                determinism invariants (docs/INVARIANTS.md); exits non-zero
+                on violations ([--root DIR] [--json])
 ";
 
 fn main() -> Result<()> {
@@ -57,6 +60,7 @@ fn main() -> Result<()> {
         Some("cancel") => cmd_cancel(&args),
         Some("jobs") => cmd_jobs(&args),
         Some("bench-history") => cmd_bench_history(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -476,4 +480,26 @@ fn cmd_sim(args: &Args) -> Result<()> {
     println!("asic: power={:.3}W energy={:.1}uJ edp={:.3e}", e.power_w, e.total_uj(), e.edp);
     println!("fpga: power={:.3}W edp={:.3e} resources={:?}", f.power_w, f.edp, fpga::resources(&hw));
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use diffaxe::util::lint;
+    let root = std::path::PathBuf::from(args.get_str("root", "."));
+    let diags = lint::lint_tree(&root)?;
+    if args.flag("json") {
+        println!("{}", lint::to_json(&diags));
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+    }
+    if diags.is_empty() {
+        if !args.flag("json") {
+            eprintln!("diffaxe lint: clean ({} rules)", lint::RULES.len());
+        }
+        Ok(())
+    } else {
+        eprintln!("diffaxe lint: {} violation(s) — see docs/INVARIANTS.md", diags.len());
+        std::process::exit(1);
+    }
 }

@@ -194,7 +194,7 @@ impl DiffAxE {
 
     /// PP loss + gradient wrt latent, for latent-space gradient descent.
     /// Returns (losses, grads).
-    #[allow(clippy::type_complexity)]
+    #[allow(clippy::type_complexity)] // gradient tuple mirrors the engine-trait signature
     pub fn pp_grad(
         &self,
         latents: &[Vec<f32>],
@@ -217,7 +217,7 @@ impl DiffAxE {
     }
 
     /// Surrogate loss + gradient wrt hw (vanilla GD step).
-    #[allow(clippy::type_complexity)]
+    #[allow(clippy::type_complexity)] // gradient tuple mirrors the engine-trait signature
     pub fn surrogate_grad(
         &self,
         hw_rows: &[Vec<f32>],
@@ -312,7 +312,7 @@ impl Compiled {
         Ok(out)
     }
 
-    #[allow(clippy::type_complexity)]
+    #[allow(clippy::type_complexity)] // gradient tuple mirrors the engine-trait signature
     fn pp_grad(
         &self,
         stats: &NormStats,
@@ -356,7 +356,7 @@ impl Compiled {
         Ok(out)
     }
 
-    #[allow(clippy::type_complexity)]
+    #[allow(clippy::type_complexity)] // gradient tuple mirrors the engine-trait signature
     fn surrogate_grad(
         &self,
         stats: &NormStats,

@@ -196,7 +196,7 @@ impl MockEngine {
     }
 
     /// Loss `(pred − target)²` and its analytic latent gradient.
-    #[allow(clippy::type_complexity)]
+    #[allow(clippy::type_complexity)] // gradient tuple mirrors the engine-trait signature
     pub fn pp_grad(
         &self,
         stats: &NormStats,
@@ -227,7 +227,7 @@ impl MockEngine {
             .collect())
     }
 
-    #[allow(clippy::type_complexity)]
+    #[allow(clippy::type_complexity)] // gradient tuple mirrors the engine-trait signature
     pub fn surrogate_grad(
         &self,
         hw_rows: &[Vec<f32>],
@@ -266,6 +266,7 @@ impl MockEngine {
     /// pool seeded deterministically by the workload shape.
     pub fn airchitect_v2(&self, _stats: &NormStats, w: &Gemm) -> Result<HwConfig> {
         let seed = rng::derive(rng::derive(w.m as u64, w.k as u64), w.n as u64);
+        // lint:allow(rng-construct) stream 2 is baked into the mock's goldens
         let mut rng = Pcg32::new(seed, 2);
         let best = (0..16)
             .map(|_| {

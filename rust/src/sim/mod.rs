@@ -43,6 +43,10 @@
 //!
 //! Runtime = `max(compute cycles, DRAM bytes / BW)` — the Scale-Sim stall
 //! model's global approximation under double buffering.
+//!
+//! The simulator is deterministic by construction (no clocks, no RNG, no
+//! locks) and `diffaxe lint` keeps it that way — the rules and rationale
+//! live in `docs/INVARIANTS.md`.
 
 pub mod analytical;
 pub mod batch;

@@ -1,0 +1,673 @@
+//! `diffaxe lint` — a dependency-free, token-level static-analysis pass
+//! that machine-enforces the repo's concurrency and determinism
+//! invariants (the conventions PRs 1–6 established by hand; the full
+//! rule/invariant table lives in `docs/INVARIANTS.md`).
+//!
+//! The scanner walks `src/`, `tests/` and `benches/` under a crate root,
+//! strips comments and string/char literals line by line (block comments,
+//! raw strings and multi-line strings carry state across lines), tracks
+//! `#[cfg(test)]` module regions by brace depth, and matches each rule's
+//! token patterns against the stripped code. It is deliberately *not* a
+//! parser: the rules are chosen so that substring matches on stripped
+//! source are precise in this codebase, and the corpus self-test
+//! (`tests/lint_repo.rs`) plants one violation per rule in a fixture tree
+//! and asserts the scanner catches exactly those.
+//!
+//! # Allowlisting
+//!
+//! A justified exception is a comment containing `lint:allow(<rule>)` on
+//! the violating line or the line directly above, followed by a non-empty
+//! reason:
+//!
+//! ```text
+//! // lint:allow(rng-construct) stream id predates the facade; re-deriving
+//! // would change every golden output downstream
+//! let mut rng = Pcg32::new(seed, 77);
+//! ```
+//!
+//! An allow directive with no reason text after the closing parenthesis
+//! does **not** suppress the diagnostic.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// rules
+// ---------------------------------------------------------------------------
+
+/// Where a rule applies within the scanned tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Everywhere: `src/`, `tests/`, `benches/`, including test modules.
+    Everywhere,
+    /// Production code only: `src/`, skipping `#[cfg(test)]` regions.
+    SrcNonTest,
+    /// `src/dse/` only, skipping `#[cfg(test)]` regions.
+    DseNonTest,
+}
+
+/// One named, allowlistable invariant check.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    /// Stable diagnostic name (what `lint:allow(...)` references).
+    pub name: &'static str,
+    /// The invariant the rule guards (one line, shown in `--help`-ish
+    /// listings and `docs/INVARIANTS.md`).
+    pub invariant: &'static str,
+    pub scope: Scope,
+    /// Files (crate-root-relative, `/`-separated) exempt from this rule.
+    pub allowed_files: &'static [&'static str],
+}
+
+/// The rule set, in diagnostic order.
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "float-cmp-unwrap",
+        invariant: "float ordering must use total_cmp: .partial_cmp(..).unwrap() panics on NaN",
+        scope: Scope::Everywhere,
+        allowed_files: &[],
+    },
+    Rule {
+        name: "thread-spawn",
+        invariant: "threads are created only by the WorkerPool, the server accept loop and the \
+                    engine thread — ad-hoc spawning bypasses the pool's nesting guard and the \
+                    connection cap",
+        scope: Scope::SrcNonTest,
+        allowed_files: &[
+            "src/dse/eval.rs",
+            "src/coordinator/server.rs",
+            "src/coordinator/service.rs",
+        ],
+    },
+    Rule {
+        name: "raw-sync",
+        invariant: "std::sync::{Mutex, RwLock} appear only inside util/sync.rs — every other \
+                    lock site goes through the ranked TrackedMutex/TrackedRwLock facade",
+        scope: Scope::SrcNonTest,
+        allowed_files: &["src/util/sync.rs"],
+    },
+    Rule {
+        name: "dse-clock",
+        invariant: "search strategies read wall-clock time only through SearchCtx deadlines \
+                    (dse/api.rs) — raw clocks make search results timing-dependent",
+        scope: Scope::DseNonTest,
+        allowed_files: &["src/dse/api.rs"],
+    },
+    Rule {
+        name: "rng-construct",
+        invariant: "production randomness derives from util::rng::{split, derive} — direct \
+                    Pcg32 construction risks correlated streams across components",
+        scope: Scope::SrcNonTest,
+        allowed_files: &["src/util/rng.rs"],
+    },
+    Rule {
+        name: "bare-allow",
+        invariant: "#[allow(...)] needs a justification comment on the same or preceding line",
+        scope: Scope::Everywhere,
+        allowed_files: &[],
+    },
+];
+
+/// Look a rule up by name.
+pub fn rule(name: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.name == name)
+}
+
+// ---------------------------------------------------------------------------
+// diagnostics
+// ---------------------------------------------------------------------------
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the scanned crate root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Render diagnostics as a JSON array (the `--json` output mode).
+pub fn to_json(diags: &[Diagnostic]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::Arr(
+        diags
+            .iter()
+            .map(|d| {
+                Json::Obj(BTreeMap::from([
+                    ("file".to_string(), Json::Str(d.file.clone())),
+                    ("line".to_string(), Json::Num(d.line as f64)),
+                    ("rule".to_string(), Json::Str(d.rule.to_string())),
+                    ("message".to_string(), Json::Str(d.message.clone())),
+                ]))
+            })
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// tree walking
+// ---------------------------------------------------------------------------
+
+/// Lint a crate tree: scans `root/{src,tests,benches}`, skipping
+/// `tests/fixtures/` (wire-corpus and planted-violation files are data,
+/// not code). Returns diagnostics sorted by (file, line).
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    let mut out = Vec::new();
+    for f in files {
+        let rel = rel_path(root, &f);
+        if rel.starts_with("tests/fixtures/") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&f)?;
+        out.extend(lint_source(&rel, &text));
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<Result<_, _>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    // normalize to `/` so rule file lists and diagnostics are stable
+    // across platforms
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+// ---------------------------------------------------------------------------
+// per-file scanner
+// ---------------------------------------------------------------------------
+
+/// Which tree a file belongs to (decides rule scope applicability).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FileKind {
+    Src,
+    Tests,
+    Benches,
+}
+
+fn classify(rel: &str) -> FileKind {
+    if rel.starts_with("tests/") {
+        FileKind::Tests
+    } else if rel.starts_with("benches/") {
+        FileKind::Benches
+    } else {
+        FileKind::Src
+    }
+}
+
+/// Lint one file's source text. `rel` is the crate-root-relative path
+/// (used for scope decisions, per-rule file exemptions and diagnostics).
+pub fn lint_source(rel: &str, text: &str) -> Vec<Diagnostic> {
+    let kind = classify(rel);
+    let raw_lines: Vec<&str> = text.lines().collect();
+    let code_lines = strip_lines(&raw_lines);
+
+    // ---- pass 1: mark #[cfg(test)] regions by brace depth --------------
+    let mut in_test = vec![false; code_lines.len()];
+    {
+        let mut depth: i64 = 0;
+        let mut regions: Vec<i64> = Vec::new();
+        let mut pending = false;
+        for (i, code) in code_lines.iter().enumerate() {
+            in_test[i] = !regions.is_empty();
+            if code.contains("#[cfg(test)]") {
+                pending = true;
+            }
+            for ch in code.chars() {
+                match ch {
+                    '{' => {
+                        if pending {
+                            regions.push(depth);
+                            pending = false;
+                        }
+                        depth += 1;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if regions.last() == Some(&depth) {
+                            regions.pop();
+                            // a region that closes mid-line still covers
+                            // this line; `in_test` was latched above
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    // ---- pass 2: rule matching ------------------------------------------
+    let mut out = Vec::new();
+    for r in RULES {
+        let applies_to_file = match r.scope {
+            Scope::Everywhere => true,
+            Scope::SrcNonTest => kind == FileKind::Src,
+            Scope::DseNonTest => kind == FileKind::Src && rel.starts_with("src/dse/"),
+        };
+        if !applies_to_file || r.allowed_files.contains(&rel) {
+            continue;
+        }
+        for (i, code) in code_lines.iter().enumerate() {
+            if r.scope != Scope::Everywhere && in_test[i] {
+                continue;
+            }
+            let Some(message) = match_rule(r.name, code, &raw_lines, i) else { continue };
+            if allowed(r.name, &raw_lines, i) {
+                continue;
+            }
+            out.push(Diagnostic { file: rel.to_string(), line: i + 1, rule: r.name, message });
+        }
+    }
+    out
+}
+
+/// Match one rule against one stripped line; `Some(message)` on a hit.
+fn match_rule(name: &str, code: &str, raw_lines: &[&str], i: usize) -> Option<String> {
+    match name {
+        "float-cmp-unwrap" => {
+            let pos = code.find("partial_cmp")?;
+            if code[pos..].contains(".unwrap()") {
+                Some("`.partial_cmp(..).unwrap()` panics on NaN; use `total_cmp`".to_string())
+            } else {
+                None
+            }
+        }
+        "thread-spawn" => {
+            if code.contains("thread::spawn") || code.contains("thread::Builder::new") {
+                Some(
+                    "thread creation outside the WorkerPool / accept loop / engine thread; \
+                     route work through dse::eval::par_map or the service"
+                        .to_string(),
+                )
+            } else {
+                None
+            }
+        }
+        "raw-sync" => {
+            if has_ident(code, "Mutex") || has_ident(code, "RwLock") {
+                Some(
+                    "raw std::sync lock; use util::sync::{TrackedMutex, TrackedRwLock} with a \
+                     rank from util::sync::rank"
+                        .to_string(),
+                )
+            } else {
+                None
+            }
+        }
+        "dse-clock" => {
+            if code.contains("Instant::now") || code.contains("SystemTime::now") {
+                Some(
+                    "raw clock read inside a search strategy; deadlines and elapsed time come \
+                     from SearchCtx"
+                        .to_string(),
+                )
+            } else {
+                None
+            }
+        }
+        "rng-construct" => {
+            if code.contains("Pcg32::new") || code.contains("Pcg32::seeded") {
+                Some(
+                    "direct Pcg32 construction; derive per-component streams via \
+                     util::rng::split / util::rng::derive"
+                        .to_string(),
+                )
+            } else {
+                None
+            }
+        }
+        "bare-allow" => {
+            let pos = code.find("#[allow(").or_else(|| code.find("#![allow("))?;
+            // justified iff a `//` comment trails the attribute on the raw
+            // line, or the raw line directly above is a non-doc comment
+            // stripping is position-preserving, so `pos` indexes `raw` too
+            let raw = raw_lines[i];
+            let trailing = raw.get(pos..).is_some_and(|rest| rest.contains("//"));
+            let above = i > 0 && {
+                let p = raw_lines[i - 1].trim_start();
+                p.starts_with("//") && !p.starts_with("///") && !p.starts_with("//!")
+            };
+            if trailing || above {
+                None
+            } else {
+                Some(
+                    "bare #[allow(...)]: add a justification comment on the same or preceding \
+                     line"
+                        .to_string(),
+                )
+            }
+        }
+        other => unreachable!("unknown rule {other}"),
+    }
+}
+
+/// True when the violating line (or the one above it) carries a
+/// `lint:allow(<rule>)` directive followed by a non-empty reason.
+fn allowed(rule: &str, raw_lines: &[&str], i: usize) -> bool {
+    let directive_ok = |line: &str| -> bool {
+        let needle = format!("lint:allow({rule})");
+        match line.find(&needle) {
+            Some(pos) => !line[pos + needle.len()..].trim().is_empty(),
+            None => false,
+        }
+    };
+    directive_ok(raw_lines[i]) || (i > 0 && directive_ok(raw_lines[i - 1]))
+}
+
+/// Identifier-boundary substring match: `needle` present in `code` and
+/// not embedded in a longer identifier (so `TrackedMutex` does not match
+/// `Mutex`, but `MutexGuard` does — guard types are facade-internal).
+fn has_ident(code: &str, needle: &str) -> bool {
+    let is_ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(off) = code[from..].find(needle) {
+        let start = from + off;
+        let boundary_before = start == 0 || !is_ident(bytes[start - 1]);
+        if boundary_before {
+            return true;
+        }
+        from = start + needle.len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// lexical stripping
+// ---------------------------------------------------------------------------
+
+/// Lexer state carried across lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LexState {
+    Normal,
+    /// Inside `/* */`, with nesting depth (rust block comments nest).
+    Block(u32),
+    /// Inside a `"…"` string (strings may span lines).
+    Str,
+    /// Inside a raw string terminated by `"` + this many `#`s.
+    RawStr(u32),
+}
+
+/// Replace comment and string/char-literal interiors with spaces, one
+/// output line per input line. Keeping byte positions stable makes the
+/// diagnostics' column-free `file:line` reporting trivially correct.
+fn strip_lines(raw_lines: &[&str]) -> Vec<String> {
+    let mut state = LexState::Normal;
+    let mut out = Vec::with_capacity(raw_lines.len());
+    for line in raw_lines {
+        let b = line.as_bytes();
+        let mut code = Vec::with_capacity(b.len());
+        let mut i = 0;
+        while i < b.len() {
+            match state {
+                LexState::Block(depth) => {
+                    if b[i..].starts_with(b"*/") {
+                        state =
+                            if depth <= 1 { LexState::Normal } else { LexState::Block(depth - 1) };
+                        code.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if b[i..].starts_with(b"/*") {
+                        state = LexState::Block(depth + 1);
+                        code.extend_from_slice(b"  ");
+                        i += 2;
+                    } else {
+                        code.push(b' ');
+                        i += 1;
+                    }
+                }
+                LexState::Str => {
+                    if b[i] == b'\\' && i + 1 < b.len() {
+                        code.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        state = LexState::Normal;
+                        code.push(b'"');
+                        i += 1;
+                    } else {
+                        code.push(b' ');
+                        i += 1;
+                    }
+                }
+                LexState::RawStr(hashes) => {
+                    let mut closed = false;
+                    if b[i] == b'"' {
+                        let h = hashes as usize;
+                        if b[i + 1..].len() >= h && b[i + 1..i + 1 + h].iter().all(|&c| c == b'#')
+                        {
+                            state = LexState::Normal;
+                            code.push(b'"');
+                            code.extend(std::iter::repeat(b'#').take(h));
+                            i += 1 + h;
+                            closed = true;
+                        }
+                    }
+                    if !closed {
+                        code.push(b' ');
+                        i += 1;
+                    }
+                }
+                LexState::Normal => {
+                    if b[i..].starts_with(b"//") {
+                        // line comment (incl. doc comments): drop the rest
+                        break;
+                    } else if b[i..].starts_with(b"/*") {
+                        state = LexState::Block(1);
+                        code.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        state = LexState::Str;
+                        code.push(b'"');
+                        i += 1;
+                    } else if b[i] == b'r'
+                        && !prev_is_ident(&code)
+                        && raw_str_hashes(&b[i + 1..]).is_some()
+                    {
+                        let h = raw_str_hashes(&b[i + 1..]).expect("checked above");
+                        state = LexState::RawStr(h);
+                        code.push(b'r');
+                        code.extend(std::iter::repeat(b'#').take(h as usize));
+                        code.push(b'"');
+                        i += 2 + h as usize;
+                    } else if b[i] == b'\'' {
+                        // char literal vs lifetime: 'x' or '\x' is a literal,
+                        // anything else ('a in generics, 'static) is a
+                        // lifetime and passes through
+                        if i + 2 < b.len() && b[i + 1] == b'\\' {
+                            // escaped char literal: skip to the closing quote
+                            let close = b[i + 2..].iter().position(|&c| c == b'\'');
+                            let len = close.map(|c| c + 3).unwrap_or(2);
+                            code.extend(std::iter::repeat(b' ').take(len));
+                            i += len;
+                        } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                            code.extend_from_slice(b"   ");
+                            i += 3;
+                        } else {
+                            code.push(b'\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(b[i]);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(String::from_utf8_lossy(&code).into_owned());
+    }
+    out
+}
+
+/// `Some(n)` when `rest` starts a raw string body: `#…#"` with `n` hashes
+/// (including `n == 0` for a plain `r"`).
+fn raw_str_hashes(rest: &[u8]) -> Option<u32> {
+    let mut h = 0u32;
+    for &c in rest {
+        match c {
+            b'#' => h += 1,
+            b'"' => return Some(h),
+            _ => return None,
+        }
+    }
+    None
+}
+
+fn prev_is_ident(code: &[u8]) -> bool {
+    code.last().is_some_and(|&c| c.is_ascii_alphanumeric() || c == b'_')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diags(rel: &str, src: &str) -> Vec<Diagnostic> {
+        lint_source(rel, src)
+    }
+
+    #[test]
+    fn partial_cmp_unwrap_flagged_unwrap_or_not() {
+        let bad = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        let d = diags("src/x.rs", bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "float-cmp-unwrap");
+        assert_eq!(d[0].line, 1);
+        let ok = "fn f(a: f64, b: f64) { a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal); }";
+        assert!(diags("src/x.rs", ok).is_empty());
+        let fixed = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.total_cmp(b)); }";
+        assert!(diags("src/x.rs", fixed).is_empty());
+    }
+
+    #[test]
+    fn patterns_inside_strings_and_comments_ignored() {
+        let src = "fn f() {\n    // thread::spawn in a comment\n    let s = \"Mutex::new and Pcg32::seeded\";\n    let _ = s;\n}";
+        assert!(diags("src/x.rs", src).is_empty(), "{:?}", diags("src/x.rs", src));
+    }
+
+    #[test]
+    fn raw_sync_word_boundaries() {
+        assert_eq!(diags("src/x.rs", "use std::sync::Mutex;").len(), 1);
+        assert_eq!(diags("src/x.rs", "let l: RwLock<u8> = RwLock::new(0);").len(), 1);
+        // the facade's own type names must not match
+        assert!(diags("src/x.rs", "use crate::util::sync::TrackedMutex;").is_empty());
+        assert!(diags("src/x.rs", "let x: TrackedRwLock<u8>;").is_empty());
+        // ...but the facade file itself is exempt wholesale
+        assert!(diags("src/util/sync.rs", "use std::sync::{Mutex, RwLock};").is_empty());
+    }
+
+    #[test]
+    fn scope_limits_rules_to_src() {
+        let spawn = "fn f() { std::thread::spawn(|| {}); }";
+        assert_eq!(diags("src/x.rs", spawn).len(), 1);
+        assert!(diags("tests/x.rs", spawn).is_empty());
+        assert!(diags("benches/x.rs", spawn).is_empty());
+        let clock = "fn f() { let _ = std::time::Instant::now(); }";
+        assert_eq!(diags("src/dse/strategy.rs", clock).len(), 1);
+        assert!(diags("src/dse/api.rs", clock).is_empty(), "SearchCtx home is exempt");
+        assert!(diags("src/sim/x.rs", clock).is_empty(), "clock rule is dse-only");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped_for_src_rules() {
+        let src = "pub fn f() {}\n\n#[cfg(test)]\nmod tests {\n    use crate::util::rng::Pcg32;\n    #[test]\n    fn t() { let mut r = Pcg32::seeded(1); r.next_u32(); }\n}";
+        assert!(diags("src/x.rs", src).is_empty(), "{:?}", diags("src/x.rs", src));
+        // the same construction outside the region is flagged
+        let prod = "pub fn f() { let _ = crate::util::rng::Pcg32::seeded(1); }";
+        assert_eq!(diags("src/x.rs", prod).len(), 1);
+    }
+
+    #[test]
+    fn allow_directive_needs_reason() {
+        let with_reason =
+            "// lint:allow(rng-construct) fixed stream predates the facade\nlet r = Pcg32::new(1, 2);";
+        assert!(diags("src/x.rs", with_reason).is_empty());
+        let bare = "// lint:allow(rng-construct)\nlet r = Pcg32::new(1, 2);";
+        assert_eq!(diags("src/x.rs", bare).len(), 1, "reason-less directive must not suppress");
+        let wrong_rule = "// lint:allow(raw-sync) reasons\nlet r = Pcg32::new(1, 2);";
+        assert_eq!(diags("src/x.rs", wrong_rule).len(), 1);
+    }
+
+    #[test]
+    fn bare_allow_justification_forms() {
+        let bare = "#[allow(dead_code)]\nfn f() {}";
+        assert_eq!(diags("src/x.rs", bare).len(), 1);
+        let trailing = "#[allow(dead_code)] // kept for the v2 wire decoder\nfn f() {}";
+        assert!(diags("src/x.rs", trailing).is_empty());
+        let above = "// decoder keeps v1 fields it never reads\n#[allow(dead_code)]\nfn f() {}";
+        assert!(diags("src/x.rs", above).is_empty());
+        // a doc comment documents the item, not the allow
+        let doc = "/// Decodes v1 frames.\n#[allow(dead_code)]\nfn f() {}";
+        assert_eq!(diags("src/x.rs", doc).len(), 1);
+    }
+
+    #[test]
+    fn diagnostic_format_and_json() {
+        let d = diags("src/x.rs", "fn f() { let m = std::sync::Mutex::new(0); let _ = m; }");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].to_string(), format!("src/x.rs:1 raw-sync {}", d[0].message));
+        let j = to_json(&d).to_string();
+        assert!(j.contains("\"rule\""), "{j}");
+        assert!(j.contains("raw-sync"), "{j}");
+        assert!(j.contains("\"line\""), "{j}");
+    }
+
+    #[test]
+    fn multiline_and_raw_strings_stay_stripped() {
+        let src = "const S: &str = \"line one\nMutex::new(0)\nthread::spawn\";\nfn f() {}";
+        assert!(diags("src/x.rs", src).is_empty(), "{:?}", diags("src/x.rs", src));
+        let raw = "const R: &str = r#\"Pcg32::seeded(7) \"quoted\" Instant::now\"#;\nfn f() {}";
+        assert!(diags("src/dse/x.rs", raw).is_empty(), "{:?}", diags("src/dse/x.rs", raw));
+    }
+
+    #[test]
+    fn block_comments_nest_across_lines() {
+        let src = "/* outer /* inner Mutex::new */\nstill comment RwLock::new\n*/\nfn f() {}";
+        assert!(diags("src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        // brace char literals must not corrupt depth tracking for the
+        // cfg(test) pass, and lifetimes must survive stripping
+        let src = "fn f<'a>(x: &'a str) -> char { let _ = x; '{' }\n#[cfg(test)]\nmod tests {\n    fn g() { let _ = Pcg32::seeded(1); }\n}";
+        assert!(diags("src/x.rs", src).is_empty(), "{:?}", diags("src/x.rs", src));
+    }
+
+    #[test]
+    fn every_rule_has_metadata() {
+        for r in RULES {
+            assert!(!r.name.is_empty() && !r.invariant.is_empty());
+            assert!(rule(r.name).is_some());
+        }
+        assert!(rule("no-such-rule").is_none());
+    }
+}

@@ -7,7 +7,9 @@ pub mod bench;
 pub mod bench_history;
 pub mod json;
 pub mod linalg;
+pub mod lint;
 pub mod pca;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;

@@ -26,11 +26,14 @@ pub fn summarize(xs: &[f64]) -> Summary {
 }
 
 /// Percentile with linear interpolation (q in [0, 100]). Sorts a copy.
+/// NaN-total: `total_cmp` orders NaNs after every number instead of
+/// panicking, so a NaN-bearing sample degrades to a NaN-high percentile
+/// rather than aborting a metrics scrape.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     assert!((0.0..=100.0).contains(&q), "q out of range: {q}");
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     let pos = q / 100.0 * (s.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -164,6 +167,17 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 10.0);
         assert_eq!(percentile(&xs, 100.0), 40.0);
         assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_survives_nan() {
+        // regression: this used to panic in partial_cmp(..).unwrap().
+        // total_cmp sorts positive NaN after every number, so low
+        // percentiles stay numeric and the top ones surface the NaN.
+        let xs = [3.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

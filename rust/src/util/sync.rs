@@ -1,0 +1,513 @@
+//! Ranked-lock synchronization facade — the only place in the crate that
+//! touches `std::sync::{Mutex, RwLock}` directly (machine-enforced by the
+//! `raw-sync` rule of `diffaxe lint`; see `docs/INVARIANTS.md`).
+//!
+//! Every lock in the codebase is a [`TrackedMutex`] / [`TrackedRwLock`]
+//! carrying a static *rank* from the [`rank`] table. In debug builds each
+//! thread keeps a stack of the ranks it currently holds and asserts that
+//! every new acquisition has a **strictly greater** rank than the deepest
+//! lock already held. Any two code paths that acquire the same pair of
+//! locks in opposite orders — the classic deadlock — therefore panic
+//! deterministically in tests instead of deadlocking rarely in
+//! production. Release builds compile the tracking away entirely: the
+//! wrappers are a `&'static str` name, a `u32`, and the std primitive.
+//!
+//! # Poisoning
+//!
+//! The scattered `.lock().unwrap()` this facade replaced turned a panic
+//! on *any* thread into cascading panics on every thread that later
+//! touched the same lock. The facade maps poisoning to an explicit
+//! policy instead ([`PoisonPolicy`]):
+//!
+//! * [`PoisonPolicy::Recover`] (the default) — take the guard from the
+//!   `PoisonError` and continue. Every critical section in this repo
+//!   computes values *before* mutating guarded state (registry
+//!   transitions are guarded and idempotent, metrics are plain counters,
+//!   cache shards are insert-only maps), so value-level invariants hold
+//!   even when a panic unwound mid-section.
+//! * [`PoisonPolicy::Abort`] — print the lock name and abort the
+//!   process. For state where a torn write would be worse than dying
+//!   (none today; the worker-fleet coordinator may want it).
+//!
+//! # Lock-rank table
+//!
+//! The authoritative table (what may be held while acquiring what) lives
+//! in [`rank`] and is documented for humans in `docs/INVARIANTS.md`.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Static lock ranks: a lock may only be acquired while every lock the
+/// thread already holds has a **strictly lower** rank. Gaps between
+/// values are deliberate — new locks slot in without renumbering.
+pub mod rank {
+    /// [`crate::coordinator::service::JobRegistry`] inner table — taken
+    /// first: it is held while touching individual job cores (`list`).
+    pub const REGISTRY: u32 = 10;
+    /// One job's mutable core ([`crate::coordinator::service::JobEntry`]).
+    pub const JOB_CORE: u32 = 20;
+    /// The connection-cap semaphore in [`crate::coordinator::server`].
+    pub const CONN_SEMAPHORE: u32 = 30;
+    /// [`crate::coordinator::metrics::Metrics`] — always a leaf on the
+    /// registry paths (taken after cores are released, never before).
+    pub const METRICS: u32 = 40;
+    /// [`crate::dse::eval::WorkerPool`] job-queue sender.
+    pub const POOL_SENDER: u32 = 50;
+    /// [`crate::dse::eval::WorkerPool`] shared receiver (worker side).
+    pub const POOL_RECEIVER: u32 = 51;
+    /// One [`crate::dse::eval::EvalCache`] shard. All shards share this
+    /// rank: strict increase means a thread can never nest two shards,
+    /// which is exactly the invariant the striped design relies on.
+    pub const EVAL_SHARD: u32 = 60;
+    /// The process-wide [`crate::workload::model_workload`] memo.
+    pub const WORKLOAD_MEMO: u32 = 70;
+}
+
+/// What a lock does when it observes poisoning (a panic on another
+/// thread while the lock was held). See the module docs for the
+/// rationale; the default is [`PoisonPolicy::Recover`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoisonPolicy {
+    /// Take the guard out of the `PoisonError` and continue.
+    Recover,
+    /// Print the lock name and abort the process.
+    Abort,
+}
+
+#[cfg(debug_assertions)]
+mod held {
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// (rank, name) of every tracked lock this thread currently holds,
+        /// in acquisition order.
+        static HELD: RefCell<Vec<(u32, &'static str)>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub fn push(rank: u32, name: &'static str) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if let Some(&(top_rank, top_name)) = h.last() {
+                assert!(
+                    rank > top_rank,
+                    "lock-order violation: acquiring {name:?} (rank {rank}) while holding \
+                     {top_name:?} (rank {top_rank}) — ranks must strictly increase; see the \
+                     lock-rank table in docs/INVARIANTS.md"
+                );
+            }
+            h.push((rank, name));
+        });
+    }
+
+    pub fn pop(rank: u32, name: &'static str) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            // guards may in principle drop out of acquisition order; remove
+            // the newest matching entry
+            if let Some(pos) = h.iter().rposition(|&(r, n)| r == rank && n == name) {
+                h.remove(pos);
+            }
+        });
+    }
+}
+
+#[cfg(not(debug_assertions))]
+mod held {
+    pub fn push(_rank: u32, _name: &'static str) {}
+    pub fn pop(_rank: u32, _name: &'static str) {}
+}
+
+// ---------------------------------------------------------------------------
+// TrackedMutex
+// ---------------------------------------------------------------------------
+
+/// A [`Mutex`] with a static lock rank and an explicit poison policy.
+#[derive(Debug)]
+pub struct TrackedMutex<T> {
+    name: &'static str,
+    rank: u32,
+    policy: PoisonPolicy,
+    inner: Mutex<T>,
+}
+
+impl<T> TrackedMutex<T> {
+    /// A lock named for diagnostics, ranked per the [`rank`] table.
+    pub fn new(name: &'static str, rank: u32, value: T) -> TrackedMutex<T> {
+        Self::with_policy(name, rank, PoisonPolicy::Recover, value)
+    }
+
+    /// [`TrackedMutex::new`] with an explicit [`PoisonPolicy`].
+    pub fn with_policy(
+        name: &'static str,
+        rank: u32,
+        policy: PoisonPolicy,
+        value: T,
+    ) -> TrackedMutex<T> {
+        TrackedMutex { name, rank, policy, inner: Mutex::new(value) }
+    }
+
+    /// Acquire, asserting rank order in debug builds. Poisoning is
+    /// handled per the lock's [`PoisonPolicy`] — callers never see it.
+    pub fn lock(&self) -> TrackedMutexGuard<'_, T> {
+        held::push(self.rank, self.name);
+        let guard = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => self.on_poison(poisoned),
+        };
+        TrackedMutexGuard { guard: Some(guard), lock: self }
+    }
+
+    /// Non-blocking acquire; `None` if the lock is held elsewhere.
+    pub fn try_lock(&self) -> Option<TrackedMutexGuard<'_, T>> {
+        match self.inner.try_lock() {
+            Ok(g) => {
+                held::push(self.rank, self.name);
+                Some(TrackedMutexGuard { guard: Some(g), lock: self })
+            }
+            Err(std::sync::TryLockError::WouldBlock) => None,
+            Err(std::sync::TryLockError::Poisoned(poisoned)) => {
+                held::push(self.rank, self.name);
+                let guard = self.on_poison(poisoned);
+                Some(TrackedMutexGuard { guard: Some(guard), lock: self })
+            }
+        }
+    }
+
+    /// This lock's diagnostic name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// This lock's static rank.
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    fn on_poison<'a>(
+        &self,
+        poisoned: std::sync::PoisonError<MutexGuard<'a, T>>,
+    ) -> MutexGuard<'a, T> {
+        match self.policy {
+            PoisonPolicy::Recover => poisoned.into_inner(),
+            PoisonPolicy::Abort => {
+                eprintln!(
+                    "fatal: lock {:?} poisoned (panic on another thread mid-section); \
+                     policy is abort",
+                    self.name
+                );
+                std::process::abort();
+            }
+        }
+    }
+}
+
+/// Guard for [`TrackedMutex`]; pops the rank entry on drop.
+pub struct TrackedMutexGuard<'a, T> {
+    /// `None` only transiently inside [`TrackedMutexGuard::wait`].
+    guard: Option<MutexGuard<'a, T>>,
+    lock: &'a TrackedMutex<T>,
+}
+
+impl<'a, T> TrackedMutexGuard<'a, T> {
+    /// Block on `cv` until notified, releasing and reacquiring the
+    /// underlying mutex exactly like [`Condvar::wait`]. The rank entry
+    /// stays on the thread's stack across the wait: the thread reoccupies
+    /// the same ordering position when it wakes, so locks it still holds
+    /// below this one keep their relative order.
+    pub fn wait(mut self, cv: &Condvar) -> TrackedMutexGuard<'a, T> {
+        let inner = self.guard.take().expect("guard present outside wait");
+        let inner = match cv.wait(inner) {
+            Ok(g) => g,
+            Err(poisoned) => self.lock.on_poison(poisoned),
+        };
+        self.guard = Some(inner);
+        self
+    }
+
+    /// [`Condvar::wait_timeout`] under the same rank semantics as
+    /// [`TrackedMutexGuard::wait`]. Returns the guard and whether the
+    /// wait timed out.
+    pub fn wait_timeout(
+        mut self,
+        cv: &Condvar,
+        dur: std::time::Duration,
+    ) -> (TrackedMutexGuard<'a, T>, bool) {
+        let inner = self.guard.take().expect("guard present outside wait");
+        let (inner, timeout) = match cv.wait_timeout(inner, dur) {
+            Ok((g, t)) => (g, t.timed_out()),
+            Err(poisoned) => {
+                let (g, t) = poisoned.into_inner();
+                (self.lock.on_poison(std::sync::PoisonError::new(g)), t.timed_out())
+            }
+        };
+        self.guard = Some(inner);
+        (self, timeout)
+    }
+}
+
+impl<T> std::ops::Deref for TrackedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard present")
+    }
+}
+
+impl<T> std::ops::DerefMut for TrackedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard present")
+    }
+}
+
+impl<T> Drop for TrackedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        held::pop(self.lock.rank, self.lock.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TrackedRwLock
+// ---------------------------------------------------------------------------
+
+/// An [`RwLock`] with a static lock rank and an explicit poison policy.
+/// Read and write acquisitions occupy the same rank slot: a thread
+/// holding a read guard cannot take the same lock again (std makes no
+/// reentrancy guarantee), and the strict-increase assertion catches the
+/// attempt in debug builds.
+#[derive(Debug)]
+pub struct TrackedRwLock<T> {
+    name: &'static str,
+    rank: u32,
+    policy: PoisonPolicy,
+    inner: RwLock<T>,
+}
+
+impl<T> TrackedRwLock<T> {
+    pub fn new(name: &'static str, rank: u32, value: T) -> TrackedRwLock<T> {
+        Self::with_policy(name, rank, PoisonPolicy::Recover, value)
+    }
+
+    pub fn with_policy(
+        name: &'static str,
+        rank: u32,
+        policy: PoisonPolicy,
+        value: T,
+    ) -> TrackedRwLock<T> {
+        TrackedRwLock { name, rank, policy, inner: RwLock::new(value) }
+    }
+
+    /// Shared acquire under the rank discipline.
+    pub fn read(&self) -> TrackedReadGuard<'_, T> {
+        held::push(self.rank, self.name);
+        let guard = match self.inner.read() {
+            Ok(g) => g,
+            Err(poisoned) => match self.policy {
+                PoisonPolicy::Recover => poisoned.into_inner(),
+                PoisonPolicy::Abort => self.abort(),
+            },
+        };
+        TrackedReadGuard { guard, rank: self.rank, name: self.name }
+    }
+
+    /// Exclusive acquire under the rank discipline.
+    pub fn write(&self) -> TrackedWriteGuard<'_, T> {
+        held::push(self.rank, self.name);
+        let guard = match self.inner.write() {
+            Ok(g) => g,
+            Err(poisoned) => match self.policy {
+                PoisonPolicy::Recover => poisoned.into_inner(),
+                PoisonPolicy::Abort => self.abort(),
+            },
+        };
+        TrackedWriteGuard { guard, rank: self.rank, name: self.name }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    fn abort(&self) -> ! {
+        eprintln!(
+            "fatal: lock {:?} poisoned (panic on another thread mid-section); policy is abort",
+            self.name
+        );
+        std::process::abort();
+    }
+}
+
+/// Shared guard for [`TrackedRwLock`].
+pub struct TrackedReadGuard<'a, T> {
+    guard: RwLockReadGuard<'a, T>,
+    rank: u32,
+    name: &'static str,
+}
+
+impl<T> std::ops::Deref for TrackedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> Drop for TrackedReadGuard<'_, T> {
+    fn drop(&mut self) {
+        held::pop(self.rank, self.name);
+    }
+}
+
+/// Exclusive guard for [`TrackedRwLock`].
+pub struct TrackedWriteGuard<'a, T> {
+    guard: RwLockWriteGuard<'a, T>,
+    rank: u32,
+    name: &'static str,
+}
+
+impl<T> std::ops::Deref for TrackedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for TrackedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+impl<T> Drop for TrackedWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        held::pop(self.rank, self.name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_round_trips_values() {
+        let m = TrackedMutex::new("test.value", 10, 41);
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 42);
+        assert_eq!(m.name(), "test.value");
+        assert_eq!(m.rank(), 10);
+    }
+
+    #[test]
+    fn ascending_ranks_nest() {
+        let a = TrackedMutex::new("test.a", 10, ());
+        let b = TrackedMutex::new("test.b", 20, ());
+        let c = TrackedMutex::new("test.c", 30, ());
+        let _ga = a.lock();
+        let _gb = b.lock();
+        let _gc = c.lock();
+    }
+
+    #[test]
+    fn sequential_reacquisition_at_lower_rank_is_fine() {
+        let a = TrackedMutex::new("test.a", 10, ());
+        let b = TrackedMutex::new("test.b", 20, ());
+        {
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }
+        // everything released: low rank is legal again
+        let _gb = b.lock();
+        drop(_gb);
+        let _ga = a.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock-order violation")]
+    fn descending_ranks_panic_in_debug() {
+        let a = TrackedMutex::new("test.low", 10, ());
+        let b = TrackedMutex::new("test.high", 20, ());
+        let _gb = b.lock();
+        let _ga = a.lock(); // 10 while holding 20: inversion
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock-order violation")]
+    fn same_rank_nesting_panics_in_debug() {
+        // two eval-cache shards share one rank: nesting them is the striped
+        // design's forbidden pattern
+        let s1 = TrackedMutex::new("test.shard", 60, ());
+        let s2 = TrackedMutex::new("test.shard", 60, ());
+        let _g1 = s1.lock();
+        let _g2 = s2.lock();
+    }
+
+    #[test]
+    fn try_lock_contended_returns_none() {
+        let m = TrackedMutex::new("test.try", 10, ());
+        let g = m.lock();
+        assert!(m.try_lock().is_none());
+        drop(g);
+        assert!(m.try_lock().is_some());
+    }
+
+    #[test]
+    fn poison_recovers_by_default() {
+        let m = Arc::new(TrackedMutex::new("test.poison", 10, 7));
+        let m2 = m.clone();
+        // the panicking thread poisons the std mutex underneath
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        });
+        assert!(t.join().is_err());
+        // Recover policy: the value is still reachable
+        assert_eq!(*m.lock(), 7);
+    }
+
+    #[test]
+    fn condvar_wait_wakes() {
+        let m = Arc::new(TrackedMutex::new("test.cv", 10, false));
+        let cv = Arc::new(Condvar::new());
+        let (m2, cv2) = (m.clone(), cv.clone());
+        let t = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            while !*g {
+                g = g.wait(&cv2);
+            }
+            *g
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        *m.lock() = true;
+        cv.notify_all();
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn condvar_wait_timeout_reports_timeout() {
+        let m = TrackedMutex::new("test.cvt", 10, ());
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (_g, timed_out) = g.wait_timeout(&cv, std::time::Duration::from_millis(5));
+        assert!(timed_out);
+    }
+
+    #[test]
+    fn rwlock_read_write_round_trip() {
+        let l = TrackedRwLock::new("test.rw", 10, 5u32);
+        assert_eq!(*l.read(), 5);
+        *l.write() = 9;
+        assert_eq!(*l.read(), 9);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock-order violation")]
+    fn rwlock_participates_in_rank_order() {
+        let rw = TrackedRwLock::new("test.rw.low", 10, ());
+        let m = TrackedMutex::new("test.m.high", 20, ());
+        let _gm = m.lock();
+        let _gr = rw.read(); // 10 while holding 20
+    }
+}

@@ -7,8 +7,9 @@
 //! prefill sequence length of 128 tokens (Fig 22).
 
 use super::gemm::Gemm;
+use crate::util::sync::{rank, TrackedMutex};
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 /// Inference stage of an LLM forward pass.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -180,10 +181,12 @@ impl ModelWorkload {
 /// × 2 stages × a handful of sequence lengths), so entries live for the
 /// process lifetime.
 pub fn model_workload(model: LlmModel, stage: Stage, seq: u32) -> Arc<ModelWorkload> {
-    static MEMO: OnceLock<Mutex<HashMap<(LlmModel, Stage, u32), Arc<ModelWorkload>>>> =
-        OnceLock::new();
-    let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut m = memo.lock().unwrap();
+    type Memo = TrackedMutex<HashMap<(LlmModel, Stage, u32), Arc<ModelWorkload>>>;
+    static MEMO: OnceLock<Memo> = OnceLock::new();
+    let memo = MEMO.get_or_init(|| {
+        TrackedMutex::new("llm.workload-memo", rank::WORKLOAD_MEMO, HashMap::new())
+    });
+    let mut m = memo.lock();
     m.entry((model, stage, seq))
         .or_insert_with(|| Arc::new(ModelWorkload::new(model, stage, seq)))
         .clone()

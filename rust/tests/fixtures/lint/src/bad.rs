@@ -1,0 +1,24 @@
+// Planted-violation fixture for `tests/lint_repo.rs`: exactly one
+// violation per src-scoped rule (the dse-clock violation lives in
+// `dse/bad_clock.rs` because that rule only applies under `src/dse/`).
+// This file is never compiled — `lint_tree` treats `tests/fixtures/`
+// as data, and cargo does not build test-dir subdirectories.
+
+pub fn sort_scores(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); // float-cmp-unwrap
+}
+
+pub fn shared_counter() {
+    let _counter = std::sync::Mutex::new(0u64); // raw-sync
+}
+
+pub fn fire_and_forget() {
+    std::thread::spawn(|| {}); // thread-spawn
+}
+
+pub fn fresh_rng(seed: u64) -> crate::util::rng::Pcg32 {
+    crate::util::rng::Pcg32::new(seed, 7) // rng-construct
+}
+
+#[allow(dead_code)]
+pub fn unused_helper() {}

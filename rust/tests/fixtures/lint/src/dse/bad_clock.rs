@@ -1,0 +1,7 @@
+// Planted dse-clock violation for `tests/lint_repo.rs` (the rule only
+// fires for files under `src/dse/`). Never compiled — fixture data.
+
+pub fn deadline_check() -> bool {
+    let start = std::time::Instant::now(); // dse-clock
+    start.elapsed().as_secs() < 1
+}

@@ -1,0 +1,25 @@
+// Allow-mechanism fixture for `tests/lint_repo.rs`: the same patterns
+// as `lint/src/bad.rs`, every one suppressed by a justified directive
+// (or a justification comment, for bare-allow). Must lint clean.
+// Never compiled — fixture data.
+
+pub fn shared_counter() {
+    // lint:allow(raw-sync) fixture exercising the allow path; real code uses TrackedMutex
+    let _counter = std::sync::Mutex::new(0u64);
+}
+
+pub fn fire_and_forget() {
+    std::thread::spawn(|| {}); // lint:allow(thread-spawn) fixture exercising the allow path
+}
+
+pub fn fresh_rng(seed: u64) -> crate::util::rng::Pcg32 {
+    // lint:allow(rng-construct) fixture exercising the allow path
+    crate::util::rng::Pcg32::new(seed, 7)
+}
+
+pub fn sort_scores(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); // lint:allow(float-cmp-unwrap) fixture exercising the allow path
+}
+
+#[allow(dead_code)] // fixture exercising the justification-comment path
+pub fn unused_helper() {}

@@ -1,0 +1,75 @@
+//! Corpus self-test for `diffaxe lint` (`util::lint`).
+//!
+//! Three properties, per the invariant doc (`docs/INVARIANTS.md`):
+//! 1. the planted-violation fixture under `tests/fixtures/lint/` trips
+//!    every rule exactly once,
+//! 2. the allow-mechanism fixture under `tests/fixtures/lint_allowed/`
+//!    lints clean (every directive carries a reason),
+//! 3. the real tree — the very crate this test compiles into — lints
+//!    clean, which is the invariant the blocking CI step enforces.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use diffaxe::util::lint::{lint_tree, to_json, RULES};
+
+fn manifest_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn fixture_trips_every_rule_exactly_once() {
+    let root = manifest_dir().join("tests/fixtures/lint");
+    let diags = lint_tree(&root).expect("fixture tree readable");
+    let mut by_rule: BTreeMap<&str, usize> = BTreeMap::new();
+    for d in &diags {
+        *by_rule.entry(d.rule).or_insert(0) += 1;
+    }
+    for r in RULES {
+        assert_eq!(
+            by_rule.get(r.name).copied().unwrap_or(0),
+            1,
+            "rule {} should fire exactly once on the fixture; all diagnostics:\n{}",
+            r.name,
+            render(&diags)
+        );
+    }
+    assert_eq!(diags.len(), RULES.len(), "no extra diagnostics:\n{}", render(&diags));
+    // and the planted dse-clock violation really came from the dse/ subtree
+    let clock = diags.iter().find(|d| d.rule == "dse-clock").expect("checked above");
+    assert!(clock.file.starts_with("src/dse/"), "{}", clock);
+}
+
+#[test]
+fn allow_fixture_lints_clean() {
+    let root = manifest_dir().join("tests/fixtures/lint_allowed");
+    let diags = lint_tree(&root).expect("fixture tree readable");
+    assert!(diags.is_empty(), "justified allows must suppress:\n{}", render(&diags));
+}
+
+#[test]
+fn real_tree_lints_clean() {
+    let diags = lint_tree(manifest_dir()).expect("crate tree readable");
+    assert!(
+        diags.is_empty(),
+        "the migrated tree must lint clean (this is the blocking CI gate):\n{}",
+        render(&diags)
+    );
+}
+
+#[test]
+fn json_output_carries_all_fields() {
+    let root = manifest_dir().join("tests/fixtures/lint");
+    let diags = lint_tree(&root).expect("fixture tree readable");
+    let json = to_json(&diags).to_string();
+    for key in ["\"file\"", "\"line\"", "\"rule\"", "\"message\""] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+    for r in RULES {
+        assert!(json.contains(r.name), "missing rule {} in {json}", r.name);
+    }
+}
+
+fn render(diags: &[diffaxe::util::lint::Diagnostic]) -> String {
+    diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+}

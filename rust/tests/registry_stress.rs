@@ -1,0 +1,187 @@
+//! Concurrency stress test for the [`JobRegistry`]: many threads
+//! interleave submit / status / cancel / watch against a driver thread
+//! running the engine-side lifecycle (start → publish → finalize), all
+//! under the debug lock-rank assertions of `util::sync` (this suite runs
+//! unoptimized, so the assertions are live — a lock-order inversion
+//! anywhere in the registry/metrics cluster panics the test instead of
+//! deadlocking CI; see docs/INVARIANTS.md).
+//!
+//! Invariants checked at the end:
+//! - no ordering violation (no panic from the rank assertions),
+//! - no lost terminal state: every job ends `Done` or `Cancelled` with a
+//!   stored result,
+//! - the metrics gauges balance back to zero and the cumulative counters
+//!   add up to exactly one terminal transition per job.
+
+use diffaxe::coordinator::{
+    JobRegistry, JobState, Metrics, Response, SearchRequest, MAX_RETAINED_JOBS,
+};
+use diffaxe::dse::{Budget, Objective, OptimizerKind, SearchEvent, SearchOutcome, StopReason};
+use diffaxe::workload::Gemm;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+const JOBS: usize = 96;
+const SUBMITTERS: usize = 4;
+
+fn request() -> SearchRequest {
+    SearchRequest::new(
+        Objective::MinEdp { g: Gemm::new(8, 8, 8) },
+        Budget::evals(4),
+        OptimizerKind::RandomSearch,
+    )
+}
+
+fn done_outcome(evals: usize) -> Response {
+    Response::Outcome(SearchOutcome {
+        evals,
+        ..SearchOutcome::empty("random", StopReason::Completed)
+    })
+}
+
+#[test]
+fn interleaved_submit_status_cancel_watch_under_rank_assertions() {
+    assert!(JOBS < MAX_RETAINED_JOBS, "GC must not reap jobs mid-assertion");
+    let metrics = Arc::new(Metrics::new());
+    let reg = Arc::new(JobRegistry::new(metrics.clone()));
+    let (entry_tx, entry_rx) = channel();
+    let churn = Arc::new(AtomicBool::new(true));
+
+    // status/list hammer: exercises the registry.inner → job.core
+    // acquisition order concurrently with every lifecycle transition
+    let pollers: Vec<_> = (0..2)
+        .map(|_| {
+            let reg = reg.clone();
+            let churn = churn.clone();
+            std::thread::spawn(move || {
+                let mut polls = 0usize;
+                while churn.load(Ordering::SeqCst) {
+                    for info in reg.list() {
+                        let _ = reg.get(&info.id).map(|e| e.info());
+                    }
+                    polls += 1;
+                }
+                polls
+            })
+        })
+        .collect();
+
+    // submitters: submit, then immediately cancel a third of their jobs
+    // (some still queued — terminal via the cancel path; some already
+    // running — the driver's finalize wins and the cancel is a no-op)
+    let submitters: Vec<_> = (0..SUBMITTERS)
+        .map(|s| {
+            let reg = reg.clone();
+            let entry_tx = entry_tx.clone();
+            std::thread::spawn(move || {
+                for i in 0..JOBS / SUBMITTERS {
+                    let entry = reg.submit(request());
+                    entry_tx.send(entry.clone()).expect("driver alive");
+                    if (s + i) % 3 == 0 {
+                        // depending on the race, the job may already be
+                        // running (driver finalize wins) or even done —
+                        // but a cancel must never leave it Failed
+                        let info = reg.cancel(&entry.id).expect("just submitted");
+                        assert_ne!(info.state, JobState::Failed);
+                    }
+                }
+            })
+        })
+        .collect();
+    drop(entry_tx);
+
+    // engine driver: the single-threaded lifecycle the real service runs.
+    // Every 5th job also gets a watcher thread riding the condvar path,
+    // draining next_event() until the terminal response lands.
+    // start() returning false means a queued cancel already finalized the
+    // job — the driver must skip it without touching the result.
+    let driver = {
+        let reg = reg.clone();
+        std::thread::spawn(move || {
+            let mut handled = 0usize;
+            let mut watchers = Vec::new();
+            for (i, entry) in entry_rx.iter().enumerate() {
+                if i % 5 == 0 {
+                    let e = entry.clone();
+                    watchers.push(std::thread::spawn(move || {
+                        let mut seq = 0u64;
+                        loop {
+                            let (s, _ev, terminal) = e.next_event(seq);
+                            seq = s;
+                            if let Some((state, resp)) = terminal {
+                                assert!(state.terminal(), "watch ended on {state:?}");
+                                assert!(
+                                    matches!(resp, Response::Outcome(_)),
+                                    "terminal must carry the stored outcome"
+                                );
+                                return;
+                            }
+                        }
+                    }));
+                }
+                if reg.start(&entry) {
+                    for evals in 1..=2 {
+                        reg.publish(
+                            &entry,
+                            SearchEvent { evals, best_score: 1.0, elapsed_s: 0.0 },
+                        );
+                    }
+                    reg.finalize(&entry, JobState::Done, done_outcome(2));
+                    handled += 1;
+                }
+            }
+            for w in watchers {
+                w.join().expect("watcher");
+            }
+            handled
+        })
+    };
+
+    for s in submitters {
+        s.join().expect("submitter");
+    }
+    let handled = driver.join().expect("driver");
+    churn.store(false, Ordering::SeqCst);
+    for p in pollers {
+        assert!(p.join().expect("poller") > 0, "poller never ran");
+    }
+
+    // no lost terminal state: every job is Done or Cancelled and carries
+    // its stored outcome
+    let jobs = reg.list();
+    assert_eq!(jobs.len(), JOBS);
+    let mut done = 0usize;
+    let mut cancelled = 0usize;
+    for info in &jobs {
+        match info.state {
+            JobState::Done => done += 1,
+            JobState::Cancelled => cancelled += 1,
+            other => panic!("job {} not terminal: {other:?}", info.id),
+        }
+        let entry = reg.get(&info.id).expect("retained");
+        match entry.result_now() {
+            Response::Outcome(o) => {
+                let want = if info.state == JobState::Done {
+                    StopReason::Completed
+                } else {
+                    StopReason::Cancelled
+                };
+                assert_eq!(o.stopped, want, "{}", info.id);
+            }
+            other => panic!("job {} lost its result: {other:?}", info.id),
+        }
+    }
+    assert_eq!(done, handled, "every driver-run job must read back Done");
+    assert_eq!(done + cancelled, JOBS);
+
+    // gauges balance: nothing queued, nothing active, no orphaned event
+    // slots; counters account for exactly one terminal transition per job
+    let s = metrics.snapshot();
+    assert_eq!((s.jobs_queued, s.jobs_active, s.event_queue_depth), (0, 0, 0), "{s}");
+    assert_eq!(s.jobs_submitted, JOBS as u64);
+    assert_eq!(s.jobs_completed + s.jobs_cancelled + s.jobs_failed, JOBS as u64, "{s}");
+    assert_eq!(s.jobs_completed, done as u64);
+    assert_eq!(s.jobs_cancelled, cancelled as u64);
+    assert_eq!(s.jobs_failed, 0);
+}
