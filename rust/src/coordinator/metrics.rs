@@ -25,6 +25,10 @@ struct Inner {
     jobs_completed: u64,
     jobs_cancelled: u64,
     jobs_failed: u64,
+    /// submits rejected by admission control (never entered the registry)
+    jobs_shed: u64,
+    /// engine workers restarted by the supervisor after a crash
+    worker_restarts: u64,
     /// gauge: jobs accepted but not yet started
     jobs_queued: u64,
     /// gauge: jobs currently executing on the engine thread
@@ -70,6 +74,10 @@ pub struct Snapshot {
     pub jobs_completed: u64,
     pub jobs_cancelled: u64,
     pub jobs_failed: u64,
+    /// submits rejected by admission control (not counted in `jobs_submitted`)
+    pub jobs_shed: u64,
+    /// engine workers restarted by the supervisor after a crash
+    pub worker_restarts: u64,
     /// …and point-in-time gauges
     pub jobs_queued: u64,
     pub jobs_active: u64,
@@ -142,6 +150,25 @@ impl Metrics {
         m.jobs_active += 1;
     }
 
+    /// A submit was rejected by admission control before reaching the
+    /// registry.
+    pub fn job_shed(&self) {
+        self.inner.lock().jobs_shed += 1;
+    }
+
+    /// A running job went back to `queued` for a retry after its worker
+    /// crashed (inverse of [`Metrics::job_started`]).
+    pub fn job_requeued(&self) {
+        let mut m = self.inner.lock();
+        m.jobs_active = m.jobs_active.saturating_sub(1);
+        m.jobs_queued += 1;
+    }
+
+    /// The supervisor restarted a crashed engine worker.
+    pub fn worker_restart(&self) {
+        self.inner.lock().worker_restarts += 1;
+    }
+
     /// A job reached a terminal state. `was_running` distinguishes which
     /// gauge to decrement; `had_buffered_event` frees its coalesced
     /// progress-event slot.
@@ -187,6 +214,8 @@ impl Metrics {
             jobs_completed: m.jobs_completed,
             jobs_cancelled: m.jobs_cancelled,
             jobs_failed: m.jobs_failed,
+            jobs_shed: m.jobs_shed,
+            worker_restarts: m.worker_restarts,
             jobs_queued: m.jobs_queued,
             jobs_active: m.jobs_active,
             event_queue_depth: m.event_queue_depth,
@@ -204,7 +233,8 @@ impl std::fmt::Display for Snapshot {
             "requests={} designs={} evals={} sampler_calls={} occupancy={:.2} \
              cache_hits={} cache_misses={} cache_hit_rate={:.3} \
              jobs_submitted={} jobs_queued={} jobs_active={} jobs_completed={} \
-             jobs_cancelled={} jobs_failed={} event_queue_depth={} \
+             jobs_cancelled={} jobs_failed={} jobs_shed={} worker_restarts={} \
+             event_queue_depth={} \
              p50={:.0}us p99={:.0}us sampler_mean={:.0}us errors={}",
             self.requests,
             self.designs_generated,
@@ -220,6 +250,8 @@ impl std::fmt::Display for Snapshot {
             self.jobs_completed,
             self.jobs_cancelled,
             self.jobs_failed,
+            self.jobs_shed,
+            self.worker_restarts,
             self.event_queue_depth,
             self.request_p50_us,
             self.request_p99_us,
@@ -289,5 +321,28 @@ mod tests {
         let line = s.to_string();
         assert!(line.contains("jobs_active=0"), "{line}");
         assert!(line.contains("event_queue_depth=0"), "{line}");
+    }
+
+    #[test]
+    fn shed_retry_and_restart_counters() {
+        let m = Metrics::new();
+        m.job_shed();
+        m.job_shed();
+        // one job retried once: started, requeued, started again, done
+        m.job_submitted();
+        m.job_started();
+        m.job_requeued();
+        m.job_started();
+        m.job_finished(JobState::Done, true, false);
+        m.worker_restart();
+        let s = m.snapshot();
+        assert_eq!((s.jobs_shed, s.worker_restarts), (2, 1));
+        // shed jobs never enter the registry counters
+        assert_eq!(s.jobs_submitted, 1);
+        // the requeue round-trip leaves the gauges balanced
+        assert_eq!((s.jobs_queued, s.jobs_active), (0, 0));
+        let line = s.to_string();
+        assert!(line.contains("jobs_shed=2"), "{line}");
+        assert!(line.contains("worker_restarts=1"), "{line}");
     }
 }

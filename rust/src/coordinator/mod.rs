@@ -1,4 +1,4 @@
-//! L3 coordinator — the DiffAxE DSE *service*: a dedicated engine thread
+//! L3 coordinator — the DiffAxE DSE *service*: a supervised engine worker
 //! owning a [`crate::dse::Session`], continuous batching of
 //! runtime-generation searches into the fixed-batch diffusion sampler, a
 //! job-oriented search lifecycle, a versioned newline-JSON TCP front end
@@ -16,11 +16,16 @@
 //!                             │ cancel                      ├─ completes / deadline /
 //!                             ▼                             │  budget ──▶ done
 //!                          cancelled ◀── cancel (partial ───┤
-//!                          (empty)        outcome kept)     └─ error ──▶ failed
+//!                          (empty)        outcome kept)     ├─ error / panic ──▶ failed
+//!                                                           └─ worker crash ──▶ requeued
+//!                                                              (≤ max_attempts) or failed
 //! ```
 //!
 //! * `submit` answers a `job_id` immediately; `status` / `jobs` / `cancel`
 //!   are registry queries that never wait behind a running search.
+//! * Admission is bounded ([`service::ServiceConfig::max_queued`]): an
+//!   over-capacity submit is shed with a structured `overloaded` error
+//!   carrying a `retry_after_ms` hint, never silently queued.
 //! * A running search polls its cancellation flag and deadline **between
 //!   evaluation batches** (see [`crate::dse::SearchCtx`]), so `cancel`
 //!   and `Budget::wall_clock_s` stop it promptly while keeping every
@@ -33,18 +38,30 @@
 //! * Terminal jobs are retained for late `status` queries up to
 //!   [`service::MAX_RETAINED_JOBS`], then GC'd oldest-first.
 //!
+//! # Supervision
+//!
+//! The engine worker runs under a supervisor ([`supervisor`]): panics
+//! inside a search are isolated to that job; a dead worker is respawned
+//! with bounded exponential backoff and its in-flight job retried or
+//! terminally failed; dropping the service drains gracefully (admissions
+//! close, queued jobs cancel, every watcher wakes). The supervision tree,
+//! restart policy, drain ordering, and the deterministic fault-injection
+//! sites that test them are documented in `docs/INVARIANTS.md`.
+//!
 //! # Locking
 //!
 //! Every lock in this module is a [`crate::util::sync::TrackedMutex`]
-//! with a static rank (registry → job core → connection semaphore →
-//! metrics); debug builds assert the acquisition order, and
-//! `diffaxe lint` forbids raw `std::sync` locks outside the facade. The
-//! lock-rank table and the rules live in `docs/INVARIANTS.md`.
+//! with a static rank (supervisor queue → supervisor inflight → registry
+//! → job core → connection semaphore → metrics); debug builds assert the
+//! acquisition order, and `diffaxe lint` forbids raw `std::sync` locks
+//! outside the facade. The lock-rank table and the rules live in
+//! `docs/INVARIANTS.md`.
 
 pub mod metrics;
 pub mod protocol;
 pub mod server;
 pub mod service;
+pub mod supervisor;
 
 pub use metrics::Metrics;
 pub use protocol::{
@@ -53,6 +70,7 @@ pub use protocol::{
 pub use service::{
     Handle, JobEntry, JobRegistry, Service, ServiceConfig, DEFAULT_TOP_K, MAX_RETAINED_JOBS,
 };
+pub use supervisor::NoEngineError;
 
 // the wire's design unit is the DSE layer's report type
 pub use crate::dse::api::DesignReport;

@@ -148,6 +148,10 @@ pub struct JobInfo {
     pub best_score: Option<f64>,
     /// Seconds since submission (frozen at the terminal transition).
     pub elapsed_s: f64,
+    /// Execution attempts (1 on the first run; >1 after a worker-crash
+    /// retry). Serialized additively: only on `failed` jobs or when a
+    /// retry happened, so pre-existing wire lines are byte-identical.
+    pub attempts: u32,
 }
 
 /// Structured wire-error categories.
@@ -159,6 +163,9 @@ pub enum ErrorCode {
     UnsupportedVersion,
     /// the request was valid but serving it failed
     Internal,
+    /// v3: admission control shed the request (queue full or service
+    /// draining); retry after `retry_after_ms` when present
+    Overloaded,
 }
 
 impl ErrorCode {
@@ -167,13 +174,19 @@ impl ErrorCode {
             ErrorCode::BadRequest => "bad_request",
             ErrorCode::UnsupportedVersion => "unsupported_version",
             ErrorCode::Internal => "internal",
+            ErrorCode::Overloaded => "overloaded",
         }
     }
 
     pub fn from_name(s: &str) -> Option<ErrorCode> {
-        [ErrorCode::BadRequest, ErrorCode::UnsupportedVersion, ErrorCode::Internal]
-            .into_iter()
-            .find(|c| c.name() == s)
+        [
+            ErrorCode::BadRequest,
+            ErrorCode::UnsupportedVersion,
+            ErrorCode::Internal,
+            ErrorCode::Overloaded,
+        ]
+        .into_iter()
+        .find(|c| c.name() == s)
     }
 }
 
@@ -257,12 +270,27 @@ pub enum Response {
     Event { job_id: String, event: SearchEvent },
     /// v3: the terminal line of a `watch` stream
     JobOutcome { job_id: String, outcome: SearchOutcome },
-    Error { code: ErrorCode, message: String },
+    Error {
+        code: ErrorCode,
+        message: String,
+        /// v3, additive: backoff hint on `overloaded` errors; omitted
+        /// from the wire when `None`.
+        retry_after_ms: Option<u64>,
+    },
 }
 
 impl Response {
     pub fn error(code: ErrorCode, message: impl Into<String>) -> Response {
-        Response::Error { code, message: message.into() }
+        Response::Error { code, message: message.into(), retry_after_ms: None }
+    }
+
+    /// An [`ErrorCode::Overloaded`] error carrying a retry hint.
+    pub fn overloaded(message: impl Into<String>, retry_after_ms: u64) -> Response {
+        Response::Error {
+            code: ErrorCode::Overloaded,
+            message: message.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
     }
 }
 
@@ -774,6 +802,11 @@ fn job_info_to_json(i: &JobInfo) -> Json {
         fields.push(("best_score", Json::Num(b)));
     }
     fields.push(("elapsed_s", Json::Num(i.elapsed_s)));
+    // additive: surfaced where it is diagnostic (failures and retries),
+    // so pre-PR-8 job lines keep their exact bytes
+    if i.attempts > 1 || i.state == JobState::Failed {
+        fields.push(("attempts", Json::Num(i.attempts as f64)));
+    }
     Json::obj(fields)
 }
 
@@ -790,6 +823,7 @@ fn job_info_from_json(j: &Json) -> Result<JobInfo> {
         evals: j.get("evals").as_usize().unwrap_or(0),
         best_score: j.get("best_score").as_f64(),
         elapsed_s: j.get("elapsed_s").as_f64().unwrap_or(0.0),
+        attempts: j.get("attempts").as_usize().unwrap_or(0) as u32,
     })
 }
 
@@ -854,12 +888,18 @@ impl Response {
                 fields.extend(outcome_fields(outcome));
                 Json::obj(fields)
             }
-            Response::Error { code, message } => Json::obj(vec![
-                ("status", Json::Str("error".into())),
-                ("v", Json::Num(PROTOCOL_VERSION as f64)),
-                ("code", Json::Str(code.name().into())),
-                ("message", Json::Str(message.clone())),
-            ]),
+            Response::Error { code, message, retry_after_ms } => {
+                let mut fields = vec![
+                    ("status", Json::Str("error".into())),
+                    ("v", Json::Num(PROTOCOL_VERSION as f64)),
+                    ("code", Json::Str(code.name().into())),
+                    ("message", Json::Str(message.clone())),
+                ];
+                if let Some(ms) = retry_after_ms {
+                    fields.push(("retry_after_ms", Json::Num(*ms as f64)));
+                }
+                Json::obj(fields)
+            }
         }
     }
 
@@ -918,6 +958,7 @@ impl Response {
                     .and_then(ErrorCode::from_name)
                     .unwrap_or(ErrorCode::Internal),
                 message: j.get("message").as_str().unwrap_or("").to_string(),
+                retry_after_ms: j.get("retry_after_ms").as_usize().map(|ms| ms as u64),
             }),
             _ => bail!("bad response"),
         }
@@ -1055,9 +1096,10 @@ mod tests {
         let resp = Response::error(err.code, err.message);
         let j = Json::parse(&resp.to_json().to_string()).unwrap();
         match Response::from_json(&j).unwrap() {
-            Response::Error { code, message } => {
+            Response::Error { code, message, retry_after_ms } => {
                 assert_eq!(code, ErrorCode::UnsupportedVersion);
                 assert!(message.contains("v4"));
+                assert_eq!(retry_after_ms, None);
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -1111,11 +1153,21 @@ mod tests {
             evals: 40,
             best_score: Some(1.5e9),
             elapsed_s: 0.7,
+            // retried once: attempts is surfaced on the wire
+            attempts: 2,
         };
         let info_fresh = JobInfo {
             state: JobState::Queued,
             evals: 0,
             best_score: None,
+            attempts: 0,
+            ..info.clone()
+        };
+        let info_failed = JobInfo {
+            state: JobState::Failed,
+            evals: 3,
+            best_score: None,
+            attempts: 1,
             ..info.clone()
         };
         for resp in [
@@ -1125,7 +1177,7 @@ mod tests {
             Response::MetricsText("requests=1".into()),
             Response::Submitted { job_id: "job-1".into(), state: JobState::Queued },
             Response::Job(info.clone()),
-            Response::Jobs(vec![info, info_fresh]),
+            Response::Jobs(vec![info, info_fresh, info_failed]),
             Response::Event {
                 job_id: "job-2".into(),
                 event: SearchEvent { evals: 64, best_score: 0.125, elapsed_s: 1.5 },
@@ -1137,6 +1189,7 @@ mod tests {
             },
             Response::JobOutcome { job_id: "job-2".into(), outcome: partial },
             Response::error(ErrorCode::Internal, "boom"),
+            Response::overloaded("queue full: 8 jobs queued (max 8)", 120),
         ] {
             let j = Json::parse(&resp.to_json().to_string()).unwrap();
             assert_eq!(Response::from_json(&j).unwrap(), resp);

@@ -224,7 +224,7 @@ impl Client {
     pub fn submit(&mut self, sr: &super::protocol::SearchRequest) -> Result<String> {
         match self.request(&Request::Submit(sr.clone()))? {
             Response::Submitted { job_id, .. } => Ok(job_id),
-            Response::Error { code, message } => bail!("submit failed: {}: {message}", code.name()),
+            Response::Error { code, message, .. } => bail!("submit failed: {}: {message}", code.name()),
             other => bail!("unexpected submit response {other:?}"),
         }
     }
@@ -233,7 +233,7 @@ impl Client {
     pub fn status(&mut self, job_id: &str) -> Result<JobInfo> {
         match self.request(&Request::Status { job_id: job_id.to_string() })? {
             Response::Job(info) => Ok(info),
-            Response::Error { code, message } => bail!("status failed: {}: {message}", code.name()),
+            Response::Error { code, message, .. } => bail!("status failed: {}: {message}", code.name()),
             other => bail!("unexpected status response {other:?}"),
         }
     }
@@ -242,7 +242,7 @@ impl Client {
     pub fn cancel(&mut self, job_id: &str) -> Result<JobInfo> {
         match self.request(&Request::Cancel { job_id: job_id.to_string() })? {
             Response::Job(info) => Ok(info),
-            Response::Error { code, message } => bail!("cancel failed: {}: {message}", code.name()),
+            Response::Error { code, message, .. } => bail!("cancel failed: {}: {message}", code.name()),
             other => bail!("unexpected cancel response {other:?}"),
         }
     }

@@ -1,13 +1,13 @@
-//! The DSE service: a dedicated engine thread owning a [`Session`] (the
+//! The DSE service: a supervised engine worker owning a [`Session`] (the
 //! PJRT executables hold raw C pointers and are deliberately never shared),
-//! fed by a cloneable handle over an mpsc channel, with every search
-//! tracked as a *job* in the [`JobRegistry`].
+//! fed through a bounded dispatch queue by a cloneable handle, with every
+//! search tracked as a *job* in the [`JobRegistry`].
 //!
 //! # Jobs
 //!
 //! Every search — synchronous or not — enters the registry as a job:
 //! `submit` answers a `job_id` immediately and the search runs when the
-//! engine thread reaches it; the classic synchronous `search`/`batch`
+//! engine worker reaches it; the classic synchronous `search`/`batch`
 //! requests are submit-plus-wait over the same path, so their wire
 //! behaviour is unchanged. Jobs move `queued → running → done |
 //! cancelled | failed`; cancellation raises a flag the search polls
@@ -18,10 +18,27 @@
 //! heartbeats. Terminal jobs are retained for `status` queries up to
 //! [`MAX_RETAINED_JOBS`], then garbage-collected oldest-first.
 //!
+//! # Robustness
+//!
+//! The worker is owned by a supervisor ([`super::supervisor`]): a search
+//! that panics is isolated by `catch_unwind` and finalizes its job as
+//! `failed` while the worker survives; a worker that dies anyway is
+//! restarted with bounded exponential backoff and its in-flight job is
+//! retried (up to [`ServiceConfig::max_attempts`] total attempts) or
+//! terminally failed — never left `running`. Admission is bounded by
+//! [`ServiceConfig::max_queued`]: over-capacity submits are shed with a
+//! structured `overloaded` error carrying a `retry_after_ms` hint.
+//! Dropping the [`Service`] (or calling [`Service::shutdown`]) drains
+//! gracefully: admissions close, queued jobs cancel terminally, running
+//! work gets the drain deadline to stop at a batch boundary, and every
+//! watcher wakes. Deterministic fault injection
+//! ([`crate::util::fault::FaultPlan`], off by default) drives the chaos
+//! suite over exactly these paths.
+//!
 //! # Batching
 //!
 //! Runtime-generation searches with the `diffaxe` optimizer are
-//! **dynamically batched**: the engine thread drains the queue up to the
+//! **dynamically batched**: the worker drains the queue up to the
 //! sampler's fixed batch width (slots can mix workloads — the sampler
 //! conditions per batch element) before issuing one diffusion call, then
 //! splits, batch-evaluates, and replies per request. This is the
@@ -37,18 +54,21 @@
 
 use super::metrics::Metrics;
 use super::protocol::{ErrorCode, JobInfo, JobState, Request, Response, SearchRequest};
+use super::supervisor::{self, Msg, NoEngineError, Shared};
 use crate::dse::api::{
     DesignReport, Objective, OptimizerKind, SearchCtx, SearchEvent, SearchOutcome, Session,
     StopReason,
 };
 use crate::design_space::HwConfig;
+use crate::util::fault::{self, FaultPlan, FaultSite};
 use crate::util::rng;
 use crate::util::sync::{rank, TrackedMutex};
 use crate::workload::Gemm;
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
@@ -71,6 +91,22 @@ pub struct ServiceConfig {
     /// serve the hermetic mock engine instead of compiling artifacts
     /// ([`crate::models::DiffAxE::mock`]) — CI and artifact-free hosts
     pub use_mock_engine: bool,
+    /// admission control: jobs queued beyond this are shed with a
+    /// structured `overloaded` error (and a `retry_after_ms` hint)
+    pub max_queued: usize,
+    /// total execution attempts per job across worker crashes (`1` means
+    /// a job is never retried)
+    pub max_attempts: u32,
+    /// worker respawns before the supervisor gives up and the service
+    /// permanently rejects new work
+    pub max_worker_restarts: u32,
+    /// base of the exponential worker-respawn backoff
+    pub restart_backoff: Duration,
+    /// how long shutdown waits for in-flight work before force-cancelling
+    pub drain_deadline: Duration,
+    /// deterministic fault injection for chaos tests; `None` (production)
+    /// costs one pointer check per site
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl ServiceConfig {
@@ -80,6 +116,12 @@ impl ServiceConfig {
             batch_window: Duration::from_millis(4),
             seed: 1,
             use_mock_engine: false,
+            max_queued: 256,
+            max_attempts: 2,
+            max_worker_restarts: 3,
+            restart_backoff: Duration::from_millis(50),
+            drain_deadline: Duration::from_secs(2),
+            fault_plan: None,
         }
     }
 
@@ -101,6 +143,9 @@ struct JobCore {
     /// bumps on every observable change (event published, state change,
     /// terminal result) — watchers resume from the last seq they saw
     seq: u64,
+    /// execution attempts: incremented by [`JobRegistry::start`], so `2`
+    /// means the job was retried once after a worker crash
+    attempts: u32,
     /// the coalescing progress slot: (seq at publish, event). A newer
     /// event *replaces* the buffered one (drop-to-latest backpressure).
     latest: Option<(u64, SearchEvent)>,
@@ -132,6 +177,11 @@ impl JobEntry {
         self.core.lock().state
     }
 
+    /// Execution attempts so far (0 until the worker first starts it).
+    pub fn attempts(&self) -> u32 {
+        self.core.lock().attempts
+    }
+
     /// Point-in-time description (the `status` wire unit).
     pub fn info(&self) -> JobInfo {
         let core = self.core.lock();
@@ -152,6 +202,7 @@ impl JobEntry {
             objective: self.request.objective.to_string(),
             evals,
             best_score,
+            attempts: core.attempts,
             elapsed_s: core
                 .elapsed_s
                 .unwrap_or_else(|| self.submitted.elapsed().as_secs_f64()),
@@ -204,10 +255,19 @@ struct RegistryInner {
 pub struct JobRegistry {
     inner: TrackedMutex<RegistryInner>,
     metrics: Arc<Metrics>,
+    /// chaos-test injection at the [`FaultSite::Finalize`] site; `None`
+    /// in production
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl JobRegistry {
     pub fn new(metrics: Arc<Metrics>) -> JobRegistry {
+        Self::with_faults(metrics, None)
+    }
+
+    /// [`JobRegistry::new`] with a fault plan checked at the
+    /// [`FaultSite::Finalize`] site (chaos tests; see `util::fault`).
+    pub fn with_faults(metrics: Arc<Metrics>, faults: Option<Arc<FaultPlan>>) -> JobRegistry {
         JobRegistry {
             inner: TrackedMutex::new(
                 "registry.inner",
@@ -215,6 +275,7 @@ impl JobRegistry {
                 RegistryInner { next_id: 0, jobs: BTreeMap::new(), terminal: VecDeque::new() },
             ),
             metrics,
+            faults,
         }
     }
 
@@ -236,6 +297,7 @@ impl JobRegistry {
                     JobCore {
                         state: JobState::Queued,
                         seq: 0,
+                        attempts: 0,
                         latest: None,
                         result: None,
                         elapsed_s: None,
@@ -261,8 +323,9 @@ impl JobRegistry {
         self.inner.lock().jobs.values().map(|e| e.info()).collect()
     }
 
-    /// Transition a queued job to running. False if the job was cancelled
-    /// (or otherwise finished) before the engine reached it.
+    /// Transition a queued job to running (counting the attempt). False
+    /// if the job was cancelled (or otherwise finished) before the worker
+    /// reached it.
     pub fn start(&self, entry: &JobEntry) -> bool {
         {
             let mut core = entry.core.lock();
@@ -270,10 +333,27 @@ impl JobRegistry {
                 return false;
             }
             core.state = JobState::Running;
+            core.attempts += 1;
             core.seq += 1;
             entry.cv.notify_all();
         }
         self.metrics.job_started();
+        true
+    }
+
+    /// Return a running job to the queue after a worker crash, keeping
+    /// its attempt count. False if the job is not (still) running.
+    pub fn requeue(&self, entry: &Arc<JobEntry>) -> bool {
+        {
+            let mut core = entry.core.lock();
+            if core.state != JobState::Running || core.result.is_some() {
+                return false;
+            }
+            core.state = JobState::Queued;
+            core.seq += 1;
+            entry.cv.notify_all();
+        }
+        self.metrics.job_requeued();
         true
     }
 
@@ -298,9 +378,15 @@ impl JobRegistry {
 
     /// Record a job's terminal state + response. Idempotent: the first
     /// finalization wins (a cancel racing a completion keeps the earlier
-    /// result).
+    /// result; a detached drain-era worker finishing late cannot regress
+    /// a terminal state).
     pub fn finalize(&self, entry: &Arc<JobEntry>, state: JobState, result: Response) {
         debug_assert!(state.terminal());
+        if let Some(fp) = &self.faults {
+            // the Finalize site has no error return path: error actions
+            // are ignored here; panic and delay actions apply
+            let _ = fp.check(FaultSite::Finalize);
+        }
         let (was_running, had_event);
         {
             let mut core = entry.core.lock();
@@ -357,6 +443,18 @@ impl JobRegistry {
         Some(entry.info())
     }
 
+    /// Drain fallback: terminally cancel a job regardless of its current
+    /// state, with an empty cancelled outcome. Idempotency of
+    /// [`JobRegistry::finalize`] makes this safe to race against a
+    /// detached worker finishing the same job.
+    pub(crate) fn force_cancel(&self, entry: &Arc<JobEntry>) {
+        let outcome = SearchOutcome {
+            search_time_s: entry.submitted.elapsed().as_secs_f64(),
+            ..SearchOutcome::empty(entry.request.optimizer.name(), StopReason::Cancelled)
+        };
+        self.finalize(entry, JobState::Cancelled, Response::Outcome(outcome));
+    }
+
     fn gc(inner: &mut RegistryInner) {
         while inner.terminal.len() > MAX_RETAINED_JOBS {
             if let Some(num) = inner.terminal.pop_front() {
@@ -370,18 +468,12 @@ impl JobRegistry {
 // handle + service
 // ---------------------------------------------------------------------------
 
-/// One unit of engine-thread work: run a registered job, optionally
-/// delivering the terminal response to a synchronous waiter.
-enum Msg {
-    Run { entry: Arc<JobEntry>, reply: Option<Sender<Response>> },
-}
-
 /// Cloneable handle to the service. Registry queries (`status`, `cancel`,
 /// `jobs`, `metrics`) answer directly — they never queue behind a running
-/// search on the engine thread.
+/// search on the engine worker.
 #[derive(Clone)]
 pub struct Handle {
-    tx: Sender<Msg>,
+    shared: Arc<Shared>,
     metrics: Arc<Metrics>,
     registry: Arc<JobRegistry>,
 }
@@ -414,17 +506,24 @@ impl Handle {
                 if let Err(msg) = validate(&sr) {
                     return Response::error(ErrorCode::BadRequest, msg);
                 }
-                let entry = self.enqueue(sr, None);
-                Response::Submitted { job_id: entry.id.clone(), state: entry.state() }
+                match self.enqueue(sr, None) {
+                    Ok(entry) => {
+                        Response::Submitted { job_id: entry.id.clone(), state: entry.state() }
+                    }
+                    Err(rejected) => rejected,
+                }
             }
             Request::Search(sr) => {
                 if let Err(msg) = validate(&sr) {
                     return Response::error(ErrorCode::BadRequest, msg);
                 }
                 let (tx, rx) = channel();
-                self.enqueue(sr, Some(tx));
-                rx.recv()
-                    .unwrap_or_else(|_| Response::error(ErrorCode::Internal, "service stopped"))
+                match self.enqueue(sr, Some(tx)) {
+                    Ok(_) => rx.recv().unwrap_or_else(|_| {
+                        Response::error(ErrorCode::Internal, "service stopped")
+                    }),
+                    Err(rejected) => rejected,
+                }
             }
             Request::Batch(items) => {
                 // validate the whole batch before running any item, so a bad
@@ -441,7 +540,12 @@ impl Handle {
                     .iter()
                     .map(|sr| {
                         let (tx, rx) = channel();
-                        self.enqueue(sr.clone(), Some(tx));
+                        // an admission rejection (queue full, draining)
+                        // flows through the same channel as a job result,
+                        // so the all-or-nothing collection below applies
+                        if let Err(rejected) = self.enqueue(sr.clone(), Some(tx.clone())) {
+                            let _ = tx.send(rejected);
+                        }
                         rx
                     })
                     .collect();
@@ -453,7 +557,7 @@ impl Handle {
                     });
                     match resp {
                         Response::Outcome(o) => outs.push(o),
-                        Response::Error { code, message } if first_err.is_none() => {
+                        Response::Error { code, message, .. } if first_err.is_none() => {
                             // all-or-nothing by protocol contract (see the
                             // `batch` docs in protocol.rs)
                             first_err = Some(Response::error(
@@ -476,8 +580,8 @@ impl Handle {
                 let (tx, rx) = channel();
                 if let Err(msg) = validate(&sr) {
                     let _ = tx.send(Response::error(ErrorCode::BadRequest, msg));
-                } else {
-                    self.enqueue(sr, Some(tx));
+                } else if let Err(rejected) = self.enqueue(sr, Some(tx.clone())) {
+                    let _ = tx.send(rejected);
                 }
                 rx
             }
@@ -489,17 +593,14 @@ impl Handle {
         }
     }
 
-    /// Register a job and hand it to the engine thread.
-    fn enqueue(&self, sr: SearchRequest, reply: Option<Sender<Response>>) -> Arc<JobEntry> {
-        let entry = self.registry.submit(sr);
-        if self.tx.send(Msg::Run { entry: entry.clone(), reply }).is_err() {
-            self.registry.finalize(
-                &entry,
-                JobState::Failed,
-                Response::error(ErrorCode::Internal, "service stopped"),
-            );
-        }
-        entry
+    /// Register a job and queue it for the engine worker, subject to
+    /// admission control (queue bound, drain state, dead worker).
+    fn enqueue(
+        &self,
+        sr: SearchRequest,
+        reply: Option<Sender<Response>>,
+    ) -> Result<Arc<JobEntry>, Response> {
+        self.shared.admit(&self.metrics, || self.registry.submit(sr), reply)
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -515,66 +616,52 @@ fn unknown_job(job_id: &str) -> Response {
     Response::error(ErrorCode::BadRequest, format!("unknown job {job_id:?}"))
 }
 
-/// Running service (engine thread + handle).
+/// Running service (supervised engine worker + handle).
 pub struct Service {
     pub handle: Handle,
-    stop: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Service {
-    /// Start the engine thread. Blocks until the artifacts are compiled (or
-    /// fail to), so a returned `Service` is ready to serve.
+    /// Start the supervisor and its first engine worker. Blocks until the
+    /// artifacts are compiled and the engine's presence is validated (or
+    /// either fails — a session without an engine surfaces the typed
+    /// [`NoEngineError`]), so a returned `Service` is ready to serve.
     pub fn start(cfg: ServiceConfig) -> Result<Service> {
-        let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
-        let registry = Arc::new(JobRegistry::new(metrics.clone()));
-        let stop = Arc::new(AtomicBool::new(false));
+        let registry = Arc::new(JobRegistry::with_faults(metrics.clone(), cfg.fault_plan.clone()));
+        let shared = Arc::new(Shared::new(cfg.max_queued, cfg.drain_deadline));
         let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let thread = {
-            let metrics = metrics.clone();
-            let registry = registry.clone();
-            let stop = stop.clone();
-            std::thread::Builder::new()
-                .name("diffaxe-engine".into())
-                .spawn(move || {
-                    // the session must be constructed on this thread: PJRT
-                    // handles are !Send (the mock backend rides the same
-                    // engine type, so it follows the same rule)
-                    let session = if cfg.use_mock_engine {
-                        Ok(Session::mock())
-                    } else {
-                        Session::load(&cfg.artifacts_dir)
-                    };
-                    let session = match session {
-                        Ok(s) => {
-                            let _ = ready_tx.send(Ok(()));
-                            s
-                        }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                            return;
-                        }
-                    };
-                    engine_loop(session, cfg, rx, registry, metrics, stop);
-                })?
-        };
-        ready_rx.recv()??;
-        Ok(Service { handle: Handle { tx, metrics, registry }, stop, thread: Some(thread) })
+        let thread =
+            supervisor::spawn(cfg, shared.clone(), registry.clone(), metrics.clone(), ready_tx)?;
+        let started = ready_rx
+            .recv()
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("engine worker died during startup")));
+        if let Err(e) = started {
+            shared.begin_stop();
+            let _ = thread.join();
+            return Err(e);
+        }
+        Ok(Service { handle: Handle { shared, metrics, registry }, thread: Some(thread) })
     }
 
     pub fn handle(&self) -> Handle {
         self.handle.clone()
     }
+
+    /// Drain and stop with an explicit deadline for in-flight work:
+    /// admissions close immediately, queued jobs cancel terminally,
+    /// running jobs get until `deadline` to stop at a batch boundary,
+    /// then everything left is force-cancelled so every watcher wakes.
+    pub fn shutdown(self, deadline: Duration) {
+        self.handle.shared.set_drain_deadline(deadline);
+        // Drop runs the drain
+    }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // unblock the engine thread's recv by dropping our sender clone…
-        let (tx, _) = channel();
-        let old = std::mem::replace(&mut self.handle.tx, tx);
-        drop(old);
+        self.handle.shared.begin_stop();
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
@@ -582,7 +669,7 @@ impl Drop for Service {
 }
 
 // ---------------------------------------------------------------------------
-// engine loop
+// engine worker loop
 // ---------------------------------------------------------------------------
 
 /// A runtime-generation search waiting in the batcher. `acc` collects
@@ -614,47 +701,92 @@ fn batchable(sr: &SearchRequest) -> bool {
         && sr.budget.wall_clock_s.is_none()
 }
 
-fn engine_loop(
-    mut session: Session,
+/// Body of one supervised engine worker (thread `diffaxe-engine-{idx}`):
+/// build the session, validate it, then dispatch from the shared queue
+/// until the drain begins. `ready` is `Some` only for the first worker —
+/// it reports the startup result back to [`Service::start`]; respawned
+/// workers that fail startup just die and count against the restart
+/// budget.
+pub(crate) fn worker_main(
+    idx: u32,
     cfg: ServiceConfig,
-    rx: Receiver<Msg>,
+    shared: Arc<Shared>,
     registry: Arc<JobRegistry>,
     metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
+    ready: Option<Sender<Result<()>>>,
 ) {
-    let gen_batch = session.engine().expect("service session has an engine").stats.gen_batch;
-    let mut stream = 0u64;
-    let mut pending: Vec<PendingGen> = Vec::new();
-    loop {
-        if stop.load(Ordering::SeqCst) {
+    // fault site: worker startup, before the session exists. A panic
+    // action unwinds into the supervisor's death handling; an error
+    // action behaves like a failed session build.
+    if let Some(fp) = &cfg.fault_plan {
+        if let Err(e) = fp.check(FaultSite::WorkerStart) {
+            if let Some(r) = ready {
+                shared.mark_dead();
+                let _ = r.send(Err(anyhow::anyhow!(e)));
+            }
             return;
         }
-        // wait for work (or flush deadline if a batch is forming)
-        let msg = if pending.is_empty() {
-            match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(m) => Some(m),
-                Err(RecvTimeoutError::Timeout) => None,
-                Err(RecvTimeoutError::Disconnected) => return,
+    }
+    // the session must be constructed on this thread: PJRT handles are
+    // !Send (the mock backend rides the same engine type, so it follows
+    // the same rule)
+    let session =
+        if cfg.use_mock_engine { Ok(Session::mock()) } else { Session::load(&cfg.artifacts_dir) };
+    let mut session = match session {
+        Ok(s) => s,
+        Err(e) => {
+            if let Some(r) = ready {
+                shared.mark_dead();
+                let _ = r.send(Err(e));
             }
-        } else {
-            match rx.recv_timeout(cfg.batch_window) {
-                Ok(m) => Some(m),
-                Err(RecvTimeoutError::Timeout) => None,
-                Err(RecvTimeoutError::Disconnected) => {
-                    flush_gen_batch(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
-                    return;
-                }
+            return;
+        }
+    };
+    session.fault_plan = cfg.fault_plan.clone();
+    // engine presence is validated exactly once, here — the loop below
+    // never needs the old mid-loop `expect`s, and a missing engine is a
+    // typed startup error instead of a serve-time panic
+    let Some(gen_batch) = session.engine().map(|e| e.stats.gen_batch) else {
+        if let Some(r) = ready {
+            shared.mark_dead();
+            let _ = r.send(Err(anyhow::Error::new(NoEngineError)));
+        }
+        return;
+    };
+    if let Some(r) = ready {
+        let _ = r.send(Ok(()));
+    }
+
+    // rng streams must never repeat across respawns: each worker draws
+    // from its own 2^32-wide block
+    let mut stream: u64 = (idx as u64) << 32;
+    let mut pending: Vec<PendingGen> = Vec::new();
+    loop {
+        shared.prune_terminal();
+        if shared.stopping() {
+            // drain: retire partially-served batcher requests with their
+            // partial outcomes (same contract as a cancel)
+            for p in pending.drain(..) {
+                finish_pending(&registry, &metrics, p, StopReason::Cancelled);
             }
-        };
+            return;
+        }
+        // wait for work (or the flush deadline if a batch is forming)
+        let timeout =
+            if pending.is_empty() { Duration::from_millis(200) } else { cfg.batch_window };
+        let msg = shared.pop(timeout);
 
         if let Some(Msg::Run { entry, reply }) = msg {
+            shared.track(&entry, &reply);
             if batchable(&entry.request) {
                 // runtime-conditioned diffusion joins the continuous batcher
                 if registry.start(&entry) {
                     let Objective::Runtime { g, target_cycles } = entry.request.objective else {
                         unreachable!("batchable() matched Runtime")
                     };
-                    let engine = session.engine().expect("engine");
+                    let Some(engine) = session.engine() else {
+                        unreachable!("engine presence validated at worker start")
+                    };
                     let p = PendingGen {
                         g,
                         p_norm: engine.stats.stats_for(&g).norm_runtime(target_cycles),
@@ -683,7 +815,7 @@ fn engine_loop(
                 }
             } else {
                 // non-batchable jobs flush the batch first (ordering)
-                flush_gen_batch(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
+                guarded_flush(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
                 if registry.start(&entry) {
                     run_job(&mut session, &registry, &entry, reply, cfg.seed, &mut stream, &metrics);
                 } else if let Some(reply) = reply {
@@ -704,14 +836,46 @@ fn engine_loop(
             .map(|d| d >= cfg.batch_window)
             .unwrap_or(false);
         if slots >= gen_batch || (window_expired && !pending.is_empty()) {
-            flush_gen_batch(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
+            guarded_flush(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
+        }
+    }
+}
+
+/// [`flush_gen_batch`] under panic isolation: a panic inside the flush
+/// (sampler, evaluator, or an injected fault) fails the jobs that were in
+/// the batch instead of killing the worker.
+fn guarded_flush(
+    session: &Session,
+    registry: &Arc<JobRegistry>,
+    pending: &mut Vec<PendingGen>,
+    seed: u64,
+    stream: &mut u64,
+    metrics: &Arc<Metrics>,
+) {
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        flush_gen_batch(session, registry, pending, seed, stream, metrics);
+    }));
+    if let Err(payload) = caught {
+        let msg = fault::panic_message(payload.as_ref());
+        metrics.record_error();
+        for p in pending.drain(..) {
+            let resp =
+                Response::error(ErrorCode::Internal, format!("batch flush panicked: {msg}"));
+            registry.finalize(&p.entry, JobState::Failed, resp.clone());
+            if let Some(reply) = p.reply {
+                let _ = reply.send(resp);
+            }
         }
     }
 }
 
 /// Execute one non-batchable job directly on the session, under a ctx
 /// carrying the job's cancellation flag and a progress sink into the
-/// registry's coalescing event slot.
+/// registry's coalescing event slot. The search itself runs inside
+/// `catch_unwind`: a panicking strategy finalizes *this* job as failed
+/// (with the panic message) while the worker survives. Finalization and
+/// the reply stay outside the isolation barrier — a panic there is a
+/// worker-level fault the supervisor handles.
 fn run_job(
     session: &mut Session,
     registry: &Arc<JobRegistry>,
@@ -730,22 +894,32 @@ fn run_job(
             .with_cancel_flag(entry.cancel_flag())
             .with_progress(move |ev: &SearchEvent| registry.publish(&sink_entry, *ev))
     };
-    let resp = match session.search_ctx(
-        sr.optimizer,
-        &ctx,
-        &sr.objective,
-        &sr.budget,
-        rng::derive(seed, *stream),
-    ) {
-        Ok(out) => {
+    let searched = catch_unwind(AssertUnwindSafe(|| {
+        session.search_ctx(
+            sr.optimizer,
+            &ctx,
+            &sr.objective,
+            &sr.budget,
+            rng::derive(seed, *stream),
+        )
+    }));
+    let resp = match searched {
+        Ok(Ok(out)) => {
             metrics.record_evaluations(out.evals);
             let cs = session.cache_stats();
             metrics.record_cache(cs.hits, cs.misses);
             Response::Outcome(out.truncated(sr.top_k.unwrap_or(DEFAULT_TOP_K)))
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             metrics.record_error();
             Response::error(ErrorCode::Internal, format!("{e:#}"))
+        }
+        Err(payload) => {
+            metrics.record_error();
+            Response::error(
+                ErrorCode::Internal,
+                format!("search panicked: {}", fault::panic_message(payload.as_ref())),
+            )
         }
     };
     let state = match &resp {
@@ -824,7 +998,13 @@ fn flush_gen_batch(
         }
         *stream += 1;
         let t = Instant::now();
-        let result = engine.sample_runtime(rng::derive_u32(seed, *stream), &slots);
+        // fault sites: engine sampling before the diffusion call, batch
+        // evaluation after it — either failure fails the whole batch
+        // through the same path as a real sampler error
+        let result = session
+            .fault_check(FaultSite::EngineSample)
+            .and_then(|()| engine.sample_runtime(rng::derive_u32(seed, *stream), &slots))
+            .and_then(|configs| session.fault_check(FaultSite::BatchEval).map(|()| configs));
         metrics.record_sampler_call(t.elapsed().as_secs_f64() * 1e6, slots.len(), b);
         match result {
             Ok(configs) => {
@@ -930,6 +1110,7 @@ mod tests {
         assert!(reg.start(&e));
         assert!(!reg.start(&e), "double start must be rejected");
         assert_eq!(e.state(), JobState::Running);
+        assert_eq!(e.attempts(), 1);
         reg.publish(&e, SearchEvent { evals: 2, best_score: 1.0, elapsed_s: 0.0 });
         let s = metrics.snapshot();
         assert_eq!((s.jobs_active, s.event_queue_depth), (1, 1));
@@ -941,6 +1122,7 @@ mod tests {
         let info = reg.get("job-1").unwrap().info();
         assert_eq!(info.state, JobState::Done);
         assert_eq!(info.evals, 4);
+        assert_eq!(info.attempts, 1);
         let s = metrics.snapshot();
         assert_eq!((s.jobs_active, s.event_queue_depth), (0, 0));
         assert_eq!((s.jobs_completed, s.jobs_cancelled), (1, 0));
@@ -965,6 +1147,51 @@ mod tests {
         }
         assert_eq!(metrics.snapshot().jobs_cancelled, 1);
         assert!(reg.cancel("job-99").is_none());
+    }
+
+    #[test]
+    fn requeue_returns_a_running_job_to_the_queue() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = JobRegistry::new(metrics.clone());
+        let e = reg.submit(request());
+        assert!(!reg.requeue(&e), "queued jobs cannot requeue");
+        assert!(reg.start(&e));
+        assert!(reg.requeue(&e), "running jobs requeue after a worker crash");
+        assert_eq!(e.state(), JobState::Queued);
+        assert_eq!(e.attempts(), 1, "the crashed attempt still counts");
+        let s = metrics.snapshot();
+        assert_eq!((s.jobs_active, s.jobs_queued), (0, 1));
+        // the retry runs and finishes normally
+        assert!(reg.start(&e));
+        assert_eq!(e.attempts(), 2);
+        reg.finalize(&e, JobState::Done, done_outcome(4));
+        assert!(!reg.requeue(&e), "terminal jobs cannot requeue");
+        let s = metrics.snapshot();
+        assert_eq!((s.jobs_active, s.jobs_queued, s.jobs_completed), (0, 0, 1));
+    }
+
+    #[test]
+    fn force_cancel_terminates_any_state() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = JobRegistry::new(metrics.clone());
+        // queued
+        let q = reg.submit(request());
+        reg.force_cancel(&q);
+        assert_eq!(q.state(), JobState::Cancelled);
+        // running
+        let r = reg.submit(request());
+        reg.start(&r);
+        reg.force_cancel(&r);
+        assert_eq!(r.state(), JobState::Cancelled);
+        // already terminal: first finalization wins
+        let d = reg.submit(request());
+        reg.start(&d);
+        reg.finalize(&d, JobState::Done, done_outcome(2));
+        reg.force_cancel(&d);
+        assert_eq!(d.state(), JobState::Done);
+        let s = metrics.snapshot();
+        assert_eq!((s.jobs_active, s.jobs_queued), (0, 0));
+        assert_eq!((s.jobs_cancelled, s.jobs_completed), (2, 1));
     }
 
     #[test]

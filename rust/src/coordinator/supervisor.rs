@@ -1,0 +1,514 @@
+//! Supervision for the engine worker: a bounded dispatch queue with
+//! admission control, a panic-isolated worker restarted under bounded
+//! exponential backoff, in-flight job recovery (retry or terminal
+//! failure), and a deadline-bounded graceful drain.
+//!
+//! # Supervision tree
+//!
+//! ```text
+//! Service::start
+//!   └── diffaxe-supervisor            (this module)
+//!         └── diffaxe-engine-{n}      (one worker today; n = respawn index)
+//!               owns the Session — PJRT handles are !Send
+//! ```
+//!
+//! The supervisor spawns the worker, parks on its death channel, and on an
+//! unexpected death (a panic that escaped the worker's own `catch_unwind`
+//! isolation, or a plain exit) reaps the panic payload, recovers every
+//! in-flight job — requeued at the *front* of the queue when the job's
+//! attempt budget allows, terminally failed otherwise — and respawns the
+//! worker with exponential backoff. After `max_worker_restarts` respawns
+//! the supervisor gives up: it marks the service dead, fails everything
+//! still queued, and admission rejects from then on. The single-worker
+//! dispatch seam (queue + in-flight table, not a direct channel) is shaped
+//! so a worker *fleet* can ride the same supervisor later (ROADMAP item 1).
+//!
+//! # Drain ordering
+//!
+//! `Shared::begin_stop` closes admissions; the supervisor then (1)
+//! terminally cancels everything still queued, (2) raises the cancel flag
+//! on every in-flight job, (3) waits up to the drain deadline for the
+//! worker to finish, and (4) force-cancels whatever is left so **every**
+//! watcher and synchronous waiter wakes. Finalization is idempotent
+//! first-wins, so a detached worker finishing late cannot regress a
+//! terminal state. See `docs/INVARIANTS.md` ("Drain ordering").
+
+use super::metrics::Metrics;
+use super::protocol::{ErrorCode, JobState, Response};
+use super::service::{worker_main, JobEntry, JobRegistry, ServiceConfig};
+use crate::util::fault;
+use crate::util::sync::{rank, TrackedMutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Typed startup error: the session built, but carries no generative
+/// engine — `serve` needs DiffAxE artifacts (`--artifacts`) or the mock
+/// engine (`--mock`). Surfaced from `Service::start` instead of the old
+/// mid-loop `expect` panics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NoEngineError;
+
+impl std::fmt::Display for NoEngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(
+            "session has no generative engine; serve requires DiffAxE artifacts \
+             (--artifacts DIR) or the mock engine",
+        )
+    }
+}
+
+impl std::error::Error for NoEngineError {}
+
+/// One unit of worker work: run a registered job, optionally delivering
+/// the terminal response to a synchronous waiter.
+pub(crate) enum Msg {
+    Run { entry: Arc<JobEntry>, reply: Option<Sender<Response>> },
+}
+
+/// An in-flight job the worker has popped but not yet finalized. `reply`
+/// is a *clone* of the synchronous waiter's sender: if the worker dies
+/// mid-job the supervisor can still deliver a terminal response.
+struct Inflight {
+    entry: Arc<JobEntry>,
+    reply: Option<Sender<Response>>,
+}
+
+/// State shared between the handle (admission), the worker (dispatch),
+/// and the supervisor (recovery + drain).
+pub(crate) struct Shared {
+    queue: TrackedMutex<VecDeque<Msg>>,
+    queue_cv: Condvar,
+    inflight: TrackedMutex<Vec<Inflight>>,
+    /// drain started: admissions closed, worker exits at its loop top
+    stop: AtomicBool,
+    /// restart budget exhausted (or startup validation failed): the
+    /// service permanently rejects new work
+    dead: AtomicBool,
+    max_queued: usize,
+    drain_deadline_ms: AtomicU64,
+}
+
+impl Shared {
+    pub(crate) fn new(max_queued: usize, drain_deadline: Duration) -> Shared {
+        Shared {
+            queue: TrackedMutex::new(
+                "supervisor.queue",
+                rank::SUPERVISOR_QUEUE,
+                VecDeque::new(),
+            ),
+            queue_cv: Condvar::new(),
+            inflight: TrackedMutex::new("supervisor.inflight", rank::SUPERVISOR_INFLIGHT, Vec::new()),
+            stop: AtomicBool::new(false),
+            dead: AtomicBool::new(false),
+            max_queued: max_queued.max(1),
+            drain_deadline_ms: AtomicU64::new(drain_deadline.as_millis() as u64),
+        }
+    }
+
+    /// Admission control: atomically depth-check, register (via `submit`,
+    /// which runs under the queue lock — ranks `SUPERVISOR_QUEUE` <
+    /// `REGISTRY` make that legal), and enqueue a job. Draining, dead, and
+    /// over-capacity services reject with a structured error instead; the
+    /// overload rejection carries a `retry_after_ms` hint and counts into
+    /// `jobs_shed`.
+    pub(crate) fn admit(
+        &self,
+        metrics: &Metrics,
+        submit: impl FnOnce() -> Arc<JobEntry>,
+        reply: Option<Sender<Response>>,
+    ) -> Result<Arc<JobEntry>, Response> {
+        let mut q = self.queue.lock();
+        if self.is_dead() {
+            return Err(Response::error(
+                ErrorCode::Internal,
+                "engine worker unavailable (restart budget exhausted)",
+            ));
+        }
+        if self.stopping() {
+            return Err(Response::error(
+                ErrorCode::Overloaded,
+                "service draining; admissions closed",
+            ));
+        }
+        if q.len() >= self.max_queued {
+            drop(q);
+            metrics.job_shed();
+            // a full queue of short jobs drains fast; scale the hint with
+            // the configured depth and cap it at something polite
+            let retry_after_ms = (50 + 10 * self.max_queued as u64).min(5_000);
+            return Err(Response::overloaded(
+                format!("queue full: {} jobs queued (max {})", self.max_queued, self.max_queued),
+                retry_after_ms,
+            ));
+        }
+        let entry = submit();
+        q.push_back(Msg::Run { entry: entry.clone(), reply });
+        self.queue_cv.notify_one();
+        Ok(entry)
+    }
+
+    /// Worker-side dispatch: the next queued message, or `None` on
+    /// timeout, spurious wakeup, or stop (callers re-check `stopping`).
+    pub(crate) fn pop(&self, timeout: Duration) -> Option<Msg> {
+        let mut q = self.queue.lock();
+        if self.stopping() {
+            return None;
+        }
+        if q.is_empty() {
+            let (g, _timed_out) = q.wait_timeout(&self.queue_cv, timeout);
+            q = g;
+        }
+        if self.stopping() {
+            None
+        } else {
+            q.pop_front()
+        }
+    }
+
+    /// Put a crash-recovered job at the *front* of the queue: it already
+    /// waited its turn once.
+    fn requeue_front(&self, msg: Msg) {
+        self.queue.lock().push_front(msg);
+        self.queue_cv.notify_one();
+    }
+
+    fn drain_queue(&self) -> Vec<Msg> {
+        self.queue.lock().drain(..).collect()
+    }
+
+    /// Record a popped job as in-flight (crash recovery roster).
+    pub(crate) fn track(&self, entry: &Arc<JobEntry>, reply: &Option<Sender<Response>>) {
+        self.inflight.lock().push(Inflight { entry: entry.clone(), reply: reply.clone() });
+    }
+
+    /// Drop finalized jobs from the in-flight roster. Takes the roster
+    /// lock, then each entry's core one at a time — ranks
+    /// `SUPERVISOR_INFLIGHT` < `JOB_CORE` strictly increase.
+    pub(crate) fn prune_terminal(&self) {
+        self.inflight.lock().retain(|i| !i.entry.state().terminal());
+    }
+
+    fn take_inflight(&self) -> Vec<Inflight> {
+        std::mem::take(&mut *self.inflight.lock())
+    }
+
+    fn cancel_inflight(&self) {
+        for inf in self.inflight.lock().iter() {
+            inf.entry.cancel_flag().store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// Close admissions and wake the worker so the drain can begin.
+    pub(crate) fn begin_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue_cv.notify_all();
+    }
+
+    pub(crate) fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn mark_dead(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+    }
+
+    fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn set_drain_deadline(&self, d: Duration) {
+        self.drain_deadline_ms.store(d.as_millis() as u64, Ordering::SeqCst);
+    }
+
+    fn drain_deadline(&self) -> Duration {
+        Duration::from_millis(self.drain_deadline_ms.load(Ordering::SeqCst))
+    }
+}
+
+/// Spawn the supervisor thread. `ready` reports the first worker's
+/// startup result (session build + engine validation) back to
+/// `Service::start`.
+pub(crate) fn spawn(
+    cfg: ServiceConfig,
+    shared: Arc<Shared>,
+    registry: Arc<JobRegistry>,
+    metrics: Arc<Metrics>,
+    ready: Sender<anyhow::Result<()>>,
+) -> std::io::Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name("diffaxe-supervisor".into())
+        .spawn(move || supervise(cfg, shared, registry, metrics, ready))
+}
+
+fn supervise(
+    cfg: ServiceConfig,
+    shared: Arc<Shared>,
+    registry: Arc<JobRegistry>,
+    metrics: Arc<Metrics>,
+    ready: Sender<anyhow::Result<()>>,
+) {
+    let mut ready = Some(ready);
+    let mut restarts: u32 = 0;
+    loop {
+        let (death_tx, death_rx) = channel::<()>();
+        let worker = {
+            let (cfg, shared, registry, metrics) =
+                (cfg.clone(), shared.clone(), registry.clone(), metrics.clone());
+            let ready = ready.take();
+            let idx = restarts;
+            std::thread::Builder::new().name(format!("diffaxe-engine-{idx}")).spawn(move || {
+                // dropped on any exit — including a panic — so the
+                // supervisor observes worker death as a disconnect
+                let _death = death_tx;
+                worker_main(idx, cfg, shared, registry, metrics, ready);
+            })
+        };
+        let worker = match worker {
+            Ok(w) => w,
+            Err(e) => {
+                give_up(&shared, &registry, &format!("worker thread spawn failed: {e}"));
+                return;
+            }
+        };
+
+        // park until the worker dies or a drain begins
+        let stopping = loop {
+            match death_rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(()) => {}
+                Err(RecvTimeoutError::Timeout) => {
+                    if shared.stopping() {
+                        break true;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => break false,
+            }
+        };
+        if stopping || shared.stopping() {
+            drain(&shared, &registry, Some((worker, death_rx)));
+            return;
+        }
+        if shared.is_dead() {
+            // startup validation failed; the worker already reported the
+            // typed error through `ready` — nothing to restart
+            let _ = worker.join();
+            return;
+        }
+
+        // reap the corpse for its panic message
+        let crash_msg = match worker.join() {
+            Ok(()) => "engine worker exited unexpectedly".to_string(),
+            Err(payload) => fault::panic_message(payload.as_ref()),
+        };
+
+        // recover in-flight jobs: retry when the attempt budget allows,
+        // fail terminally otherwise — never leave one `running`
+        for inf in shared.take_inflight() {
+            if inf.entry.state().terminal() {
+                // crashed between finalize and reply: the clone delivers
+                if let Some(r) = inf.reply {
+                    let _ = r.send(inf.entry.result_now());
+                }
+                continue;
+            }
+            if inf.entry.attempts() < cfg.max_attempts && registry.requeue(&inf.entry) {
+                shared.requeue_front(Msg::Run { entry: inf.entry, reply: inf.reply });
+            } else {
+                let resp = Response::error(
+                    ErrorCode::Internal,
+                    format!("engine worker crashed: {crash_msg}"),
+                );
+                registry.finalize(&inf.entry, JobState::Failed, resp.clone());
+                if let Some(r) = inf.reply {
+                    let _ = r.send(resp);
+                }
+            }
+        }
+
+        restarts += 1;
+        if restarts > cfg.max_worker_restarts {
+            give_up(
+                &shared,
+                &registry,
+                &format!(
+                    "engine worker unavailable: {} restarts exhausted (last crash: {crash_msg})",
+                    cfg.max_worker_restarts
+                ),
+            );
+            return;
+        }
+        metrics.worker_restart();
+
+        // bounded exponential backoff, interruptible by a drain
+        let backoff =
+            (cfg.restart_backoff * (1u32 << (restarts - 1).min(6))).min(Duration::from_secs(5));
+        let until = Instant::now() + backoff;
+        loop {
+            if shared.stopping() {
+                drain(&shared, &registry, None);
+                return;
+            }
+            let remaining = until.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            std::thread::sleep(remaining.min(Duration::from_millis(10)));
+        }
+    }
+}
+
+/// Restart budget exhausted (or the worker thread cannot even spawn):
+/// mark the service dead and fail everything still pending so no waiter
+/// blocks forever. Admission rejects from here on.
+fn give_up(shared: &Shared, registry: &JobRegistry, reason: &str) {
+    shared.mark_dead();
+    for Msg::Run { entry, reply } in shared.drain_queue() {
+        let resp = Response::error(ErrorCode::Internal, reason.to_string());
+        registry.finalize(&entry, JobState::Failed, resp.clone());
+        if let Some(r) = reply {
+            let _ = r.send(resp);
+        }
+    }
+    for inf in shared.take_inflight() {
+        if !inf.entry.state().terminal() {
+            let resp = Response::error(ErrorCode::Internal, reason.to_string());
+            registry.finalize(&inf.entry, JobState::Failed, resp);
+        }
+        if let Some(r) = inf.reply {
+            let _ = r.send(inf.entry.result_now());
+        }
+    }
+}
+
+/// Graceful drain (see the module docs for the ordering contract):
+/// cancel queued work, flag in-flight work, give the worker until the
+/// deadline, then force-cancel the rest so every watcher wakes.
+fn drain(
+    shared: &Shared,
+    registry: &JobRegistry,
+    worker: Option<(JoinHandle<()>, Receiver<()>)>,
+) {
+    let deadline = shared.drain_deadline();
+    let start = Instant::now();
+    // (1) queued jobs never ran: terminally cancel them now
+    for Msg::Run { entry, reply } in shared.drain_queue() {
+        entry.cancel_flag().store(true, Ordering::SeqCst);
+        registry.force_cancel(&entry);
+        if let Some(r) = reply {
+            let _ = r.send(entry.result_now());
+        }
+    }
+    // (2) in-flight work stops at its next batch boundary
+    shared.cancel_inflight();
+    // (3) the worker gets the remainder of the deadline to finish
+    if let Some((handle, death_rx)) = worker {
+        let exited = loop {
+            let elapsed = start.elapsed();
+            if elapsed >= deadline {
+                break false;
+            }
+            match death_rx.recv_timeout(deadline - elapsed) {
+                Ok(()) => {}
+                Err(RecvTimeoutError::Disconnected) => break true,
+                Err(RecvTimeoutError::Timeout) => break false,
+            }
+        };
+        if exited {
+            let _ = handle.join();
+        } else {
+            // deadline expired mid-search: detach the worker. Idempotent
+            // first-wins finalization means a late completion cannot
+            // regress the terminal states written below.
+            drop(handle);
+        }
+    }
+    // (4) force-cancel whatever is left so no watcher or waiter blocks
+    for inf in shared.take_inflight() {
+        if !inf.entry.state().terminal() {
+            registry.force_cancel(&inf.entry);
+        }
+        if let Some(r) = inf.reply {
+            let _ = r.send(inf.entry.result_now());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::SearchRequest;
+    use crate::dse::api::{Budget, Objective, OptimizerKind, SearchOutcome, StopReason};
+    use crate::workload::Gemm;
+
+    fn request() -> SearchRequest {
+        SearchRequest::new(
+            Objective::MinEdp { g: Gemm::new(8, 8, 8) },
+            Budget::evals(2),
+            OptimizerKind::RandomSearch,
+        )
+    }
+
+    #[test]
+    fn admission_bounds_queue_depth() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = JobRegistry::new(metrics.clone());
+        let shared = Shared::new(2, Duration::from_secs(1));
+        for _ in 0..2 {
+            assert!(shared.admit(&metrics, || reg.submit(request()), None).is_ok());
+        }
+        match shared.admit(&metrics, || reg.submit(request()), None) {
+            Err(Response::Error { code, retry_after_ms, .. }) => {
+                assert_eq!(code, ErrorCode::Overloaded);
+                assert!(retry_after_ms.is_some());
+            }
+            other => panic!("expected overloaded rejection, got {other:?}"),
+        }
+        assert_eq!(metrics.snapshot().jobs_shed, 1);
+        // only the two admitted jobs are queued, FIFO
+        assert!(shared.pop(Duration::from_millis(1)).is_some());
+        assert!(shared.pop(Duration::from_millis(1)).is_some());
+        assert!(shared.pop(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn stop_closes_admissions_and_dispatch() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = JobRegistry::new(metrics.clone());
+        let shared = Shared::new(8, Duration::from_secs(1));
+        shared.admit(&metrics, || reg.submit(request()), None).unwrap();
+        shared.begin_stop();
+        assert!(shared.pop(Duration::from_millis(1)).is_none(), "stop gates dispatch");
+        match shared.admit(&metrics, || reg.submit(request()), None) {
+            Err(Response::Error { code, retry_after_ms, .. }) => {
+                assert_eq!(code, ErrorCode::Overloaded);
+                assert!(retry_after_ms.is_none(), "drain rejection carries no retry hint");
+            }
+            other => panic!("expected drain rejection, got {other:?}"),
+        }
+        // the queued message is still there for the drain to finalize
+        assert_eq!(shared.drain_queue().len(), 1);
+    }
+
+    #[test]
+    fn inflight_roster_prunes_terminal_entries() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = JobRegistry::new(metrics.clone());
+        let shared = Shared::new(8, Duration::from_secs(1));
+        let entry = reg.submit(request());
+        shared.track(&entry, &None);
+        shared.prune_terminal();
+        assert_eq!(shared.take_inflight().len(), 1, "live jobs stay on the roster");
+        shared.track(&entry, &None);
+        reg.start(&entry);
+        reg.finalize(
+            &entry,
+            JobState::Done,
+            Response::Outcome(SearchOutcome::empty("random", StopReason::Completed)),
+        );
+        shared.prune_terminal();
+        assert!(shared.take_inflight().is_empty(), "terminal jobs are pruned");
+    }
+}

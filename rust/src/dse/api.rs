@@ -47,6 +47,7 @@ use crate::design_space::{decode_rounded, encode_norm, HwConfig, TargetSpace, NO
 use crate::energy::EnergyResult;
 use crate::models::{ClassMode, DiffAxE};
 use crate::sim::SimResult;
+use crate::util::fault::{FaultPlan, FaultSite};
 use crate::util::rng::{self, Pcg32};
 use crate::workload::{Gemm, LlmModel, Stage};
 use anyhow::{bail, Context, Result};
@@ -770,11 +771,13 @@ impl OptimizerKind {
     pub fn supports(&self, obj: &Objective) -> bool {
         if obj.structured().is_some() {
             // §V structured DSE: the diffusion engine (per-segment
-            // conditioning) plus the generic-encoding baselines
+            // conditioning) plus the generic-encoding baselines and the
+            // latent-space BO baseline (per-segment latents)
             return matches!(
                 self,
                 OptimizerKind::DiffAxE
                     | OptimizerKind::VanillaBo
+                    | OptimizerKind::LatentBo
                     | OptimizerKind::VanillaGd
                     | OptimizerKind::DosaGd
                     | OptimizerKind::Polaris
@@ -1092,12 +1095,20 @@ impl Optimizer for LatentBo<'_> {
         budget: &Budget,
         seed: u64,
     ) -> Result<SearchOutcome> {
-        anyhow::ensure!(
-            obj.structured().is_none(),
-            "latent BO does not serve structured objectives; objective {obj} unsupported"
-        );
         if let Some(out) = drained(self.name(), budget) {
             return Ok(out);
+        }
+        if let Some(spec) = obj.structured() {
+            // BO over the concatenated per-segment latent encoding
+            return structured::search_latent_bo(
+                self.engine,
+                &self.opts,
+                ctx,
+                obj,
+                &spec,
+                budget,
+                seed,
+            );
         }
         let (o, clamped) = bo_opts_for(&self.opts, budget);
         let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
@@ -1550,12 +1561,21 @@ pub struct Session {
     engine: Option<DiffAxE>,
     pub bo_opts: BoOptions,
     pub gd_opts: GdOptions,
+    /// deterministic fault injection ([`crate::util::fault`]); `None`
+    /// (the default everywhere) means every [`Session::fault_check`] is a
+    /// single pointer test
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl Session {
     /// A session around a loaded engine.
     pub fn new(engine: DiffAxE) -> Session {
-        Session { engine: Some(engine), bo_opts: BoOptions::default(), gd_opts: GdOptions::default() }
+        Session {
+            engine: Some(engine),
+            bo_opts: BoOptions::default(),
+            gd_opts: GdOptions::default(),
+            fault_plan: None,
+        }
     }
 
     /// Load the AOT artifacts in `dir` and wrap them in a session.
@@ -1573,7 +1593,22 @@ impl Session {
     /// A session without the generative engine: only the simulator-backed
     /// strategies (random, vanilla BO/GD, DOSA GD, fixed archs) work.
     pub fn simulator_only() -> Session {
-        Session { engine: None, bo_opts: BoOptions::default(), gd_opts: GdOptions::default() }
+        Session {
+            engine: None,
+            bo_opts: BoOptions::default(),
+            gd_opts: GdOptions::default(),
+            fault_plan: None,
+        }
+    }
+
+    /// Consult the session's fault plan at `site` (no-op without a plan).
+    /// `Err` means an injected error fired; panic/delay actions take
+    /// effect inside the call.
+    pub fn fault_check(&self, site: FaultSite) -> Result<()> {
+        match &self.fault_plan {
+            Some(fp) => fp.check(site).map_err(anyhow::Error::msg),
+            None => Ok(()),
+        }
     }
 
     pub fn engine(&self) -> Option<&DiffAxE> {
@@ -1626,6 +1661,9 @@ impl Session {
         budget: &Budget,
         seed: u64,
     ) -> Result<SearchOutcome> {
+        // fault site: search entry on the engine worker (chaos tests
+        // inject panics/errors here to exercise job-level isolation)
+        self.fault_check(FaultSite::EngineSample)?;
         match kind {
             OptimizerKind::DiffAxE => self
                 .engine

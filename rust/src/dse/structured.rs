@@ -34,6 +34,10 @@
 //!   per-segment encoding (`DosaGd` on the coarse training grid,
 //!   `VanillaGd` on the fine grid).
 //! * [`search_bo`] — vanilla BO over the same encoding.
+//! * [`search_latent_bo`] — BO over the concatenated per-segment *latent*
+//!   encoding: a pool of random designs encoded through the engine in one
+//!   batched call, candidates decoded per segment and projected into the
+//!   shared budget.
 //! * [`search_polaris`] — latent GD: an 8-d random subspace around
 //!   per-segment encoded anchors, decoded through the engine.
 //! * [`search_random`] — uniform sampling of the joint space.
@@ -593,6 +597,85 @@ pub fn search_bo(
     if clamped {
         run.exhausted();
     }
+    Ok(finish(NAME, obj, reports, segs, &run))
+}
+
+/// Latent BO (VAESA-style) over the concatenated per-segment latent
+/// encoding: a pool of random joint candidates is encoded through the
+/// engine in **one** batched call (the un-pollable encode prelude stays
+/// bounded), BO proposes over the pooled latents, and every iterate is
+/// decoded per segment and projected into the shared budget.
+#[allow(clippy::too_many_arguments)] // free function mirrors the paper's search knobs 1:1
+pub fn search_latent_bo(
+    engine: &DiffAxE,
+    opts: &BoOptions,
+    ctx: &SearchCtx,
+    obj: &Objective,
+    spec: &StructuredSpec,
+    budget: &Budget,
+    seed: u64,
+) -> Result<SearchOutcome> {
+    const NAME: &str = "Latent BO (VAESA)";
+    let s = match check_spec(NAME, spec)? {
+        Ok(s) => s,
+        Err(out) => return Ok(out),
+    };
+    let (o, clamped) = bo_opts_for(opts, budget);
+    let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
+    let mut rng = rng::split(seed, 44);
+    // candidate pool: random joint designs, every segment row encoded in
+    // one batched engine call (pool capped so a huge eval budget cannot
+    // stall the search before the first pollable evaluation)
+    let pool_n = (o.budget * 2).clamp(4, 256);
+    let rows: Vec<Vec<f32>> = (0..pool_n * s)
+        .map(|_| encode_norm(&TargetSpace::sample(&mut rng)).to_vec())
+        .collect();
+    let latents = engine.encode(&rows)?;
+    let d_lat = latents.first().map(|l| l.len()).unwrap_or(0);
+    anyhow::ensure!(d_lat > 0, "engine produced empty latents");
+    let mut pool_iter = 0usize;
+    let mut reports = Vec::with_capacity(o.budget.min(MAX_PREALLOC));
+    let mut segs = Vec::with_capacity(o.budget.min(MAX_PREALLOC));
+    let mut best = f64::INFINITY;
+    bo::minimize(
+        |_r: &mut Pcg32| {
+            // candidate k: its s per-segment latents, concatenated
+            let k = pool_iter % pool_n;
+            pool_iter += 1;
+            latents[k * s..(k + 1) * s]
+                .iter()
+                .flat_map(|l| l.iter().map(|&x| x as f64))
+                .collect()
+        },
+        |x| {
+            let flat: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let per_seg: Vec<Vec<f32>> = flat.chunks(d_lat).map(|c| c.to_vec()).collect();
+            match engine.decode_rounded(&per_seg) {
+                Ok(seg_cfgs) => {
+                    let d = eval_structured(spec, &constrain(&spec.budget, seg_cfgs));
+                    let r = d.report();
+                    let sc = obj.score_report(&r);
+                    reports.push(r);
+                    segs.push(d.config.segments);
+                    best = best.min(sc);
+                    run.borrow().progress(reports.len(), best);
+                    sc
+                }
+                Err(_) => f64::INFINITY,
+            }
+        },
+        || run.borrow_mut().should_stop(),
+        &o,
+        &mut rng,
+    );
+    let mut run = run.into_inner();
+    if clamped {
+        run.exhausted();
+    }
+    anyhow::ensure!(
+        !reports.is_empty() || run.interrupted(),
+        "latent decode failed for every BO iterate"
+    );
     Ok(finish(NAME, obj, reports, segs, &run))
 }
 

@@ -27,7 +27,11 @@ subcommands:
                 [--seed S] [--top N] [--artifacts DIR] [--mock]; without
                 artifacts the engine kinds run on the hermetic mock engine)
   serve         start the DSE service + TCP front end
-                (--artifacts DIR --addr 127.0.0.1:7979 --seed S)
+                (--artifacts DIR --addr 127.0.0.1:7979 --seed S
+                [--max-queued N] [--max-attempts N] [--drain-s S]
+                [--fault-plan SPEC]; SPEC injects deterministic faults for
+                chaos testing, e.g. \"engine-sample:panic@3\" — see
+                src/util/fault.rs)
   submit        submit a search job to a running server, print its job id
                 (search options plus --addr; add --watch to stream it)
   watch         stream a job's progress events until its terminal outcome
@@ -131,6 +135,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let mut cfg = ServiceConfig::new(dir);
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.max_queued = args.get_usize("max-queued", cfg.max_queued)?;
+    cfg.max_attempts = args.get_u64("max-attempts", cfg.max_attempts as u64)? as u32;
+    cfg.drain_deadline =
+        std::time::Duration::from_secs_f64(args.get_f64("drain-s", cfg.drain_deadline.as_secs_f64())?);
+    if let Some(spec) = args.get("fault-plan") {
+        let plan = diffaxe::util::fault::FaultPlan::parse(spec, cfg.seed)
+            .map_err(|e| anyhow::anyhow!("bad --fault-plan: {e}"))?;
+        cfg.fault_plan = Some(std::sync::Arc::new(plan));
+    }
     let svc = Service::start(cfg)?;
     server::serve(svc.handle(), args.get_str("addr", "127.0.0.1:7979"))
 }

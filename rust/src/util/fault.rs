@@ -1,0 +1,401 @@
+//! Deterministic fault injection for chaos-testing the coordinator.
+//!
+//! A [`FaultPlan`] is a small set of rules bound to named *sites* — fixed
+//! points in the service where a fault can be injected: the engine sampler
+//! ([`FaultSite::EngineSample`], checked at `Session::search_ctx` entry and
+//! before the batcher's `sample_runtime` call), the batched evaluator
+//! ([`FaultSite::BatchEval`]), worker startup ([`FaultSite::WorkerStart`],
+//! checked before a supervised engine worker builds its `Session`), and job
+//! finalization ([`FaultSite::Finalize`], checked at the top of
+//! `JobRegistry::finalize`). Each rule fires a [`FaultAction`]: a panic, a
+//! delay, or an error return.
+//!
+//! Determinism is the point: rules fire on exact per-site *hit indices*
+//! (every site keeps an atomic occurrence counter), and probabilistic
+//! thinning (`one_in`) draws its coin from [`rng::derive`] over the plan
+//! seed and the hit index — two runs with the same plan, seed, and request
+//! sequence inject the same faults at the same places. `tests/
+//! chaos_coordinator.rs` leans on this to script worker crashes and
+//! recoveries without any real flakiness.
+//!
+//! Plans are **off by default**: the coordinator carries an
+//! `Option<Arc<FaultPlan>>` (via `ServiceConfig`) that is `None` outside
+//! chaos tests, so production paths pay one pointer check. CI enables a
+//! delay-only plan for the registry stress suite through the
+//! [`ENV_PLAN`] / [`ENV_SEED`] environment variables (see
+//! `docs/INVARIANTS.md` for the site table and how to add a site).
+
+use crate::util::rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Environment variable holding a [`FaultPlan::parse`] spec; empty or
+/// unset means no plan.
+pub const ENV_PLAN: &str = "DIFFAXE_FAULT_PLAN";
+/// Environment variable overriding the plan seed (default `0x5eed`).
+pub const ENV_SEED: &str = "DIFFAXE_FAULT_SEED";
+
+/// A named injection point. Adding a site means adding a variant here
+/// (plus [`FaultSite::ALL`] / [`FaultSite::name`]), documenting it in the
+/// site table in `docs/INVARIANTS.md`, and calling
+/// [`FaultPlan::check`] at the new code location.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Engine sampling: `Session::search_ctx` entry and the continuous
+    /// batcher's `sample_runtime` call.
+    EngineSample,
+    /// The batched simulator/evaluator inside the gen-batch flush.
+    BatchEval,
+    /// Supervised worker startup, before the worker builds its `Session`.
+    WorkerStart,
+    /// `JobRegistry::finalize` entry. Error actions have no return path
+    /// here and are ignored; panic and delay apply.
+    Finalize,
+}
+
+impl FaultSite {
+    /// Every site, in counter-index order.
+    pub const ALL: [FaultSite; 4] = [
+        FaultSite::EngineSample,
+        FaultSite::BatchEval,
+        FaultSite::WorkerStart,
+        FaultSite::Finalize,
+    ];
+
+    /// Stable spec/diagnostic name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::EngineSample => "engine-sample",
+            FaultSite::BatchEval => "batch-eval",
+            FaultSite::WorkerStart => "worker-start",
+            FaultSite::Finalize => "finalize",
+        }
+    }
+
+    /// Inverse of [`FaultSite::name`].
+    pub fn from_name(name: &str) -> Option<FaultSite> {
+        Self::ALL.into_iter().find(|s| s.name() == name)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::EngineSample => 0,
+            FaultSite::BatchEval => 1,
+            FaultSite::WorkerStart => 2,
+            FaultSite::Finalize => 3,
+        }
+    }
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What a firing rule does at its site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic with `injected fault at <site>: <msg>`.
+    Panic(String),
+    /// Sleep for the given number of milliseconds, then continue.
+    DelayMs(u64),
+    /// Return `Err("injected fault at <site>: <msg>")` from
+    /// [`FaultPlan::check`].
+    Error(String),
+}
+
+/// One injection rule: a site, a hit window, optional seeded thinning,
+/// and an action.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    /// First per-site hit index (0-based) the rule can fire on.
+    pub from: u64,
+    /// Number of consecutive hit indices in the window (`u64::MAX` =
+    /// unbounded).
+    pub count: u64,
+    /// Probabilistic thinning: fire on roughly one in `one_in` window
+    /// hits, decided deterministically from the plan seed and the hit
+    /// index. `1` (or `0`) means every window hit fires.
+    pub one_in: u64,
+    pub action: FaultAction,
+}
+
+impl FaultRule {
+    /// Fire exactly once, on hit `hit`.
+    pub fn at(site: FaultSite, hit: u64, action: FaultAction) -> FaultRule {
+        FaultRule { site, from: hit, count: 1, one_in: 1, action }
+    }
+
+    /// Fire on every hit in `from .. from + count`.
+    pub fn window(site: FaultSite, from: u64, count: u64, action: FaultAction) -> FaultRule {
+        FaultRule { site, from, count, one_in: 1, action }
+    }
+
+    /// Fire on ~one in `one_in` hits, forever, seeded by the plan.
+    pub fn thinned(site: FaultSite, one_in: u64, action: FaultAction) -> FaultRule {
+        FaultRule { site, from: 0, count: u64::MAX, one_in, action }
+    }
+}
+
+/// A deterministic injection schedule. See the module docs.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<FaultRule>,
+    hits: [AtomicU64; 4],
+}
+
+impl FaultPlan {
+    /// An empty plan (no rules fire) with the given thinning seed.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Builder: append a rule.
+    pub fn rule(mut self, rule: FaultRule) -> FaultPlan {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Parse a plan spec: `;`-separated rules of the form
+    /// `site:action[@window]` where
+    ///
+    /// * `site` is a [`FaultSite::name`],
+    /// * `action` is `panic[=msg]`, `error[=msg]`, or `delay=MS`,
+    /// * `window` is `N` (hit N only), `N+C` (hits `N..N+C`), or `1/K`
+    ///   (seeded one-in-K thinning over every hit); omitted = every hit.
+    ///
+    /// Example: `finalize:delay=2@1/4;worker-start:panic=boom@1+2`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new(seed);
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (site_s, rest) =
+                part.split_once(':').ok_or_else(|| format!("rule {part:?}: missing `:`"))?;
+            let site = FaultSite::from_name(site_s.trim())
+                .ok_or_else(|| format!("rule {part:?}: unknown site {site_s:?}"))?;
+            let (action_s, window_s) = match rest.split_once('@') {
+                Some((a, w)) => (a.trim(), Some(w.trim())),
+                None => (rest.trim(), None),
+            };
+            let (name, arg) = match action_s.split_once('=') {
+                Some((n, a)) => (n.trim(), Some(a.trim())),
+                None => (action_s, None),
+            };
+            let action = match name {
+                "panic" => FaultAction::Panic(arg.unwrap_or("injected panic").to_string()),
+                "error" => FaultAction::Error(arg.unwrap_or("injected error").to_string()),
+                "delay" => FaultAction::DelayMs(
+                    arg.ok_or_else(|| format!("rule {part:?}: delay needs `=MS`"))?
+                        .parse::<u64>()
+                        .map_err(|e| format!("rule {part:?}: bad delay: {e}"))?,
+                ),
+                other => return Err(format!("rule {part:?}: unknown action {other:?}")),
+            };
+            let rule = match window_s {
+                None => FaultRule::window(site, 0, u64::MAX, action),
+                Some(w) => {
+                    if let Some((one, k)) = w.split_once('/') {
+                        if one.trim() != "1" {
+                            return Err(format!("rule {part:?}: thinning window is `1/K`"));
+                        }
+                        let k = k
+                            .trim()
+                            .parse::<u64>()
+                            .map_err(|e| format!("rule {part:?}: bad window: {e}"))?;
+                        FaultRule::thinned(site, k, action)
+                    } else if let Some((from, count)) = w.split_once('+') {
+                        FaultRule::window(
+                            site,
+                            from.trim()
+                                .parse::<u64>()
+                                .map_err(|e| format!("rule {part:?}: bad window: {e}"))?,
+                            count
+                                .trim()
+                                .parse::<u64>()
+                                .map_err(|e| format!("rule {part:?}: bad window: {e}"))?,
+                            action,
+                        )
+                    } else {
+                        FaultRule::at(
+                            site,
+                            w.parse::<u64>()
+                                .map_err(|e| format!("rule {part:?}: bad window: {e}"))?,
+                            action,
+                        )
+                    }
+                }
+            };
+            plan.rules.push(rule);
+        }
+        Ok(plan)
+    }
+
+    /// Build a plan from [`ENV_PLAN`] / [`ENV_SEED`]; `None` when the
+    /// variable is unset or empty. A malformed spec panics loudly — a CI
+    /// job with a broken plan should fail, not silently run fault-free.
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        let spec = std::env::var(ENV_PLAN).ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        let seed = std::env::var(ENV_SEED)
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(0x5eed);
+        match FaultPlan::parse(&spec, seed) {
+            Ok(p) => Some(Arc::new(p)),
+            Err(e) => panic!("bad {ENV_PLAN}: {e}"),
+        }
+    }
+
+    /// Record one hit at `site` and run every rule that fires on it.
+    /// Delays sleep then continue; errors return `Err`; panics panic.
+    pub fn check(&self, site: FaultSite) -> Result<(), String> {
+        let hit = self.hits[site.index()].fetch_add(1, Ordering::Relaxed);
+        for r in &self.rules {
+            if r.site != site || hit < r.from || hit - r.from >= r.count {
+                continue;
+            }
+            if r.one_in > 1 {
+                let coin = rng::derive(self.seed, ((site.index() as u64) << 32) | hit);
+                if coin % r.one_in != 0 {
+                    continue;
+                }
+            }
+            match &r.action {
+                FaultAction::DelayMs(ms) => std::thread::sleep(Duration::from_millis(*ms)),
+                FaultAction::Error(msg) => return Err(format!("injected fault at {site}: {msg}")),
+                FaultAction::Panic(msg) => panic!("injected fault at {site}: {msg}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// How many times `site` has been hit so far.
+    pub fn hit_count(&self, site: FaultSite) -> u64 {
+        self.hits[site.index()].load(Ordering::Relaxed)
+    }
+}
+
+/// Render a caught panic payload (from `catch_unwind` or a joined
+/// thread) as a message, mirroring the forwarding idiom in `dse/eval.rs`.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let p = FaultPlan::new(1);
+        for _ in 0..100 {
+            assert!(p.check(FaultSite::Finalize).is_ok());
+        }
+        assert_eq!(p.hit_count(FaultSite::Finalize), 100);
+        assert_eq!(p.hit_count(FaultSite::BatchEval), 0);
+    }
+
+    #[test]
+    fn windowed_error_fires_on_exact_hits() {
+        let p = FaultPlan::new(1).rule(FaultRule::window(
+            FaultSite::EngineSample,
+            2,
+            2,
+            FaultAction::Error("boom".into()),
+        ));
+        let fired: Vec<bool> =
+            (0..6).map(|_| p.check(FaultSite::EngineSample).is_err()).collect();
+        assert_eq!(fired, [false, false, true, true, false, false]);
+        // other sites untouched
+        assert!(p.check(FaultSite::WorkerStart).is_ok());
+    }
+
+    #[test]
+    fn error_message_names_the_site() {
+        let p = FaultPlan::new(1)
+            .rule(FaultRule::at(FaultSite::BatchEval, 0, FaultAction::Error("wire down".into())));
+        let err = p.check(FaultSite::BatchEval).unwrap_err();
+        assert_eq!(err, "injected fault at batch-eval: wire down");
+    }
+
+    #[test]
+    fn panic_action_panics_with_message() {
+        let p = FaultPlan::new(1)
+            .rule(FaultRule::at(FaultSite::WorkerStart, 0, FaultAction::Panic("melt".into())));
+        let caught = catch_unwind(AssertUnwindSafe(|| p.check(FaultSite::WorkerStart)));
+        let msg = panic_message(caught.unwrap_err().as_ref());
+        assert_eq!(msg, "injected fault at worker-start: melt");
+    }
+
+    #[test]
+    fn thinning_is_deterministic_across_plans() {
+        let mk = || {
+            FaultPlan::new(77).rule(FaultRule::thinned(
+                FaultSite::Finalize,
+                3,
+                FaultAction::Error("thin".into()),
+            ))
+        };
+        let (a, b) = (mk(), mk());
+        let fa: Vec<bool> = (0..64).map(|_| a.check(FaultSite::Finalize).is_err()).collect();
+        let fb: Vec<bool> = (0..64).map(|_| b.check(FaultSite::Finalize).is_err()).collect();
+        assert_eq!(fa, fb);
+        let n = fa.iter().filter(|&&f| f).count();
+        assert!(n > 0 && n < 64, "thinning should fire sometimes, not always ({n}/64)");
+    }
+
+    #[test]
+    fn parse_roundtrips_the_documented_forms() {
+        let p = FaultPlan::parse(
+            "finalize:delay=2@1/4; worker-start:panic=boom@1+2; engine-sample:error@5; \
+             batch-eval:panic",
+            9,
+        )
+        .unwrap();
+        assert_eq!(p.rules.len(), 4);
+        assert_eq!(p.rules[0].site, FaultSite::Finalize);
+        assert_eq!(p.rules[0].action, FaultAction::DelayMs(2));
+        assert_eq!(p.rules[0].one_in, 4);
+        assert_eq!((p.rules[1].from, p.rules[1].count), (1, 2));
+        assert_eq!(p.rules[2].action, FaultAction::Error("injected error".into()));
+        assert_eq!((p.rules[3].from, p.rules[3].count, p.rules[3].one_in), (0, u64::MAX, 1));
+
+        for bad in [
+            "finalize",                 // missing action
+            "nowhere:panic",            // unknown site
+            "finalize:explode",         // unknown action
+            "finalize:delay",           // delay needs ms
+            "finalize:panic@2/3",       // thinning must be 1/K
+            "finalize:panic@x",         // bad number
+        ] {
+            assert!(FaultPlan::parse(bad, 1).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn delay_action_returns_ok() {
+        let p = FaultPlan::new(1)
+            .rule(FaultRule::at(FaultSite::Finalize, 0, FaultAction::DelayMs(1)));
+        assert!(p.check(FaultSite::Finalize).is_ok());
+    }
+
+    #[test]
+    fn site_names_roundtrip() {
+        for s in FaultSite::ALL {
+            assert_eq!(FaultSite::from_name(s.name()), Some(s));
+        }
+        assert_eq!(FaultSite::from_name("nope"), None);
+    }
+}

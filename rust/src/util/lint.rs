@@ -69,14 +69,15 @@ pub const RULES: &[Rule] = &[
     },
     Rule {
         name: "thread-spawn",
-        invariant: "threads are created only by the WorkerPool, the server accept loop and the \
-                    engine thread — ad-hoc spawning bypasses the pool's nesting guard and the \
-                    connection cap",
+        invariant: "threads are created only by the WorkerPool, the server accept loop, the \
+                    supervisor and the engine workers it owns — ad-hoc spawning bypasses the \
+                    pool's nesting guard, the connection cap and the supervision tree",
         scope: Scope::SrcNonTest,
         allowed_files: &[
             "src/dse/eval.rs",
             "src/coordinator/server.rs",
             "src/coordinator/service.rs",
+            "src/coordinator/supervisor.rs",
         ],
     },
     Rule {

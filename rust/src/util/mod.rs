@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod bench_history;
+pub mod fault;
 pub mod json;
 pub mod linalg;
 pub mod lint;

@@ -40,8 +40,18 @@ use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWrite
 /// thread already holds has a **strictly lower** rank. Gaps between
 /// values are deliberate — new locks slot in without renumbering.
 pub mod rank {
+    /// The supervisor's shared dispatch queue
+    /// ([`crate::coordinator::supervisor::Shared`]) — held across
+    /// admission (queue-depth check + `JobRegistry::submit` + push must
+    /// be atomic), so it ranks below the registry.
+    pub const SUPERVISOR_QUEUE: u32 = 6;
+    /// The supervisor's in-flight job slots
+    /// ([`crate::coordinator::supervisor::Shared`]); pruning reads each
+    /// tracked entry's terminal state, so it ranks below `JOB_CORE`.
+    pub const SUPERVISOR_INFLIGHT: u32 = 8;
     /// [`crate::coordinator::service::JobRegistry`] inner table — taken
-    /// first: it is held while touching individual job cores (`list`).
+    /// first among the registry-path locks: it is held while touching
+    /// individual job cores (`list`).
     pub const REGISTRY: u32 = 10;
     /// One job's mutable core ([`crate::coordinator::service::JobEntry`]).
     pub const JOB_CORE: u32 = 20;

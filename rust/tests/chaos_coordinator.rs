@@ -1,0 +1,258 @@
+//! Chaos tests for the fault-tolerant coordinator, driven by the
+//! deterministic [`FaultPlan`] injection sites (`util::fault`).
+//!
+//! **Hermetic**: every service here runs the mock engine
+//! (`ServiceConfig::mock()`), and every fault fires on an exact per-site
+//! hit index, so the crashes, restarts, and recoveries below are scripted,
+//! not raced. The scenarios mirror the robustness contract in
+//! `docs/INVARIANTS.md`:
+//!
+//! 1. a panic inside a search fails *that job* and the worker survives;
+//! 2. a worker crash outside the isolation barrier restarts the worker
+//!    (with backoff) and retries the in-flight job;
+//! 3. a worker that keeps dying exhausts the restart budget: pending jobs
+//!    fail terminally and the service rejects new work;
+//! 4. submits past `max_queued` are shed with a structured `overloaded`
+//!    error carrying a retry hint;
+//! 5. dropping the service drains gracefully — queued jobs finalize,
+//!    running jobs stop at a batch boundary, every watcher wakes;
+//! 6. an injected sampler error fails the whole gen batch cleanly.
+
+use diffaxe::coordinator::{
+    ErrorCode, JobState, Request, Response, SearchRequest, Service, ServiceConfig,
+};
+use diffaxe::dse::{Budget, Objective, OptimizerKind, StopReason};
+use diffaxe::util::fault::FaultPlan;
+use diffaxe::workload::Gemm;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn gemm() -> Gemm {
+    Gemm::new(64, 256, 256)
+}
+
+/// A small simulator-backed search (no engine dependency in the job body).
+fn request(evals: usize) -> SearchRequest {
+    SearchRequest::new(Objective::MinEdp { g: gemm() }, Budget::evals(evals), OptimizerKind::RandomSearch)
+}
+
+fn search(evals: usize) -> Request {
+    Request::Search(request(evals))
+}
+
+/// A mock-engine config with fast supervisor timing and the given plan.
+fn chaos_cfg(plan: &str) -> ServiceConfig {
+    let mut cfg = ServiceConfig::mock();
+    cfg.restart_backoff = Duration::from_millis(1);
+    cfg.fault_plan = Some(Arc::new(FaultPlan::parse(plan, 7).expect("plan parses")));
+    cfg
+}
+
+/// Block until the engine worker has picked up a job (so later submits
+/// stay queued deterministically).
+fn wait_for_active(svc: &Service) {
+    let t0 = Instant::now();
+    while svc.handle().metrics().snapshot().jobs_active < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never started a job");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn panic_inside_search_fails_the_job_but_the_worker_survives() {
+    // hit 0 at the search-entry site panics; hit 1 (the next job) passes
+    let svc = Service::start(chaos_cfg("engine-sample:panic=chaos-monkey@0")).unwrap();
+    match svc.handle().request(search(8)) {
+        Response::Error { code, message, .. } => {
+            assert_eq!(code, ErrorCode::Internal);
+            assert!(message.contains("search panicked"), "{message}");
+            assert!(message.contains("chaos-monkey"), "{message}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // same worker, next job: the panic was isolated to the first job
+    match svc.handle().request(search(4)) {
+        Response::Outcome(o) => assert_eq!(o.evals, 4),
+        other => panic!("unexpected {other:?}"),
+    }
+    let s = svc.handle().metrics().snapshot();
+    assert_eq!(s.jobs_failed, 1);
+    assert_eq!(s.jobs_completed, 1);
+    assert_eq!(s.worker_restarts, 0, "an isolated panic must not cost a restart");
+}
+
+#[test]
+fn worker_crash_restarts_the_worker_and_retries_the_inflight_job() {
+    // the first finalize panics OUTSIDE the per-job isolation barrier, so
+    // the whole worker dies mid-job; the supervisor must respawn it and
+    // rerun the job (attempt 2 finalizes cleanly on hit 1)
+    let mut cfg = chaos_cfg("finalize:panic=registry-crash@0");
+    cfg.max_attempts = 2;
+    let svc = Service::start(cfg).unwrap();
+    match svc.handle().request(search(4)) {
+        Response::Outcome(o) => assert_eq!(o.evals, 4),
+        other => panic!("unexpected {other:?}"),
+    }
+    let s = svc.handle().metrics().snapshot();
+    assert_eq!(s.worker_restarts, 1);
+    assert_eq!(s.jobs_failed, 0);
+    let jobs = svc.handle().registry().list();
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].state, JobState::Done);
+    assert_eq!(jobs[0].attempts, 2, "the crashed attempt counts");
+}
+
+#[test]
+fn restart_budget_exhaustion_fails_pending_jobs_and_rejects_new_work() {
+    // worker 0 starts fine but dies at its first finalize; every respawn
+    // (worker-start hits 1, 2, ...) dies immediately, so the supervisor
+    // burns its 2 restarts and gives up
+    let mut cfg = chaos_cfg("finalize:panic=first-crash@0;worker-start:panic=respawn-crash@1+100");
+    cfg.max_attempts = 2;
+    cfg.max_worker_restarts = 2;
+    let svc = Service::start(cfg).unwrap();
+    match svc.handle().request(search(4)) {
+        Response::Error { code, message, .. } => {
+            assert_eq!(code, ErrorCode::Internal);
+            assert!(message.contains("restarts exhausted"), "{message}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    let s = svc.handle().metrics().snapshot();
+    assert_eq!(s.worker_restarts, 2);
+    assert_eq!(s.jobs_failed, 1);
+    // nothing is left running or queued — the job is terminal
+    let jobs = svc.handle().registry().list();
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].state, JobState::Failed);
+    // and a dead service sheds new work instead of queueing it forever
+    match svc.handle().request(Request::Submit(request(4))) {
+        Response::Error { code, message, .. } => {
+            assert_eq!(code, ErrorCode::Internal);
+            assert!(message.contains("unavailable"), "{message}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn over_capacity_submits_are_shed_with_a_retry_hint() {
+    let mut cfg = ServiceConfig::mock();
+    cfg.max_queued = 2;
+    let svc = Service::start(cfg).unwrap();
+    // occupy the worker so subsequent submits stay queued
+    let blocker_rx = svc.handle().submit(Request::Search(SearchRequest::new(
+        Objective::MinEdp { g: gemm() },
+        Budget::evals(50_000_000),
+        OptimizerKind::RandomSearch,
+    )));
+    wait_for_active(&svc);
+    // two jobs fill the bounded queue
+    for _ in 0..2 {
+        match svc.handle().request(Request::Submit(request(4))) {
+            Response::Submitted { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    // the third is shed with a structured overloaded error + retry hint
+    match svc.handle().request(Request::Submit(request(4))) {
+        Response::Error { code, message, retry_after_ms } => {
+            assert_eq!(code, ErrorCode::Overloaded);
+            assert!(message.contains("queue full"), "{message}");
+            let ms = retry_after_ms.expect("overload rejection carries retry_after_ms");
+            assert!(ms > 0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(svc.handle().metrics().snapshot().jobs_shed, 1);
+    // unblock: drop drains — cancel reaches the blocker at a batch
+    // boundary and its waiter still gets a terminal response
+    drop(svc);
+    match blocker_rx.recv().unwrap() {
+        Response::Outcome(o) => assert_eq!(o.stopped, StopReason::Cancelled),
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn shutdown_finalizes_queued_jobs_and_wakes_every_watcher() {
+    let svc = Service::start(ServiceConfig::mock()).unwrap();
+    let handle = svc.handle();
+    let registry = handle.registry();
+    // a long blocker occupies the worker; two jobs queue behind it
+    let blocker_rx = handle.submit(Request::Search(SearchRequest::new(
+        Objective::MinEdp { g: gemm() },
+        Budget::evals(50_000_000),
+        OptimizerKind::RandomSearch,
+    )));
+    wait_for_active(&svc);
+    let ids: Vec<String> = (0..2)
+        .map(|_| match handle.request(Request::Submit(request(1000))) {
+            Response::Submitted { job_id, .. } => job_id,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+    // watchers block on each queued job's event stream
+    let watchers: Vec<_> = ids
+        .iter()
+        .map(|id| {
+            let entry = registry.get(id).unwrap();
+            std::thread::spawn(move || {
+                let mut seq = 0u64;
+                loop {
+                    let (s, _ev, terminal) = entry.next_event(seq);
+                    seq = s;
+                    if let Some((state, _resp)) = terminal {
+                        return state;
+                    }
+                }
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    svc.shutdown(Duration::from_secs(2));
+    // every queued job finalized, so every watcher woke and joined
+    for w in watchers {
+        assert_eq!(w.join().unwrap(), JobState::Cancelled);
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10), "drain overran its deadline");
+    // the running blocker was cancelled at a batch boundary, its
+    // synchronous waiter answered
+    match blocker_rx.recv().unwrap() {
+        Response::Outcome(o) => assert_eq!(o.stopped, StopReason::Cancelled),
+        other => panic!("unexpected {other:?}"),
+    }
+    for id in &ids {
+        assert!(registry.get(id).unwrap().state().terminal(), "{id} left non-terminal");
+    }
+}
+
+#[test]
+fn injected_sampler_error_fails_the_gen_batch_cleanly() {
+    // the continuous batcher's sampler call errors on hit 0; the batched
+    // job fails with a structured error and the worker keeps serving
+    let svc = Service::start(chaos_cfg("engine-sample:error=link down@0")).unwrap();
+    let gen = |target: f64| {
+        Request::Search(SearchRequest::new(
+            Objective::Runtime { g: gemm(), target_cycles: target },
+            Budget::evals(4),
+            OptimizerKind::DiffAxE,
+        ))
+    };
+    match svc.handle().request(gen(1e6)) {
+        Response::Error { code, message, .. } => {
+            assert_eq!(code, ErrorCode::Internal);
+            assert!(message.contains("sampler failed"), "{message}");
+            assert!(message.contains("link down"), "{message}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // hit 1 passes: the batcher still serves generation
+    match svc.handle().request(gen(2e6)) {
+        Response::Outcome(o) => assert_eq!(o.ranked.len(), 4),
+        other => panic!("unexpected {other:?}"),
+    }
+    let s = svc.handle().metrics().snapshot();
+    assert_eq!(s.jobs_failed, 1);
+    assert_eq!(s.worker_restarts, 0);
+}

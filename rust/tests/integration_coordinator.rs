@@ -217,7 +217,7 @@ fn unsupported_pairing_is_a_bad_request_before_any_work() {
         SearchRequest::new(Objective::MinEdp { g }, Budget::evals(8), OptimizerKind::GanDse),
     ]);
     match svc.handle().request(req) {
-        Response::Error { code, message } => {
+        Response::Error { code, message, .. } => {
             assert_eq!(code, ErrorCode::BadRequest);
             assert!(message.contains("batch item 1"), "{message}");
         }
@@ -574,7 +574,7 @@ fn v3_unknown_job_is_a_bad_request_everywhere() {
         r#"{"v":3,"type":"watch","job_id":"job-999999"}"#,
     ] {
         match client.send_line(line).unwrap() {
-            Response::Error { code, message } => {
+            Response::Error { code, message, .. } => {
                 assert_eq!(code, ErrorCode::BadRequest, "{line}");
                 assert!(message.contains("job-999999"), "{message}");
             }

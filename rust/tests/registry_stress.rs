@@ -12,11 +12,18 @@
 //!   stored result,
 //! - the metrics gauges balance back to zero and the cumulative counters
 //!   add up to exactly one terminal transition per job.
+//!
+//! The registry is built with [`FaultPlan::from_env`], so CI can re-run
+//! the whole interleaving under a **delay-only** plan (e.g.
+//! `DIFFAXE_FAULT_PLAN="finalize:delay=1@1/4"`) to widen race windows at
+//! the finalize site. Panic/error plans would violate the `jobs_failed ==
+//! 0` accounting below — keep env plans for this suite delay-only.
 
 use diffaxe::coordinator::{
     JobRegistry, JobState, Metrics, Response, SearchRequest, MAX_RETAINED_JOBS,
 };
 use diffaxe::dse::{Budget, Objective, OptimizerKind, SearchEvent, SearchOutcome, StopReason};
+use diffaxe::util::fault::FaultPlan;
 use diffaxe::workload::Gemm;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
@@ -44,7 +51,8 @@ fn done_outcome(evals: usize) -> Response {
 fn interleaved_submit_status_cancel_watch_under_rank_assertions() {
     assert!(JOBS < MAX_RETAINED_JOBS, "GC must not reap jobs mid-assertion");
     let metrics = Arc::new(Metrics::new());
-    let reg = Arc::new(JobRegistry::new(metrics.clone()));
+    // honour DIFFAXE_FAULT_PLAN so CI can inject finalize-site delays
+    let reg = Arc::new(JobRegistry::with_faults(metrics.clone(), FaultPlan::from_env()));
     let (entry_tx, entry_rx) = channel();
     let churn = Arc::new(AtomicBool::new(true));
 

@@ -30,6 +30,7 @@ fn structured_kinds() -> Vec<OptimizerKind> {
         OptimizerKind::VanillaGd,
         OptimizerKind::VanillaBo,
         OptimizerKind::Polaris,
+        OptimizerKind::LatentBo,
         OptimizerKind::RandomSearch,
         OptimizerKind::Fixed(FixedArch::Eyeriss),
     ]
@@ -75,7 +76,7 @@ fn structured_edp_searchable_and_deterministic_across_kinds() {
         assert_well_formed(&a, &sp, kind);
     }
     // the non-structured kinds reject the pairing up front
-    for kind in [OptimizerKind::GanDse, OptimizerKind::AirchitectV1, OptimizerKind::LatentBo] {
+    for kind in [OptimizerKind::GanDse, OptimizerKind::AirchitectV1] {
         assert!(!kind.supports(&obj), "{kind:?}");
         assert!(session.search(kind, &obj, &Budget::evals(4), 1).is_err(), "{kind:?}");
     }

@@ -5,7 +5,7 @@
 //! new outcome fields) must leave every line here untouched; a diff in
 //! this suite means a wire break, not a refactor.
 
-use diffaxe::coordinator::{Request, Response, SearchRequest};
+use diffaxe::coordinator::{ErrorCode, JobState, Request, Response, SearchRequest};
 use diffaxe::dse::{Budget, Objective, OptimizerKind};
 use diffaxe::util::json::Json;
 use diffaxe::workload::Gemm;
@@ -94,7 +94,7 @@ fn canonical_request_corpus_is_byte_stable() {
 #[test]
 fn canonical_response_corpus_is_byte_stable() {
     let lines = fixture_lines("wire_responses.jsonl");
-    assert!(lines.len() >= 12, "corpus shrank to {} lines", lines.len());
+    assert!(lines.len() >= 15, "corpus shrank to {} lines", lines.len());
     for line in &lines {
         let j = Json::parse(line).unwrap_or_else(|e| panic!("bad fixture json {line}: {e}"));
         let resp = Response::from_json(&j).unwrap_or_else(|e| panic!("{line}: {e}"));
@@ -126,10 +126,55 @@ fn structured_outcome_fixture_decodes_segments() {
     }
     let plain = lines
         .iter()
-        .find(|l| l.contains("Random Search"))
+        .find(|l| l.contains("Random Search") && !l.contains("\"type\""))
         .expect("corpus holds a plain outcome line");
     match Response::from_json(&Json::parse(plain).unwrap()).unwrap() {
         Response::Outcome(o) => assert!(o.segments.is_empty()),
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+/// The PR-8 robustness lines decode to their typed semantics: the
+/// admission-control shed carries a machine-readable retry hint, the
+/// crash-failed job surfaces its attempt count, and the drain-finalized
+/// stream line is a cancelled outcome. (Byte stability is covered by
+/// `canonical_response_corpus_is_byte_stable`.)
+#[test]
+fn robustness_fixture_lines_decode_typed() {
+    let lines = fixture_lines("wire_responses.jsonl");
+    let decode = |l: &str| Response::from_json(&Json::parse(l).unwrap()).unwrap();
+
+    let shed = lines.iter().find(|l| l.contains("\"overloaded\"")).expect("shed line");
+    match decode(shed) {
+        Response::Error { code, message, retry_after_ms } => {
+            assert_eq!(code, ErrorCode::Overloaded);
+            assert!(message.contains("queue full"), "{message}");
+            assert_eq!(retry_after_ms, Some(70));
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    let failed = lines.iter().find(|l| l.contains("\"failed\"")).expect("failed-job line");
+    match decode(failed) {
+        Response::Job(info) => {
+            assert_eq!(info.state, JobState::Failed);
+            assert_eq!(info.attempts, 2);
+            assert_eq!(info.best_score, None);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    let drained = lines
+        .iter()
+        .find(|l| l.contains("\"type\":\"outcome\"") && l.contains("Random Search"))
+        .expect("drain-finalized line");
+    match decode(drained) {
+        Response::JobOutcome { job_id, outcome } => {
+            assert_eq!(job_id, "job-9");
+            assert_eq!(outcome.stopped, diffaxe::dse::StopReason::Cancelled);
+            assert!(outcome.ranked.is_empty());
+            assert_eq!(outcome.search_time_s, 1.5);
+        }
         other => panic!("unexpected {other:?}"),
     }
 }
