@@ -1,0 +1,99 @@
+//! Fleet scaling bench: candidates/sec for the same concurrent request
+//! mix served by a 1-worker vs a 4-worker engine fleet (PR 9's headline:
+//! a worker crash degrades capacity, and capacity is horizontal). Also
+//! reports the shared eval-cache hit rate observed through the service
+//! `Snapshot` — the cache is process-wide, so hits accumulate across
+//! tenants and phases.
+//!
+//! **Hermetic**: always runs on the mock engine (even when `artifacts/`
+//! is present) so the history points are comparable across hosts. All
+//! keys avoid the bench-history gate patterns (`*_candidates_per_s`,
+//! `structured_cps_*`) by construction: fleet scaling moves with runner
+//! core counts, so it rides along ungated.
+
+use diffaxe::coordinator::{Request, Response, SearchRequest, Service, ServiceConfig};
+use diffaxe::dse::{Budget, Objective, OptimizerKind};
+use diffaxe::util::bench::{banner, BenchScale};
+use diffaxe::util::json::Json;
+use diffaxe::util::stats::Timer;
+use diffaxe::util::table::{fnum, Table};
+use diffaxe::workload::Gemm;
+use std::collections::BTreeMap;
+
+/// Serve `n_req` concurrent Runtime searches on a fresh mock-engine fleet
+/// of `workers`; returns (designs, wall seconds, cache hit rate).
+fn run_mix(
+    workers: usize,
+    n_req: usize,
+    per_req: usize,
+    gemms: &[Gemm],
+) -> anyhow::Result<(usize, f64, f64)> {
+    let mut cfg = ServiceConfig::mock();
+    cfg.workers = workers;
+    cfg.max_queued = 2 * n_req + 16;
+    let svc = Service::start(cfg)?;
+    let timer = Timer::start();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| {
+            let g = gemms[i % gemms.len()];
+            svc.handle().submit(Request::Search(SearchRequest::new(
+                Objective::Runtime { g, target_cycles: 4e5 + 1e5 * (i % 5) as f64 },
+                Budget::evals(per_req),
+                OptimizerKind::DiffAxE,
+            )))
+        })
+        .collect();
+    let mut designs = 0usize;
+    for rx in rxs {
+        match rx.recv()? {
+            Response::Outcome(o) => designs += o.evals,
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+    let dt = timer.elapsed_s();
+    let snap = svc.handle().metrics().snapshot();
+    Ok((designs, dt, snap.cache_hit_rate()))
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("micro:fleet", "multi-worker engine fleet scaling (mock backend)");
+    let scale = BenchScale::from_env();
+    let n_req = scale.pick(16, 48, 96);
+    let per_req = 32;
+    // distinct GEMM sets per phase so the process-wide shared cache can't
+    // warm one phase from the other and skew the scaling ratio
+    let gemms_w1 =
+        [Gemm::new(128, 768, 2304), Gemm::new(128, 768, 768), Gemm::new(64, 256, 512)];
+    let gemms_w4 =
+        [Gemm::new(96, 512, 2048), Gemm::new(96, 512, 512), Gemm::new(48, 192, 384)];
+
+    let mut t = Table::new(&["workers", "requests", "designs", "wall (s)", "cand/s", "hit rate"]);
+    let mut json: BTreeMap<String, Json> = BTreeMap::new();
+    let (d1, t1, _) = run_mix(1, n_req, per_req, &gemms_w1)?;
+    let cps1 = d1 as f64 / t1.max(1e-9);
+    t.row(&["1".into(), n_req.to_string(), d1.to_string(), fnum(t1), fnum(cps1), "-".into()]);
+    let (d4, t4, hit_rate) = run_mix(4, n_req, per_req, &gemms_w4)?;
+    let cps4 = d4 as f64 / t4.max(1e-9);
+    t.row(&[
+        "4".into(),
+        n_req.to_string(),
+        d4.to_string(),
+        fnum(t4),
+        fnum(cps4),
+        fnum(hit_rate),
+    ]);
+    println!("{}", t.render());
+
+    let scaling = cps4 / cps1.max(1e-9);
+    println!(
+        "fleet scaling: {scaling:.2}x candidates/sec at workers=4 vs 1 (target: >=2x on >=4 cores)"
+    );
+    json.insert("fleet_w1_cps".into(), Json::Num(cps1));
+    json.insert("fleet_w4_cps".into(), Json::Num(cps4));
+    json.insert("fleet_scaling".into(), Json::Num(scaling));
+    json.insert("fleet_cache_hit_rate".into(), Json::Num(hit_rate));
+    let out = Json::Obj(json).to_string();
+    std::fs::write("BENCH_fleet.json", &out).expect("write BENCH_fleet.json");
+    println!("wrote BENCH_fleet.json: {out}");
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! The engine-worker fleet: N supervised worker slots behind one
+//! `JobRegistry`, with least-loaded dispatch, back-end work stealing, a
+//! fleet-wide admission budget, and one process-shared `EvalCache` handle
+//! handed to every worker's `Session`.
+//!
+//! # Dispatch / steal ordering
+//!
+//! Admission routes each job to the *least-loaded live* slot (shortest
+//! deque among slots that have not exhausted their restart budget). An
+//! idle worker whose own deque is empty steals from the *back* of the
+//! longest sibling deque — the opposite end from the victim's own
+//! `pop_front` — so FIFO order is preserved for the victim and the two
+//! workers never contend for the same message. Every deque draws from
+//! one [`QueueBudget`], so `ServiceConfig::max_queued` bounds the total
+//! queued work no matter how it is spread.
+//!
+//! # Failure containment
+//!
+//! Each slot keeps the PR-8 supervisor machinery (panic isolation,
+//! bounded-backoff restart, in-flight retry) — see
+//! `coordinator/supervisor.rs`. A slot that exhausts its restart budget
+//! is marked dead and skipped by dispatch; the fleet rejects admissions
+//! only when *every* slot is dead. A single worker crash therefore
+//! degrades capacity, not availability.
+
+use super::metrics::Metrics;
+use super::protocol::{ErrorCode, Response};
+use super::service::JobEntry;
+use super::supervisor::{Msg, QueueBudget, Shared};
+use crate::dse::eval::EvalCache;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+pub(crate) struct Fleet {
+    slots: Vec<Arc<Shared>>,
+    /// the one evaluation memo table every worker's `Session` runs
+    /// through — tenants probing overlapping design regions hit each
+    /// other's entries regardless of which worker serves them
+    cache: Arc<EvalCache>,
+    /// monotonically increasing engine spawn index, unique fleet-wide
+    next_worker_idx: AtomicU32,
+}
+
+impl Fleet {
+    /// Build `workers` slots sharing one admission budget of `max_queued`
+    /// and one evaluation cache. Each slot's own deque is additionally
+    /// capped at `max_queued`, so the single-slot fleet behaves exactly
+    /// like the pre-fleet single queue.
+    pub(crate) fn new(
+        workers: usize,
+        max_queued: usize,
+        drain_deadline: Duration,
+        cache: Arc<EvalCache>,
+    ) -> Arc<Fleet> {
+        let budget = QueueBudget::new(max_queued);
+        let slots = (0..workers.max(1))
+            .map(|_| Arc::new(Shared::with_budget(max_queued, drain_deadline, budget.clone())))
+            .collect();
+        Arc::new(Fleet { slots, cache, next_worker_idx: AtomicU32::new(0) })
+    }
+
+    pub(crate) fn size(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub(crate) fn slot(&self, i: usize) -> &Arc<Shared> {
+        &self.slots[i]
+    }
+
+    /// A clone of the process-shared evaluation cache handle for a
+    /// worker's `Session`.
+    pub(crate) fn cache(&self) -> Arc<EvalCache> {
+        self.cache.clone()
+    }
+
+    pub(crate) fn alloc_worker_idx(&self) -> u32 {
+        self.next_worker_idx.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Least-loaded dispatch: admit onto the shortest live slot's deque.
+    /// Only when every slot has exhausted its restart budget does the
+    /// fleet reject outright. Depth reads and the chosen slot's admission
+    /// are not atomic with each other — a race can land two jobs on the
+    /// same slot, which stealing then rebalances.
+    pub(crate) fn admit(
+        &self,
+        metrics: &Metrics,
+        submit: impl FnOnce() -> Arc<JobEntry>,
+        reply: Option<Sender<Response>>,
+    ) -> Result<Arc<JobEntry>, Response> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.is_dead() {
+                continue;
+            }
+            let len = s.queue_len();
+            let better = match best {
+                None => true,
+                Some((_, shortest)) => len < shortest,
+            };
+            if better {
+                best = Some((i, len));
+            }
+        }
+        match best {
+            Some((i, _)) => self.slots[i].admit(metrics, submit, reply),
+            None => Err(Response::error(
+                ErrorCode::Internal,
+                "engine worker unavailable (restart budget exhausted)",
+            )),
+        }
+    }
+
+    /// Work stealing: an idle `thief` slot takes from the *back* of the
+    /// longest sibling deque. Returns `None` when no sibling has queued
+    /// work (or the fleet is a single slot).
+    pub(crate) fn steal(&self, thief: usize, metrics: &Metrics) -> Option<Msg> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, s) in self.slots.iter().enumerate() {
+            if i == thief || s.is_dead() {
+                continue;
+            }
+            let len = s.queue_len();
+            let better = match best {
+                None => len > 0,
+                Some((_, longest)) => len > longest,
+            };
+            if better {
+                best = Some((i, len));
+            }
+        }
+        let (victim, _) = best?;
+        let msg = self.slots[victim].steal_back();
+        if msg.is_some() {
+            metrics.steal();
+        }
+        msg
+    }
+
+    /// Close admissions on every slot and wake every worker.
+    pub(crate) fn begin_stop(&self) {
+        for s in &self.slots {
+            s.begin_stop();
+        }
+    }
+
+    pub(crate) fn set_drain_deadline(&self, d: Duration) {
+        for s in &self.slots {
+            s.set_drain_deadline(d);
+        }
+    }
+}

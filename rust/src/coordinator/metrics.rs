@@ -29,6 +29,13 @@ struct Inner {
     jobs_shed: u64,
     /// engine workers restarted by the supervisor after a crash
     worker_restarts: u64,
+    /// gauge: configured fleet size (worker slots)
+    workers: u64,
+    /// gauge: workers currently executing or flushing work (RAII-tracked
+    /// via [`Metrics::busy`], so a panicking worker still decrements)
+    worker_busy: u64,
+    /// messages taken from a sibling slot's deque by an idle worker
+    steals: u64,
     /// gauge: jobs accepted but not yet started
     jobs_queued: u64,
     /// gauge: jobs currently executing on the engine thread
@@ -78,7 +85,12 @@ pub struct Snapshot {
     pub jobs_shed: u64,
     /// engine workers restarted by the supervisor after a crash
     pub worker_restarts: u64,
+    /// messages stolen from sibling deques by idle workers
+    pub steals: u64,
     /// …and point-in-time gauges
+    pub workers: u64,
+    /// workers currently executing or flushing work
+    pub worker_busy: u64,
     pub jobs_queued: u64,
     pub jobs_active: u64,
     /// occupied coalesced progress-event slots (drop-to-latest queue depth)
@@ -169,6 +181,24 @@ impl Metrics {
         self.inner.lock().worker_restarts += 1;
     }
 
+    /// Record the configured fleet size (a gauge, set once at startup).
+    pub fn set_workers(&self, n: usize) {
+        self.inner.lock().workers = n as u64;
+    }
+
+    /// Mark this worker busy for the guard's lifetime. The decrement
+    /// lives in `Drop`, so it runs even if the guarded work panics —
+    /// the `worker_busy` gauge cannot leak upward across crashes.
+    pub fn busy(&self) -> BusyGuard<'_> {
+        self.inner.lock().worker_busy += 1;
+        BusyGuard { metrics: self }
+    }
+
+    /// An idle worker stole a queued message from a sibling's deque.
+    pub fn steal(&self) {
+        self.inner.lock().steals += 1;
+    }
+
     /// A job reached a terminal state. `was_running` distinguishes which
     /// gauge to decrement; `had_buffered_event` frees its coalesced
     /// progress-event slot.
@@ -216,6 +246,9 @@ impl Metrics {
             jobs_failed: m.jobs_failed,
             jobs_shed: m.jobs_shed,
             worker_restarts: m.worker_restarts,
+            steals: m.steals,
+            workers: m.workers,
+            worker_busy: m.worker_busy,
             jobs_queued: m.jobs_queued,
             jobs_active: m.jobs_active,
             event_queue_depth: m.event_queue_depth,
@@ -223,6 +256,20 @@ impl Metrics {
             request_p99_us: m.request_latency.percentile_us(99.0),
             sampler_mean_us: m.sampler_latency.mean_us(),
         }
+    }
+}
+
+/// RAII token from [`Metrics::busy`]; holds the `worker_busy` increment
+/// until dropped (including during a panic unwind).
+#[derive(Debug)]
+pub struct BusyGuard<'a> {
+    metrics: &'a Metrics,
+}
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        let mut m = self.metrics.inner.lock();
+        m.worker_busy = m.worker_busy.saturating_sub(1);
     }
 }
 
@@ -234,7 +281,7 @@ impl std::fmt::Display for Snapshot {
              cache_hits={} cache_misses={} cache_hit_rate={:.3} \
              jobs_submitted={} jobs_queued={} jobs_active={} jobs_completed={} \
              jobs_cancelled={} jobs_failed={} jobs_shed={} worker_restarts={} \
-             event_queue_depth={} \
+             workers={} worker_busy={} steals={} event_queue_depth={} \
              p50={:.0}us p99={:.0}us sampler_mean={:.0}us errors={}",
             self.requests,
             self.designs_generated,
@@ -252,6 +299,9 @@ impl std::fmt::Display for Snapshot {
             self.jobs_failed,
             self.jobs_shed,
             self.worker_restarts,
+            self.workers,
+            self.worker_busy,
+            self.steals,
             self.event_queue_depth,
             self.request_p50_us,
             self.request_p99_us,
@@ -321,6 +371,31 @@ mod tests {
         let line = s.to_string();
         assert!(line.contains("jobs_active=0"), "{line}");
         assert!(line.contains("event_queue_depth=0"), "{line}");
+    }
+
+    #[test]
+    fn fleet_gauges_and_busy_guard() {
+        let m = Metrics::new();
+        m.set_workers(4);
+        m.steal();
+        m.steal();
+        {
+            let _a = m.busy();
+            let _b = m.busy();
+            assert_eq!(m.snapshot().worker_busy, 2);
+        }
+        let s = m.snapshot();
+        assert_eq!((s.workers, s.worker_busy, s.steals), (4, 0, 2));
+        // the guard decrements even when the guarded work panics
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.busy();
+            panic!("boom");
+        }));
+        assert!(caught.is_err());
+        assert_eq!(m.snapshot().worker_busy, 0);
+        let line = m.snapshot().to_string();
+        assert!(line.contains("workers=4"), "{line}");
+        assert!(line.contains("steals=2"), "{line}");
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! L3 coordinator — the DiffAxE DSE *service*: a supervised engine worker
-//! owning a [`crate::dse::Session`], continuous batching of
-//! runtime-generation searches into the fixed-batch diffusion sampler, a
+//! L3 coordinator — the DiffAxE DSE *service*: a fleet of supervised
+//! engine workers ([`fleet`]) each owning a [`crate::dse::Session`],
+//! least-loaded / work-stealing dispatch, continuous batching of
+//! generation searches into the fixed-batch diffusion sampler, a
 //! job-oriented search lifecycle, a versioned newline-JSON TCP front end
 //! (see [`protocol`]), and service metrics.
 //!
@@ -40,13 +41,15 @@
 //!
 //! # Supervision
 //!
-//! The engine worker runs under a supervisor ([`supervisor`]): panics
-//! inside a search are isolated to that job; a dead worker is respawned
-//! with bounded exponential backoff and its in-flight job retried or
-//! terminally failed; dropping the service drains gracefully (admissions
-//! close, queued jobs cancel, every watcher wakes). The supervision tree,
-//! restart policy, drain ordering, and the deterministic fault-injection
-//! sites that test them are documented in `docs/INVARIANTS.md`.
+//! Each of the fleet's workers runs under its own supervisor
+//! ([`supervisor`]): panics inside a search are isolated to that job; a
+//! dead worker is respawned with bounded exponential backoff and its
+//! in-flight job retried or terminally failed; a slot that exhausts its
+//! restart budget is skipped by dispatch while its siblings keep serving;
+//! dropping the service drains gracefully (admissions close, queued jobs
+//! cancel, every watcher wakes). The supervision tree, restart policy,
+//! drain ordering, and the deterministic fault-injection sites that test
+//! them are documented in `docs/INVARIANTS.md`.
 //!
 //! # Locking
 //!
@@ -57,6 +60,7 @@
 //! outside the facade. The lock-rank table and the rules live in
 //! `docs/INVARIANTS.md`.
 
+pub mod fleet;
 pub mod metrics;
 pub mod protocol;
 pub mod server;

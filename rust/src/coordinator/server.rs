@@ -8,23 +8,43 @@
 //! a TCP write never queues unbounded events, it just skips intermediate
 //! heartbeats.
 //!
-//! A thread per connection (DSE request rates are low; the engine thread
-//! is the shared resource and does the batching), capped by a counting
-//! semaphore so a connection flood cannot spawn unboundedly — excess
-//! connections wait in the accept loop until a slot frees.
+//! # Threading
+//!
+//! Request/response traffic is thread-per-connection (DSE request rates
+//! are low; the engine fleet is the shared resource and does the
+//! batching), capped by a counting semaphore so a connection flood cannot
+//! spawn unboundedly — excess connections wait in the accept loop until a
+//! slot frees.
+//!
+//! `watch` streaming does **not** hold a thread per watcher: the
+//! connection (socket, connection permit, and any request bytes its
+//! reader had already buffered) is handed to a single poll-based
+//! [`Reactor`] event thread. The reactor polls every watched job's
+//! coalescing slot on a short cadence and writes event lines through
+//! nonblocking sockets — a stalled watcher leaves bytes queued in its own
+//! subscription, never blocks the event thread, and never blocks other
+//! watchers. When a job's terminal line flushes, the connection resumes
+//! normal request service on a fresh handler thread (carried-over bytes
+//! are replayed first, so pipelined requests survive the round trip).
 
 use super::protocol::{ErrorCode, JobInfo, Request, Response};
-use super::service::Handle;
+use super::service::{Handle, JobEntry};
 use crate::dse::api::SearchEvent;
 use crate::util::json::Json;
 use crate::util::sync::{rank, TrackedMutex};
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Condvar};
+use std::time::Duration;
 
 /// Maximum concurrently-served connections.
 pub const MAX_CONNECTIONS: usize = 256;
+
+/// How often the reactor's event thread polls watched jobs and retries
+/// stalled writes. Progress events are coalesced drop-to-latest, so a
+/// short fixed cadence loses nothing.
+const POLL_INTERVAL: Duration = Duration::from_millis(5);
 
 /// Minimal counting semaphore (std has none): `acquire` blocks while no
 /// permit is free; the returned guard releases on drop.
@@ -60,11 +80,217 @@ impl Drop for Permit {
     }
 }
 
+/// Line source for one connection: drains carried-over bytes (request
+/// data a previous handler had buffered past a `watch` line) before
+/// touching the socket, and can surrender everything it has buffered when
+/// the connection is handed to the reactor.
+struct ConnReader {
+    carry: Vec<u8>,
+    reader: BufReader<TcpStream>,
+}
+
+impl ConnReader {
+    fn read_line(&mut self, line: &mut String) -> io::Result<usize> {
+        if !self.carry.is_empty() {
+            if let Some(pos) = self.carry.iter().position(|&b| b == b'\n') {
+                let rest = self.carry.split_off(pos + 1);
+                let taken = std::mem::replace(&mut self.carry, rest);
+                line.push_str(&String::from_utf8_lossy(&taken));
+                return Ok(taken.len());
+            }
+            // partial carried line: splice the socket's continuation on
+            let head = String::from_utf8_lossy(&self.carry).into_owned();
+            self.carry.clear();
+            line.push_str(&head);
+            let n = self.reader.read_line(line)?;
+            return Ok(head.len() + n);
+        }
+        self.reader.read_line(line)
+    }
+
+    /// Everything already buffered (carry + the `BufReader`'s unread
+    /// bytes) — rides along to the reactor so no pipelined request bytes
+    /// are lost across the handoff.
+    fn take_buffered(&mut self) -> Vec<u8> {
+        let mut out = std::mem::take(&mut self.carry);
+        let buffered = self.reader.buffer().len();
+        out.extend_from_slice(self.reader.buffer());
+        self.reader.consume(buffered);
+        out
+    }
+}
+
+/// One watched connection owned by the reactor: the job being followed,
+/// the nonblocking socket, bytes not yet accepted by the kernel, and the
+/// state needed to resume request service afterwards.
+struct WatchSub {
+    entry: Arc<JobEntry>,
+    job_id: String,
+    stream: TcpStream,
+    /// request bytes buffered before the handoff, replayed on resume
+    carry: Vec<u8>,
+    handle: Handle,
+    permit: Permit,
+    seq: u64,
+    events_sent: usize,
+    /// serialized lines the socket has not accepted yet
+    out: Vec<u8>,
+    /// terminal line has been queued; flush then resume
+    done: bool,
+}
+
+enum Pump {
+    /// still watching (or still flushing)
+    Active,
+    /// terminal line fully flushed — resume request service
+    Finished,
+    /// write error — drop the connection
+    Dead,
+}
+
+/// The poll-based watch reactor: one event thread pumps every watch
+/// subscription — poll the job's coalescing slot, serialize fresh lines,
+/// nonblocking-write as much as the socket accepts.
+struct Reactor {
+    subs: TrackedMutex<Vec<WatchSub>>,
+    cv: Condvar,
+}
+
+impl Reactor {
+    fn spawn() -> Arc<Reactor> {
+        let reactor = Arc::new(Reactor {
+            subs: TrackedMutex::new("server.watch_subs", rank::WATCH_SUBS, Vec::new()),
+            cv: Condvar::new(),
+        });
+        let r = reactor.clone();
+        std::thread::Builder::new()
+            .name("diffaxe-watch-reactor".into())
+            .spawn(move || r.run())
+            .expect("spawning watch reactor");
+        reactor
+    }
+
+    fn subscribe(&self, sub: WatchSub) {
+        self.subs.lock().push(sub);
+        self.cv.notify_one();
+    }
+
+    fn run(self: Arc<Reactor>) {
+        loop {
+            {
+                let mut subs = self.subs.lock();
+                while subs.is_empty() {
+                    subs = subs.wait(&self.cv);
+                }
+                let mut i = 0;
+                while i < subs.len() {
+                    match Self::pump(&mut subs[i]) {
+                        Pump::Active => i += 1,
+                        Pump::Finished => resume(self.clone(), subs.remove(i)),
+                        Pump::Dead => drop(subs.remove(i)),
+                    }
+                }
+            }
+            std::thread::sleep(POLL_INTERVAL);
+        }
+    }
+
+    /// One poll round for one subscription. Holds the subscription lock
+    /// (rank `WATCH_SUBS`) while taking the job core inside `poll_event`
+    /// — ranks increase, see `docs/INVARIANTS.md`.
+    fn pump(sub: &mut WatchSub) -> Pump {
+        if !sub.done {
+            let (seq, ev, terminal) = sub.entry.poll_event(sub.seq);
+            sub.seq = seq;
+            if let Some(event) = ev {
+                queue_line(sub, &Response::Event { job_id: sub.job_id.clone(), event });
+                sub.events_sent += 1;
+            }
+            if let Some((_state, result)) = terminal {
+                match result {
+                    Response::Outcome(outcome) => {
+                        if sub.events_sent == 0 {
+                            // instant job: synthesize the one guaranteed event
+                            let best = outcome.best_score();
+                            queue_line(
+                                sub,
+                                &Response::Event {
+                                    job_id: sub.job_id.clone(),
+                                    event: SearchEvent {
+                                        evals: outcome.evals,
+                                        best_score: best,
+                                        elapsed_s: outcome.search_time_s,
+                                    },
+                                },
+                            );
+                        }
+                        let job_id = sub.job_id.clone();
+                        queue_line(sub, &Response::JobOutcome { job_id, outcome });
+                    }
+                    other => queue_line(sub, &other),
+                }
+                sub.done = true;
+            }
+        }
+        match flush_out(sub) {
+            Err(_) => Pump::Dead,
+            Ok(()) if sub.done && sub.out.is_empty() => Pump::Finished,
+            Ok(()) => Pump::Active,
+        }
+    }
+}
+
+fn queue_line(sub: &mut WatchSub, resp: &Response) {
+    sub.out.extend_from_slice(resp.to_json().to_string().as_bytes());
+    sub.out.push(b'\n');
+}
+
+/// Push queued bytes through the nonblocking socket; `WouldBlock` leaves
+/// the remainder for the next poll round.
+fn flush_out(sub: &mut WatchSub) -> io::Result<()> {
+    while !sub.out.is_empty() {
+        match sub.stream.write(&sub.out) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(n) => {
+                sub.out.drain(..n);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// The watched job is terminal and flushed: put the socket back in
+/// blocking mode and resume request service on a fresh handler thread,
+/// replaying any carried-over request bytes first. The connection permit
+/// transfers with the subscription, so the connection cap holds across
+/// the reactor round trip.
+fn resume(reactor: Arc<Reactor>, sub: WatchSub) {
+    std::thread::spawn(move || {
+        let WatchSub { stream, carry, handle, permit, .. } = sub;
+        if stream.set_nonblocking(false).is_err() {
+            return;
+        }
+        let clone = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let reader = ConnReader { carry, reader: BufReader::new(clone) };
+        if let Err(e) = serve_conn(&reactor, handle, reader, stream, permit) {
+            eprintln!("connection error: {e:#}");
+        }
+    });
+}
+
 /// The shared accept loop: one handler thread per connection, capped at
 /// [`MAX_CONNECTIONS`] by the semaphore ([`serve`] and [`serve_ephemeral`]
-/// differ only in who owns the listener thread).
+/// differ only in who owns the listener thread). Watch streaming is
+/// offloaded to this listener's single [`Reactor`] thread.
 fn accept_loop(listener: TcpListener, handle: Handle) {
     let sem = Semaphore::new(MAX_CONNECTIONS);
+    let reactor = Reactor::spawn();
     for stream in listener.incoming() {
         let stream = match stream {
             Ok(s) => s,
@@ -77,9 +303,16 @@ fn accept_loop(listener: TcpListener, handle: Handle) {
         // kernel backlog instead of becoming threads
         let permit = sem.acquire();
         let h = handle.clone();
+        let r = reactor.clone();
         std::thread::spawn(move || {
-            let _permit = permit;
-            if let Err(e) = handle_conn(h, stream) {
+            let reader = match stream.try_clone() {
+                Ok(s) => ConnReader { carry: Vec::new(), reader: BufReader::new(s) },
+                Err(e) => {
+                    eprintln!("connection error: {e:#}");
+                    return;
+                }
+            };
+            if let Err(e) = serve_conn(&r, h, reader, stream, permit) {
                 eprintln!("connection error: {e:#}");
             }
         });
@@ -103,11 +336,23 @@ pub fn serve_ephemeral(handle: Handle) -> Result<std::net::SocketAddr> {
     Ok(addr)
 }
 
-fn handle_conn(handle: Handle, stream: TcpStream) -> Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+/// Request/response loop for one connection. A `watch` on a live job ends
+/// this thread's ownership: the socket (plus permit and buffered bytes)
+/// transfers to the reactor, which resumes a fresh handler when the
+/// stream completes.
+fn serve_conn(
+    reactor: &Arc<Reactor>,
+    handle: Handle,
+    mut reader: ConnReader,
+    mut writer: TcpStream,
+    permit: Permit,
+) -> Result<()> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -117,66 +362,40 @@ fn handle_conn(handle: Handle, stream: TcpStream) -> Result<()> {
         match Json::parse(&line).map_err(|e| (ErrorCode::BadRequest, format!("bad json: {e}")))
             .and_then(|j| Request::from_json(&j).map_err(|e| (e.code, e.message)))
         {
-            Ok(Request::Watch { job_id }) => stream_job(&handle, &mut writer, &job_id)?,
+            Ok(Request::Watch { job_id }) => match handle.registry().get(&job_id) {
+                None => {
+                    let err =
+                        Response::error(ErrorCode::BadRequest, format!("unknown job {job_id:?}"));
+                    write_line(&mut writer, &err)?;
+                }
+                Some(entry) => {
+                    let carry = reader.take_buffered();
+                    writer.set_nonblocking(true)?;
+                    reactor.subscribe(WatchSub {
+                        entry,
+                        job_id,
+                        stream: writer,
+                        carry,
+                        handle,
+                        permit,
+                        seq: 0,
+                        events_sent: 0,
+                        out: Vec::new(),
+                        done: false,
+                    });
+                    return Ok(());
+                }
+            },
             Ok(req) => write_line(&mut writer, &handle.request(req))?,
             Err((code, message)) => write_line(&mut writer, &Response::error(code, message))?,
         }
     }
-    Ok(())
 }
 
 fn write_line(writer: &mut TcpStream, resp: &Response) -> Result<()> {
     writeln!(writer, "{}", resp.to_json())?;
     writer.flush()?;
     Ok(())
-}
-
-/// Stream one job over the connection: `event` lines as the coalescing
-/// slot refreshes, then the terminal `outcome` (or stored error) line.
-/// Guarantees at least one `event` line before a successful terminal, so
-/// a watcher always observes progress shape even on instant jobs.
-fn stream_job(handle: &Handle, writer: &mut TcpStream, job_id: &str) -> Result<()> {
-    let Some(entry) = handle.registry().get(job_id) else {
-        let err = Response::error(ErrorCode::BadRequest, format!("unknown job {job_id:?}"));
-        return write_line(writer, &err);
-    };
-    let mut seq = 0u64;
-    let mut events_sent = 0usize;
-    loop {
-        let (new_seq, ev, terminal) = entry.next_event(seq);
-        seq = new_seq;
-        if let Some(event) = ev {
-            write_line(writer, &Response::Event { job_id: job_id.to_string(), event })?;
-            events_sent += 1;
-        }
-        if let Some((_state, result)) = terminal {
-            match result {
-                Response::Outcome(outcome) => {
-                    if events_sent == 0 {
-                        // instant job: synthesize the one guaranteed event
-                        let best = outcome.best_score();
-                        write_line(
-                            writer,
-                            &Response::Event {
-                                job_id: job_id.to_string(),
-                                event: SearchEvent {
-                                    evals: outcome.evals,
-                                    best_score: best,
-                                    elapsed_s: outcome.search_time_s,
-                                },
-                            },
-                        )?;
-                    }
-                    write_line(
-                        writer,
-                        &Response::JobOutcome { job_id: job_id.to_string(), outcome },
-                    )?;
-                }
-                other => write_line(writer, &other)?,
-            }
-            return Ok(());
-        }
-    }
 }
 
 /// Minimal blocking client (examples + integration tests + CLI).

@@ -1,7 +1,11 @@
-//! The DSE service: a supervised engine worker owning a [`Session`] (the
-//! PJRT executables hold raw C pointers and are deliberately never shared),
-//! fed through a bounded dispatch queue by a cloneable handle, with every
-//! search tracked as a *job* in the [`JobRegistry`].
+//! The DSE service: a fleet of supervised engine workers, each owning its
+//! own [`Session`] (the PJRT executables hold raw C pointers and are
+//! deliberately never shared), fed through per-worker bounded deques by a
+//! cloneable handle with least-loaded dispatch and work stealing
+//! ([`super::fleet`]), with every search tracked as a *job* in the
+//! [`JobRegistry`]. All sessions evaluate through one process-shared
+//! [`EvalCache`] handle, so tenants probing overlapping design regions
+//! hit each other's work no matter which worker serves them.
 //!
 //! # Jobs
 //!
@@ -20,12 +24,14 @@
 //!
 //! # Robustness
 //!
-//! The worker is owned by a supervisor ([`super::supervisor`]): a search
-//! that panics is isolated by `catch_unwind` and finalizes its job as
-//! `failed` while the worker survives; a worker that dies anyway is
+//! Every worker is owned by its own supervisor ([`super::supervisor`]): a
+//! search that panics is isolated by `catch_unwind` and finalizes its job
+//! as `failed` while the worker survives; a worker that dies anyway is
 //! restarted with bounded exponential backoff and its in-flight job is
 //! retried (up to [`ServiceConfig::max_attempts`] total attempts) or
-//! terminally failed — never left `running`. Admission is bounded by
+//! terminally failed — never left `running`. A worker slot that exhausts
+//! its restart budget is skipped by dispatch while its siblings keep
+//! serving. Admission is bounded fleet-wide by
 //! [`ServiceConfig::max_queued`]: over-capacity submits are shed with a
 //! structured `overloaded` error carrying a `retry_after_ms` hint.
 //! Dropping the [`Service`] (or calling [`Service::shutdown`]) drains
@@ -37,29 +43,40 @@
 //!
 //! # Batching
 //!
-//! Runtime-generation searches with the `diffaxe` optimizer are
-//! **dynamically batched**: the worker drains the queue up to the
-//! sampler's fixed batch width (slots can mix workloads — the sampler
-//! conditions per batch element) before issuing one diffusion call, then
-//! splits, batch-evaluates, and replies per request. This is the
-//! vLLM-router-style continuous batching adapted to design generation: the
-//! expensive fixed-batch executable always runs as full as the queue
-//! allows. Every other `(objective, optimizer)` pair — and whole `Batch`
-//! requests — run directly on the session between sampler flushes.
+//! Generation searches with the `diffaxe` optimizer are **dynamically
+//! batched**: the worker drains its deque up to the sampler's fixed batch
+//! width (slots can mix workloads and tenants — the sampler conditions
+//! per batch element) before issuing one diffusion call, then splits,
+//! batch-evaluates, and replies per request. Requests group by
+//! *conditioning family* — runtime-conditioned `Runtime` slots share one
+//! `sample_runtime` call, while `LlmEdp` and `Structured{Edp,Perf}` slots
+//! all condition on the low-EDP class (class 0 + a layer shape) and share
+//! one `sample_class` call; a structured request consumes `n_segments`
+//! contiguous slots per joint candidate. This is the vLLM-router-style
+//! continuous batching adapted to design generation: the expensive
+//! fixed-batch executable always runs as full as the queue allows. Every
+//! other `(objective, optimizer)` pair — and whole `Batch` requests — run
+//! directly on the session between sampler flushes. Batched generation
+//! skips the direct paths' candidate dedup: repeat draws are absorbed by
+//! the shared eval cache instead.
 //!
 //! Candidate evaluation goes through the session's memoized, pooled hot
 //! path ([`crate::dse::eval`]): recurring rounded design points across
 //! requests are served from the sharded eval cache, whose hit/miss counters
 //! are mirrored into [`Metrics`] after every evaluation burst.
 
+use super::fleet::Fleet;
 use super::metrics::Metrics;
 use super::protocol::{ErrorCode, JobInfo, JobState, Request, Response, SearchRequest};
-use super::supervisor::{self, Msg, NoEngineError, Shared};
+use super::supervisor::{self, Msg, NoEngineError};
+use crate::design_space::{structured::constrain, HwConfig};
 use crate::dse::api::{
     DesignReport, Objective, OptimizerKind, SearchCtx, SearchEvent, SearchOutcome, Session,
     StopReason,
 };
-use crate::design_space::HwConfig;
+use crate::dse::eval::EvalCache;
+use crate::dse::structured::{self, StructuredSpec};
+use crate::models::{ClassMode, DiffAxE};
 use crate::util::fault::{self, FaultPlan, FaultSite};
 use crate::util::rng;
 use crate::util::sync::{rank, TrackedMutex};
@@ -91,8 +108,14 @@ pub struct ServiceConfig {
     /// serve the hermetic mock engine instead of compiling artifacts
     /// ([`crate::models::DiffAxE::mock`]) — CI and artifact-free hosts
     pub use_mock_engine: bool,
-    /// admission control: jobs queued beyond this are shed with a
-    /// structured `overloaded` error (and a `retry_after_ms` hint)
+    /// engine workers in the fleet (least-loaded dispatch with work
+    /// stealing; see `coordinator/fleet.rs`). Defaults to available
+    /// parallelism capped at [`ServiceConfig::MAX_DEFAULT_WORKERS`];
+    /// [`ServiceConfig::mock`] pins `1` so deterministic single-worker
+    /// tests keep their serialized dispatch order.
+    pub workers: usize,
+    /// admission control: jobs queued beyond this *fleet-wide* are shed
+    /// with a structured `overloaded` error (and a `retry_after_ms` hint)
     pub max_queued: usize,
     /// total execution attempts per job across worker crashes (`1` means
     /// a job is never retried)
@@ -110,12 +133,21 @@ pub struct ServiceConfig {
 }
 
 impl ServiceConfig {
+    /// Cap on the default fleet size: past a handful of workers the
+    /// continuous batcher's sampler batches thin out, so very wide hosts
+    /// should opt in explicitly (`--workers`).
+    pub const MAX_DEFAULT_WORKERS: usize = 4;
+
     pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Self {
         ServiceConfig {
             artifacts_dir: artifacts_dir.into(),
             batch_window: Duration::from_millis(4),
             seed: 1,
             use_mock_engine: false,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(Self::MAX_DEFAULT_WORKERS),
             max_queued: 256,
             max_attempts: 2,
             max_worker_restarts: 3,
@@ -126,9 +158,11 @@ impl ServiceConfig {
     }
 
     /// A config serving the artifact-free mock engine (engine-kind wire
-    /// paths run hermetically; results are deterministic in `seed`).
+    /// paths run hermetically; results are deterministic in `seed`). Pins
+    /// a single worker so tests that rely on serialized dispatch order
+    /// stay deterministic — fleet tests raise `workers` explicitly.
     pub fn mock() -> Self {
-        ServiceConfig { use_mock_engine: true, ..ServiceConfig::new("") }
+        ServiceConfig { use_mock_engine: true, workers: 1, ..ServiceConfig::new("") }
     }
 }
 
@@ -167,6 +201,14 @@ pub struct JobEntry {
 }
 
 impl JobEntry {
+    /// Registry-internal job number, stable across retries and worker
+    /// hops; the worker derives the job's deterministic search seed from
+    /// it, so a stolen or crash-retried job recomputes the identical
+    /// outcome no matter which worker runs it.
+    pub(crate) fn num(&self) -> u64 {
+        self.num
+    }
+
     /// The shared cancellation flag the running search polls.
     pub fn cancel_flag(&self) -> Arc<AtomicBool> {
         self.cancel.clone()
@@ -231,6 +273,18 @@ impl JobEntry {
         while core.seq <= last_seq && core.result.is_none() {
             core = core.wait(&self.cv);
         }
+        let ev = core.latest.as_ref().filter(|(s, _)| *s > last_seq).map(|(_, e)| *e);
+        let terminal = core.result.clone().map(|r| (core.state, r));
+        (core.seq, ev, terminal)
+    }
+
+    /// Non-blocking [`JobEntry::next_event`]: the watch reactor's single
+    /// event thread polls this instead of parking a thread per watcher.
+    pub fn poll_event(
+        &self,
+        last_seq: u64,
+    ) -> (u64, Option<SearchEvent>, Option<(JobState, Response)>) {
+        let core = self.core.lock();
         let ev = core.latest.as_ref().filter(|(s, _)| *s > last_seq).map(|(_, e)| *e);
         let terminal = core.result.clone().map(|r| (core.state, r));
         (core.seq, ev, terminal)
@@ -473,7 +527,7 @@ impl JobRegistry {
 /// search on the engine worker.
 #[derive(Clone)]
 pub struct Handle {
-    shared: Arc<Shared>,
+    fleet: Arc<Fleet>,
     metrics: Arc<Metrics>,
     registry: Arc<JobRegistry>,
 }
@@ -593,14 +647,15 @@ impl Handle {
         }
     }
 
-    /// Register a job and queue it for the engine worker, subject to
-    /// admission control (queue bound, drain state, dead worker).
+    /// Register a job and queue it onto the least-loaded live worker
+    /// slot, subject to admission control (fleet-wide queue bound, drain
+    /// state, all workers dead).
     fn enqueue(
         &self,
         sr: SearchRequest,
         reply: Option<Sender<Response>>,
     ) -> Result<Arc<JobEntry>, Response> {
-        self.shared.admit(&self.metrics, || self.registry.submit(sr), reply)
+        self.fleet.admit(&self.metrics, || self.registry.submit(sr), reply)
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -616,33 +671,68 @@ fn unknown_job(job_id: &str) -> Response {
     Response::error(ErrorCode::BadRequest, format!("unknown job {job_id:?}"))
 }
 
-/// Running service (supervised engine worker + handle).
+/// Running service (supervised engine-worker fleet + handle).
 pub struct Service {
     pub handle: Handle,
-    thread: Option<std::thread::JoinHandle<()>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Service {
-    /// Start the supervisor and its first engine worker. Blocks until the
-    /// artifacts are compiled and the engine's presence is validated (or
-    /// either fails — a session without an engine surfaces the typed
-    /// [`NoEngineError`]), so a returned `Service` is ready to serve.
+    /// Start one supervisor (and its first engine worker) per fleet slot.
+    /// Blocks until every slot's artifacts are compiled and its engine's
+    /// presence is validated (or any fails — a session without an engine
+    /// surfaces the typed [`NoEngineError`]), so a returned `Service` is
+    /// ready to serve at full capacity. Startup failures are global by
+    /// construction (every slot builds the same session), so one failed
+    /// slot stops the whole fleet instead of limping.
     pub fn start(cfg: ServiceConfig) -> Result<Service> {
         let metrics = Arc::new(Metrics::new());
         let registry = Arc::new(JobRegistry::with_faults(metrics.clone(), cfg.fault_plan.clone()));
-        let shared = Arc::new(Shared::new(cfg.max_queued, cfg.drain_deadline));
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let thread =
-            supervisor::spawn(cfg, shared.clone(), registry.clone(), metrics.clone(), ready_tx)?;
-        let started = ready_rx
-            .recv()
-            .unwrap_or_else(|_| Err(anyhow::anyhow!("engine worker died during startup")));
-        if let Err(e) = started {
-            shared.begin_stop();
-            let _ = thread.join();
+        let workers = cfg.workers.max(1);
+        let fleet =
+            Fleet::new(workers, cfg.max_queued, cfg.drain_deadline, EvalCache::global_arc());
+        metrics.set_workers(workers);
+        let mut threads = Vec::with_capacity(workers);
+        let mut readies = Vec::with_capacity(workers);
+        for slot in 0..workers {
+            let (ready_tx, ready_rx) = channel::<Result<()>>();
+            let spawned = supervisor::spawn(
+                cfg.clone(),
+                fleet.clone(),
+                slot,
+                registry.clone(),
+                metrics.clone(),
+                ready_tx,
+            );
+            match spawned {
+                Ok(t) => threads.push(t),
+                Err(e) => {
+                    fleet.begin_stop();
+                    for t in threads {
+                        let _ = t.join();
+                    }
+                    return Err(e.into());
+                }
+            }
+            readies.push(ready_rx);
+        }
+        let mut failed: Option<anyhow::Error> = None;
+        for rx in readies {
+            let started = rx
+                .recv()
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("engine worker died during startup")));
+            if let Err(e) = started {
+                failed.get_or_insert(e);
+            }
+        }
+        if let Some(e) = failed {
+            fleet.begin_stop();
+            for t in threads {
+                let _ = t.join();
+            }
             return Err(e);
         }
-        Ok(Service { handle: Handle { shared, metrics, registry }, thread: Some(thread) })
+        Ok(Service { handle: Handle { fleet, metrics, registry }, threads })
     }
 
     pub fn handle(&self) -> Handle {
@@ -654,15 +744,15 @@ impl Service {
     /// running jobs get until `deadline` to stop at a batch boundary,
     /// then everything left is force-cancelled so every watcher wakes.
     pub fn shutdown(self, deadline: Duration) {
-        self.handle.shared.set_drain_deadline(deadline);
+        self.handle.fleet.set_drain_deadline(deadline);
         // Drop runs the drain
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.handle.shared.begin_stop();
-        if let Some(t) = self.thread.take() {
+        self.handle.fleet.begin_stop();
+        for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
@@ -672,15 +762,56 @@ impl Drop for Service {
 // engine worker loop
 // ---------------------------------------------------------------------------
 
-/// A runtime-generation search waiting in the batcher. `acc` collects
-/// designs across sampler calls when the request spans batches.
+/// Conditioning family a batched request's sampler slots belong to. One
+/// diffusion call serves one family: slots in a `sample_runtime` call all
+/// carry `(p_norm, shape)` conditions, slots in a `sample_class` call all
+/// carry `(class, shape)` — the batcher packs each family separately and
+/// issues at most one call per family per round.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Family {
+    /// runtime-conditioned sampler (`sample_runtime`)
+    Runtime,
+    /// low-EDP class sampler (`sample_class`, class 0)
+    Class,
+}
+
+/// What one batched generation request asks the sampler for.
+enum GenWork {
+    /// `Objective::Runtime`: every slot conditions on the normalized
+    /// runtime target + the workload shape
+    Runtime { g: Gemm, p_norm: f32 },
+    /// `Objective::LlmEdp`: candidate base configs from the low-EDP class,
+    /// conditioned round-robin over the model's layer shapes (the same
+    /// rotation the direct path spreads its budget over)
+    Llm { layers: Vec<Gemm>, cursor: usize },
+    /// `Objective::Structured{Edp,Perf}`: each joint candidate consumes
+    /// `reps.len()` *contiguous* slots — one per segment, conditioned on
+    /// that segment's dominant (max-MACs) layer — then is constrained
+    /// onto the shared budget and evaluated whole-model
+    Structured { spec: StructuredSpec, reps: Vec<Gemm> },
+}
+
+impl GenWork {
+    fn family(&self) -> Family {
+        match self {
+            GenWork::Runtime { .. } => Family::Runtime,
+            GenWork::Llm { .. } | GenWork::Structured { .. } => Family::Class,
+        }
+    }
+}
+
+/// A generation search waiting in the batcher. `acc` collects designs
+/// across sampler calls when the request spans batches.
 struct PendingGen {
-    g: Gemm,
-    p_norm: f32,
+    work: GenWork,
     n: usize,
     top_k: usize,
     objective: Objective,
     acc: Vec<DesignReport>,
+    /// per-design segment configurations, parallel to `acc` — populated
+    /// only for structured work (the outcome carries the heterogeneous
+    /// per-segment configs alongside the envelope reports)
+    segs: Vec<Vec<HwConfig>>,
     /// running best score over `acc` (heartbeats stay O(1) per burst)
     best: f64,
     entry: Arc<JobEntry>,
@@ -693,28 +824,79 @@ struct PendingGen {
     reply: Option<Sender<Response>>,
 }
 
-/// Whether a search joins the continuous diffusion batcher (wall-clock-
-/// capped requests run the direct path, which enforces the deadline).
-fn batchable(sr: &SearchRequest) -> bool {
-    sr.optimizer == OptimizerKind::DiffAxE
-        && matches!(sr.objective, Objective::Runtime { .. })
-        && sr.budget.wall_clock_s.is_none()
+impl PendingGen {
+    /// Sampler slots this request still needs (a structured request
+    /// consumes `n_segments` contiguous slots per joint candidate).
+    fn slots_remaining(&self) -> usize {
+        let per = match &self.work {
+            GenWork::Structured { reps, .. } => reps.len(),
+            _ => 1,
+        };
+        self.n.saturating_sub(self.acc.len()) * per
+    }
 }
 
-/// Body of one supervised engine worker (thread `diffaxe-engine-{idx}`):
-/// build the session, validate it, then dispatch from the shared queue
-/// until the drain begins. `ready` is `Some` only for the first worker —
-/// it reports the startup result back to [`Service::start`]; respawned
-/// workers that fail startup just die and count against the restart
-/// budget.
+/// Classify a DiffAxE request for the continuous batcher, resolving its
+/// conditioning inputs up front. `None` sends it down the direct path:
+/// non-generative objectives, a degenerate structured spec (the direct
+/// search reports the config error), or a segment count that cannot fit
+/// one joint candidate in a sampler call. The caller has already filtered
+/// wall-clock-capped requests (the direct path enforces deadlines).
+fn gen_work(engine: &DiffAxE, objective: &Objective, gen_batch: usize) -> Option<GenWork> {
+    match objective {
+        Objective::Runtime { g, target_cycles } => Some(GenWork::Runtime {
+            g: *g,
+            p_norm: engine.stats.stats_for(g).norm_runtime(*target_cycles),
+        }),
+        Objective::LlmEdp { model, stage, seq, .. } => {
+            let layers = model.layer_gemms(*stage, *seq);
+            if layers.is_empty() {
+                return None;
+            }
+            Some(GenWork::Llm { layers, cursor: 0 })
+        }
+        Objective::StructuredEdp { spec } | Objective::StructuredPerf { spec } => {
+            if spec.validate().is_err() {
+                return None;
+            }
+            let s = spec.n_segments();
+            if s == 0 || s > gen_batch {
+                return None;
+            }
+            let wl = spec.workload();
+            let parts = structured::partition(wl.gemms.len(), s);
+            let reps = parts
+                .iter()
+                .map(|r| {
+                    *wl.gemms[r.clone()]
+                        .iter()
+                        .max_by_key(|g| g.macs())
+                        .expect("non-empty segment")
+                })
+                .collect();
+            Some(GenWork::Structured { spec: *spec, reps })
+        }
+        Objective::MinEdp { .. } | Objective::MaxPerf { .. } => None,
+    }
+}
+
+/// Body of one supervised engine worker (thread `diffaxe-engine-{idx}`,
+/// serving fleet slot `slot`): build the session, validate it, then
+/// dispatch from the slot's deque — stealing from the longest sibling
+/// deque when idle — until the drain begins. `ready` is `Some` only for
+/// the slot's first worker — it reports the startup result back to
+/// [`Service::start`]; respawned workers that fail startup just die and
+/// count against the restart budget.
 pub(crate) fn worker_main(
     idx: u32,
     cfg: ServiceConfig,
-    shared: Arc<Shared>,
+    fleet: Arc<Fleet>,
+    slot: usize,
     registry: Arc<JobRegistry>,
     metrics: Arc<Metrics>,
     ready: Option<Sender<Result<()>>>,
 ) {
+    let shared = fleet.slot(slot).clone();
     // fault site: worker startup, before the session exists. A panic
     // action unwinds into the supervisor's death handling; an error
     // action behaves like a failed session build.
@@ -729,11 +911,12 @@ pub(crate) fn worker_main(
     }
     // the session must be constructed on this thread: PJRT handles are
     // !Send (the mock backend rides the same engine type, so it follows
-    // the same rule)
+    // the same rule). Every worker's session evaluates through the one
+    // fleet-shared cache handle.
     let session =
         if cfg.use_mock_engine { Ok(Session::mock()) } else { Session::load(&cfg.artifacts_dir) };
     let mut session = match session {
-        Ok(s) => s,
+        Ok(s) => s.with_cache(fleet.cache()),
         Err(e) => {
             if let Some(r) = ready {
                 shared.mark_dead();
@@ -771,29 +954,49 @@ pub(crate) fn worker_main(
             }
             return;
         }
-        // wait for work (or the flush deadline if a batch is forming)
-        let timeout =
-            if pending.is_empty() { Duration::from_millis(200) } else { cfg.batch_window };
-        let msg = shared.pop(timeout);
+        // wait for work (or the flush deadline if a batch is forming); a
+        // fleet worker keeps the idle wait short so it notices stealable
+        // backlog on a sibling's deque promptly
+        let timeout = if !pending.is_empty() {
+            cfg.batch_window
+        } else if fleet.size() > 1 {
+            Duration::from_millis(20)
+        } else {
+            Duration::from_millis(200)
+        };
+        let msg = match shared.pop(timeout) {
+            Some(m) => Some(m),
+            // own deque empty: steal from the back of the longest sibling
+            // deque (never while draining — queued work then belongs to
+            // the victim's own drain path)
+            None if !shared.stopping() => fleet.steal(slot, &metrics),
+            None => None,
+        };
 
         if let Some(Msg::Run { entry, reply }) = msg {
+            let _busy = metrics.busy();
             shared.track(&entry, &reply);
-            if batchable(&entry.request) {
-                // runtime-conditioned diffusion joins the continuous batcher
+            let work = {
+                let sr = &entry.request;
+                if sr.optimizer == OptimizerKind::DiffAxE && sr.budget.wall_clock_s.is_none() {
+                    match session.engine() {
+                        Some(engine) => gen_work(engine, &sr.objective, gen_batch),
+                        None => None,
+                    }
+                } else {
+                    None
+                }
+            };
+            if let Some(work) = work {
+                // generative work joins the continuous batcher
                 if registry.start(&entry) {
-                    let Objective::Runtime { g, target_cycles } = entry.request.objective else {
-                        unreachable!("batchable() matched Runtime")
-                    };
-                    let Some(engine) = session.engine() else {
-                        unreachable!("engine presence validated at worker start")
-                    };
                     let p = PendingGen {
-                        g,
-                        p_norm: engine.stats.stats_for(&g).norm_runtime(target_cycles),
+                        work,
                         n: entry.request.budget.evals,
                         top_k: entry.request.top_k.unwrap_or(DEFAULT_TOP_K),
                         objective: entry.request.objective,
                         acc: Vec::new(),
+                        segs: Vec::new(),
                         best: f64::INFINITY,
                         entry: entry.clone(),
                         joined: Instant::now(),
@@ -817,7 +1020,7 @@ pub(crate) fn worker_main(
                 // non-batchable jobs flush the batch first (ordering)
                 guarded_flush(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
                 if registry.start(&entry) {
-                    run_job(&mut session, &registry, &entry, reply, cfg.seed, &mut stream, &metrics);
+                    run_job(&mut session, &registry, &entry, reply, cfg.seed, &metrics);
                 } else if let Some(reply) = reply {
                     let _ = reply.send(entry.result_now());
                 }
@@ -828,7 +1031,7 @@ pub(crate) fn worker_main(
         // window clock starts when a request joins `pending`, not at
         // submission — queue wait behind non-batchable jobs must not
         // expire the window)
-        let slots: usize = pending.iter().map(|p| p.n.saturating_sub(p.acc.len())).sum();
+        let slots: usize = pending.iter().map(|p| p.slots_remaining()).sum();
         let window_expired = pending
             .iter()
             .map(|p| p.joined.elapsed())
@@ -836,6 +1039,7 @@ pub(crate) fn worker_main(
             .map(|d| d >= cfg.batch_window)
             .unwrap_or(false);
         if slots >= gen_batch || (window_expired && !pending.is_empty()) {
+            let _busy = metrics.busy();
             guarded_flush(&session, &registry, &mut pending, cfg.seed, &mut stream, &metrics);
         }
     }
@@ -882,10 +1086,13 @@ fn run_job(
     entry: &Arc<JobEntry>,
     reply: Option<Sender<Response>>,
     seed: u64,
-    stream: &mut u64,
     metrics: &Arc<Metrics>,
 ) {
-    *stream += 1;
+    // per-job deterministic stream: a crash-retried or stolen job
+    // recomputes the identical search no matter which worker (or respawn)
+    // runs it. The top bit keeps job streams disjoint from the workers'
+    // `idx << 32` sampler stream blocks.
+    let job_stream = (1u64 << 63) | entry.num();
     let sr = &entry.request;
     let ctx = {
         let registry = registry.clone();
@@ -900,7 +1107,7 @@ fn run_job(
             &ctx,
             &sr.objective,
             &sr.budget,
-            rng::derive(seed, *stream),
+            rng::derive(seed, job_stream),
         )
     }));
     let resp = match searched {
@@ -947,9 +1154,13 @@ fn finish_pending(
 ) {
     let latency_s = p.entry.submitted.elapsed().as_secs_f64();
     metrics.record_request(latency_s * 1e6, p.acc.len());
-    let outcome = SearchOutcome::from_reports("DiffAxE", &p.objective, p.acc, latency_s)
-        .with_stopped(stopped)
-        .truncated(p.top_k);
+    // `segs` is empty for non-structured work; for structured work it is
+    // parallel to `acc`, so the ranked outcome carries the heterogeneous
+    // per-segment configurations alongside the envelope reports
+    let outcome =
+        SearchOutcome::from_reports_with_segments("DiffAxE", &p.objective, p.acc, p.segs, latency_s)
+            .with_stopped(stopped)
+            .truncated(p.top_k);
     let state =
         if stopped == StopReason::Cancelled { JobState::Cancelled } else { JobState::Done };
     let resp = Response::Outcome(outcome);
@@ -959,9 +1170,57 @@ fn finish_pending(
     }
 }
 
-/// Pack pending generation requests into sampler batches, batch-evaluate
-/// the designs, publish per-request progress, and retire each request with
-/// a ranked outcome — early (partial) if its cancellation flag is up.
+/// Evaluate one owner's fresh sampler draws under its work kind,
+/// accumulate reports (and joint segment vectors for structured work),
+/// and return the number of design evaluations performed.
+fn score_draws(session: &Session, p: &mut PendingGen, cfgs: &[HwConfig]) -> usize {
+    let mut reports: Vec<DesignReport> = Vec::new();
+    let mut segs: Vec<Vec<HwConfig>> = Vec::new();
+    match &p.work {
+        GenWork::Runtime { g, .. } => {
+            // memoized + pooled hot path: recurring rounded designs
+            // across requests and tenants become cache hits
+            reports = cfgs
+                .iter()
+                .zip(session.evaluate_batch(cfgs, g))
+                .map(|(hw, (s, e))| DesignReport::from_sim(*hw, &s, &e))
+                .collect();
+        }
+        GenWork::Llm { .. } => {
+            // whole-model evaluation per candidate, memoized per layer
+            // through the shared cache
+            reports = p.objective.evaluate_all(cfgs);
+        }
+        GenWork::Structured { spec, reps } => {
+            // contiguous slot groups form joint candidates: one segment
+            // config per slot, constrained onto the shared budget, then
+            // evaluated whole-model (the envelope report ranks; the
+            // segment vector rides along for the outcome)
+            for group in cfgs.chunks_exact(reps.len()) {
+                let cfg = constrain(&spec.budget, group.to_vec());
+                let d = structured::eval_structured(spec, &cfg);
+                reports.push(d.report());
+                segs.push(d.config.segments);
+            }
+        }
+    }
+    let evaluated = reports.len();
+    let mut segs = segs.into_iter();
+    for d in reports {
+        let score = p.objective.score_report(&d);
+        p.best = p.best.min(score);
+        p.acc.push(d);
+        if let Some(sv) = segs.next() {
+            p.segs.push(sv);
+        }
+    }
+    evaluated
+}
+
+/// Pack pending generation requests into sampler batches — one diffusion
+/// call per conditioning family per round — batch-evaluate the designs,
+/// publish per-request progress, and retire each request with a ranked
+/// outcome — early (partial) if its cancellation flag is up.
 fn flush_gen_batch(
     session: &Session,
     registry: &Arc<JobRegistry>,
@@ -971,6 +1230,7 @@ fn flush_gen_batch(
     metrics: &Arc<Metrics>,
 ) {
     let Some(engine) = session.engine() else { return };
+    let b = engine.stats.gen_batch;
     while !pending.is_empty() {
         // cancelled batcher jobs retire immediately with their partial acc
         for idx in (0..pending.len()).rev() {
@@ -982,86 +1242,124 @@ fn flush_gen_batch(
         if pending.is_empty() {
             return;
         }
-        let b = engine.stats.gen_batch;
-        // take whole requests while they fit; split oversized ones
-        let mut slots: Vec<(f32, [f32; 3])> = Vec::with_capacity(b);
-        let mut owners: Vec<usize> = Vec::with_capacity(b); // slot -> pending idx
-        for (i, p) in pending.iter().enumerate() {
-            let take = p.n.saturating_sub(p.acc.len()).min(b - slots.len());
-            for _ in 0..take {
-                slots.push((p.p_norm, p.g.norm_vec()));
-                owners.push(i);
-            }
-            if slots.len() == b {
-                break;
-            }
-        }
-        *stream += 1;
-        let t = Instant::now();
-        // fault sites: engine sampling before the diffusion call, batch
-        // evaluation after it — either failure fails the whole batch
-        // through the same path as a real sampler error
-        let result = session
-            .fault_check(FaultSite::EngineSample)
-            .and_then(|()| engine.sample_runtime(rng::derive_u32(seed, *stream), &slots))
-            .and_then(|configs| session.fault_check(FaultSite::BatchEval).map(|()| configs));
-        metrics.record_sampler_call(t.elapsed().as_secs_f64() * 1e6, slots.len(), b);
-        match result {
-            Ok(configs) => {
-                // group the new designs per owning request so each group
-                // runs through the vectorized evaluation hot path
-                let mut per_owner: Vec<Vec<HwConfig>> = vec![Vec::new(); pending.len()];
-                for (slot, hw) in configs.into_iter().enumerate() {
-                    per_owner[owners[slot]].push(hw);
+        for family in [Family::Runtime, Family::Class] {
+            // pack this family's waiters: whole requests while they fit,
+            // oversized ones split across rounds. A structured request
+            // takes `n_segments` contiguous slots per joint candidate and
+            // never a partial group.
+            let mut rt_slots: Vec<(f32, [f32; 3])> = Vec::new();
+            let mut class_slots: Vec<(i32, [f32; 3])> = Vec::new();
+            let mut owners: Vec<usize> = Vec::new(); // slot -> pending idx
+            for (i, p) in pending.iter_mut().enumerate() {
+                if p.work.family() != family {
+                    continue;
                 }
-                let mut evaluated = 0;
-                for (idx, cfgs) in per_owner.iter().enumerate() {
-                    if cfgs.is_empty() {
-                        continue;
-                    }
-                    let g = pending[idx].g;
-                    // memoized + pooled hot path: recurring rounded designs
-                    // across requests become cache hits
-                    for (hw, (s, e)) in cfgs.iter().zip(session.evaluate_batch(cfgs, &g)) {
-                        let d = DesignReport::from_sim(*hw, &s, &e);
-                        let score = pending[idx].objective.score_report(&d);
-                        pending[idx].best = pending[idx].best.min(score);
-                        pending[idx].acc.push(d);
-                    }
-                    evaluated += cfgs.len();
-                    // heartbeat into the job's coalescing event slot
-                    let p = &pending[idx];
-                    registry.publish(
-                        &p.entry,
-                        SearchEvent {
-                            evals: p.acc.len(),
-                            best_score: p.best,
-                            elapsed_s: p.entry.submitted.elapsed().as_secs_f64(),
-                        },
-                    );
+                let avail = b - owners.len();
+                if avail == 0 {
+                    break;
                 }
-                metrics.record_evaluations(evaluated);
-                let cs = session.cache_stats();
-                metrics.record_cache(cs.hits, cs.misses);
-                // retire fully-served requests (from the end, keep indices valid)
-                for idx in (0..pending.len()).rev() {
-                    if pending[idx].acc.len() >= pending[idx].n {
-                        let p = pending.remove(idx);
-                        finish_pending(registry, metrics, p, StopReason::Completed);
+                let remaining = p.n.saturating_sub(p.acc.len());
+                match &mut p.work {
+                    GenWork::Runtime { g, p_norm } => {
+                        for _ in 0..remaining.min(avail) {
+                            rt_slots.push((*p_norm, g.norm_vec()));
+                            owners.push(i);
+                        }
+                    }
+                    GenWork::Llm { layers, cursor } => {
+                        for _ in 0..remaining.min(avail) {
+                            class_slots.push((0, layers[*cursor % layers.len()].norm_vec()));
+                            *cursor += 1;
+                            owners.push(i);
+                        }
+                    }
+                    GenWork::Structured { reps, .. } => {
+                        // `gen_work` guarantees reps.len() <= gen_batch,
+                        // so at least one joint candidate fits a round
+                        for _ in 0..remaining.min(avail / reps.len()) {
+                            for rep in reps.iter() {
+                                class_slots.push((0, rep.norm_vec()));
+                                owners.push(i);
+                            }
+                        }
                     }
                 }
             }
-            Err(e) => {
-                metrics.record_error();
-                for p in pending.drain(..) {
-                    let resp = Response::error(
-                        ErrorCode::Internal,
-                        format!("sampler failed: {e:#}"),
-                    );
-                    registry.finalize(&p.entry, JobState::Failed, resp.clone());
-                    if let Some(reply) = p.reply {
-                        let _ = reply.send(resp);
+            if owners.is_empty() {
+                // no waiter from this family (or none fit this round)
+                continue;
+            }
+            *stream += 1;
+            let t = Instant::now();
+            // fault sites: engine sampling before the diffusion call,
+            // batch evaluation after it — either failure fails the whole
+            // batch through the same path as a real sampler error
+            let result = session
+                .fault_check(FaultSite::EngineSample)
+                .and_then(|()| match family {
+                    Family::Runtime => {
+                        engine.sample_runtime(rng::derive_u32(seed, *stream), &rt_slots)
                     }
+                    Family::Class => engine.sample_class(
+                        ClassMode::Edp,
+                        rng::derive_u32(seed, *stream),
+                        &class_slots,
+                    ),
+                })
+                .and_then(|configs| session.fault_check(FaultSite::BatchEval).map(|()| configs));
+            metrics.record_sampler_call(t.elapsed().as_secs_f64() * 1e6, owners.len(), b);
+            match result {
+                Ok(configs) => {
+                    // group the new designs per owning request so each
+                    // group runs through its evaluation path whole;
+                    // structured groups stay contiguous by construction
+                    // (one sampler call, slots packed owner-by-owner)
+                    let mut per_owner: Vec<Vec<HwConfig>> = vec![Vec::new(); pending.len()];
+                    for (slot, hw) in configs.into_iter().enumerate() {
+                        per_owner[owners[slot]].push(hw);
+                    }
+                    let mut evaluated = 0;
+                    for (idx, cfgs) in per_owner.iter().enumerate() {
+                        if cfgs.is_empty() {
+                            continue;
+                        }
+                        evaluated += score_draws(session, &mut pending[idx], cfgs);
+                        // heartbeat into the job's coalescing event slot
+                        let p = &pending[idx];
+                        registry.publish(
+                            &p.entry,
+                            SearchEvent {
+                                evals: p.acc.len(),
+                                best_score: p.best,
+                                elapsed_s: p.entry.submitted.elapsed().as_secs_f64(),
+                            },
+                        );
+                    }
+                    metrics.record_evaluations(evaluated);
+                    let cs = session.cache_stats();
+                    metrics.record_cache(cs.hits, cs.misses);
+                    // retire fully-served requests (from the end, keep
+                    // indices valid)
+                    for idx in (0..pending.len()).rev() {
+                        if pending[idx].acc.len() >= pending[idx].n {
+                            let p = pending.remove(idx);
+                            finish_pending(registry, metrics, p, StopReason::Completed);
+                        }
+                    }
+                }
+                Err(e) => {
+                    metrics.record_error();
+                    for p in pending.drain(..) {
+                        let resp = Response::error(
+                            ErrorCode::Internal,
+                            format!("sampler failed: {e:#}"),
+                        );
+                        registry.finalize(&p.entry, JobState::Failed, resp.clone());
+                        if let Some(reply) = p.reply {
+                            let _ = reply.send(resp);
+                        }
+                    }
+                    return;
                 }
             }
         }

@@ -1,4 +1,4 @@
-//! Supervision for the engine worker: a bounded dispatch queue with
+//! Supervision for one engine-worker slot: a bounded dispatch deque with
 //! admission control, a panic-isolated worker restarted under bounded
 //! exponential backoff, in-flight job recovery (retry or terminal
 //! failure), and a deadline-bounded graceful drain.
@@ -7,21 +7,31 @@
 //!
 //! ```text
 //! Service::start
-//!   └── diffaxe-supervisor            (this module)
-//!         └── diffaxe-engine-{n}      (one worker today; n = respawn index)
-//!               owns the Session — PJRT handles are !Send
+//!   └── Fleet                          (coordinator/fleet.rs)
+//!         ├── diffaxe-supervisor-0     (this module, one per slot)
+//!         │     └── diffaxe-engine-{n} (n = fleet-wide spawn index)
+//!         │           owns the Session — PJRT handles are !Send
+//!         ├── diffaxe-supervisor-1
+//!         │     └── diffaxe-engine-{m}
+//!         └── …                        (ServiceConfig::workers slots)
 //! ```
 //!
-//! The supervisor spawns the worker, parks on its death channel, and on an
-//! unexpected death (a panic that escaped the worker's own `catch_unwind`
-//! isolation, or a plain exit) reaps the panic payload, recovers every
-//! in-flight job — requeued at the *front* of the queue when the job's
-//! attempt budget allows, terminally failed otherwise — and respawns the
-//! worker with exponential backoff. After `max_worker_restarts` respawns
-//! the supervisor gives up: it marks the service dead, fails everything
-//! still queued, and admission rejects from then on. The single-worker
-//! dispatch seam (queue + in-flight table, not a direct channel) is shaped
-//! so a worker *fleet* can ride the same supervisor later (ROADMAP item 1).
+//! Each supervisor spawns its slot's worker, parks on its death channel,
+//! and on an unexpected death (a panic that escaped the worker's own
+//! `catch_unwind` isolation, or a plain exit) reaps the panic payload,
+//! recovers every in-flight job — requeued at the *front* of the slot's
+//! deque when the job's attempt budget allows, terminally failed
+//! otherwise — and respawns the worker with exponential backoff. After
+//! `max_worker_restarts` respawns the supervisor gives up: it marks its
+//! *slot* dead and fails everything still queued on it; the fleet keeps
+//! dispatching to the surviving slots, so a crashed worker degrades
+//! capacity, not availability. Admission rejects only when every slot is
+//! dead. Restart budgets are per slot.
+//!
+//! Every slot's deque draws from one fleet-wide [`QueueBudget`] so the
+//! global admission bound (`ServiceConfig::max_queued`) is preserved no
+//! matter how dispatch spreads jobs; crash-recovery requeues bypass the
+//! budget check (`force_acquire`) so a recovered job is never shed.
 //!
 //! # Drain ordering
 //!
@@ -33,13 +43,14 @@
 //! first-wins, so a detached worker finishing late cannot regress a
 //! terminal state. See `docs/INVARIANTS.md` ("Drain ordering").
 
+use super::fleet::Fleet;
 use super::metrics::Metrics;
 use super::protocol::{ErrorCode, JobState, Response};
 use super::service::{worker_main, JobEntry, JobRegistry, ServiceConfig};
 use crate::util::fault;
 use crate::util::sync::{rank, TrackedMutex};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar};
 use std::thread::JoinHandle;
@@ -77,8 +88,44 @@ struct Inflight {
     reply: Option<Sender<Response>>,
 }
 
+/// Fleet-wide admission budget: every worker slot's deque draws queued
+/// capacity from this one counter, so `ServiceConfig::max_queued` bounds
+/// the *total* queued work no matter how dispatch spreads it across
+/// slots. Crash recovery re-acquires unconditionally (`force_acquire`):
+/// a job that was already admitted is never shed on requeue.
+pub(crate) struct QueueBudget {
+    queued: AtomicUsize,
+    max: usize,
+}
+
+impl QueueBudget {
+    pub(crate) fn new(max: usize) -> Arc<QueueBudget> {
+        Arc::new(QueueBudget { queued: AtomicUsize::new(0), max: max.max(1) })
+    }
+
+    fn try_acquire(&self) -> bool {
+        self.queued
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| (n < self.max).then_some(n + 1))
+            .is_ok()
+    }
+
+    fn force_acquire(&self) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn release(&self) {
+        let _ = self
+            .queued
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| Some(n.saturating_sub(1)));
+    }
+
+    pub(crate) fn max(&self) -> usize {
+        self.max
+    }
+}
+
 /// State shared between the handle (admission), the worker (dispatch),
-/// and the supervisor (recovery + drain).
+/// and the supervisor (recovery + drain). One `Shared` per fleet slot.
 pub(crate) struct Shared {
     queue: TrackedMutex<VecDeque<Msg>>,
     queue_cv: Condvar,
@@ -89,11 +136,25 @@ pub(crate) struct Shared {
     /// service permanently rejects new work
     dead: AtomicBool,
     max_queued: usize,
+    /// fleet-wide queued-capacity counter this slot's deque draws from
+    budget: Arc<QueueBudget>,
     drain_deadline_ms: AtomicU64,
 }
 
 impl Shared {
+    /// A standalone slot whose deque bound *is* the global bound (the
+    /// single-worker shape, and what the unit tests drive directly).
     pub(crate) fn new(max_queued: usize, drain_deadline: Duration) -> Shared {
+        Shared::with_budget(max_queued, drain_deadline, QueueBudget::new(max_queued))
+    }
+
+    /// A fleet slot: a deque additionally capped at `max_queued` whose
+    /// admissions draw from the shared fleet-wide `budget`.
+    pub(crate) fn with_budget(
+        max_queued: usize,
+        drain_deadline: Duration,
+        budget: Arc<QueueBudget>,
+    ) -> Shared {
         Shared {
             queue: TrackedMutex::new(
                 "supervisor.queue",
@@ -105,6 +166,7 @@ impl Shared {
             stop: AtomicBool::new(false),
             dead: AtomicBool::new(false),
             max_queued: max_queued.max(1),
+            budget,
             drain_deadline_ms: AtomicU64::new(drain_deadline.as_millis() as u64),
         }
     }
@@ -134,14 +196,17 @@ impl Shared {
                 "service draining; admissions closed",
             ));
         }
-        if q.len() >= self.max_queued {
+        // per-slot depth first (short-circuits so the global budget is
+        // only drawn when this deque has room), then the fleet-wide bound
+        if q.len() >= self.max_queued || !self.budget.try_acquire() {
             drop(q);
             metrics.job_shed();
             // a full queue of short jobs drains fast; scale the hint with
             // the configured depth and cap it at something polite
-            let retry_after_ms = (50 + 10 * self.max_queued as u64).min(5_000);
+            let bound = self.max_queued.min(self.budget.max());
+            let retry_after_ms = (50 + 10 * bound as u64).min(5_000);
             return Err(Response::overloaded(
-                format!("queue full: {} jobs queued (max {})", self.max_queued, self.max_queued),
+                format!("queue full: {bound} jobs queued (max {bound})"),
                 retry_after_ms,
             ));
         }
@@ -165,19 +230,49 @@ impl Shared {
         if self.stopping() {
             None
         } else {
-            q.pop_front()
+            let msg = q.pop_front();
+            if msg.is_some() {
+                self.budget.release();
+            }
+            msg
         }
     }
 
+    /// Thief-side dispatch: pop from the *back* of this slot's deque —
+    /// the opposite end from `pop`, so the victim worker and a stealing
+    /// sibling never contend for the same message (the dispatch/steal
+    /// ordering invariant; see `docs/INVARIANTS.md`).
+    pub(crate) fn steal_back(&self) -> Option<Msg> {
+        if self.stopping() || self.is_dead() {
+            return None;
+        }
+        let msg = self.queue.lock().pop_back();
+        if msg.is_some() {
+            self.budget.release();
+        }
+        msg
+    }
+
+    /// Current deque depth (least-loaded dispatch / longest-queue steal).
+    pub(crate) fn queue_len(&self) -> usize {
+        self.queue.lock().len()
+    }
+
     /// Put a crash-recovered job at the *front* of the queue: it already
-    /// waited its turn once.
+    /// waited its turn once. Re-acquires the global budget unconditionally
+    /// — an admitted job is never shed on recovery.
     fn requeue_front(&self, msg: Msg) {
+        self.budget.force_acquire();
         self.queue.lock().push_front(msg);
         self.queue_cv.notify_one();
     }
 
     fn drain_queue(&self) -> Vec<Msg> {
-        self.queue.lock().drain(..).collect()
+        let msgs: Vec<Msg> = self.queue.lock().drain(..).collect();
+        for _ in &msgs {
+            self.budget.release();
+        }
+        msgs
     }
 
     /// Record a popped job as in-flight (crash recovery roster).
@@ -216,7 +311,7 @@ impl Shared {
         self.dead.store(true, Ordering::SeqCst);
     }
 
-    fn is_dead(&self) -> bool {
+    pub(crate) fn is_dead(&self) -> bool {
         self.dead.load(Ordering::SeqCst)
     }
 
@@ -229,42 +324,47 @@ impl Shared {
     }
 }
 
-/// Spawn the supervisor thread. `ready` reports the first worker's
-/// startup result (session build + engine validation) back to
-/// `Service::start`.
+/// Spawn the supervisor thread for one fleet slot. `ready` reports the
+/// slot's first worker's startup result (session build + engine
+/// validation) back to `Service::start`.
 pub(crate) fn spawn(
     cfg: ServiceConfig,
-    shared: Arc<Shared>,
+    fleet: Arc<Fleet>,
+    slot: usize,
     registry: Arc<JobRegistry>,
     metrics: Arc<Metrics>,
     ready: Sender<anyhow::Result<()>>,
 ) -> std::io::Result<JoinHandle<()>> {
     std::thread::Builder::new()
-        .name("diffaxe-supervisor".into())
-        .spawn(move || supervise(cfg, shared, registry, metrics, ready))
+        .name(format!("diffaxe-supervisor-{slot}"))
+        .spawn(move || supervise(cfg, fleet, slot, registry, metrics, ready))
 }
 
 fn supervise(
     cfg: ServiceConfig,
-    shared: Arc<Shared>,
+    fleet: Arc<Fleet>,
+    slot: usize,
     registry: Arc<JobRegistry>,
     metrics: Arc<Metrics>,
     ready: Sender<anyhow::Result<()>>,
 ) {
+    let shared = fleet.slot(slot).clone();
     let mut ready = Some(ready);
     let mut restarts: u32 = 0;
     loop {
         let (death_tx, death_rx) = channel::<()>();
         let worker = {
-            let (cfg, shared, registry, metrics) =
-                (cfg.clone(), shared.clone(), registry.clone(), metrics.clone());
+            let (cfg, fleet, registry, metrics) =
+                (cfg.clone(), fleet.clone(), registry.clone(), metrics.clone());
             let ready = ready.take();
-            let idx = restarts;
+            // fleet-wide spawn index: engine rng stream blocks
+            // (`idx << 32`) stay disjoint across slots and respawns
+            let idx = fleet.alloc_worker_idx();
             std::thread::Builder::new().name(format!("diffaxe-engine-{idx}")).spawn(move || {
                 // dropped on any exit — including a panic — so the
                 // supervisor observes worker death as a disconnect
                 let _death = death_tx;
-                worker_main(idx, cfg, shared, registry, metrics, ready);
+                worker_main(idx, cfg, fleet, slot, registry, metrics, ready);
             })
         };
         let worker = match worker {

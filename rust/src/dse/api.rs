@@ -1565,6 +1565,13 @@ pub struct Session {
     /// (the default everywhere) means every [`Session::fault_check`] is a
     /// single pointer test
     pub fault_plan: Option<Arc<FaultPlan>>,
+    /// the evaluation memo table this session's batched hot path runs
+    /// through. Defaults to the process-wide shared instance
+    /// ([`EvalCache::global_arc`]) — every coordinator worker's session
+    /// holds a clone of the *same* cache, so tenants probing overlapping
+    /// design regions hit each other's work. Tests can isolate with
+    /// [`Session::with_cache`].
+    cache: Arc<EvalCache>,
 }
 
 impl Session {
@@ -1575,6 +1582,7 @@ impl Session {
             bo_opts: BoOptions::default(),
             gd_opts: GdOptions::default(),
             fault_plan: None,
+            cache: EvalCache::global_arc(),
         }
     }
 
@@ -1598,7 +1606,22 @@ impl Session {
             bo_opts: BoOptions::default(),
             gd_opts: GdOptions::default(),
             fault_plan: None,
+            cache: EvalCache::global_arc(),
         }
+    }
+
+    /// Route this session's batched evaluation path through `cache`
+    /// instead of the shared global instance (isolation for tests and
+    /// benches; the coordinator fleet passes one shared handle to every
+    /// worker).
+    pub fn with_cache(mut self, cache: Arc<EvalCache>) -> Session {
+        self.cache = cache;
+        self
+    }
+
+    /// The evaluation cache handle this session evaluates through.
+    pub fn cache(&self) -> &Arc<EvalCache> {
+        &self.cache
     }
 
     /// Consult the session's fault plan at `site` (no-op without a plan).
@@ -1629,13 +1652,15 @@ impl Session {
     /// shared memo table and the persistent worker pool (see
     /// [`evaluate_batch`]).
     pub fn evaluate_batch(&self, cfgs: &[HwConfig], g: &Gemm) -> Vec<(SimResult, EnergyResult)> {
-        evaluate_batch(cfgs, g)
+        let g = *g;
+        let cache = self.cache.clone();
+        par_map_chunks(cfgs, move |chunk| cache.evaluate_many(chunk, &g))
     }
 
-    /// Counters of the shared evaluation cache this session's batched and
+    /// Counters of the evaluation cache this session's batched and
     /// LLM hot paths run through (exported by the coordinator's metrics).
     pub fn cache_stats(&self) -> CacheStats {
-        EvalCache::global().stats()
+        self.cache.stats()
     }
 
     /// Run one search with the named strategy under the inert background

@@ -292,7 +292,7 @@ pub struct EvalCache {
     evictions: AtomicU64,
 }
 
-static CACHE: OnceLock<EvalCache> = OnceLock::new();
+static CACHE: OnceLock<Arc<EvalCache>> = OnceLock::new();
 
 impl EvalCache {
     /// Default shard count — enough stripes that `available_parallelism`
@@ -321,7 +321,22 @@ impl EvalCache {
     /// scalar `Objective::evaluate` scoring path, and the LLM fast path's
     /// per-(layer, order) probes.
     pub fn global() -> &'static EvalCache {
-        CACHE.get_or_init(|| EvalCache::new(Self::DEFAULT_SHARDS, Self::DEFAULT_CAP_PER_SHARD))
+        Self::global_arc_ref().as_ref()
+    }
+
+    /// An owning handle to the process-wide cache. The coordinator's
+    /// worker fleet hands one clone of this `Arc` to every worker's
+    /// `Session`, making the shared-ownership contract explicit: tenants
+    /// probing overlapping design regions hit each other's entries, and a
+    /// test can substitute an isolated cache via `Session::with_cache`.
+    pub fn global_arc() -> Arc<EvalCache> {
+        Self::global_arc_ref().clone()
+    }
+
+    fn global_arc_ref() -> &'static Arc<EvalCache> {
+        CACHE.get_or_init(|| {
+            Arc::new(EvalCache::new(Self::DEFAULT_SHARDS, Self::DEFAULT_CAP_PER_SHARD))
+        })
     }
 
     fn shard_of(&self, key: &EvalKey) -> usize {

@@ -28,9 +28,11 @@ subcommands:
                 artifacts the engine kinds run on the hermetic mock engine)
   serve         start the DSE service + TCP front end
                 (--artifacts DIR --addr 127.0.0.1:7979 --seed S
-                [--max-queued N] [--max-attempts N] [--drain-s S]
-                [--fault-plan SPEC]; SPEC injects deterministic faults for
-                chaos testing, e.g. \"engine-sample:panic@3\" — see
+                [--workers N] [--max-queued N] [--max-attempts N]
+                [--drain-s S] [--fault-plan SPEC]; N engine workers share
+                one eval cache behind work-stealing dispatch, default =
+                available cores capped; SPEC injects deterministic faults
+                for chaos testing, e.g. \"engine-sample:panic@3\" — see
                 src/util/fault.rs)
   submit        submit a search job to a running server, print its job id
                 (search options plus --addr; add --watch to stream it)
@@ -40,11 +42,13 @@ subcommands:
                 (--addr --job ID)
   jobs          list the server's retained jobs (--addr)
   bench-history accumulate per-commit throughput points from bench snapshot
-                JSONs into a committed history stream and gate CI on
-                regressions (--history benchmarks/history.json
+                JSONs into a committed history stream, gate CI on
+                regressions and render the trajectory page
+                (--history benchmarks/history.json
                 [--eval-core BENCH_eval_core.json]
                 [--structured BENCH_structured.json]
-                [--check] [--append] [--tolerance 0.15]
+                [--fleet BENCH_fleet.json]
+                [--check] [--append] [--html FILE] [--tolerance 0.15]
                 [--commit SHA] [--message MSG] [--timestamp TS])
   lint          check the source tree against the repo's concurrency and
                 determinism invariants (docs/INVARIANTS.md); exits non-zero
@@ -135,6 +139,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let mut cfg = ServiceConfig::new(dir);
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    anyhow::ensure!(cfg.workers >= 1, "--workers must be at least 1");
     cfg.max_queued = args.get_usize("max-queued", cfg.max_queued)?;
     cfg.max_attempts = args.get_u64("max-attempts", cfg.max_attempts as u64)? as u32;
     cfg.drain_deadline =
@@ -390,13 +396,19 @@ fn cmd_bench_history(args: &Args) -> Result<()> {
     let tolerance = args.get_f64("tolerance", 0.15)?;
     let do_check = args.flag("check");
     let do_append = args.flag("append");
-    anyhow::ensure!(do_check || do_append, "nothing to do: pass --check and/or --append");
+    let html_out = args.get("html").map(str::to_string);
+    anyhow::ensure!(
+        do_check || do_append || html_out.is_some(),
+        "nothing to do: pass --check, --append and/or --html FILE"
+    );
 
     // collect the current run's points from whichever snapshots exist
+    // (--html alone renders the committed history and needs none)
     let mut points = Vec::new();
     for (source, flag, default) in [
         ("eval_core", "eval-core", "BENCH_eval_core.json"),
         ("structured", "structured", "BENCH_structured.json"),
+        ("fleet", "fleet", "BENCH_fleet.json"),
     ] {
         let p = args.get_str(flag, default);
         match std::fs::read_to_string(p) {
@@ -408,9 +420,12 @@ fn cmd_bench_history(args: &Args) -> Result<()> {
             Err(_) => eprintln!("bench-history: snapshot {p} missing, skipping"),
         }
     }
-    anyhow::ensure!(!points.is_empty(), "no bench snapshots found — nothing to record");
+    anyhow::ensure!(
+        !points.is_empty() || (!do_check && !do_append),
+        "no bench snapshots found — nothing to record"
+    );
 
-    let entries = hist::load(Path::new(&history_path)).map_err(|e| anyhow::anyhow!(e))?;
+    let mut entries = hist::load(Path::new(&history_path)).map_err(|e| anyhow::anyhow!(e))?;
     if do_check {
         match entries.last() {
             None => println!("bench-history: empty history, nothing to gate against"),
@@ -444,7 +459,6 @@ fn cmd_bench_history(args: &Args) -> Result<()> {
             message: args.get_str("message", "").to_string(),
             timestamp: args.get_str("timestamp", &now_s.to_string()).to_string(),
         };
-        let mut entries = entries;
         entries.push(hist::make_entry(&commit, now_s, &points));
         hist::store(Path::new(&history_path), &entries, now_s).map_err(|e| anyhow::anyhow!(e))?;
         println!(
@@ -453,6 +467,14 @@ fn cmd_bench_history(args: &Args) -> Result<()> {
             points.len(),
             entries.len()
         );
+    }
+    if let Some(html_path) = html_out {
+        // renders whatever `entries` holds now — after --append that
+        // includes this run's point, so the page and the stored history
+        // stay in lockstep
+        std::fs::write(&html_path, hist::render_html(&entries))
+            .map_err(|e| anyhow::anyhow!("write {html_path}: {e}"))?;
+        println!("bench-history: rendered {} entries -> {html_path}", entries.len());
     }
     Ok(())
 }

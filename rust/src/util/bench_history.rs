@@ -16,7 +16,13 @@
 //! from the structured stream. Ratios (speedups) and hit rates ride along
 //! in the history for plotting but are too noisy to gate on — a cache
 //! speedup can legitimately halve when the baseline it divides by gets
-//! faster.
+//! faster. The fleet stream (`fleet/*`) is ungated by construction: its
+//! keys avoid both gate patterns so multi-worker scaling numbers can move
+//! with runner core counts without wedging CI.
+//!
+//! [`render_html`] turns the accumulated history into a single static,
+//! dependency-free HTML page (inline SVG, no scripts) so the trajectory
+//! is browsable straight from the repository.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -164,6 +170,164 @@ pub fn store(path: &Path, entries: &[Json], last_update_epoch_s: u64) -> Result<
     std::fs::write(path, root.to_string()).map_err(|e| format!("write {path:?}: {e}"))
 }
 
+/// Escape text for embedding in HTML body text or attribute values.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Compact numeric label for axis ticks and tooltips.
+fn fmt_val(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// One inline-SVG trajectory chart for a single metric. `pts` holds
+/// `(entry index, value)` pairs (sparse — a metric may be absent from
+/// older entries); `labels` is one hover label per history entry.
+fn chart_svg(name: &str, pts: &[(usize, f64)], labels: &[String], n_entries: usize) -> String {
+    const W: f64 = 720.0;
+    const H: f64 = 170.0;
+    const L: f64 = 64.0; // left gutter: y-axis tick labels
+    const R: f64 = 12.0;
+    const T: f64 = 14.0;
+    const B: f64 = 22.0;
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &(_, v) in pts {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return String::new();
+    }
+    // pad the value range so a flat series still draws mid-chart
+    let span = if hi > lo { hi - lo } else { lo.abs().max(1.0) };
+    let (vlo, vhi) = (lo - 0.05 * span, hi + 0.05 * span);
+    let x = |i: usize| L + i as f64 * (W - L - R) / (n_entries.saturating_sub(1).max(1) as f64);
+    let y = |v: f64| H - B - (v - vlo) / (vhi - vlo) * (H - T - B);
+    let mut poly = String::new();
+    let mut dots = String::new();
+    for &(i, v) in pts {
+        let (px, py) = (x(i), y(v));
+        poly.push_str(&format!("{px:.1},{py:.1} "));
+        let label = labels.get(i).map(String::as_str).unwrap_or("?");
+        dots.push_str(&format!(
+            "<circle cx=\"{px:.1}\" cy=\"{py:.1}\" r=\"3\"><title>{}: {}</title></circle>",
+            esc(label),
+            fmt_val(v)
+        ));
+    }
+    let key = name.rsplit('/').next().unwrap_or(name);
+    let badge = if is_throughput_key(key) { "gated" } else { "ride-along" };
+    let last = pts.last().map(|&(_, v)| fmt_val(v)).unwrap_or_default();
+    let mut s = String::new();
+    s.push_str(&format!(
+        "<section><h2>{} <span class=\"badge {badge}\">{badge}</span> \
+         <span class=\"last\">last {last}</span></h2>\n",
+        esc(name)
+    ));
+    s.push_str(&format!(
+        "<svg viewBox=\"0 0 {W} {H}\" role=\"img\" aria-label=\"{}\">\n",
+        esc(name)
+    ));
+    s.push_str(&format!(
+        "<line class=\"axis\" x1=\"{L}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\"/>\n",
+        H - B,
+        W - R,
+        H - B
+    ));
+    let tick = |ty: f64, v: f64| {
+        format!("<text class=\"tick\" x=\"4\" y=\"{ty:.1}\">{}</text>\n", fmt_val(v))
+    };
+    s.push_str(&tick(T + 4.0, hi));
+    s.push_str(&tick(H - B, lo));
+    s.push_str(&format!("<polyline points=\"{}\"/>\n", poly.trim_end()));
+    s.push_str(&dots);
+    s.push_str("</svg></section>\n");
+    s
+}
+
+/// Render the full history as one self-contained static HTML page: a
+/// trajectory chart per metric, inline SVG only, no scripts and no
+/// external assets — viewable from a `file://` URL or any bare static
+/// host. Gated throughput metrics are badged apart from ride-along
+/// ratios/hit-rates so a reader knows which lines CI enforces.
+pub fn render_html(entries: &[Json]) -> String {
+    let n = entries.len();
+    let labels: Vec<String> = entries
+        .iter()
+        .map(|e| {
+            let full_id = e.get("commit").get("id").as_str().unwrap_or("?");
+            let id: String = full_id.chars().take(9).collect();
+            match e.get("commit").get("message").as_str() {
+                Some(msg) if !msg.is_empty() => format!("{id} {msg}"),
+                _ => id,
+            }
+        })
+        .collect();
+    let mut series: BTreeMap<String, Vec<(usize, f64)>> = BTreeMap::new();
+    for (i, e) in entries.iter().enumerate() {
+        if let Some(benches) = e.get("benches").as_arr() {
+            for b in benches {
+                if let (Some(name), Some(v)) = (b.get("name").as_str(), b.get("value").as_f64()) {
+                    series.entry(name.to_string()).or_default().push((i, v));
+                }
+            }
+        }
+    }
+    let mut page = String::new();
+    page.push_str(
+        "<!DOCTYPE html>\n<html lang=\"en\"><head><meta charset=\"utf-8\">\n\
+         <meta name=\"viewport\" content=\"width=device-width, initial-scale=1\">\n\
+         <title>diffaxe bench trajectory</title>\n<style>\n\
+         body{font:14px/1.5 system-ui,sans-serif;margin:2rem auto;max-width:760px;color:#1a1a2e}\n\
+         h1{font-size:1.3rem} h2{font-size:0.95rem;margin:1.6rem 0 0.2rem}\n\
+         .badge{font-size:0.7rem;padding:0.1rem 0.4rem;border-radius:0.6rem;vertical-align:middle}\n\
+         .badge.gated{background:#dbeafe;color:#1d4ed8}\n\
+         .badge.ride-along{background:#f1f5f9;color:#64748b}\n\
+         .last{float:right;font-weight:normal;color:#64748b;font-size:0.8rem}\n\
+         svg{width:100%;height:auto;background:#fafbfc;border:1px solid #e2e8f0;border-radius:4px}\n\
+         polyline{fill:none;stroke:#2563eb;stroke-width:1.5}\n\
+         circle{fill:#2563eb} circle:hover{fill:#dc2626}\n\
+         .axis{stroke:#cbd5e1;stroke-width:1}\n\
+         .tick{font:10px monospace;fill:#64748b}\n\
+         footer{margin-top:2rem;color:#94a3b8;font-size:0.8rem}\n\
+         </style></head><body>\n",
+    );
+    page.push_str(&format!(
+        "<h1>diffaxe bench trajectory</h1>\n\
+         <p>{n} committed run{} &middot; {} metric{} &middot; hover a point for its commit. \
+         Badged <em>gated</em> metrics enforce the CI regression floor; <em>ride-along</em> \
+         metrics are recorded for trend-watching only.</p>\n",
+        if n == 1 { "" } else { "s" },
+        series.len(),
+        if series.len() == 1 { "" } else { "s" }
+    ));
+    for (name, pts) in &series {
+        page.push_str(&chart_svg(name, pts, &labels, n));
+    }
+    page.push_str("<footer>generated by <code>diffaxe bench-history --html</code> from \
+                   <code>benchmarks/history.json</code></footer>\n</body></html>\n");
+    page
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,5 +419,69 @@ mod tests {
         store(&path, &entries, 8).unwrap();
         assert_eq!(load(&path).unwrap().len(), 2);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn html_renders_one_chart_per_metric_and_escapes_commit_text() {
+        let commit = CommitInfo {
+            id: "deadbeefcafe".into(),
+            message: "tune <script>alert(1)</script> & more".into(),
+            timestamp: "t".into(),
+        };
+        let entries = vec![
+            make_entry(
+                &commit,
+                1,
+                &[
+                    pt("eval_core/llm_cold_candidates_per_s", 1000.0),
+                    BenchPoint {
+                        name: "fleet/fleet_scaling".into(),
+                        value: 2.5,
+                        unit: "ratio".into(),
+                    },
+                ],
+            ),
+            make_entry(
+                &commit,
+                2,
+                &[
+                    pt("eval_core/llm_cold_candidates_per_s", 1200.0),
+                    BenchPoint {
+                        name: "fleet/fleet_scaling".into(),
+                        value: 2.7,
+                        unit: "ratio".into(),
+                    },
+                ],
+            ),
+        ];
+        let page = render_html(&entries);
+        // self-contained: no external references, no scripts
+        assert!(!page.contains("<script"), "page must not carry scripts");
+        assert!(!page.contains("http://") && !page.contains("https://"), "no external assets");
+        // one <section>/<svg> pair per metric
+        assert_eq!(page.matches("<section>").count(), 2, "{page}");
+        assert_eq!(page.matches("<svg ").count(), 2);
+        // both entries plotted for each metric
+        assert_eq!(page.matches("<circle ").count(), 4);
+        // commit text is escaped, truncated id survives in tooltips
+        assert!(page.contains("&lt;script&gt;alert(1)&lt;/script&gt; &amp; more"));
+        assert!(page.contains("deadbeefc"), "9-char commit id in hover labels");
+        // gate badge split: throughput gated, fleet ride-along
+        assert!(page.contains("badge gated"));
+        assert!(page.contains("badge ride-along"));
+    }
+
+    #[test]
+    fn html_handles_empty_and_flat_histories() {
+        let empty = render_html(&[]);
+        assert!(empty.contains("0 committed runs"));
+        assert!(!empty.contains("<svg "));
+        // a flat series (zero span) must still render finite coordinates
+        let flat = render_html(&[
+            entry_with(&[pt("eval_core/sim_batch_candidates_per_s", 50.0)]),
+            entry_with(&[pt("eval_core/sim_batch_candidates_per_s", 50.0)]),
+        ]);
+        assert_eq!(flat.matches("<svg ").count(), 1);
+        assert!(!flat.contains("NaN") && !flat.contains("inf"), "{flat}");
     }
 }

@@ -78,6 +78,9 @@ pub const RULES: &[Rule] = &[
             "src/coordinator/server.rs",
             "src/coordinator/service.rs",
             "src/coordinator/supervisor.rs",
+            // the fleet owns the supervision tree's root: it is the one
+            // place allowed to stand up per-slot supervisor threads
+            "src/coordinator/fleet.rs",
         ],
     },
     Rule {

@@ -53,6 +53,10 @@ pub mod rank {
     /// first among the registry-path locks: it is held while touching
     /// individual job cores (`list`).
     pub const REGISTRY: u32 = 10;
+    /// The watch reactor's subscription list
+    /// ([`crate::coordinator::server`]) — the event thread holds it while
+    /// polling each watched job's core, so it ranks below `JOB_CORE`.
+    pub const WATCH_SUBS: u32 = 15;
     /// One job's mutable core ([`crate::coordinator::service::JobEntry`]).
     pub const JOB_CORE: u32 = 20;
     /// The connection-cap semaphore in [`crate::coordinator::server`].

@@ -16,7 +16,15 @@
 //!    error carrying a retry hint;
 //! 5. dropping the service drains gracefully — queued jobs finalize,
 //!    running jobs stop at a batch boundary, every watcher wakes;
-//! 6. an injected sampler error fails the whole gen batch cleanly.
+//! 6. an injected sampler error fails the whole gen batch cleanly;
+//! 7. in a 4-worker fleet, one worker crash retries the in-flight job and
+//!    every tenant's outcome is bit-identical to a fault-free run (per-job
+//!    seeds make retry and steal invisible to results);
+//! 8. a slot that burns its restart budget goes dead while its siblings
+//!    keep accepting and completing new work — capacity degrades,
+//!    availability does not;
+//! 9. the eval cache is process-wide: a hit produced by a *different*
+//!    tenant's session surfaces in the service's scrapeable snapshot.
 
 use diffaxe::coordinator::{
     ErrorCode, JobState, Request, Response, SearchRequest, Service, ServiceConfig,
@@ -55,6 +63,21 @@ fn wait_for_active(svc: &Service) {
     while svc.handle().metrics().snapshot().jobs_active < 1 {
         assert!(t0.elapsed() < Duration::from_secs(10), "worker never started a job");
         std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Block until no job is active and every worker dropped its busy guard
+/// (replies are sent *before* `run_job` returns, so gauges can trail the
+/// response by a scheduling quantum).
+fn wait_for_idle(svc: &Service) {
+    let t0 = Instant::now();
+    loop {
+        let s = svc.handle().metrics().snapshot();
+        if s.jobs_active == 0 && s.worker_busy == 0 {
+            return;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "fleet never went idle: {s}");
+        std::thread::sleep(Duration::from_millis(2));
     }
 }
 
@@ -255,4 +278,119 @@ fn injected_sampler_error_fails_the_gen_batch_cleanly() {
     let s = svc.handle().metrics().snapshot();
     assert_eq!(s.jobs_failed, 1);
     assert_eq!(s.worker_restarts, 0);
+}
+
+/// Run the same 8 simulator-backed jobs on a 4-worker fleet and return
+/// each job's (evals, best score) in submission order. `run_job` outcomes
+/// depend only on the per-job seed (derived from the job number), never
+/// on which worker executes the job, whether it was stolen, or how many
+/// crash-retries it took — so two runs must agree bit-for-bit.
+fn fleet_outcomes(cfg: ServiceConfig) -> (Vec<(usize, f64)>, Service) {
+    let svc = Service::start(cfg).unwrap();
+    let rxs: Vec<_> = (0..8).map(|i| svc.handle().submit(search(4 + i))).collect();
+    let outs = rxs
+        .into_iter()
+        .map(|rx| match rx.recv().unwrap() {
+            Response::Outcome(o) => (o.evals, o.best_score()),
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+    (outs, svc)
+}
+
+#[test]
+fn fleet_worker_crash_retries_and_outcomes_match_a_fault_free_run() {
+    // baseline: healthy 4-worker fleet
+    let mut base_cfg = ServiceConfig::mock();
+    base_cfg.workers = 4;
+    let (baseline, base_svc) = fleet_outcomes(base_cfg);
+    drop(base_svc);
+
+    // fault run: the first finalize anywhere in the fleet panics OUTSIDE
+    // the isolation barrier, killing that worker mid-job; the supervisor
+    // respawns it and the job re-runs under the same per-job seed
+    let mut cfg = chaos_cfg("finalize:panic=fleet-crash@0");
+    cfg.workers = 4;
+    cfg.max_attempts = 2;
+    let (outs, svc) = fleet_outcomes(cfg);
+    assert_eq!(outs, baseline, "a worker crash must not change any tenant's outcome");
+
+    wait_for_idle(&svc);
+    let s = svc.handle().metrics().snapshot();
+    assert_eq!(s.worker_restarts, 1, "{s}");
+    assert_eq!(s.jobs_completed, 8, "{s}");
+    assert_eq!((s.jobs_failed, s.jobs_shed), (0, 0), "shed/retry accounting: {s}");
+    assert_eq!((s.jobs_queued, s.jobs_active, s.worker_busy), (0, 0, 0), "{s}");
+    assert_eq!(s.workers, 4);
+    // exactly one job carries the crashed attempt; every other ran once
+    let attempts: Vec<u32> = svc.handle().registry().list().iter().map(|j| j.attempts).collect();
+    assert_eq!(attempts.iter().sum::<u32>(), 9, "{attempts:?}");
+    assert_eq!(attempts.iter().filter(|&&a| a == 2).count(), 1, "{attempts:?}");
+}
+
+#[test]
+fn fleet_dead_slot_degrades_capacity_not_availability() {
+    // startup consumes worker-start hits 0..2 (workers=2); every respawn
+    // (hits 2..) dies, so the slot that crashes at its first finalize
+    // burns the 2-restart budget and goes permanently dead
+    let mut cfg = chaos_cfg("finalize:panic=perma@0;worker-start:panic=respawn@2+100");
+    cfg.workers = 2;
+    cfg.max_attempts = 3;
+    cfg.max_worker_restarts = 2;
+    let svc = Service::start(cfg).unwrap();
+    // the triggering job either gets stolen by the sibling before the
+    // dying slot gives up (Outcome) or drains with the slot (Error) —
+    // both are terminal; what must NOT happen is a hang or a lost reply
+    match svc.handle().submit(search(4)).recv().unwrap() {
+        Response::Outcome(o) => assert_eq!(o.evals, 4),
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::Internal),
+        other => panic!("unexpected {other:?}"),
+    }
+    // wait until the restart budget is provably exhausted
+    let t0 = Instant::now();
+    while svc.handle().metrics().snapshot().worker_restarts < 2 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "slot never burned its restarts");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // unlike the single-worker case, the fleet still serves: admission
+    // routes around the dead slot to its live sibling
+    for evals in [4usize, 6, 8] {
+        match svc.handle().request(search(evals)) {
+            Response::Outcome(o) => assert_eq!(o.evals, evals),
+            other => panic!("sibling refused work: {other:?}"),
+        }
+    }
+    wait_for_idle(&svc);
+    let s = svc.handle().metrics().snapshot();
+    assert_eq!(s.worker_restarts, 2, "{s}");
+    assert!(s.jobs_completed >= 3, "{s}");
+    assert_eq!((s.jobs_queued, s.jobs_active, s.worker_busy), (0, 0, 0), "{s}");
+}
+
+#[test]
+fn shared_eval_cache_hits_cross_tenants_and_surface_in_the_snapshot() {
+    use diffaxe::design_space::{HwConfig, LoopOrder};
+    use diffaxe::dse::Session;
+    // tenant A: a plain in-process Session — it holds the same process-wide
+    // eval cache the fleet workers do
+    let tenant_a = Session::mock();
+    let hw = HwConfig::new_kb(16, 16, 64.0, 64.0, 16.0, 8, LoopOrder::from_name("mnk").unwrap());
+    let _ = tenant_a.evaluate_batch(&[hw], &gemm()); // cold: populates the shared cache
+    let _ = tenant_a.evaluate_batch(&[hw], &gemm()); // warm: a guaranteed hit
+    // tenant B: the service. Its workers mirror the *shared* cumulative
+    // cache counters into the snapshot after every evaluation burst, so
+    // tenant A's hit must be visible through the service's metrics.
+    let mut cfg = ServiceConfig::mock();
+    cfg.workers = 2;
+    let svc = Service::start(cfg).unwrap();
+    match svc.handle().request(Request::Search(SearchRequest::new(
+        Objective::Runtime { g: gemm(), target_cycles: 1e6 },
+        Budget::evals(4),
+        OptimizerKind::DiffAxE,
+    ))) {
+        Response::Outcome(o) => assert_eq!(o.evals, 4),
+        other => panic!("unexpected {other:?}"),
+    }
+    let s = svc.handle().metrics().snapshot();
+    assert!(s.cache_hits >= 1, "tenant A's cache hit must surface in the service snapshot: {s}");
 }

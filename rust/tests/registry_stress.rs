@@ -193,3 +193,60 @@ fn interleaved_submit_status_cancel_watch_under_rank_assertions() {
     assert_eq!(s.jobs_cancelled, cancelled as u64);
     assert_eq!(s.jobs_failed, 0);
 }
+
+/// The same interleaving pressure, end to end through a live 4-worker
+/// fleet: concurrent submitters race least-loaded dispatch, work stealing
+/// and the shared eval cache (instead of a single scripted driver). Every
+/// job must complete and the fleet gauges must balance back to zero.
+#[test]
+fn service_backed_stress_at_four_workers() {
+    use diffaxe::coordinator::{Request, Service, ServiceConfig};
+    use std::time::{Duration, Instant};
+    const FLEET_JOBS: usize = 64;
+    let mut cfg = ServiceConfig::mock();
+    cfg.workers = 4;
+    cfg.max_queued = 2 * FLEET_JOBS;
+    let svc = Service::start(cfg).expect("fleet starts");
+    let handle = svc.handle();
+    let submitters: Vec<_> = (0..SUBMITTERS)
+        .map(|_| {
+            let handle = handle.clone();
+            std::thread::spawn(move || {
+                let rxs: Vec<_> = (0..FLEET_JOBS / SUBMITTERS)
+                    .map(|_| handle.submit(Request::Search(request())))
+                    .collect();
+                rxs.into_iter()
+                    .map(|rx| match rx.recv().expect("fleet alive") {
+                        Response::Outcome(o) => {
+                            assert_eq!(o.stopped, StopReason::Completed);
+                            o.evals
+                        }
+                        other => panic!("unexpected {other:?}"),
+                    })
+                    .sum::<usize>()
+            })
+        })
+        .collect();
+    let mut evals = 0usize;
+    for s in submitters {
+        evals += s.join().expect("submitter");
+    }
+    assert_eq!(evals, 4 * FLEET_JOBS, "every job ran its full budget");
+
+    // replies land before the worker drops its busy guard — give the
+    // gauges a moment to settle, then demand exact balance
+    let t0 = Instant::now();
+    let snap = loop {
+        let s = handle.metrics().snapshot();
+        if (s.jobs_active, s.worker_busy) == (0, 0) || t0.elapsed() > Duration::from_secs(10) {
+            break s;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(snap.workers, 4, "{snap}");
+    assert_eq!(snap.jobs_submitted, FLEET_JOBS as u64, "{snap}");
+    assert_eq!(snap.jobs_completed, FLEET_JOBS as u64, "{snap}");
+    assert_eq!((snap.jobs_failed, snap.jobs_cancelled, snap.jobs_shed), (0, 0, 0), "{snap}");
+    assert_eq!((snap.jobs_queued, snap.jobs_active, snap.worker_busy), (0, 0, 0), "{snap}");
+    assert_eq!(snap.worker_restarts, 0, "{snap}");
+}
