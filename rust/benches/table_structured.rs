@@ -13,7 +13,7 @@
 
 use diffaxe::baselines::{BoOptions, GdOptions};
 use diffaxe::dse::llm::Platform;
-use diffaxe::dse::{Budget, Objective, OptimizerKind, Session, StructuredSpec};
+use diffaxe::dse::{Budget, Objective, OptimizerKind, SearchCtx, Session, StructuredSpec};
 use diffaxe::models::DiffAxE;
 use diffaxe::util::bench::{banner, BenchScale};
 use diffaxe::util::json::Json;
@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
         },
         Row {
             kind: OptimizerKind::DiffAxE,
-            name: "DiffAxE (per-segment)",
+            name: "DiffAxE (joint+learned-cuts)",
             budget: Budget::evals(evals),
             best_edp: 0.0,
             time_s: 0.0,
@@ -99,6 +99,20 @@ fn main() -> anyhow::Result<()> {
         row.evals = out.evals;
     }
     let rand_best = rows[0].best_edp;
+    // the pre-learned-segmentation reference: independently-conditioned
+    // per-segment pools zipped over the fixed partition — the baseline the
+    // jointly-conditioned row is gated against
+    let zip = {
+        let engine = session.engine().expect("mock/loaded session always has an engine");
+        diffaxe::dse::structured::search_engine_zip(
+            engine,
+            &SearchCtx::background(),
+            &obj,
+            &spec,
+            &Budget::evals(evals),
+            seed,
+        )?
+    };
 
     let mut t =
         Table::new(&["Method", "Best EDP (dn)", "SP vs random (up)", "cand/s (up)", "evals"]);
@@ -121,6 +135,24 @@ fn main() -> anyhow::Result<()> {
         json.insert(format!("structured_cps_{key}"), Json::Num(cps));
         json.insert(format!("structured_best_edp_{key}"), Json::Num(row.best_edp));
     }
+    {
+        let best = zip.best_score();
+        let cps = zip.evals as f64 / zip.search_time_s.max(1e-9);
+        t.row(&[
+            "DiffAxE (indep-zip)".to_string(),
+            fnum(best),
+            fnum(rand_best / best),
+            fnum(cps),
+            zip.evals.to_string(),
+        ]);
+        json.insert("structured_cps_zip".into(), Json::Num(cps));
+        json.insert("structured_best_edp_zip".into(), Json::Num(best));
+    }
+    // issue-named gate aliases for the jointly-conditioned row: cps floors
+    // as throughput, best-EDP floors with the lower-is-better direction
+    let joint_cps = rows[3].evals as f64 / rows[3].time_s.max(1e-9);
+    json.insert("structured_joint_cps".into(), Json::Num(joint_cps));
+    json.insert("structured_joint_best_edp".into(), Json::Num(rows[3].best_edp));
     println!("{}", t.render());
     let sp_diffaxe = rand_best / rows[3].best_edp;
     let sp_dosa = rand_best / rows[2].best_edp;

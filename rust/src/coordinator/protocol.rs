@@ -689,9 +689,15 @@ pub fn design_to_json(d: &DesignReport) -> Json {
 }
 
 /// [`design_to_json`] plus the additive `"segments"` array of a
-/// structured design's per-segment sub-configurations (omitted for
-/// single-config designs, so pre-structured readers see unchanged bytes).
-fn design_to_json_with_segments(d: &DesignReport, segments: Option<&[HwConfig]>) -> Json {
+/// structured design's per-segment sub-configurations and the additive
+/// `"boundaries"` array of its learned interior cut points (both omitted
+/// when empty, so pre-structured readers — and pre-learned-segmentation
+/// readers — see unchanged bytes).
+fn design_to_json_with_segments(
+    d: &DesignReport,
+    segments: Option<&[HwConfig]>,
+    boundaries: Option<&[usize]>,
+) -> Json {
     let mut fields = hw_fields(&d.hw);
     fields.push(("cycles", Json::Num(d.cycles)));
     fields.push(("power_w", Json::Num(d.power_w)));
@@ -701,6 +707,14 @@ fn design_to_json_with_segments(d: &DesignReport, segments: Option<&[HwConfig]>)
             fields.push((
                 "segments",
                 Json::Arr(segs.iter().map(|h| Json::obj(hw_fields(h))).collect()),
+            ));
+        }
+    }
+    if let Some(bounds) = boundaries {
+        if !bounds.is_empty() {
+            fields.push((
+                "boundaries",
+                Json::Arr(bounds.iter().map(|&b| Json::Num(b as f64)).collect()),
             ));
         }
     }
@@ -724,7 +738,13 @@ fn outcome_fields(o: &SearchOutcome) -> Vec<(&'static str, Json)> {
         .ranked
         .iter()
         .enumerate()
-        .map(|(i, d)| design_to_json_with_segments(d, o.segments.get(i).map(|s| s.as_slice())))
+        .map(|(i, d)| {
+            design_to_json_with_segments(
+                d,
+                o.segments.get(i).map(|s| s.as_slice()),
+                o.boundaries.get(i).map(|b| b.as_slice()),
+            )
+        })
         .collect();
     vec![
         ("optimizer", Json::Str(o.optimizer.clone())),
@@ -745,6 +765,10 @@ fn outcome_from_json(j: &Json) -> Result<SearchOutcome> {
     // normalizes to the empty (non-structured) form
     let mut segments: Vec<Vec<HwConfig>> = Vec::with_capacity(design_objs.len());
     let mut any_segments = false;
+    // additive learned-segmentation field: per-design interior cut
+    // points, same all-absent normalization as `segments`
+    let mut boundaries: Vec<Vec<usize>> = Vec::with_capacity(design_objs.len());
+    let mut any_bounds = false;
     for dj in design_objs {
         match dj.get("segments").as_arr() {
             Some(segs) => {
@@ -752,6 +776,17 @@ fn outcome_from_json(j: &Json) -> Result<SearchOutcome> {
                 segments.push(segs.iter().map(hw_from_json).collect::<Result<Vec<_>>>()?);
             }
             None => segments.push(Vec::new()),
+        }
+        match dj.get("boundaries").as_arr() {
+            Some(cuts) => {
+                any_bounds = true;
+                boundaries.push(
+                    cuts.iter()
+                        .map(|c| c.as_usize().context("design.boundaries"))
+                        .collect::<Result<Vec<_>>>()?,
+                );
+            }
+            None => boundaries.push(Vec::new()),
         }
     }
     let trace = j.get("trace").as_f64_vec().context("outcome.trace")?;
@@ -766,6 +801,7 @@ fn outcome_from_json(j: &Json) -> Result<SearchOutcome> {
             .and_then(StopReason::from_name)
             .unwrap_or(StopReason::Completed),
         segments: if any_segments { segments } else { Vec::new() },
+        boundaries: if any_bounds { boundaries } else { Vec::new() },
         ranked,
         trace,
     })
@@ -1142,6 +1178,7 @@ mod tests {
             evals: 1,
             search_time_s: 0.5,
             segments: Vec::new(),
+            boundaries: Vec::new(),
             stopped: StopReason::Completed,
         };
         let partial = SearchOutcome { stopped: StopReason::Cancelled, ..outcome.clone() };
@@ -1322,6 +1359,7 @@ mod tests {
             evals: 1,
             search_time_s: 0.5,
             segments: vec![vec![seg_a, seg_b]],
+            boundaries: vec![vec![3]],
             stopped: StopReason::Completed,
         };
         for resp in [
@@ -1331,7 +1369,8 @@ mod tests {
             let j = Json::parse(&resp.to_json().to_string()).unwrap();
             assert_eq!(Response::from_json(&j).unwrap(), resp);
         }
-        // a non-structured outcome's designs carry no "segments" key at all
+        // a non-structured outcome's designs carry no "segments" (and no
+        // "boundaries") key at all
         let plain = SearchOutcome {
             optimizer: "Random Search".into(),
             ranked: vec![d],
@@ -1339,10 +1378,43 @@ mod tests {
             evals: 1,
             search_time_s: 0.0,
             segments: Vec::new(),
+            boundaries: Vec::new(),
             stopped: StopReason::Completed,
         };
         let j = Response::Outcome(plain).to_json();
         assert!(matches!(j.get("designs").as_arr().unwrap()[0].get("segments"), Json::Null));
+        assert!(matches!(j.get("designs").as_arr().unwrap()[0].get("boundaries"), Json::Null));
+    }
+
+    #[test]
+    fn fixed_partition_structured_outcome_carries_no_boundaries_key() {
+        // learned cuts are additive: a fixed-partition structured outcome
+        // (empty `boundaries`) serializes byte-identically to pre-learned
+        // peers — its designs carry "segments" but never "boundaries"
+        let seg = HwConfig::new_kb(64, 64, 256.0, 128.0, 32.0, 16, LoopOrder::Mnk);
+        let d = DesignReport {
+            hw: HwConfig::new_kb(64, 128, 256.0, 512.0, 32.0, 16, LoopOrder::Mnk),
+            cycles: 1024.0,
+            power_w: 2.5,
+            edp: 4096.0,
+        };
+        let out = SearchOutcome {
+            optimizer: "DiffAxE".into(),
+            ranked: vec![d],
+            trace: vec![4096.0],
+            evals: 1,
+            search_time_s: 0.5,
+            segments: vec![vec![seg, seg]],
+            boundaries: Vec::new(),
+            stopped: StopReason::Completed,
+        };
+        let j = Response::Outcome(out.clone()).to_json();
+        let dj = &j.get("designs").as_arr().unwrap()[0];
+        assert!(!matches!(dj.get("segments"), Json::Null));
+        assert!(matches!(dj.get("boundaries"), Json::Null));
+        // and it still roundtrips
+        let back = Response::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, Response::Outcome(out));
     }
 
     #[test]
@@ -1372,6 +1444,7 @@ mod tests {
             evals: 1,
             search_time_s: 0.0,
             segments: Vec::new(),
+            boundaries: Vec::new(),
             stopped: StopReason::Completed,
         };
         let j = Response::Outcome(out).to_json();

@@ -69,7 +69,10 @@ use super::fleet::Fleet;
 use super::metrics::Metrics;
 use super::protocol::{ErrorCode, JobInfo, JobState, Request, Response, SearchRequest};
 use super::supervisor::{self, Msg, NoEngineError};
-use crate::design_space::{structured::constrain, HwConfig};
+use crate::design_space::{
+    structured::{constrain, ranges_from_boundaries, segment_layers_by_shape},
+    HwConfig,
+};
 use crate::dse::api::{
     DesignReport, Objective, OptimizerKind, SearchCtx, SearchEvent, SearchOutcome, Session,
     StopReason,
@@ -766,13 +769,19 @@ impl Drop for Service {
 /// diffusion call serves one family: slots in a `sample_runtime` call all
 /// carry `(p_norm, shape)` conditions, slots in a `sample_class` call all
 /// carry `(class, shape)` — the batcher packs each family separately and
-/// issues at most one call per family per round.
+/// issues at most one call per family per round. Structured work is its
+/// own family: every joint candidate's segment conditions must travel in
+/// a single `sample_joint` call (one request's budget + segment shapes
+/// condition that call), so structured requests never share a sampler
+/// call with anything — not even each other.
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum Family {
     /// runtime-conditioned sampler (`sample_runtime`)
     Runtime,
     /// low-EDP class sampler (`sample_class`, class 0)
     Class,
+    /// jointly-conditioned structured sampler (`sample_joint`)
+    Structured,
 }
 
 /// What one batched generation request asks the sampler for.
@@ -785,17 +794,19 @@ enum GenWork {
     /// rotation the direct path spreads its budget over)
     Llm { layers: Vec<Gemm>, cursor: usize },
     /// `Objective::Structured{Edp,Perf}`: each joint candidate consumes
-    /// `reps.len()` *contiguous* slots — one per segment, conditioned on
-    /// that segment's dominant (max-MACs) layer — then is constrained
+    /// `reps.len()` *contiguous* slots of one `sample_joint` call — one
+    /// per segment, conditioned on that segment's dominant (max-MACs)
+    /// layer under the learned cut points `bounds` — then is constrained
     /// onto the shared budget and evaluated whole-model
-    Structured { spec: StructuredSpec, reps: Vec<Gemm> },
+    Structured { spec: StructuredSpec, reps: Vec<Gemm>, bounds: Vec<usize> },
 }
 
 impl GenWork {
     fn family(&self) -> Family {
         match self {
             GenWork::Runtime { .. } => Family::Runtime,
-            GenWork::Llm { .. } | GenWork::Structured { .. } => Family::Class,
+            GenWork::Llm { .. } => Family::Class,
+            GenWork::Structured { .. } => Family::Structured,
         }
     }
 }
@@ -812,6 +823,9 @@ struct PendingGen {
     /// only for structured work (the outcome carries the heterogeneous
     /// per-segment configs alongside the envelope reports)
     segs: Vec<Vec<HwConfig>>,
+    /// per-design learned segment boundaries, parallel to `segs` —
+    /// populated only for structured work with learned cuts
+    bounds: Vec<Vec<usize>>,
     /// running best score over `acc` (heartbeats stay O(1) per burst)
     best: f64,
     entry: Arc<JobEntry>,
@@ -864,7 +878,15 @@ fn gen_work(engine: &DiffAxE, objective: &Objective, gen_batch: usize) -> Option
                 return None;
             }
             let wl = spec.workload();
-            let parts = structured::partition(wl.gemms.len(), s);
+            // learned segmentation: cluster layers by shape so segment
+            // cuts land on shape-change points, then condition each
+            // segment's slots on its dominant layer under those cuts
+            let bounds = segment_layers_by_shape(&wl.gemms, s);
+            let parts = if bounds.is_empty() {
+                structured::partition(wl.gemms.len(), s)
+            } else {
+                ranges_from_boundaries(&bounds, wl.gemms.len())
+            };
             let reps = parts
                 .iter()
                 .map(|r| {
@@ -874,7 +896,7 @@ fn gen_work(engine: &DiffAxE, objective: &Objective, gen_batch: usize) -> Option
                         .expect("non-empty segment")
                 })
                 .collect();
-            Some(GenWork::Structured { spec: *spec, reps })
+            Some(GenWork::Structured { spec: *spec, reps, bounds })
         }
         Objective::MinEdp { .. } | Objective::MaxPerf { .. } => None,
     }
@@ -997,6 +1019,7 @@ pub(crate) fn worker_main(
                         objective: entry.request.objective,
                         acc: Vec::new(),
                         segs: Vec::new(),
+                        bounds: Vec::new(),
                         best: f64::INFINITY,
                         entry: entry.clone(),
                         joined: Instant::now(),
@@ -1156,11 +1179,21 @@ fn finish_pending(
     metrics.record_request(latency_s * 1e6, p.acc.len());
     // `segs` is empty for non-structured work; for structured work it is
     // parallel to `acc`, so the ranked outcome carries the heterogeneous
-    // per-segment configurations alongside the envelope reports
-    let outcome =
-        SearchOutcome::from_reports_with_segments("DiffAxE", &p.objective, p.acc, p.segs, latency_s)
-            .with_stopped(stopped)
-            .truncated(p.top_k);
+    // per-segment configurations alongside the envelope reports. All-empty
+    // cut vectors collapse to the canonical fixed partition (no
+    // `boundaries` on the wire), keeping pre-learned-segmentation
+    // outcomes byte-stable.
+    let bounds = if p.bounds.iter().all(|b| b.is_empty()) { Vec::new() } else { p.bounds };
+    let outcome = SearchOutcome::from_reports_with_structure(
+        "DiffAxE",
+        &p.objective,
+        p.acc,
+        p.segs,
+        bounds,
+        latency_s,
+    )
+    .with_stopped(stopped)
+    .truncated(p.top_k);
     let state =
         if stopped == StopReason::Cancelled { JobState::Cancelled } else { JobState::Done };
     let resp = Response::Outcome(outcome);
@@ -1176,6 +1209,7 @@ fn finish_pending(
 fn score_draws(session: &Session, p: &mut PendingGen, cfgs: &[HwConfig]) -> usize {
     let mut reports: Vec<DesignReport> = Vec::new();
     let mut segs: Vec<Vec<HwConfig>> = Vec::new();
+    let mut cand_bounds: Vec<Vec<usize>> = Vec::new();
     match &p.work {
         GenWork::Runtime { g, .. } => {
             // memoized + pooled hot path: recurring rounded designs
@@ -1191,27 +1225,32 @@ fn score_draws(session: &Session, p: &mut PendingGen, cfgs: &[HwConfig]) -> usiz
             // through the shared cache
             reports = p.objective.evaluate_all(cfgs);
         }
-        GenWork::Structured { spec, reps } => {
+        GenWork::Structured { spec, reps, bounds } => {
             // contiguous slot groups form joint candidates: one segment
-            // config per slot, constrained onto the shared budget, then
-            // evaluated whole-model (the envelope report ranks; the
-            // segment vector rides along for the outcome)
+            // config per slot — already correlated through the shared
+            // budget by `sample_joint` — re-constrained (idempotent) and
+            // evaluated whole-model under the learned cuts (the envelope
+            // report ranks; segment vector + cuts ride along for the
+            // outcome)
             for group in cfgs.chunks_exact(reps.len()) {
                 let cfg = constrain(&spec.budget, group.to_vec());
-                let d = structured::eval_structured(spec, &cfg);
+                let d = structured::eval_structured_at(spec, &cfg, bounds);
                 reports.push(d.report());
                 segs.push(d.config.segments);
+                cand_bounds.push(bounds.clone());
             }
         }
     }
     let evaluated = reports.len();
     let mut segs = segs.into_iter();
+    let mut cand_bounds = cand_bounds.into_iter();
     for d in reports {
         let score = p.objective.score_report(&d);
         p.best = p.best.min(score);
         p.acc.push(d);
         if let Some(sv) = segs.next() {
             p.segs.push(sv);
+            p.bounds.push(cand_bounds.next().unwrap_or_default());
         }
     }
     evaluated
@@ -1244,9 +1283,9 @@ fn flush_gen_batch(
         }
         for family in [Family::Runtime, Family::Class] {
             // pack this family's waiters: whole requests while they fit,
-            // oversized ones split across rounds. A structured request
-            // takes `n_segments` contiguous slots per joint candidate and
-            // never a partial group.
+            // oversized ones split across rounds. Structured work never
+            // packs here — its joint conditioning needs one `sample_joint`
+            // call per request, issued after the shared-call families.
             let mut rt_slots: Vec<(f32, [f32; 3])> = Vec::new();
             let mut class_slots: Vec<(i32, [f32; 3])> = Vec::new();
             let mut owners: Vec<usize> = Vec::new(); // slot -> pending idx
@@ -1273,16 +1312,8 @@ fn flush_gen_batch(
                             owners.push(i);
                         }
                     }
-                    GenWork::Structured { reps, .. } => {
-                        // `gen_work` guarantees reps.len() <= gen_batch,
-                        // so at least one joint candidate fits a round
-                        for _ in 0..remaining.min(avail / reps.len()) {
-                            for rep in reps.iter() {
-                                class_slots.push((0, rep.norm_vec()));
-                                owners.push(i);
-                            }
-                        }
-                    }
+                    // family() filters structured work out of this loop
+                    GenWork::Structured { .. } => {}
                 }
             }
             if owners.is_empty() {
@@ -1305,6 +1336,7 @@ fn flush_gen_batch(
                         rng::derive_u32(seed, *stream),
                         &class_slots,
                     ),
+                    Family::Structured => unreachable!("structured work never packs here"),
                 })
                 .and_then(|configs| session.fault_check(FaultSite::BatchEval).map(|()| configs));
             metrics.record_sampler_call(t.elapsed().as_secs_f64() * 1e6, owners.len(), b);
@@ -1348,8 +1380,17 @@ fn flush_gen_batch(
                     }
                 }
                 Err(e) => {
+                    // blast-radius containment: a failed sampler call
+                    // fails only the requests that owned slots in *this*
+                    // round's call. Co-pending work from other families —
+                    // or from this family but not packed this round —
+                    // keeps its accumulated draws and stays queued.
                     metrics.record_error();
-                    for p in pending.drain(..) {
+                    let mut failed: Vec<usize> = owners.clone();
+                    failed.sort_unstable();
+                    failed.dedup();
+                    for idx in failed.into_iter().rev() {
+                        let p = pending.remove(idx);
                         let resp = Response::error(
                             ErrorCode::Internal,
                             format!("sampler failed: {e:#}"),
@@ -1359,7 +1400,100 @@ fn flush_gen_batch(
                             let _ = reply.send(resp);
                         }
                     }
-                    return;
+                }
+            }
+        }
+        flush_joint_round(session, engine, registry, pending, seed, stream, metrics, b);
+    }
+}
+
+/// One batcher round of jointly-conditioned structured sampling: each
+/// structured request issues its *own* `sample_joint` call carrying all
+/// of its segment conditions plus the shared budget, so every joint
+/// candidate's segment draws are correlated through one call — a joint
+/// candidate is never assembled across calls, and two structured requests
+/// never share a call (their budgets condition differently).
+#[allow(clippy::too_many_arguments)] // lint:allow(too_many_arguments) batcher round plumbing mirrors flush_gen_batch
+fn flush_joint_round(
+    session: &Session,
+    engine: &DiffAxE,
+    registry: &Arc<JobRegistry>,
+    pending: &mut Vec<PendingGen>,
+    seed: u64,
+    stream: &mut u64,
+    metrics: &Arc<Metrics>,
+    b: usize,
+) {
+    let mut i = 0;
+    while i < pending.len() {
+        let (take, result) = {
+            let p = &pending[i];
+            let GenWork::Structured { spec, reps, .. } = &p.work else {
+                i += 1;
+                continue;
+            };
+            let s = reps.len();
+            // `gen_work` guarantees reps.len() <= gen_batch, so at least
+            // one joint candidate fits a call — `take` is 0 only when the
+            // request is already fully served
+            let take = p.n.saturating_sub(p.acc.len()).min(b / s.max(1));
+            if take == 0 {
+                let p = pending.remove(i);
+                finish_pending(registry, metrics, p, StopReason::Completed);
+                continue;
+            }
+            let conds: Vec<(i32, [f32; 3])> = reps.iter().map(|g| (0, g.norm_vec())).collect();
+            *stream += 1;
+            let t = Instant::now();
+            let result = session
+                .fault_check(FaultSite::EngineSample)
+                .and_then(|()| {
+                    engine.sample_joint(
+                        ClassMode::Edp,
+                        rng::derive_u32(seed, *stream),
+                        &spec.budget,
+                        &conds,
+                        take,
+                    )
+                })
+                .and_then(|groups| session.fault_check(FaultSite::BatchEval).map(|()| groups));
+            metrics.record_sampler_call(t.elapsed().as_secs_f64() * 1e6, take * s, b);
+            (take, result)
+        };
+        match result {
+            Ok(groups) => {
+                debug_assert_eq!(groups.len(), take);
+                let flat: Vec<HwConfig> = groups.into_iter().flatten().collect();
+                let evaluated = score_draws(session, &mut pending[i], &flat);
+                metrics.record_evaluations(evaluated);
+                let cs = session.cache_stats();
+                metrics.record_cache(cs.hits, cs.misses);
+                let p = &pending[i];
+                registry.publish(
+                    &p.entry,
+                    SearchEvent {
+                        evals: p.acc.len(),
+                        best_score: p.best,
+                        elapsed_s: p.entry.submitted.elapsed().as_secs_f64(),
+                    },
+                );
+                if pending[i].acc.len() >= pending[i].n {
+                    let p = pending.remove(i);
+                    finish_pending(registry, metrics, p, StopReason::Completed);
+                } else {
+                    i += 1;
+                }
+            }
+            Err(e) => {
+                // same containment contract as the shared-call families:
+                // only this request owned the failed call's slots
+                metrics.record_error();
+                let p = pending.remove(i);
+                let resp =
+                    Response::error(ErrorCode::Internal, format!("sampler failed: {e:#}"));
+                registry.finalize(&p.entry, JobState::Failed, resp.clone());
+                if let Some(reply) = p.reply {
+                    let _ = reply.send(resp);
                 }
             }
         }

@@ -28,6 +28,7 @@ use super::params::{
     DIM_MIN,
 };
 use crate::util::rng::Pcg32;
+use crate::workload::gemm::Gemm;
 
 /// Shared accelerator envelope every segment configuration must fit in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -242,6 +243,190 @@ pub fn cardinality(budget: &SharedBudget, segments: usize) -> f64 {
     per_segment.powi(segments as i32) * bw_choices
 }
 
+// ---------------------------------------------------------------------------
+// learned segmentation: boundary variables over the layer axis
+// ---------------------------------------------------------------------------
+//
+// A segmentation of `n_layers` contiguous layers into `s` segments is the
+// (s-1)-vector of interior cut points `1 ≤ b₁ < b₂ < … < b_{s-1} ≤ n-1`
+// (segment i is `[b_{i-1}, b_i)` with b₀ = 0, b_s = n). The cuts join the
+// S×[`NORM_DIM`] config lanes in the structured encoding as `s-1` extra
+// lanes, each normalized to `b/n ∈ (0, 1)`, so the continuous optimizers
+// (BO/GD/Polaris) and the diffusion sampler search segmentation and
+// configuration jointly — paper §V via AIRCHITECT v2's unified
+// representation. [`round_boundaries`] is the projection (deterministic,
+// idempotent) every decode runs through.
+
+/// Number of boundary lanes for `segments` segments (`s - 1` interior cuts).
+pub fn boundary_dim(segments: usize) -> usize {
+    segments.saturating_sub(1)
+}
+
+/// Width of the joint (configs + boundaries) structured encoding.
+pub fn structured_dim_with_boundaries(segments: usize) -> usize {
+    structured_dim(segments) + boundary_dim(segments)
+}
+
+/// Repair an arbitrary interior-cut vector into a valid segmentation of
+/// `n_layers` layers: each cut clamped into `[1, n-1]`, sorted, then made
+/// strictly increasing by a forward max-pass and a backward min-pass.
+/// Deterministic and idempotent (a valid vector passes through unchanged).
+/// Requires `bounds.len() < n_layers` — i.e. `segments ≤ n_layers`, which
+/// [`crate::dse::structured::StructuredSpec`] guarantees by capping the
+/// segment count at the workload's layer count.
+pub fn round_boundaries(bounds: &[usize], n_layers: usize) -> Vec<usize> {
+    let k = bounds.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    assert!(
+        k < n_layers,
+        "{k} interior cuts need at least {} layers, got {n_layers}",
+        k + 1
+    );
+    let mut b: Vec<usize> = bounds.iter().map(|&x| x.clamp(1, n_layers - 1)).collect();
+    b.sort_unstable();
+    for i in 0..k {
+        let floor = if i == 0 { 1 } else { b[i - 1] + 1 };
+        b[i] = b[i].max(floor);
+    }
+    for i in (0..k).rev() {
+        let ceil = if i == k - 1 { n_layers - 1 } else { b[i + 1] - 1 };
+        b[i] = b[i].min(ceil);
+    }
+    b
+}
+
+/// True iff `bounds` is a valid strictly-increasing interior-cut vector
+/// for `n_layers` layers.
+pub fn boundaries_valid(bounds: &[usize], n_layers: usize) -> bool {
+    bounds.iter().all(|&b| (1..n_layers).contains(&b)) && bounds.windows(2).all(|w| w[0] < w[1])
+}
+
+/// The canonical near-even segmentation's interior cuts — the same cut
+/// points [`crate::dse::structured::partition`] uses, expressed as
+/// boundary variables (the search's default/seed segmentation).
+pub fn default_boundaries(n_layers: usize, segments: usize) -> Vec<usize> {
+    if segments <= 1 || n_layers == 0 {
+        return Vec::new();
+    }
+    let s = segments.min(n_layers);
+    round_boundaries(&(1..s).map(|i| i * n_layers / s).collect::<Vec<_>>(), n_layers)
+}
+
+/// Layer ranges induced by an interior-cut vector: `[0, b₁), [b₁, b₂), …,
+/// [b_{s-1}, n)`. With valid boundaries every range is non-empty.
+pub fn ranges_from_boundaries(bounds: &[usize], n_layers: usize) -> Vec<std::ops::Range<usize>> {
+    let mut starts = Vec::with_capacity(bounds.len() + 1);
+    starts.push(0);
+    starts.extend_from_slice(bounds);
+    let mut ends = bounds.to_vec();
+    ends.push(n_layers);
+    starts.into_iter().zip(ends).map(|(a, b)| a..b).collect()
+}
+
+/// Encode interior cuts as normalized lanes (`b / n_layers ∈ (0, 1)`).
+pub fn encode_boundaries(bounds: &[usize], n_layers: usize) -> Vec<f32> {
+    assert!(n_layers > 0, "cannot encode boundaries over an empty workload");
+    bounds.iter().map(|&b| b as f32 / n_layers as f32).collect()
+}
+
+/// Decode normalized boundary lanes back into a valid interior-cut
+/// vector: round each lane to the nearest layer index, then repair via
+/// [`round_boundaries`]. Exact inverse of [`encode_boundaries`] on
+/// already-valid cut vectors.
+pub fn decode_boundaries(v: &[f32], n_layers: usize) -> Vec<usize> {
+    let raw: Vec<usize> = v
+        .iter()
+        .map(|&x| (x.clamp(0.0, 1.0) * n_layers as f32).round() as usize)
+        .collect();
+    round_boundaries(&raw, n_layers)
+}
+
+/// Number of ways to cut `n_layers` contiguous layers into `segments`
+/// non-empty segments: the composition count `C(n-1, s-1)`. This is the
+/// factor learned segmentation multiplies into the joint cardinality.
+pub fn composition_count(n_layers: usize, segments: usize) -> f64 {
+    if segments == 0 || segments > n_layers {
+        return 0.0;
+    }
+    let (n, k) = ((n_layers - 1) as f64, (segments - 1) as u64);
+    (0..k).fold(1.0, |acc, i| acc * (n - i as f64) / (i + 1) as f64)
+}
+
+/// [`cardinality`] grown by the segmentation choices: the joint
+/// (configuration × boundary) space the learned-segmentation search
+/// explores.
+pub fn cardinality_with_boundaries(
+    budget: &SharedBudget,
+    segments: usize,
+    n_layers: usize,
+) -> f64 {
+    cardinality(budget, segments) * composition_count(n_layers, segments).max(1.0)
+}
+
+/// Joint encoding: the S×[`NORM_DIM`] config lanes followed by the `s-1`
+/// boundary lanes ([`structured_dim_with_boundaries`] wide).
+pub fn encode_structured_with_boundaries(
+    cfg: &StructuredConfig,
+    bounds: &[usize],
+    n_layers: usize,
+) -> Vec<f32> {
+    assert_eq!(bounds.len(), boundary_dim(cfg.segments.len()), "boundary/segment mismatch");
+    let mut v = encode_structured(cfg);
+    v.extend(encode_boundaries(bounds, n_layers));
+    v
+}
+
+/// Decode a joint vector back into `(configs, boundaries)`: the config
+/// lanes through [`decode_structured`] (per-segment rounding, then
+/// [`constrain`]), the boundary lanes through [`decode_boundaries`].
+/// Exact inverse of [`encode_structured_with_boundaries`] on constrained
+/// configs with valid cuts.
+pub fn decode_structured_with_boundaries(
+    v: &[f32],
+    budget: &SharedBudget,
+    segments: usize,
+    n_layers: usize,
+) -> (StructuredConfig, Vec<usize>) {
+    assert_eq!(
+        v.len(),
+        structured_dim_with_boundaries(segments),
+        "joint vector must be {} wide for {segments} segments",
+        structured_dim_with_boundaries(segments)
+    );
+    let (cfg_lanes, bound_lanes) = v.split_at(structured_dim(segments));
+    (decode_structured(cfg_lanes, budget, segments), decode_boundaries(bound_lanes, n_layers))
+}
+
+/// Shape-clustered segmentation: snap each canonical near-even cut to the
+/// nearest *shape change* in the layer sequence (an index `i` with
+/// `shapes[i] ≠ shapes[i-1]`), so segment boundaries align with where the
+/// workload's GEMM dimensions actually switch (attention → FFN etc.).
+/// Falls back to the even cut when no shape change is available, and
+/// repairs collisions via [`round_boundaries`]. Deterministic.
+pub fn segment_layers_by_shape(shapes: &[Gemm], segments: usize) -> Vec<usize> {
+    let n = shapes.len();
+    if segments <= 1 || n == 0 {
+        return Vec::new();
+    }
+    let change_points: Vec<usize> =
+        (1..n).filter(|&i| shapes[i] != shapes[i - 1]).collect();
+    let even = default_boundaries(n, segments);
+    let snapped: Vec<usize> = even
+        .iter()
+        .map(|&cut| {
+            change_points
+                .iter()
+                .copied()
+                // ties resolve to the earlier change point: deterministic
+                .min_by_key(|&cp| (cp.abs_diff(cut), cp))
+                .unwrap_or(cut)
+        })
+        .collect();
+    round_boundaries(&snapped, n)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +509,93 @@ mod tests {
         assert_eq!(env.wt_b, a.wt_b);
         assert_eq!(env.op_b, a.op_b);
         assert_eq!(env.loop_order, LoopOrder::Mnk);
+    }
+
+    #[test]
+    fn round_boundaries_repairs_and_is_idempotent() {
+        let mut rng = Pcg32::seeded(54);
+        for _ in 0..500 {
+            let n = rng.int_range(2, 24) as usize;
+            let k = rng.int_range(1, (n - 1) as i64) as usize;
+            let raw: Vec<usize> = (0..k).map(|_| rng.int_range(0, 40) as usize).collect();
+            let b = round_boundaries(&raw, n);
+            assert!(boundaries_valid(&b, n), "{raw:?} -> {b:?} invalid over n={n}");
+            assert_eq!(round_boundaries(&b, n), b, "not idempotent on {b:?}");
+            let ranges = ranges_from_boundaries(&b, n);
+            assert_eq!(ranges.len(), k + 1);
+            assert!(ranges.iter().all(|r| !r.is_empty()));
+            assert_eq!(ranges.last().unwrap().end, n);
+        }
+    }
+
+    #[test]
+    fn boundary_encode_decode_roundtrip() {
+        let mut rng = Pcg32::seeded(55);
+        for _ in 0..300 {
+            let n = rng.int_range(3, 32) as usize;
+            let k = rng.int_range(1, (n - 1) as i64) as usize;
+            let raw: Vec<usize> = (0..k).map(|_| rng.int_range(0, n as i64) as usize).collect();
+            let b = round_boundaries(&raw, n);
+            let v = encode_boundaries(&b, n);
+            assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+            assert_eq!(decode_boundaries(&v, n), b);
+        }
+    }
+
+    #[test]
+    fn default_boundaries_match_even_partition_cuts() {
+        assert_eq!(default_boundaries(6, 3), vec![2, 4]);
+        assert_eq!(default_boundaries(7, 3), vec![2, 4]);
+        assert_eq!(default_boundaries(4, 4), vec![1, 2, 3]);
+        assert!(default_boundaries(5, 1).is_empty());
+        assert!(default_boundaries(0, 3).is_empty());
+    }
+
+    #[test]
+    fn composition_count_grows_cardinality() {
+        assert_eq!(composition_count(6, 1), 1.0);
+        assert_eq!(composition_count(6, 3), 10.0); // C(5, 2)
+        assert_eq!(composition_count(4, 4), 1.0);
+        assert_eq!(composition_count(3, 4), 0.0);
+        let b = SharedBudget::unconstrained();
+        let plain = cardinality(&b, 3);
+        assert!((cardinality_with_boundaries(&b, 3, 12) / plain - composition_count(12, 3)).abs()
+            < 1e-6 * composition_count(12, 3));
+    }
+
+    #[test]
+    fn joint_encode_decode_roundtrip() {
+        let budget = SharedBudget { pe: 4096, buf_b: 512 * 1024, bw: 16 };
+        let mut rng = Pcg32::seeded(56);
+        let n_layers = 12;
+        for _ in 0..200 {
+            let cfg = sample_structured(&mut rng, &budget, 3);
+            let raw: Vec<usize> =
+                (0..2).map(|_| rng.int_range(0, n_layers as i64) as usize).collect();
+            let bounds = round_boundaries(&raw, n_layers);
+            let v = encode_structured_with_boundaries(&cfg, &bounds, n_layers);
+            assert_eq!(v.len(), structured_dim_with_boundaries(3));
+            let (cfg2, bounds2) = decode_structured_with_boundaries(&v, &budget, 3, n_layers);
+            assert_eq!(cfg2, cfg);
+            assert_eq!(bounds2, bounds);
+        }
+    }
+
+    #[test]
+    fn shape_clustering_snaps_to_shape_changes() {
+        // 6 layers: 3 of shape A, 2 of shape B, 1 of shape C — change
+        // points at 3 and 5. Even cuts for s=3 are [2, 4]; both snap.
+        let a = Gemm::new(64, 256, 256);
+        let b = Gemm::new(64, 256, 1024);
+        let c = Gemm::new(128, 512, 512);
+        let shapes = vec![a, a, a, b, b, c];
+        assert_eq!(segment_layers_by_shape(&shapes, 3), vec![3, 5]);
+        // uniform shapes: no change points, falls back to even cuts
+        let uniform = vec![a; 6];
+        assert_eq!(segment_layers_by_shape(&uniform, 3), default_boundaries(6, 3));
+        // degenerate inputs
+        assert!(segment_layers_by_shape(&shapes, 1).is_empty());
+        assert!(segment_layers_by_shape(&[], 3).is_empty());
     }
 
     #[test]

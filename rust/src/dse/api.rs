@@ -529,6 +529,12 @@ pub struct SearchOutcome {
     /// `segments[i]` its per-segment sub-configurations). Empty for
     /// single-config objectives.
     pub segments: Vec<Vec<HwConfig>>,
+    /// Learned layer-segmentation cut points of structured-DSE designs,
+    /// parallel to `ranked` (`boundaries[i]` are the interior layer
+    /// indices where `segments[i]`'s segments begin). Empty when the
+    /// search used the canonical fixed partition (or for single-config
+    /// objectives).
+    pub boundaries: Vec<Vec<usize>>,
     /// Why the search returned; anything but [`StopReason::Completed`]
     /// marks this outcome as partial (still ranked, still well-formed).
     pub stopped: StopReason,
@@ -555,9 +561,35 @@ impl SearchOutcome {
         segments: Vec<Vec<HwConfig>>,
         search_time_s: f64,
     ) -> SearchOutcome {
+        Self::from_reports_with_structure(
+            optimizer,
+            objective,
+            reports,
+            segments,
+            Vec::new(),
+            search_time_s,
+        )
+    }
+
+    /// [`SearchOutcome::from_reports_with_segments`] additionally carrying
+    /// the learned segmentation cut points (the learned-boundary
+    /// structured-DSE constructor): `boundaries` is parallel to `reports`
+    /// (or empty) and is ranked in lockstep with them.
+    pub fn from_reports_with_structure(
+        optimizer: &str,
+        objective: &Objective,
+        reports: Vec<DesignReport>,
+        segments: Vec<Vec<HwConfig>>,
+        boundaries: Vec<Vec<usize>>,
+        search_time_s: f64,
+    ) -> SearchOutcome {
         debug_assert!(
             segments.is_empty() || segments.len() == reports.len(),
             "segments must be parallel to reports"
+        );
+        debug_assert!(
+            boundaries.is_empty() || boundaries.len() == reports.len(),
+            "boundaries must be parallel to reports"
         );
         let trace: Vec<f64> = reports.iter().map(|d| objective.score_report(d)).collect();
         let mut order: Vec<usize> = (0..reports.len()).collect();
@@ -570,6 +602,11 @@ impl SearchOutcome {
         } else {
             order.iter().map(|&i| segments[i].clone()).collect()
         };
+        let boundaries = if boundaries.is_empty() {
+            Vec::new()
+        } else {
+            order.iter().map(|&i| boundaries[i].clone()).collect()
+        };
         SearchOutcome {
             optimizer: optimizer.to_string(),
             evals: reports.len(),
@@ -577,6 +614,7 @@ impl SearchOutcome {
             trace,
             search_time_s,
             segments,
+            boundaries,
             stopped: StopReason::Completed,
         }
     }
@@ -591,6 +629,7 @@ impl SearchOutcome {
             evals: 0,
             search_time_s: 0.0,
             segments: Vec::new(),
+            boundaries: Vec::new(),
             stopped,
         }
     }
@@ -626,6 +665,7 @@ impl SearchOutcome {
     pub fn truncated(mut self, k: usize) -> SearchOutcome {
         self.ranked.truncate(k);
         self.segments.truncate(k);
+        self.boundaries.truncate(k);
         self
     }
 }

@@ -27,13 +27,17 @@
 //!
 //! # Strategies
 //!
-//! * [`search_engine`] — the DiffAxE engine with **per-segment
-//!   conditioning**: low-EDP class samples conditioned on each segment's
-//!   dominant layer shape, zipped into joint candidates.
+//! * [`search_engine`] — the DiffAxE engine with **joint conditioning
+//!   over the learned segmentation space**: every round proposes segment
+//!   boundaries (canonical cuts, shape-clustered cuts, then random cuts)
+//!   and draws correlated per-segment groups in one
+//!   [`DiffAxE::sample_joint`] call under the shared budget.
+//! * [`search_engine_zip`] — the fixed-partition, independently-zipped
+//!   reference the joint path is measured against.
 //! * [`search_fd`] — finite-difference GD over the concatenated
-//!   per-segment encoding (`DosaGd` on the coarse training grid,
-//!   `VanillaGd` on the fine grid).
-//! * [`search_bo`] — vanilla BO over the same encoding.
+//!   per-segment encoding with the boundary lanes appended (`DosaGd` on
+//!   the coarse training grid, `VanillaGd` on the fine grid).
+//! * [`search_bo`] — vanilla BO over the same joint encoding.
 //! * [`search_latent_bo`] — BO over the concatenated per-segment *latent*
 //!   encoding: a pool of random designs encoded through the engine in one
 //!   batched call, candidates decoded per segment and projected into the
@@ -54,8 +58,10 @@ use super::eval::{par_map, EvalCache};
 use super::llm::Platform;
 use crate::baselines::{bo, gd, BoOptions, FixedArch, GdOptions};
 use crate::design_space::structured::{
-    cardinality, constrain, decode_structured, encode_structured, sample_structured,
-    structured_dim, SharedBudget, StructuredConfig,
+    boundary_dim, cardinality_with_boundaries, constrain, decode_boundaries,
+    decode_structured_with_boundaries, default_boundaries, encode_structured_with_boundaries,
+    ranges_from_boundaries, round_boundaries, sample_structured, segment_layers_by_shape,
+    structured_dim_with_boundaries, SharedBudget, StructuredConfig,
 };
 use crate::design_space::{encode_norm, HwConfig, TargetSpace};
 use crate::models::{ClassMode, DiffAxE};
@@ -125,9 +131,16 @@ impl StructuredSpec {
         (self.segments as usize).min(self.workload().gemms.len())
     }
 
-    /// Joint-space cardinality of this spec (the O(10^17) scale claim).
+    /// Joint-space cardinality of this spec (the O(10^17) scale claim),
+    /// including the segmentation choices: the per-segment configuration
+    /// space times the composition count of cutting the layer sequence
+    /// into that many contiguous segments.
     pub fn cardinality(&self) -> f64 {
-        cardinality(&self.budget, self.n_segments().max(1))
+        cardinality_with_boundaries(
+            &self.budget,
+            self.n_segments().max(1),
+            self.workload().gemms.len(),
+        )
     }
 }
 
@@ -146,11 +159,13 @@ impl std::fmt::Display for StructuredSpec {
 }
 
 /// Contiguous near-even layer partition: segment `s` covers
-/// `[s·n/k, (s+1)·n/k)`. Every segment is non-empty when `k ≤ n`.
+/// `[s·n/k, (s+1)·n/k)`. The segment count is clamped to the layer count,
+/// so every emitted segment is non-empty — `k > n` collapses to one
+/// segment per layer instead of emitting empty ranges (direct callers get
+/// the same guard [`StructuredSpec::n_segments`] gives the specs).
 pub fn partition(n_layers: usize, segments: usize) -> Vec<std::ops::Range<usize>> {
-    (0..segments)
-        .map(|s| (s * n_layers / segments)..((s + 1) * n_layers / segments))
-        .collect()
+    let k = segments.min(n_layers);
+    (0..k).map(|s| (s * n_layers / k)..((s + 1) * n_layers / k)).collect()
 }
 
 /// One evaluated structured design.
@@ -180,6 +195,22 @@ impl StructuredDesign {
     }
 }
 
+/// The segment ranges a candidate's layers are grouped by: its learned
+/// boundaries when it carries any, the canonical near-even [`partition`]
+/// otherwise (empty `bounds` means "fixed partition" everywhere).
+fn parts_for(
+    wl: &ModelWorkload,
+    cfg: &StructuredConfig,
+    bounds: &[usize],
+) -> Vec<std::ops::Range<usize>> {
+    if bounds.is_empty() {
+        partition(wl.gemms.len(), cfg.segments.len())
+    } else {
+        debug_assert_eq!(bounds.len() + 1, cfg.segments.len(), "boundary/segment mismatch");
+        ranges_from_boundaries(bounds, wl.gemms.len())
+    }
+}
+
 /// The one evaluation routine, parameterized by the layer simulator so
 /// the memoized and scalar paths share every arithmetic step (fixed
 /// segment-major accumulation order ⇒ bit-identical results).
@@ -187,13 +218,13 @@ fn eval_with(
     spec: &StructuredSpec,
     wl: &ModelWorkload,
     cfg: &StructuredConfig,
+    parts: &[std::ops::Range<usize>],
     mut simulate: impl FnMut(&HwConfig, &Gemm) -> SimResult,
 ) -> StructuredDesign {
-    let parts = partition(wl.gemms.len(), cfg.segments.len());
     let mut total: Option<SimResult> = None;
     let mut e_dyn = 0.0f64;
     let mut e_static = 0.0f64;
-    for (seg_hw, range) in cfg.segments.iter().zip(&parts) {
+    for (seg_hw, range) in cfg.segments.iter().zip(parts) {
         let mut seg: Option<SimResult> = None;
         for li in range.clone() {
             let s = simulate(seg_hw, &wl.gemms[li]);
@@ -240,8 +271,9 @@ fn eval_structured_cached(
     spec: &StructuredSpec,
     wl: &ModelWorkload,
     cfg: &StructuredConfig,
+    bounds: &[usize],
 ) -> StructuredDesign {
-    let parts = partition(wl.gemms.len(), cfg.segments.len());
+    let parts = parts_for(wl, cfg, bounds);
     let pairs: Vec<(HwConfig, Gemm)> = cfg
         .segments
         .iter()
@@ -250,22 +282,44 @@ fn eval_structured_cached(
         .collect();
     let sims = EvalCache::global().simulate_pairs(&pairs);
     let mut next = sims.into_iter();
-    eval_with(spec, wl, cfg, move |_, _| {
+    eval_with(spec, wl, cfg, &parts, move |_, _| {
         next.next().expect("one pre-simulated result per layer visit")
     })
 }
 
-/// Evaluate one structured candidate through the shared [`EvalCache`].
+/// Evaluate one structured candidate through the shared [`EvalCache`]
+/// (canonical fixed partition).
 pub fn eval_structured(spec: &StructuredSpec, cfg: &StructuredConfig) -> StructuredDesign {
     let wl = spec.workload();
-    eval_structured_cached(spec, &wl, cfg)
+    eval_structured_cached(spec, &wl, cfg, &[])
+}
+
+/// Evaluate one structured candidate under learned segment boundaries
+/// (empty `bounds` falls back to the canonical partition).
+pub fn eval_structured_at(
+    spec: &StructuredSpec,
+    cfg: &StructuredConfig,
+    bounds: &[usize],
+) -> StructuredDesign {
+    let wl = spec.workload();
+    eval_structured_cached(spec, &wl, cfg, bounds)
 }
 
 /// The scalar (uncached) reference: identical arithmetic on the raw
 /// simulator — the equivalence oracle for `tests/structured_dse.rs`.
 pub fn eval_structured_scalar(spec: &StructuredSpec, cfg: &StructuredConfig) -> StructuredDesign {
+    eval_structured_scalar_at(spec, cfg, &[])
+}
+
+/// [`eval_structured_scalar`] under learned segment boundaries.
+pub fn eval_structured_scalar_at(
+    spec: &StructuredSpec,
+    cfg: &StructuredConfig,
+    bounds: &[usize],
+) -> StructuredDesign {
     let wl = spec.workload();
-    eval_with(spec, &wl, cfg, |hw, g| crate::sim::simulate(hw, g))
+    let parts = parts_for(&wl, cfg, bounds);
+    eval_with(spec, &wl, cfg, &parts, |hw, g| crate::sim::simulate(hw, g))
 }
 
 /// Batch evaluation: memoized per layer and partitioned over the
@@ -277,7 +331,28 @@ pub fn eval_structured_batch(
 ) -> Vec<StructuredDesign> {
     let spec = *spec;
     let wl = spec.workload();
-    par_map(cfgs, move |cfg| eval_structured_cached(&spec, &wl, cfg))
+    par_map(cfgs, move |cfg| eval_structured_cached(&spec, &wl, cfg, &[]))
+}
+
+/// One joint candidate of the learned-segmentation search: a per-segment
+/// configuration plus the interior cut points its segments cover (empty
+/// cuts mean the canonical partition).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct JointCandidate {
+    pub cfg: StructuredConfig,
+    pub bounds: Vec<usize>,
+}
+
+/// [`eval_structured_batch`] over joint candidates (each evaluated under
+/// its own boundaries). Order-preserving and bit-identical to calling
+/// [`eval_structured_at`] per element.
+pub fn eval_structured_batch_at(
+    spec: &StructuredSpec,
+    cands: &[JointCandidate],
+) -> Vec<StructuredDesign> {
+    let spec = *spec;
+    let wl = spec.workload();
+    par_map(cands, move |c| eval_structured_cached(&spec, &wl, &c.cfg, &c.bounds))
 }
 
 /// Single-config view of the structured space: `hw` replicated uniformly
@@ -298,6 +373,7 @@ pub fn eval_uniform(spec: &StructuredSpec, hw: &HwConfig) -> DesignReport {
 struct ChunkAcc {
     reports: Vec<DesignReport>,
     segs: Vec<Vec<HwConfig>>,
+    bounds: Vec<Vec<usize>>,
     best: f64,
 }
 
@@ -306,6 +382,7 @@ impl ChunkAcc {
         ChunkAcc {
             reports: Vec::with_capacity(n.min(MAX_PREALLOC)),
             segs: Vec::with_capacity(n.min(MAX_PREALLOC)),
+            bounds: Vec::new(),
             best: f64::INFINITY,
         }
     }
@@ -325,24 +402,44 @@ impl ChunkAcc {
         }
         run.progress(self.reports.len(), self.best);
     }
+
+    /// [`ChunkAcc::eval_chunk`] over joint candidates, recording each
+    /// candidate's learned boundaries next to its segments.
+    fn eval_chunk_at(
+        &mut self,
+        run: &SearchRun<'_>,
+        obj: &Objective,
+        spec: &StructuredSpec,
+        chunk: &[JointCandidate],
+    ) {
+        for (d, c) in eval_structured_batch_at(spec, chunk).into_iter().zip(chunk) {
+            let r = d.report();
+            self.best = self.best.min(obj.score_report(&r));
+            self.segs.push(d.config.segments);
+            self.bounds.push(c.bounds.clone());
+            self.reports.push(r);
+        }
+        run.progress(self.reports.len(), self.best);
+    }
 }
 
-/// Evaluate candidates in deadline-pollable chunks, emitting one progress
-/// event per chunk; an interruption returns the prefix evaluated so far.
+/// Evaluate joint candidates in deadline-pollable chunks, emitting one
+/// progress event per chunk; an interruption returns the prefix evaluated
+/// so far.
 fn evaluate_chunked(
     run: &mut SearchRun<'_>,
     obj: &Objective,
     spec: &StructuredSpec,
-    cfgs: &[StructuredConfig],
-) -> (Vec<DesignReport>, Vec<Vec<HwConfig>>) {
-    let mut acc = ChunkAcc::with_capacity(cfgs.len());
-    for chunk in cfgs.chunks(EVAL_CHUNK) {
+    cands: &[JointCandidate],
+) -> ChunkAcc {
+    let mut acc = ChunkAcc::with_capacity(cands.len());
+    for chunk in cands.chunks(EVAL_CHUNK) {
         if run.should_stop() {
             break;
         }
-        acc.eval_chunk(run, obj, spec, chunk);
+        acc.eval_chunk_at(run, obj, spec, chunk);
     }
-    (acc.reports, acc.segs)
+    acc
 }
 
 /// Validate the spec and resolve the effective segment count; a
@@ -357,15 +454,21 @@ fn check_spec(name: &str, spec: &StructuredSpec) -> Result<Result<usize, SearchO
     Ok(Ok(s))
 }
 
-/// Assemble the outcome (ranked reports + parallel segment lists).
+/// Assemble the outcome (ranked reports + parallel segment/boundary
+/// lists; `bounds` empty for fixed-partition strategies).
 fn finish(
     name: &str,
     obj: &Objective,
     reports: Vec<DesignReport>,
     segs: Vec<Vec<HwConfig>>,
+    bounds: Vec<Vec<usize>>,
     run: &SearchRun<'_>,
 ) -> SearchOutcome {
-    SearchOutcome::from_reports_with_segments(name, obj, reports, segs, run.elapsed_s())
+    // all-canonical candidate lists collapse to "no boundaries": the
+    // outcome (and its wire form) stays identical to the fixed-partition
+    // representation
+    let bounds = if bounds.iter().all(|b| b.is_empty()) { Vec::new() } else { bounds };
+    SearchOutcome::from_reports_with_structure(name, obj, reports, segs, bounds, run.elapsed_s())
         .with_stopped(run.stop_reason())
 }
 
@@ -396,25 +499,69 @@ pub fn search_random(
             (0..take).map(|_| sample_structured(&mut rng, &spec.budget, s)).collect();
         acc.eval_chunk(&run, obj, spec, &cfgs);
     }
-    Ok(finish(NAME, obj, acc.reports, acc.segs, &run))
+    Ok(finish(NAME, obj, acc.reports, acc.segs, acc.bounds, &run))
 }
 
 /// Drop repeated joint candidates, keeping first-occurrence order.
-/// Generation and rounding are many-to-one (paper Fig 2a), so zipped
+/// Generation and rounding are many-to-one (paper Fig 2a), so sampled
 /// per-segment draws can collide after [`constrain`] snaps them onto the
 /// budgeted grid — and a duplicate burns search budget on a repeat
 /// evaluation (the eval cache hides the compute cost but not the
-/// accounting). Never turns a non-empty list empty.
-fn dedup_configs(cfgs: Vec<StructuredConfig>) -> Vec<StructuredConfig> {
+/// accounting). The key includes the boundaries: the same configuration
+/// under a different segmentation is a different design point. Never
+/// turns a non-empty list empty.
+fn dedup_candidates(cands: Vec<JointCandidate>) -> Vec<JointCandidate> {
     let mut seen = std::collections::HashSet::new();
-    cfgs.into_iter().filter(|cfg| seen.insert(cfg.clone())).collect()
+    cands.into_iter().filter(|c| seen.insert(c.clone())).collect()
 }
 
-/// DiffAxE per-segment conditioning: for every segment, draw low-EDP
-/// class samples conditioned on the segment's dominant (max-MACs) layer
-/// shape; candidate `k` zips the `k`-th draw of every segment into one
-/// joint configuration, projected into the shared budget ([`constrain`])
-/// and deduplicated ([`dedup_configs`]) before evaluation.
+/// The per-segment dominant (max-MACs) layer shapes under `parts` — each
+/// segment's conditioning representative.
+fn segment_reps(wl: &ModelWorkload, parts: &[std::ops::Range<usize>]) -> Vec<Gemm> {
+    parts
+        .iter()
+        .map(|r| {
+            *wl.gemms[r.clone()]
+                .iter()
+                .max_by_key(|g| g.macs())
+                .expect("non-empty segment")
+        })
+        .collect()
+}
+
+/// The boundary proposal for generation round `round`: the canonical
+/// near-even cuts first, the shape-clustered cuts second, then seeded
+/// random segmentations — the alternating outer loop of the learned
+/// segmentation search.
+fn propose_boundaries(
+    round: u64,
+    wl: &ModelWorkload,
+    s: usize,
+    rng: &mut Pcg32,
+) -> Vec<usize> {
+    let n_layers = wl.gemms.len();
+    match round {
+        0 => default_boundaries(n_layers, s),
+        1 => segment_layers_by_shape(&wl.gemms, s),
+        _ => {
+            let raw: Vec<usize> = (0..s.saturating_sub(1))
+                .map(|_| rng.int_range(1, (n_layers - 1).max(1) as i64) as usize)
+                .collect();
+            round_boundaries(&raw, n_layers)
+        }
+    }
+}
+
+/// DiffAxE joint conditioning over the learned-segmentation space (§V):
+/// every round proposes a segmentation ([`propose_boundaries`] — the
+/// canonical partition, shape-clustered cuts, then random cuts), derives
+/// each segment's dominant-layer conditioning shape under those cuts, and
+/// asks the engine for *jointly* sampled per-segment groups in **one**
+/// [`DiffAxE::sample_joint`] call per round — correlated draws under the
+/// shared budget, not independently-conditioned zips. Candidates are
+/// deduplicated on `(configuration, boundaries)` and evaluated through
+/// the batched SoA path. The independently-conditioned fixed-partition
+/// baseline lives on as [`search_engine_zip`].
 pub fn search_engine(
     engine: &DiffAxE,
     ctx: &SearchCtx,
@@ -430,17 +577,59 @@ pub fn search_engine(
     };
     let mut run = SearchRun::start(ctx, budget);
     let wl = spec.workload();
-    let parts = partition(wl.gemms.len(), s);
-    // the segment's dominant layer carries its conditioning shape
-    let reps: Vec<Gemm> = parts
-        .iter()
-        .map(|r| {
-            *wl.gemms[r.clone()]
-                .iter()
-                .max_by_key(|g| g.macs())
-                .expect("non-empty segment")
-        })
-        .collect();
+    let n = budget.evals.max(1);
+    // joint groups per sampler call: each group takes s contiguous slots
+    let group = (engine.stats.gen_batch / s).max(1);
+    let mut rng = rng::split(seed, 45);
+    let mut cands: Vec<JointCandidate> = Vec::with_capacity(n.min(MAX_PREALLOC));
+    let mut round = 0u64;
+    while cands.len() < n && !run.should_stop() {
+        let bounds = propose_boundaries(round, &wl, s, &mut rng);
+        let parts = ranges_from_boundaries(&bounds, wl.gemms.len());
+        let reps = segment_reps(&wl, &parts);
+        let conds: Vec<(i32, [f32; 3])> = reps.iter().map(|g| (0, g.norm_vec())).collect();
+        let take = (n - cands.len()).min(group);
+        let sd = rng::derive_u32(seed, round);
+        let joints = engine.sample_joint(ClassMode::Edp, sd, &spec.budget, &conds, take)?;
+        cands.extend(joints.into_iter().map(|segments| JointCandidate {
+            cfg: StructuredConfig { segments },
+            bounds: bounds.clone(),
+        }));
+        round += 1;
+    }
+    let cands = dedup_candidates(cands);
+    if cands.is_empty() {
+        anyhow::ensure!(run.interrupted(), "joint generation produced no candidates");
+        return Ok(finish(NAME, obj, Vec::new(), Vec::new(), Vec::new(), &run));
+    }
+    let acc = evaluate_chunked(&mut run, obj, spec, &cands);
+    Ok(finish(NAME, obj, acc.reports, acc.segs, acc.bounds, &run))
+}
+
+/// The pre-learned-segmentation DiffAxE reference: per-segment
+/// **independent** conditioning over the fixed canonical partition — for
+/// every segment, draw low-EDP class samples conditioned on the segment's
+/// dominant (max-MACs) layer shape; candidate `k` zips the `k`-th draw of
+/// every segment into one joint configuration, projected into the shared
+/// budget ([`constrain`]) after the fact. Kept as the baseline the
+/// jointly-conditioned [`search_engine`] is measured against (tests and
+/// the structured smoke bench).
+pub fn search_engine_zip(
+    engine: &DiffAxE,
+    ctx: &SearchCtx,
+    obj: &Objective,
+    spec: &StructuredSpec,
+    budget: &Budget,
+    seed: u64,
+) -> Result<SearchOutcome> {
+    const NAME: &str = "DiffAxE (indep-zip)";
+    let s = match check_spec(NAME, spec)? {
+        Ok(s) => s,
+        Err(out) => return Ok(out),
+    };
+    let mut run = SearchRun::start(ctx, budget);
+    let wl = spec.workload();
+    let reps = segment_reps(&wl, &partition(wl.gemms.len(), s));
     let n = budget.evals.max(1);
     let b = engine.stats.gen_batch;
     let mut pools: Vec<Vec<HwConfig>> = Vec::with_capacity(s);
@@ -466,17 +655,20 @@ pub fn search_engine(
     } else {
         0
     };
-    let cfgs = dedup_configs(
+    let cands = dedup_candidates(
         (0..n_joint)
-            .map(|k| constrain(&spec.budget, pools.iter().map(|p| p[k]).collect()))
+            .map(|k| JointCandidate {
+                cfg: constrain(&spec.budget, pools.iter().map(|p| p[k]).collect()),
+                bounds: Vec::new(),
+            })
             .collect(),
     );
-    if cfgs.is_empty() {
+    if cands.is_empty() {
         anyhow::ensure!(run.interrupted(), "per-segment generation produced no candidates");
-        return Ok(finish(NAME, obj, Vec::new(), Vec::new(), &run));
+        return Ok(finish(NAME, obj, Vec::new(), Vec::new(), Vec::new(), &run));
     }
-    let (reports, segs) = evaluate_chunked(&mut run, obj, spec, &cfgs);
-    Ok(finish(NAME, obj, reports, segs, &run))
+    let acc = evaluate_chunked(&mut run, obj, spec, &cands);
+    Ok(finish(NAME, obj, acc.reports, acc.segs, acc.bounds, &run))
 }
 
 /// Finite-difference GD over the concatenated per-segment encoding.
@@ -497,7 +689,11 @@ pub fn search_fd(
         Ok(s) => s,
         Err(out) => return Ok(out),
     };
-    let dims = structured_dim(s);
+    let wl = spec.workload();
+    let n_layers = wl.gemms.len();
+    // the boundary lanes ride at the tail of the flattened encoding, so
+    // the GD baseline searches segmentation jointly with configuration
+    let dims = structured_dim_with_boundaries(s);
     let (opts, clamped) = gd_opts_for(opts, budget, 1 + 2 * dims);
     // FD probe spacing must straddle grid cells or the landscape reads as
     // a plateau: the coarse training grid is log-spaced (gaps up to ~0.5
@@ -505,34 +701,34 @@ pub fn search_fd(
     let h = if coarse { 0.25 } else { 0.05 };
     let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
     let mut rng = rng::split(seed, 41);
-    let decode = |x: &[f64]| -> StructuredConfig {
+    let decode = |x: &[f64]| -> (StructuredConfig, Vec<usize>) {
         let v: Vec<f32> = x.iter().map(|&t| t as f32).collect();
-        let cfg = decode_structured(&v, &spec.budget, s);
+        let (cfg, bounds) = decode_structured_with_boundaries(&v, &spec.budget, s, n_layers);
         if coarse {
-            constrain(&spec.budget, cfg.segments.iter().map(coarsen).collect())
+            (constrain(&spec.budget, cfg.segments.iter().map(coarsen).collect()), bounds)
         } else {
-            cfg
+            (cfg, bounds)
         }
     };
     let mut reports = Vec::new();
     let mut segs = Vec::new();
+    let mut bounds_acc = Vec::new();
     let mut best = f64::INFINITY;
     let res = gd::fd_gd(
         |x: &[f64]| {
-            let d = eval_structured(spec, &decode(x));
+            let (cfg, bounds) = decode(x);
+            let d = eval_structured_at(spec, &cfg, &bounds);
             let r = d.report();
             let sc = obj.score_report(&r);
             reports.push(r);
             segs.push(d.config.segments);
+            bounds_acc.push(bounds);
             best = best.min(sc);
             run.borrow().progress(reports.len(), best);
             obj.gd_loss(sc)
         },
         |r: &mut Pcg32| {
-            encode_structured(&sample_structured(r, &spec.budget, s))
-                .iter()
-                .map(|&x| x as f64)
-                .collect()
+            sample_joint_vec(r, spec, s, n_layers).iter().map(|&x| x as f64).collect()
         },
         h,
         || run.borrow_mut().should_stop(),
@@ -540,15 +736,34 @@ pub fn search_fd(
         &mut rng,
     );
     if !res.best_x.is_empty() {
-        let d = eval_structured(spec, &decode(&res.best_x));
+        let (cfg, bounds) = decode(&res.best_x);
+        let d = eval_structured_at(spec, &cfg, &bounds);
         reports.push(d.report());
         segs.push(d.config.segments);
+        bounds_acc.push(bounds);
     }
     let mut run = run.into_inner();
     if clamped {
         run.exhausted();
     }
-    Ok(finish(name, obj, reports, segs, &run))
+    Ok(finish(name, obj, reports, segs, bounds_acc, &run))
+}
+
+/// Sample one flattened joint (configs + boundaries) search vector — the
+/// shared init distribution of the GD/BO baselines over the learned
+/// segmentation space.
+fn sample_joint_vec(
+    rng: &mut Pcg32,
+    spec: &StructuredSpec,
+    s: usize,
+    n_layers: usize,
+) -> Vec<f32> {
+    let cfg = sample_structured(rng, &spec.budget, s);
+    let raw: Vec<usize> = (0..s.saturating_sub(1))
+        .map(|_| rng.int_range(1, (n_layers - 1).max(1) as i64) as usize)
+        .collect();
+    let bounds = round_boundaries(&raw, n_layers);
+    encode_structured_with_boundaries(&cfg, &bounds, n_layers)
 }
 
 /// Vanilla BO over the concatenated per-segment encoding.
@@ -565,26 +780,28 @@ pub fn search_bo(
         Ok(s) => s,
         Err(out) => return Ok(out),
     };
+    let wl = spec.workload();
+    let n_layers = wl.gemms.len();
     let (o, clamped) = bo_opts_for(opts, budget);
     let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
     let mut rng = rng::split(seed, 42);
     let mut reports = Vec::with_capacity(o.budget.min(MAX_PREALLOC));
     let mut segs = Vec::with_capacity(o.budget.min(MAX_PREALLOC));
+    let mut bounds_acc = Vec::with_capacity(o.budget.min(MAX_PREALLOC));
     let mut best = f64::INFINITY;
     bo::minimize(
         |r: &mut Pcg32| {
-            encode_structured(&sample_structured(r, &spec.budget, s))
-                .iter()
-                .map(|&x| x as f64)
-                .collect()
+            sample_joint_vec(r, spec, s, n_layers).iter().map(|&x| x as f64).collect()
         },
         |x| {
             let v: Vec<f32> = x.iter().map(|&t| t as f32).collect();
-            let d = eval_structured(spec, &decode_structured(&v, &spec.budget, s));
+            let (cfg, bounds) = decode_structured_with_boundaries(&v, &spec.budget, s, n_layers);
+            let d = eval_structured_at(spec, &cfg, &bounds);
             let r = d.report();
             let sc = obj.score_report(&r);
             reports.push(r);
             segs.push(d.config.segments);
+            bounds_acc.push(bounds);
             best = best.min(sc);
             run.borrow().progress(reports.len(), best);
             sc
@@ -597,7 +814,7 @@ pub fn search_bo(
     if clamped {
         run.exhausted();
     }
-    Ok(finish(NAME, obj, reports, segs, &run))
+    Ok(finish(NAME, obj, reports, segs, bounds_acc, &run))
 }
 
 /// Latent BO (VAESA-style) over the concatenated per-segment latent
@@ -676,7 +893,7 @@ pub fn search_latent_bo(
         !reports.is_empty() || run.interrupted(),
         "latent decode failed for every BO iterate"
     );
-    Ok(finish(NAME, obj, reports, segs, &run))
+    Ok(finish(NAME, obj, reports, segs, Vec::new(), &run))
 }
 
 /// Polaris-style latent GD: per-segment anchors encoded through the
@@ -699,6 +916,8 @@ pub fn search_polaris(
         Ok(s) => s,
         Err(out) => return Ok(out),
     };
+    let wl = spec.workload();
+    let n_layers = wl.gemms.len();
     let run = std::cell::RefCell::new(SearchRun::start(ctx, budget));
     let mut rng = rng::split(seed, 43);
     // one encoded anchor per segment
@@ -725,25 +944,36 @@ pub fn search_polaris(
         }
         l.chunks(d_lat).map(|c| c.to_vec()).collect()
     };
-    let (opts, clamped) = gd_opts_for(opts, budget, 1 + 2 * SUBSPACE);
+    // boundary lanes ride behind the subspace coefficients, so Polaris
+    // descends segmentation jointly with the latent configuration
+    let bdim = boundary_dim(s);
+    let (opts, clamped) = gd_opts_for(opts, budget, 1 + 2 * (SUBSPACE + bdim));
     let mut reports = Vec::new();
     let mut segs = Vec::new();
+    let mut bounds_acc = Vec::new();
     let mut best = f64::INFINITY;
     gd::fd_gd(
-        |x: &[f64]| match engine.decode_rounded(&to_latents(x)) {
-            Ok(seg_cfgs) => {
-                let d = eval_structured(spec, &constrain(&spec.budget, seg_cfgs));
-                let r = d.report();
-                let sc = obj.score_report(&r);
-                reports.push(r);
-                segs.push(d.config.segments);
-                best = best.min(sc);
-                run.borrow().progress(reports.len(), best);
-                obj.gd_loss(sc)
+        |x: &[f64]| {
+            let (sub, tail) = x.split_at(SUBSPACE);
+            match engine.decode_rounded(&to_latents(sub)) {
+                Ok(seg_cfgs) => {
+                    let lanes: Vec<f32> = tail.iter().map(|&t| t as f32).collect();
+                    let bounds = decode_boundaries(&lanes, n_layers);
+                    let d =
+                        eval_structured_at(spec, &constrain(&spec.budget, seg_cfgs), &bounds);
+                    let r = d.report();
+                    let sc = obj.score_report(&r);
+                    reports.push(r);
+                    segs.push(d.config.segments);
+                    bounds_acc.push(bounds);
+                    best = best.min(sc);
+                    run.borrow().progress(reports.len(), best);
+                    obj.gd_loss(sc)
+                }
+                Err(_) => f64::INFINITY,
             }
-            Err(_) => f64::INFINITY,
         },
-        |r: &mut Pcg32| (0..SUBSPACE).map(|_| r.f64()).collect(),
+        |r: &mut Pcg32| (0..SUBSPACE + bdim).map(|_| r.f64()).collect(),
         0.05,
         || run.borrow_mut().should_stop(),
         &opts,
@@ -757,7 +987,7 @@ pub fn search_polaris(
         !reports.is_empty() || run.interrupted(),
         "latent decode failed for every iterate"
     );
-    Ok(finish(NAME, obj, reports, segs, &run))
+    Ok(finish(NAME, obj, reports, segs, bounds_acc, &run))
 }
 
 /// A fixed silicon replicated uniformly across segments — the structured
@@ -784,7 +1014,7 @@ pub fn search_fixed(
         run.progress(1, obj.score_report(&r));
         (vec![r], vec![d.config.segments])
     };
-    Ok(finish(name, obj, reports, segs, &run))
+    Ok(finish(name, obj, reports, segs, Vec::new(), &run))
 }
 
 #[cfg(test)]
@@ -797,15 +1027,47 @@ mod tests {
 
     #[test]
     fn partition_is_contiguous_and_total() {
-        for (n, k) in [(6, 1), (6, 2), (6, 3), (6, 6), (7, 3)] {
+        // includes k > n: the segment count clamps to the layer count, so
+        // direct callers never see empty ranges
+        for (n, k) in [(6, 1), (6, 2), (6, 3), (6, 6), (7, 3), (6, 7), (3, 8), (1, 4)] {
             let parts = partition(n, k);
-            assert_eq!(parts.len(), k);
+            assert_eq!(parts.len(), k.min(n), "{n}/{k}");
             assert_eq!(parts[0].start, 0);
-            assert_eq!(parts[k - 1].end, n);
+            assert_eq!(parts.last().unwrap().end, n);
             for w in parts.windows(2) {
                 assert_eq!(w[0].end, w[1].start);
             }
             assert!(parts.iter().all(|r| !r.is_empty()), "{n}/{k}: {parts:?}");
+        }
+        assert!(partition(0, 0).is_empty());
+        assert!(partition(0, 3).is_empty());
+        assert!(partition(5, 0).is_empty());
+    }
+
+    #[test]
+    fn boundary_eval_matches_canonical_on_default_cuts_and_scalar_oracle() {
+        let sp = spec();
+        let wl = sp.workload();
+        let n_layers = wl.gemms.len();
+        let s = sp.n_segments();
+        let mut rng = Pcg32::seeded(64);
+        let default = default_boundaries(n_layers, s);
+        for _ in 0..8 {
+            let cfg = sample_structured(&mut rng, &sp.budget, s);
+            // canonical cuts expressed as boundaries evaluate identically
+            let via_bounds = eval_structured_at(&sp, &cfg, &default);
+            let canonical = eval_structured(&sp, &cfg);
+            assert_eq!(via_bounds.edp.to_bits(), canonical.edp.to_bits());
+            assert_eq!(via_bounds.cycles.to_bits(), canonical.cycles.to_bits());
+            // learned cuts: cached path is bit-identical to the scalar oracle
+            let raw: Vec<usize> =
+                (0..s - 1).map(|_| rng.int_range(1, n_layers as i64 - 1) as usize).collect();
+            let bounds = round_boundaries(&raw, n_layers);
+            let cached = eval_structured_at(&sp, &cfg, &bounds);
+            let scalar = eval_structured_scalar_at(&sp, &cfg, &bounds);
+            assert_eq!(cached.edp.to_bits(), scalar.edp.to_bits());
+            assert_eq!(cached.cycles.to_bits(), scalar.cycles.to_bits());
+            assert_eq!(cached.power_w.to_bits(), scalar.power_w.to_bits());
         }
     }
 
@@ -852,15 +1114,26 @@ mod tests {
     fn dedup_keeps_first_occurrence_order_and_never_empties() {
         let sp = spec();
         let mut rng = Pcg32::seeded(71);
-        let a = sample_structured(&mut rng, &sp.budget, sp.n_segments());
-        let b = sample_structured(&mut rng, &sp.budget, sp.n_segments());
-        let c = sample_structured(&mut rng, &sp.budget, sp.n_segments());
+        let mut cand = |bounds: Vec<usize>| JointCandidate {
+            cfg: sample_structured(&mut rng, &sp.budget, sp.n_segments()),
+            bounds,
+        };
+        let a = cand(Vec::new());
+        let b = cand(vec![2, 4]);
+        let c = cand(Vec::new());
         let deduped =
-            dedup_configs(vec![a.clone(), b.clone(), a.clone(), c.clone(), b.clone(), a.clone()]);
-        assert_eq!(deduped, vec![a.clone(), b, c]);
+            dedup_candidates(vec![a.clone(), b.clone(), a.clone(), c.clone(), b.clone()]);
+        assert_eq!(deduped, vec![a.clone(), b.clone(), c]);
+        // the same configuration under different cuts is a different
+        // design point, not a duplicate
+        let a_recut = JointCandidate { cfg: a.cfg.clone(), bounds: vec![1, 3] };
+        assert_eq!(
+            dedup_candidates(vec![a.clone(), a_recut.clone()]),
+            vec![a.clone(), a_recut]
+        );
         // all-duplicates collapses to one, never to zero
-        assert_eq!(dedup_configs(vec![a.clone(), a.clone()]), vec![a]);
-        assert!(dedup_configs(Vec::new()).is_empty());
+        assert_eq!(dedup_candidates(vec![a.clone(), a.clone()]), vec![a]);
+        assert!(dedup_candidates(Vec::new()).is_empty());
     }
 
     #[test]

@@ -354,6 +354,11 @@ fn cmd_structured(args: &Args) -> Result<()> {
             d.power_w,
             d.edp
         );
+        if let Some(cuts) = out.boundaries.get(i) {
+            if !cuts.is_empty() {
+                println!("    learned cuts: {cuts:?}");
+            }
+        }
         if let Some(segs) = out.segments.get(i) {
             for (si, s) in segs.iter().enumerate() {
                 println!("    segment {si}: {s}");

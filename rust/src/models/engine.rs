@@ -16,7 +16,8 @@
 
 use super::mock::MockEngine;
 use super::norm::NormStats;
-use crate::design_space::{decode_rounded, HwConfig};
+use crate::design_space::structured::constrain;
+use crate::design_space::{decode_rounded, HwConfig, SharedBudget};
 use crate::runtime::{mat_f32, scalar_u32, to_vec_f32, vec_i32, HloExec, Runtime};
 use crate::workload::Gemm;
 use anyhow::Result;
@@ -146,6 +147,50 @@ impl DiffAxE {
                 c.run_sampler(exe, &self.stats, seed, SamplerCond::Class(conds))
             }
             Backend::Mock(m) => Ok(m.sample_class(&self.stats, mode, seed, conds)),
+        }
+    }
+
+    /// Jointly-conditioned structured generation (§V): **one** sampler
+    /// call for all `conds.len()` segment representative shapes under one
+    /// shared budget, returning `n_joint` correlated per-segment groups
+    /// (each already projected into the budget, one shared bandwidth).
+    /// The call occupies `S × n_joint` slots of the sampler batch, so
+    /// `conds.len() · n_joint ≤ gen_batch` — the continuous batcher packs
+    /// each joint candidate as one contiguous group of a single call and
+    /// never assembles a group across calls (docs/INVARIANTS.md).
+    pub fn sample_joint(
+        &self,
+        mode: ClassMode,
+        seed: u32,
+        budget: &SharedBudget,
+        conds: &[(i32, [f32; 3])],
+        n_joint: usize,
+    ) -> Result<Vec<Vec<HwConfig>>> {
+        let s = conds.len();
+        anyhow::ensure!(s > 0, "joint request needs at least one segment");
+        anyhow::ensure!(n_joint > 0, "empty joint generation request");
+        self.check_sampler_request(s.saturating_mul(n_joint))?;
+        budget.validate().map_err(|e| anyhow::anyhow!("invalid shared budget: {e}"))?;
+        match &self.backend {
+            Backend::Compiled(c) => {
+                // No joint artifact is exported yet: approximate through
+                // the class sampler (still one call — S×n_joint slots),
+                // then project each contiguous group into the budget. The
+                // mock backend generates joint candidates natively.
+                let exe = match mode {
+                    ClassMode::Edp => &c.sampler_edp,
+                    ClassMode::PerfOpt => &c.sampler_perfopt,
+                };
+                let mut flat = Vec::with_capacity(s * n_joint);
+                for _ in 0..n_joint {
+                    flat.extend_from_slice(conds);
+                }
+                let hw = c.run_sampler(exe, &self.stats, seed, SamplerCond::Class(&flat))?;
+                Ok(hw.chunks(s).map(|g| constrain(budget, g.to_vec()).segments).collect())
+            }
+            Backend::Mock(m) => {
+                Ok(m.sample_joint(&self.stats, mode, seed, budget, conds, n_joint))
+            }
         }
     }
 

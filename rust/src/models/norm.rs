@@ -267,6 +267,32 @@ impl NormStats {
     pub fn is_known(&self, g: &Gemm) -> bool {
         self.by_mkn.contains_key(&(g.m, g.k, g.n))
     }
+
+    /// The joint conditioning vector of the structured (jointly-conditioned)
+    /// sampler: the shared budget min–max normalized over the unconstrained
+    /// Table II envelope, followed by each segment's `(class, w_norm)`
+    /// conditioning with the class normalized over the Eq. 8 class count.
+    /// Layout: `[pe, buf, bw, class₀, m₀, k₀, n₀, class₁, …]` — width
+    /// `3 + 4·S`. Both backends derive their joint behaviour from this one
+    /// vector, so the conditioning contract is shared (and testable) here.
+    pub fn joint_cond_vec(
+        &self,
+        budget: &crate::design_space::SharedBudget,
+        conds: &[(i32, [f32; 3])],
+    ) -> Vec<f32> {
+        use crate::design_space::params::{BUF_MAX_B, BUF_MIN_B, BW_MAX, BW_MIN, DIM_MAX, DIM_MIN};
+        let norm = |v: f64, lo: f64, hi: f64| (((v - lo) / (hi - lo).max(1e-9)) as f32).clamp(0.0, 1.0);
+        let n_classes = (self.n_power * self.n_perf).max(2);
+        let mut v = Vec::with_capacity(3 + 4 * conds.len());
+        v.push(norm(budget.pe as f64, (DIM_MIN * DIM_MIN) as f64, (DIM_MAX * DIM_MAX) as f64));
+        v.push(norm(budget.buf_b as f64, (3 * BUF_MIN_B) as f64, (3 * BUF_MAX_B) as f64));
+        v.push(norm(budget.bw as f64, BW_MIN as f64, BW_MAX as f64));
+        for (class, w) in conds {
+            v.push((*class).clamp(0, n_classes as i32 - 1) as f32 / (n_classes - 1) as f32);
+            v.extend_from_slice(w);
+        }
+        v
+    }
 }
 
 #[cfg(test)]
@@ -387,6 +413,27 @@ mod tests {
             assert_eq!(a.log_rt_min, b.log_rt_min);
             assert_eq!(a.edp_edges, b.edp_edges);
         }
+    }
+
+    #[test]
+    fn joint_cond_vec_layout_and_normalization() {
+        use crate::design_space::SharedBudget;
+        let s = NormStats::synthetic();
+        let g0 = Gemm::new(128, 768, 2304);
+        let g1 = Gemm::new(64, 256, 512);
+        let conds = [(0, g0.norm_vec()), (8, g1.norm_vec())];
+        let v = s.joint_cond_vec(&SharedBudget::unconstrained(), &conds);
+        assert_eq!(v.len(), 3 + 4 * conds.len());
+        // unconstrained budget normalizes to the top of every range
+        assert_eq!(&v[..3], &[1.0, 1.0, 1.0]);
+        // classes: 0 -> 0.0, last (n_power*n_perf - 1 = 8) -> 1.0
+        assert_eq!(v[3], 0.0);
+        assert_eq!(v[8], 1.0);
+        assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        // the vector is sensitive to the budget (the joint conditioning
+        // actually carries the shared envelope)
+        let tight = SharedBudget { pe: 256, buf_b: 96 * 1024, bw: 8 };
+        assert_ne!(s.joint_cond_vec(&tight, &conds)[..3], v[..3]);
     }
 
     #[test]

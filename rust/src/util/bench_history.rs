@@ -39,7 +39,42 @@ pub struct BenchPoint {
 /// Whether a bench key is a throughput metric the regression gate covers
 /// (higher is strictly better).
 pub fn is_throughput_key(name: &str) -> bool {
-    name.ends_with("_candidates_per_s") || name.starts_with("structured_cps_")
+    // fleet_* cps keys are deliberately ungated ride-alongs: fleet
+    // scaling moves with the CI runner's core count, not with the code
+    name.ends_with("_candidates_per_s")
+        || name.starts_with("structured_cps_")
+        || (name.ends_with("_cps") && !name.starts_with("fleet_"))
+}
+
+/// Whether a bench key is a solution-quality metric the regression gate
+/// covers with the **lower-is-better** direction (best-EDP floors: the
+/// search must keep finding designs at least this good).
+pub fn is_quality_key(name: &str) -> bool {
+    name.starts_with("structured_best_edp_") || name.ends_with("_best_edp")
+}
+
+/// Gate direction of a bench key: throughput entries fail when the value
+/// *falls* past tolerance, quality (best-EDP) entries fail when it
+/// *rises* past tolerance, everything else rides along ungated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateClass {
+    /// higher is better — fails below `(1 - tolerance) × previous`
+    Throughput,
+    /// lower is better — fails above `(1 + tolerance) × previous`
+    Quality,
+    /// recorded for plotting only
+    Ungated,
+}
+
+/// Classify a bare bench key (no `source/` prefix).
+pub fn gate_class(key: &str) -> GateClass {
+    if is_throughput_key(key) {
+        GateClass::Throughput
+    } else if is_quality_key(key) {
+        GateClass::Quality
+    } else {
+        GateClass::Ungated
+    }
 }
 
 /// Flatten one bench-snapshot JSON object (`{key: number, ...}`) into
@@ -83,13 +118,23 @@ pub fn load(path: &Path) -> Result<Vec<Json>, String> {
 
 /// The throughput points of one history entry, keyed by name.
 pub fn entry_throughputs(entry: &Json) -> BTreeMap<String, f64> {
+    entry_points(entry, |key| gate_class(key) == GateClass::Throughput)
+}
+
+/// Every *gated* point of one history entry (throughput + quality), keyed
+/// by name.
+pub fn entry_gated(entry: &Json) -> BTreeMap<String, f64> {
+    entry_points(entry, |key| gate_class(key) != GateClass::Ungated)
+}
+
+fn entry_points(entry: &Json, keep: impl Fn(&str) -> bool) -> BTreeMap<String, f64> {
     let mut out = BTreeMap::new();
     if let Some(benches) = entry.get("benches").as_arr() {
         for b in benches {
             if let (Some(name), Some(value)) = (b.get("name").as_str(), b.get("value").as_f64()) {
                 // names are prefixed "source/key"; gate on the key part
                 let key = name.rsplit('/').next().unwrap_or(name);
-                if is_throughput_key(key) {
+                if keep(key) {
                     out.insert(name.to_string(), value);
                 }
             }
@@ -98,22 +143,23 @@ pub fn entry_throughputs(entry: &Json) -> BTreeMap<String, f64> {
     out
 }
 
-/// Compare the current run's points against the last history entry.
-/// Returns one line per throughput metric that fell below
-/// `(1 - tolerance) ×` its previous value. Metrics absent on either side
-/// are skipped (new benches enter the stream ungated; retired ones leave
-/// it silently).
+/// Compare the current run's points against the last history entry,
+/// direction-aware: throughput metrics fail when they fall below
+/// `(1 - tolerance) ×` their previous value, quality (best-EDP) metrics
+/// fail when they rise above `(1 + tolerance) ×` it. Metrics absent on
+/// either side are skipped (new benches enter the stream ungated; retired
+/// ones leave it silently).
 pub fn regressions(last: &Json, current: &[BenchPoint], tolerance: f64) -> Vec<String> {
-    let prev = entry_throughputs(last);
+    let prev = entry_gated(last);
     let mut out = Vec::new();
     for p in current {
         let key = p.name.rsplit('/').next().unwrap_or(&p.name);
-        if !is_throughput_key(key) {
+        let Some(&was) = prev.get(&p.name) else { continue };
+        if was <= 0.0 {
             continue;
         }
-        if let Some(&was) = prev.get(&p.name) {
-            let floor = was * (1.0 - tolerance);
-            if was > 0.0 && p.value < floor {
+        match gate_class(key) {
+            GateClass::Throughput if p.value < was * (1.0 - tolerance) => {
                 out.push(format!(
                     "{}: {:.0} -> {:.0} ({:+.1}% < -{:.0}% tolerance)",
                     p.name,
@@ -123,6 +169,17 @@ pub fn regressions(last: &Json, current: &[BenchPoint], tolerance: f64) -> Vec<S
                     tolerance * 100.0
                 ));
             }
+            GateClass::Quality if p.value > was * (1.0 + tolerance) => {
+                out.push(format!(
+                    "{}: {:.3e} -> {:.3e} ({:+.1}% > +{:.0}% tolerance, lower is better)",
+                    p.name,
+                    was,
+                    p.value,
+                    (p.value / was - 1.0) * 100.0,
+                    tolerance * 100.0
+                ));
+            }
+            _ => {}
         }
     }
     out
@@ -235,7 +292,7 @@ fn chart_svg(name: &str, pts: &[(usize, f64)], labels: &[String], n_entries: usi
         ));
     }
     let key = name.rsplit('/').next().unwrap_or(name);
-    let badge = if is_throughput_key(key) { "gated" } else { "ride-along" };
+    let badge = if gate_class(key) == GateClass::Ungated { "ride-along" } else { "gated" };
     let last = pts.last().map(|&(_, v)| fmt_val(v)).unwrap_or_default();
     let mut s = String::new();
     s.push_str(&format!(
@@ -349,9 +406,58 @@ mod tests {
         assert!(is_throughput_key("llm_cold_candidates_per_s"));
         assert!(is_throughput_key("sim_batch_candidates_per_s"));
         assert!(is_throughput_key("structured_cps_diffaxe"));
+        assert!(is_throughput_key("structured_joint_cps"));
         assert!(!is_throughput_key("cache_hit_rate"));
         assert!(!is_throughput_key("llm_speedup_cold"));
         assert!(!is_throughput_key("structured_sp_random"));
+        // fleet cps keys stay ungated: they track runner cores, not code
+        assert!(!is_throughput_key("fleet_w1_cps"));
+        assert!(!is_throughput_key("fleet_w4_cps"));
+    }
+
+    #[test]
+    fn gate_classes_split_throughput_quality_and_ride_along() {
+        assert_eq!(gate_class("structured_cps_diffaxe"), GateClass::Throughput);
+        assert_eq!(gate_class("structured_joint_cps"), GateClass::Throughput);
+        assert_eq!(gate_class("structured_best_edp_diffaxe"), GateClass::Quality);
+        assert_eq!(gate_class("structured_joint_best_edp"), GateClass::Quality);
+        assert_eq!(gate_class("structured_sp_random"), GateClass::Ungated);
+        assert_eq!(gate_class("cache_hit_rate"), GateClass::Ungated);
+        assert_eq!(gate_class("fleet_w4_cps"), GateClass::Ungated);
+        // a quality key is never simultaneously a throughput key
+        assert!(!is_throughput_key("structured_best_edp_diffaxe"));
+        assert!(!is_quality_key("structured_cps_diffaxe"));
+    }
+
+    #[test]
+    fn best_edp_gate_is_direction_aware() {
+        let last = entry_with(&[
+            pt("structured/structured_best_edp_diffaxe", 100.0),
+            pt("structured/structured_joint_best_edp", 100.0),
+            pt("structured/structured_joint_cps", 1000.0),
+        ]);
+        // EDP creeping up within tolerance: fine
+        let ok = regressions(&last, &[pt("structured/structured_best_edp_diffaxe", 110.0)], 0.15);
+        assert!(ok.is_empty(), "{ok:?}");
+        // EDP past tolerance: gated, and the message states the direction
+        let bad = regressions(&last, &[pt("structured/structured_joint_best_edp", 120.0)], 0.15);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("lower is better"), "{bad:?}");
+        // EDP *improving* (falling) never fails, however far it drops
+        let down = regressions(
+            &last,
+            &[
+                pt("structured/structured_best_edp_diffaxe", 1.0),
+                pt("structured/structured_joint_best_edp", 1.0),
+            ],
+            0.15,
+        );
+        assert!(down.is_empty(), "{down:?}");
+        // the joint cps key keeps the higher-is-better direction
+        let cps_bad = regressions(&last, &[pt("structured/structured_joint_cps", 500.0)], 0.15);
+        assert_eq!(cps_bad.len(), 1, "{cps_bad:?}");
+        let cps_up = regressions(&last, &[pt("structured/structured_joint_cps", 5000.0)], 0.15);
+        assert!(cps_up.is_empty(), "{cps_up:?}");
     }
 
     #[test]

@@ -280,6 +280,52 @@ fn injected_sampler_error_fails_the_gen_batch_cleanly() {
     assert_eq!(s.worker_restarts, 0);
 }
 
+#[test]
+fn sampler_error_fails_only_the_round_that_owned_the_call() {
+    use diffaxe::dse::llm::Platform;
+    use diffaxe::workload::{LlmModel, Stage};
+    // a generous batch window lets both generative jobs join `pending`
+    // before the first flush, so they are provably co-pending when the
+    // fault fires
+    let mut cfg = chaos_cfg("engine-sample:error=blast radius@1");
+    cfg.batch_window = Duration::from_millis(250);
+    let svc = Service::start(cfg).unwrap();
+    let rt_rx = svc.handle().submit(Request::Search(SearchRequest::new(
+        Objective::Runtime { g: gemm(), target_cycles: 1e6 },
+        Budget::evals(4),
+        OptimizerKind::DiffAxE,
+    )));
+    let llm_rx = svc.handle().submit(Request::Search(SearchRequest::new(
+        Objective::LlmEdp {
+            model: LlmModel::BertBase,
+            stage: Stage::Prefill,
+            seq: 128,
+            platform: Platform::Asic32nm,
+        },
+        Budget::evals(4),
+        OptimizerKind::DiffAxE,
+    )));
+    // flush order is [Runtime, Class]: the runtime family's sampler call
+    // consumes fault hit 0 and succeeds; the LLM class call lands on hit 1
+    // and errors. The error must fail ONLY the class round's owner — the
+    // co-pending runtime job already holds its draws and completes.
+    match rt_rx.recv().unwrap() {
+        Response::Outcome(o) => assert_eq!(o.evals, 4),
+        other => panic!("runtime job must survive the class-round fault: {other:?}"),
+    }
+    match llm_rx.recv().unwrap() {
+        Response::Error { code, message, .. } => {
+            assert_eq!(code, ErrorCode::Internal);
+            assert!(message.contains("sampler failed"), "{message}");
+            assert!(message.contains("blast radius"), "{message}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    let s = svc.handle().metrics().snapshot();
+    assert_eq!((s.jobs_completed, s.jobs_failed), (1, 1), "{s}");
+    assert_eq!(s.worker_restarts, 0, "{s}");
+}
+
 /// Run the same 8 simulator-backed jobs on a 4-worker fleet and return
 /// each job's (evals, best score) in submission order. `run_job` outcomes
 /// depend only on the per-job seed (derived from the job number), never

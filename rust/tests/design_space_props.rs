@@ -7,7 +7,10 @@
 use diffaxe::design_space::encode::RawConfig;
 use diffaxe::design_space::params::{BUF_MAX_B, BUF_MIN_B, BUF_STEP_B, DIM_MAX, DIM_MIN};
 use diffaxe::design_space::structured::{
-    constrain, decode_structured, encode_structured, sample_structured, SharedBudget,
+    boundaries_valid, boundary_dim, constrain, decode_boundaries, decode_structured,
+    decode_structured_with_boundaries, encode_boundaries, encode_structured,
+    encode_structured_with_boundaries, round_boundaries, sample_structured,
+    structured_dim_with_boundaries, SharedBudget,
 };
 use diffaxe::design_space::{
     decode_rounded, encode_norm, round_to_target, LoopOrder, TargetSpace, NORM_DIM,
@@ -93,6 +96,65 @@ fn rounding_is_nearest_on_each_axis() {
         assert!((hw.r as f64 - raw.r).abs() <= 0.5);
         assert!((hw.c as f64 - raw.c).abs() <= 0.5);
         assert!((hw.ip_b as f64 - b).abs() <= BUF_STEP_B as f64 / 2.0);
+    }
+}
+
+/// Boundary lanes inherit the same contract: `round_boundaries` repairs
+/// arbitrary cut vectors into valid strictly-increasing interior cuts,
+/// is idempotent, and encode → decode is the identity on valid cuts.
+#[test]
+fn boundary_round_is_valid_idempotent_and_roundtrips() {
+    let mut rng = Pcg32::seeded(1006);
+    for _ in 0..TRIALS {
+        let n_layers = rng.int_range(2, 40) as usize;
+        let segments = (rng.int_range(2, 6) as usize).min(n_layers);
+        let raw: Vec<usize> =
+            (1..segments).map(|_| rng.int_range(0, 2 * n_layers as i64) as usize).collect();
+        let bounds = round_boundaries(&raw, n_layers);
+        assert_eq!(bounds.len(), boundary_dim(segments));
+        assert!(boundaries_valid(&bounds, n_layers), "{raw:?} -> {bounds:?} over {n_layers}");
+        assert_eq!(round_boundaries(&bounds, n_layers), bounds, "repair not idempotent");
+        let lanes = encode_boundaries(&bounds, n_layers);
+        assert!(lanes.iter().all(|x| (0.0..=1.0).contains(x)));
+        assert_eq!(decode_boundaries(&lanes, n_layers), bounds, "roundtrip moved {bounds:?}");
+    }
+}
+
+/// Arbitrary (out-of-range) boundary lanes always decode onto a valid
+/// segmentation, and decoding is idempotent through a second
+/// encode → decode trip.
+#[test]
+fn arbitrary_boundary_lanes_decode_into_valid_cuts() {
+    let mut rng = Pcg32::seeded(1007);
+    for _ in 0..TRIALS {
+        let n_layers = rng.int_range(2, 40) as usize;
+        let segments = (rng.int_range(2, 6) as usize).min(n_layers);
+        let lanes: Vec<f32> =
+            (1..segments).map(|_| (rng.f64() * 6.0 - 3.0) as f32).collect();
+        let bounds = decode_boundaries(&lanes, n_layers);
+        assert!(boundaries_valid(&bounds, n_layers), "{lanes:?} -> {bounds:?} over {n_layers}");
+        assert_eq!(decode_boundaries(&encode_boundaries(&bounds, n_layers), n_layers), bounds);
+    }
+}
+
+/// The joint (configs + cuts) encoding round-trips both halves through
+/// one vector of width `structured_dim_with_boundaries(s)`.
+#[test]
+fn joint_structured_boundary_encoding_roundtrips() {
+    let budget = SharedBudget { pe: 2048, buf_b: 256 * 1024, bw: 12 };
+    let mut rng = Pcg32::seeded(1008);
+    for _ in 0..500 {
+        let n_layers = rng.int_range(4, 48) as usize;
+        let segments = (rng.int_range(2, 4) as usize).min(n_layers);
+        let cfg = sample_structured(&mut rng, &budget, segments);
+        let raw: Vec<usize> =
+            (1..segments).map(|_| rng.int_range(1, n_layers as i64 - 1) as usize).collect();
+        let bounds = round_boundaries(&raw, n_layers);
+        let v = encode_structured_with_boundaries(&cfg, &bounds, n_layers);
+        assert_eq!(v.len(), structured_dim_with_boundaries(segments));
+        let (cfg2, bounds2) = decode_structured_with_boundaries(&v, &budget, segments, n_layers);
+        assert_eq!(cfg2, cfg);
+        assert_eq!(bounds2, bounds);
     }
 }
 

@@ -134,6 +134,35 @@ fn structured_outcome_fixture_decodes_segments() {
     }
 }
 
+/// The PR-10 learned-segmentation line decodes its per-design cut vector
+/// (`"boundaries"`, riding parallel to `"segments"`), and every
+/// pre-PR-10 line — which never carries the key — normalizes to an empty
+/// boundary list, keeping the old corpus byte-stable and semantically
+/// unchanged. (Byte stability of the new line itself is covered by
+/// `canonical_response_corpus_is_byte_stable`.)
+#[test]
+fn boundaries_fixture_line_decodes_cuts() {
+    let lines = fixture_lines("wire_responses.jsonl");
+    let line = lines
+        .iter()
+        .find(|l| l.contains("\"boundaries\""))
+        .expect("corpus holds a learned-segmentation outcome line");
+    match Response::from_json(&Json::parse(line).unwrap()).unwrap() {
+        Response::Outcome(o) => {
+            assert_eq!(o.ranked.len(), 1);
+            assert_eq!(o.boundaries, vec![vec![1]]);
+            assert_eq!(o.segments.len(), 1);
+            assert_eq!(o.segments[0].len(), 2);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    for l in lines.iter().filter(|l| !l.contains("\"boundaries\"")) {
+        if let Response::Outcome(o) = Response::from_json(&Json::parse(l).unwrap()).unwrap() {
+            assert!(o.boundaries.is_empty(), "phantom boundaries decoded from {l}");
+        }
+    }
+}
+
 /// The PR-8 robustness lines decode to their typed semantics: the
 /// admission-control shed carries a machine-readable retry hint, the
 /// crash-failed job surfaces its attempt count, and the drain-finalized
